@@ -1,0 +1,39 @@
+//! **Fig 2** — reinitialization-strategy ablation (paper §4.1, A.5):
+//! random vs copy vs weighted gradient averaging for a lost stage, same
+//! seed and the same forced failure schedule for all three.
+//!
+//! Paper finding to reproduce: weighted ≻ copy ≻ random (final loss).
+//!
+//! ```bash
+//! cargo run --release --example fig2_init_strategies [-- iterations]
+//! ```
+
+use checkfree::experiments::fig2_init_strategies;
+use checkfree::metrics::{comparison_csv, write_csv};
+use checkfree::Result;
+
+fn main() -> Result<()> {
+    let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    // periodic failures of alternating body stages (≈16% regime scaled)
+    let failures: Vec<(u64, usize)> = (1..iters / 20).map(|k| (k * 20, 1 + (k as usize % 2))).collect();
+    println!("Fig 2 — reinit strategies on 'e2e' model, {iters} iterations");
+    println!("forced stage failures at: {failures:?}\n");
+
+    let runs = fig2_init_strategies("e2e", iters, &failures, 42)?;
+
+    println!("{:<10} {:>12} {:>12}", "strategy", "final train", "final val");
+    for r in &runs {
+        let last = r.curve.last().unwrap();
+        println!(
+            "{:<10} {:>12.4} {:>12.4}",
+            r.label,
+            last.train_loss,
+            r.final_val_loss().unwrap_or(f32::NAN)
+        );
+    }
+    let refs: Vec<&_> = runs.iter().collect();
+    write_csv("results/fig2_init_strategies.csv", &comparison_csv(&refs, false))?;
+    println!("\ncurves → results/fig2_init_strategies.csv");
+    println!("expected ordering (paper Fig 2): weighted < copy < random");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! **Fig 5a** — convergence of the largest model at 16% failure rate
+//! (paper §5.2): redundant computation vs CheckFree vs CheckFree+.
+//!
+//! The paper's 1.5B model maps to this testbed's largest CPU-trainable
+//! preset (`convergence`) at the most aggressive churn; the claim under
+//! test is the *shape*: redundant converges faster per iteration, but
+//! CheckFree(+) still converges and wins on (simulated) wall-clock.
+//!
+//! ```bash
+//! cargo run --release --example fig5a_large [-- iterations]
+//! ```
+
+use checkfree::config::Strategy;
+use checkfree::experiments::convergence_comparison;
+use checkfree::metrics::{comparison_csv, write_csv};
+use checkfree::Result;
+
+fn main() -> Result<()> {
+    let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let rate = 0.032; // 16%-per-hour regime scaled
+    println!("Fig 5a — 'large' regime: e2e model @ rate {rate}, {iters} iters\n");
+
+    let runs = convergence_comparison("e2e", iters, rate, 31415)?;
+    println!("{:<28} {:>10} {:>9} {:>11}", "strategy", "final val", "failures", "sim-hours");
+    for r in &runs {
+        println!(
+            "{:<28} {:>10.4} {:>9} {:>11.1}",
+            r.label,
+            r.final_val_loss().unwrap_or(f32::NAN),
+            r.failures(),
+            r.curve.last().map(|p| p.sim_time_s / 3600.0).unwrap_or(0.0)
+        );
+    }
+    // wall-clock comparison at equal val loss: redundant pays 1.65×/iter
+    let redundant = runs.iter().find(|r| r.label == Strategy::Redundant.label()).unwrap();
+    let checkfree = runs.iter().find(|r| r.label == Strategy::CheckFree.label()).unwrap();
+    if let (Some(rv), Some(cv)) = (redundant.final_val_loss(), checkfree.final_val_loss()) {
+        let target = rv.max(cv) + 0.02;
+        if let (Some(tr), Some(tc)) = (redundant.time_to_target(target), checkfree.time_to_target(target))
+        {
+            println!(
+                "\ntime to val loss {target:.3}: redundant {:.1} sim-h vs checkfree {:.1} sim-h",
+                tr / 3600.0,
+                tc / 3600.0
+            );
+        }
+    }
+    let refs: Vec<&_> = runs.iter().collect();
+    write_csv("results/fig5a_large.csv", &comparison_csv(&refs, true))?;
+    println!("curves → results/fig5a_large.csv");
+    println!("expected shape (paper Fig 5a): redundant faster per iteration, checkfree faster per wall-clock");
+    Ok(())
+}

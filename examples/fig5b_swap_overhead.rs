@@ -1,0 +1,35 @@
+//! **Fig 5b** — the cost of out-of-order swapping with no failures
+//! (paper §5.2): CheckFree+ (swaps on) vs standard training, 0% failure.
+//!
+//! Paper finding: a visible convergence slowdown from swapping — the
+//! price CheckFree+ pays for first/last-stage recoverability.
+//!
+//! ```bash
+//! cargo run --release --example fig5b_swap_overhead [-- iterations]
+//! ```
+
+use checkfree::experiments::swap_overhead;
+use checkfree::metrics::{comparison_csv, write_csv};
+use checkfree::Result;
+
+fn main() -> Result<()> {
+    let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    println!("Fig 5b — swap overhead at 0% failures, 'e2e' model, {iters} iters\n");
+
+    let runs = swap_overhead("e2e", iters, 2718)?;
+    println!("{:<26} {:>12} {:>12}", "schedule", "final train", "final val");
+    for r in &runs {
+        let last = r.curve.last().unwrap();
+        println!(
+            "{:<26} {:>12.4} {:>12.4}",
+            r.label,
+            last.train_loss,
+            r.final_val_loss().unwrap_or(f32::NAN)
+        );
+    }
+    let refs: Vec<&_> = runs.iter().collect();
+    write_csv("results/fig5b_swap_overhead.csv", &comparison_csv(&refs, false))?;
+    println!("\ncurves → results/fig5b_swap_overhead.csv");
+    println!("expected shape (paper Fig 5b): with-swaps converges more slowly");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! **End-to-end driver** — the full system on a realistic spot-cluster
+//! scenario: a multi-million-parameter LLaMa pipeline trained for a few
+//! hundred iterations on the synthetic corpus while spot instances churn,
+//! with CheckFree+ recovering every lost stage and the loss curve logged
+//! throughout. All three layers compose here: Pallas kernels → JAX stage
+//! graphs → AOT HLO → Rust PJRT runtime → coordinator/recovery.
+//!
+//! ```bash
+//! cargo run --release --example spot_cluster [-- iterations [model]]
+//! # model: e2e (default, 8 layers), convergence (12 layers)
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use checkfree::config::{FailureSpec, Strategy, TrainConfig};
+use checkfree::coordinator::Trainer;
+use checkfree::metrics::write_csv;
+use checkfree::Result;
+
+fn main() -> Result<()> {
+    let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = std::env::args().nth(2).unwrap_or_else(|| "e2e".into());
+    let cfg = TrainConfig {
+        model: model.clone(),
+        strategy: Strategy::CheckFreePlus,
+        iterations: iters,
+        microbatches_per_iter: 4,
+        failure: FailureSpec::PerIteration { rate: 0.01 },
+        eval_every: 10,
+        seed: 20250710,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg)?;
+    let mc = trainer.engine.runtime.manifest.config.clone();
+    println!("== spot-cluster end-to-end driver ==");
+    println!(
+        "model '{}': {:.1}M params, {} stages ({} body × {} blocks), ctx {}, vocab {}",
+        mc.name,
+        mc.param_count as f64 / 1e6,
+        mc.body_stages + 1,
+        mc.body_stages,
+        mc.blocks_per_stage,
+        mc.context,
+        mc.vocab
+    );
+    println!("strategy checkfree+ | churn 1%/stage/iter | {iters} iterations\n");
+
+    let wall = Instant::now();
+    let mut last_report = Instant::now();
+    for _ in 0..iters {
+        let loss = trainer.step()?;
+        let it = trainer.global_step();
+        if it % 10 == 0 || last_report.elapsed().as_secs() > 20 {
+            let val = trainer
+                .record
+                .curve
+                .last()
+                .and_then(|p| p.val_loss)
+                .map(|v| format!("val {v:.4}"))
+                .unwrap_or_default();
+            println!(
+                "iter {it:>4}  loss {loss:.4}  {val}  [{:.1}s wall, {} failures]",
+                wall.elapsed().as_secs_f64(),
+                trainer.record.failures()
+            );
+            last_report = Instant::now();
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    let first = trainer.record.curve.first().unwrap().train_loss;
+    let final_val = trainer.engine.validate()?;
+    println!("\n== summary ==");
+    println!("wall time: {wall_s:.1}s ({:.2} s/iter)", wall_s / iters as f64);
+    println!("loss: {first:.4} → {final_val:.4} (val), ln(V) = {:.3}", (mc.vocab as f32).ln());
+    println!(
+        "failures survived: {} (recovery events: {})",
+        trainer.record.failures(),
+        trainer
+            .record
+            .events
+            .iter()
+            .filter(|e| e.kind == checkfree::metrics::EventKind::Recovery)
+            .count()
+    );
+    println!("simulated geo-distributed wall-clock: {:.1} h", trainer.sim_time_s() / 3600.0);
+    // per-executable PJRT accounting (perf visibility)
+    println!("\nPJRT executable time:");
+    for (name, dur, calls) in trainer.engine.runtime.exec_stats() {
+        println!("  {name:<10} {calls:>6} calls  {:>8.2}s", dur.as_secs_f64());
+    }
+    let path = format!("results/spot_cluster_{model}.csv");
+    write_csv(&path, &trainer.record.curve_csv())?;
+    write_csv(
+        &format!("results/spot_cluster_{model}.events.csv"),
+        &trainer.record.events_csv(),
+    )?;
+    println!("\nloss curve → {path}");
+    assert!(
+        final_val < first - 1.0,
+        "E2E driver must show real convergence (got {first:.3} → {final_val:.3})"
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! **Table 2** — iteration time and train time of the four recovery
+//! strategies at 5/10/16% hourly stage-failure rates, paper-scale
+//! (500M model, 7 stages, 20 nodes, 5 GCP regions).
+//!
+//! Iteration times come from the mechanism simulator
+//! ([`checkfree::sim`], calibrated only at the single baseline point
+//! 91.3 s); train times combine the paper's converged-iteration counts
+//! (Fig 3 x-axis) with the simulated iteration time + failure/rollback/
+//! checkpoint overheads.
+//!
+//! ```bash
+//! cargo run --release --example table2_throughput
+//! ```
+
+use checkfree::config::Strategy;
+use checkfree::metrics::write_csv;
+use checkfree::sim::{paper_converged_iterations, simulate_training, SimParams};
+use checkfree::Result;
+
+/// Paper Table 2 values for the comparison printout.
+const PAPER: &[(&str, [f64; 3], [f64; 3])] = &[
+    ("checkpointing", [91.4, 91.4, 92.1], [558.2, 621.7, 634.4]),
+    ("redundant-comp", [151.0, 151.0, 151.0], [419.6, 419.6, 419.6]),
+    ("checkfree", [91.3, 91.3, 92.1], [367.8, 405.9, 563.0]),
+    ("checkfree+", [91.3, 91.3, 92.1], [355.1, 367.8, 460.6]),
+];
+
+fn main() -> Result<()> {
+    let rates = [0.05, 0.10, 0.16];
+    println!("Table 2 — throughput at paper scale (simulated testbed; see DESIGN.md §2)\n");
+    println!(
+        "{:<16} {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "strategy", "rate", "iter (s)", "paper", "train (h)", "paper"
+    );
+    let mut csv = String::from("strategy,rate,iter_s,paper_iter_s,train_h,paper_train_h\n");
+    for (si, strategy) in [
+        Strategy::Checkpoint,
+        Strategy::Redundant,
+        Strategy::CheckFree,
+        Strategy::CheckFreePlus,
+    ]
+    .iter()
+    .enumerate()
+    {
+        for (ri, &rate) in rates.iter().enumerate() {
+            let p = SimParams::paper_medium(*strategy, rate);
+            let run = simulate_training(&p, paper_converged_iterations(*strategy, rate));
+            let (label, p_iter, p_train) = PAPER[si];
+            println!(
+                "{:<16} {:>5.0}% {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+                label,
+                rate * 100.0,
+                run.iteration_seconds,
+                p_iter[ri],
+                run.train_hours,
+                p_train[ri]
+            );
+            csv.push_str(&format!(
+                "{label},{rate},{:.2},{},{:.2},{}\n",
+                run.iteration_seconds, p_iter[ri], run.train_hours, p_train[ri]
+            ));
+        }
+    }
+    write_csv("results/table2_throughput.csv", &csv)?;
+
+    // the paper's headline claim
+    let cf = simulate_training(
+        &SimParams::paper_medium(Strategy::CheckFree, 0.05),
+        paper_converged_iterations(Strategy::CheckFree, 0.05),
+    );
+    let red = simulate_training(
+        &SimParams::paper_medium(Strategy::Redundant, 0.05),
+        paper_converged_iterations(Strategy::Redundant, 0.05),
+    );
+    println!(
+        "\nheadline: CheckFree is {:.0}% faster than redundant computation at 5% churn (paper: >12%)",
+        (red.train_hours / cf.train_hours - 1.0) * 100.0
+    );
+    println!("rows → results/table2_throughput.csv");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! **Table 3** — evaluation perplexity of a model trained with CheckFree
+//! (with failures) vs redundant computation (≡ fault-free training),
+//! both to the SAME iteration count, across four evaluation domains.
+//!
+//! The paper's OpenWebText / Common Crawl / Stack Exchange / Arxiv map to
+//! the synthetic `stories` (in-domain) / `web` / `qa` / `arxiv` domains
+//! (DESIGN.md §2). The shape under test: near-par perplexity despite
+//! drastically different resultant weights.
+//!
+//! ```bash
+//! cargo run --release --example table3_perplexity [-- iterations]
+//! ```
+
+use checkfree::experiments::perplexity_comparison;
+use checkfree::metrics::write_csv;
+use checkfree::Result;
+
+fn main() -> Result<()> {
+    let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rate = 0.02;
+    println!("Table 3 — perplexity after {iters} equal iterations ('e2e' model)\n");
+
+    let rows = perplexity_comparison("e2e", iters, rate, 777)?;
+    println!("{:<22} {:>12} {:>12} {:>8}", "domain", "redundant", "checkfree", "Δ%");
+    let mut csv = String::from("domain,redundant,checkfree\n");
+    for r in &rows {
+        println!(
+            "{:<22} {:>12.3} {:>12.3} {:>7.1}%",
+            r.domain,
+            r.redundant,
+            r.checkfree,
+            (r.checkfree / r.redundant - 1.0) * 100.0
+        );
+        csv.push_str(&format!("{},{:.4},{:.4}\n", r.domain, r.redundant, r.checkfree));
+    }
+    write_csv("results/table3_perplexity.csv", &csv)?;
+    println!("\nrows → results/table3_perplexity.csv");
+    println!("expected shape (paper Table 3): near-par perplexity; redundant edges out out-of-domain");
+    Ok(())
+}

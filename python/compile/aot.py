@@ -1,0 +1,154 @@
+"""AOT pipeline: lower the per-stage JAX functions to HLO text + manifest.
+
+This is the only place Python runs in the whole system, and it runs once
+(``make artifacts``). For each requested model config it lowers the six
+stage entry points from :mod:`compile.model` and writes:
+
+    artifacts/<config>/<entry>.hlo.txt     — HLO text module
+    artifacts/<config>/manifest.json       — shapes, dtypes, param layout,
+                                             init spec, artifact inventory
+
+**Interchange format is HLO text, not a serialized ``HloModuleProto``**:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest is the contract with the Rust runtime: literal order on every
+``execute`` call follows the manifest's ``inputs`` list, and stage parameter
+buffers are flattened in ``param_layout`` order.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts --configs tiny,e2e
+    python -m compile.aot --out-dir ../artifacts --configs all
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention import vmem_bytes_estimate
+from .model import PRESETS, ModelConfig, init_spec, make_entry_points
+
+DEFAULT_CONFIGS = ("tiny", "e2e")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    dtype = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    return {"shape": list(s.shape), "dtype": dtype}
+
+
+def _layout_json(shapes: list[tuple[str, tuple[int, ...]]]) -> list[dict]:
+    out = []
+    offset = 0
+    for name, shape in shapes:
+        count = math.prod(shape)
+        out.append(
+            {
+                "name": name,
+                "shape": list(shape),
+                "elements": count,
+                "offset": offset,
+                "init": init_spec(name),
+            }
+        )
+        offset += count
+    return out
+
+
+def lower_config(cfg: ModelConfig, out_dir: pathlib.Path, verbose: bool = True) -> dict:
+    """Lower all entry points for one config; return its manifest dict."""
+    cfg_dir = out_dir / cfg.name
+    cfg_dir.mkdir(parents=True, exist_ok=True)
+    entries = make_entry_points(cfg)
+    artifacts = {}
+    for name, (fn, specs) in entries.items():
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = cfg_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_avals = lowered.out_info
+        outputs = [
+            _spec_json(jax.ShapeDtypeStruct(o.shape, o.dtype))
+            for o in jax.tree_util.tree_leaves(out_avals)
+        ]
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": outputs,
+        }
+        if verbose:
+            print(
+                f"  [{cfg.name}] {name}: {len(text)} chars, "
+                f"{len(specs)} inputs, {len(outputs)} outputs "
+                f"({time.time() - t0:.1f}s)"
+            )
+
+    manifest = {
+        "format_version": 1,
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "dim": cfg.dim,
+            "heads": cfg.heads,
+            "layers": cfg.layers,
+            "body_stages": cfg.body_stages,
+            "blocks_per_stage": cfg.blocks_per_stage,
+            "ffn": cfg.ffn,
+            "context": cfg.context,
+            "microbatch": cfg.microbatch,
+            "learning_rate": cfg.learning_rate,
+            "param_count": cfg.param_count(),
+        },
+        "param_layout": {
+            "embed_stage": _layout_json(cfg.embed_param_shapes()),
+            "body_stage": _layout_json(cfg.stage_param_shapes()),
+        },
+        "perf": {
+            "attn_vmem_bytes_per_cell": vmem_bytes_estimate(
+                cfg.context, cfg.head_dim
+            ),
+        },
+        "artifacts": artifacts,
+    }
+    (cfg_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(DEFAULT_CONFIGS),
+        help=f"comma-separated preset names or 'all' (presets: {sorted(PRESETS)})",
+    )
+    args = ap.parse_args()
+    names = sorted(PRESETS) if args.configs == "all" else args.configs.split(",")
+    out_dir = pathlib.Path(args.out_dir)
+    for name in names:
+        cfg = PRESETS[name]
+        print(f"lowering config '{name}' ({cfg.param_count() / 1e6:.1f}M params)")
+        lower_config(cfg, out_dir)
+    print(f"artifacts written to {out_dir.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

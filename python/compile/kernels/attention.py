@@ -1,0 +1,153 @@
+"""Fused causal multi-head attention as a Pallas kernel (Layer 1).
+
+The paper trains LLaMa-family models whose per-stage hot spot is the
+attention + MLP of each transformer block. On the paper's H100s this would
+be a CUDA flash-attention; here it is re-thought for the TPU model that
+Pallas exposes (see DESIGN.md §Hardware-Adaptation):
+
+* The grid iterates ``(batch*heads, q_blocks)``; each grid cell owns a
+  ``(block_q, dh)`` query tile resident in VMEM.
+* K/V for the (batch, head) are streamed through the cell in ``block_k``
+  chunks inside a ``fori_loop`` — the HBM→VMEM schedule a CUDA kernel would
+  express with threadblock tiling is expressed with a block loop + dynamic
+  slices here.
+* The online-softmax recurrence (running max ``m``, normalizer ``l``,
+  f32 accumulator) keeps memory linear in ``block_q`` — no ``S×S``
+  materialization.
+* Causal structure is exploited: a query tile only visits KV tiles up to
+  its own diagonal (``kb_hi``), halving work.
+
+``interpret=True`` is mandatory: the CPU PJRT plugin used by the Rust
+runtime cannot execute Mosaic custom-calls, and interpret-mode lowers the
+kernel into plain HLO that runs (and fuses) anywhere. Real-TPU efficiency is
+estimated analytically in EXPERIMENTS.md §Perf.
+
+The public entry point :func:`flash_attention` is a ``jax.custom_vjp``:
+forward runs the Pallas kernel, backward recomputes attention with the
+pure-jnp oracle and takes its VJP (flash-style recompute — no quadratic
+residuals are saved between fwd and bwd).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_attention
+
+NEG_INF = -1e30
+
+# Default tile sizes. 128 on the contracted/lane dim and multiples of 8 on
+# sublanes map cleanly onto the MXU; for short sequences the tiles clamp to
+# the sequence length.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One grid cell: a (block_q, dh) query tile against streamed KV tiles."""
+    qi = pl.program_id(1)
+    block_q, dh = q_ref.shape
+    seq_len = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_offset = qi * block_q
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_k) on the MXU
+        # Causal mask for this (q tile, kv tile) pair.
+        row = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        col = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(row >= col, s, NEG_INF)
+        # Online softmax update.
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    # Causal early exit: KV tiles strictly above the diagonal are skipped.
+    kb_hi = jax.lax.div(q_offset + block_q - 1, block_k) + 1
+    del seq_len  # bound is the causal limit, not the full sequence
+    acc, _, l = jax.lax.fori_loop(0, kb_hi, body, (acc, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw Pallas forward. ``q, k, v: (BH, S, dh)`` → ``(BH, S, dh)``.
+
+    ``S`` must be divisible by the (clamped) block sizes; model configs
+    enforce this (contexts are powers of two ≥ 8).
+    """
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq len {s} not divisible by blocks ({block_q},{block_k})")
+    scale = 1.0 / (dh**0.5)
+    grid = (bh, pl.cdiv(s, block_q))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal MHA: Pallas forward, recompute-style jnp backward."""
+    return flash_attention_pallas(q, k, v)
+
+
+def _fa_fwd(q, k, v):
+    return flash_attention_pallas(q, k, v), (q, k, v)
+
+
+def _fa_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref_attention, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def vmem_bytes_estimate(s: int, dh: int, block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid cell (see DESIGN.md §7).
+
+    q tile + full-KV residency + f32 accumulator + one (block_q, block_k)
+    score tile. Used by the perf report, not by the kernel itself.
+    """
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    q_tile = block_q * dh * dtype_bytes
+    kv = 2 * s * dh * dtype_bytes
+    acc = block_q * dh * 4
+    score = block_q * block_k * 4
+    return q_tile + kv + acc + score

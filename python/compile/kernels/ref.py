@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance (pytest + hypothesis
+sweeps in ``python/tests/``). They are also used as the backward pass of the
+``jax.custom_vjp`` wrappers around the Pallas forwards (flash-style
+recompute: nothing quadratic is saved between fwd and bwd).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``(BH, S, dh)`` — batch*heads flattened leading dim.
+
+    Returns:
+      ``(BH, S, dh)`` attention output, same dtype as ``q``.
+    """
+    _, s, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: ``x * rsqrt(mean(x^2) + eps) * w``.
+
+    Args:
+      x: ``(..., D)``.
+      w: ``(D,)`` scale.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

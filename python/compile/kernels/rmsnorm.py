@@ -1,0 +1,89 @@
+"""Fused RMSNorm as a Pallas kernel (Layer 1).
+
+RMSNorm is memory-bound: one read of ``x``, one write of ``y``, a reduction
+over the feature axis. On TPU this is a VPU (vector-unit) kernel: the grid
+tiles the flattened row axis, each cell normalizes a ``(block_rows, D)``
+tile held in VMEM in a single pass (reduction + scale fused — no separate
+variance pass over HBM).
+
+Same conventions as ``attention.py``: ``interpret=True`` so the lowered HLO
+runs on the CPU PJRT client, and a ``jax.custom_vjp`` wrapper whose backward
+is the jnp oracle's VJP.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_rmsnorm
+
+DEFAULT_BLOCK_ROWS = 128
+EPS = 1e-5
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = EPS,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw Pallas forward. ``x: (..., D)``, ``w: (D,)``."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    # Pad rows up to a multiple of the block (tail tile) — configs keep
+    # rows = B*S a power of two so this is a no-op in practice.
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (pl.cdiv(x2.shape[0], block_rows),)
+    y = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    if pad:
+        y = y[:rows]
+    return y.reshape(orig_shape)
+
+
+@jax.custom_vjp
+def rmsnorm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """RMSNorm: Pallas forward, recompute-style jnp backward."""
+    return rmsnorm_pallas(x, w)
+
+
+def _rn_fwd(x, w):
+    return rmsnorm_pallas(x, w), (x, w)
+
+
+def _rn_bwd(res, g):
+    x, w = res
+    _, vjp = jax.vjp(ref_rmsnorm, x, w)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_rn_fwd, _rn_bwd)

@@ -1,0 +1,350 @@
+"""Layer 2 — LLaMa-family stage compute graphs in JAX.
+
+The paper (Appendix A.1) trains LLaMa models split into pipeline stages:
+stage ``S0`` holds the embedding **and** deembedding (+ final norm) — the
+pipeline loops ``S0, S1, …, SL, S0`` — and each body stage holds an equal,
+consecutive slice of transformer blocks.
+
+This module defines exactly the per-stage functions the Rust coordinator
+executes, in the flattened positional form the AOT pipeline lowers:
+
+* ``embed_fwd(E, ids) -> h``                  — token embedding lookup.
+* ``embed_bwd(E, ids, gh) -> gE``             — scatter-add VJP.
+* ``body_fwd(p_0, …, p_{9n-1}, h) -> h'``     — ``n`` transformer blocks.
+* ``body_bwd(p…, h, gh') -> (gh, gp…)``       — VJP wrt input and params.
+* ``head_fwd(D, nw, h, ids) -> (loss,)``      — final norm, logits, mean
+  next-token cross-entropy (targets = ids shifted left; last position
+  masked).
+* ``head_bwd(D, nw, h, ids) -> (loss, gh, gD, gnw)``.
+
+Each transformer block is pre-norm LLaMa: RMSNorm → causal MHA with rotary
+position embeddings → residual, RMSNorm → SwiGLU MLP → residual. RMSNorm
+and attention are the Pallas kernels from :mod:`compile.kernels`.
+
+Parameter flattening order (the contract with the Rust side, recorded in
+the artifact manifest):
+
+* body block: ``attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down``
+* embed stage: ``embed (V,D), deembed (D,V), final_norm (D)``
+
+Everything is float32: the CPU PJRT backend has no native bf16 advantage
+and f32 keeps the Rust-side optimizer/recovery math exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.rmsnorm import rmsnorm
+
+BLOCK_PARAM_NAMES = (
+    "attn_norm",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "mlp_norm",
+    "w_gate",
+    "w_up",
+    "w_down",
+)
+EMBED_PARAM_NAMES = ("embed", "deembed", "final_norm")
+N_BLOCK_PARAMS = len(BLOCK_PARAM_NAMES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One LLaMa pipeline configuration (paper Table 4 analogue)."""
+
+    name: str
+    vocab: int
+    dim: int
+    heads: int
+    layers: int  # total transformer blocks across body stages
+    body_stages: int  # paper's "Stages" (S0 with E/E^-1 is extra)
+    ffn: int
+    context: int
+    microbatch: int
+    learning_rate: float
+
+    def __post_init__(self) -> None:
+        if self.layers % self.body_stages:
+            raise ValueError(
+                f"{self.name}: layers {self.layers} not divisible by "
+                f"body_stages {self.body_stages}"
+            )
+        if self.dim % self.heads:
+            raise ValueError(f"{self.name}: dim {self.dim} % heads {self.heads} != 0")
+
+    @property
+    def blocks_per_stage(self) -> int:
+        return self.layers // self.body_stages
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    def block_param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        d, f = self.dim, self.ffn
+        return [
+            ("attn_norm", (d,)),
+            ("wq", (d, d)),
+            ("wk", (d, d)),
+            ("wv", (d, d)),
+            ("wo", (d, d)),
+            ("mlp_norm", (d,)),
+            ("w_gate", (d, f)),
+            ("w_up", (d, f)),
+            ("w_down", (f, d)),
+        ]
+
+    def embed_param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        return [
+            ("embed", (self.vocab, self.dim)),
+            ("deembed", (self.dim, self.vocab)),
+            ("final_norm", (self.dim,)),
+        ]
+
+    def stage_param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Flattened param shapes for ONE body stage (blocks_per_stage blocks)."""
+        out = []
+        for b in range(self.blocks_per_stage):
+            for name, shape in self.block_param_shapes():
+                out.append((f"block{b}.{name}", shape))
+        return out
+
+    def param_count(self) -> int:
+        n = sum(
+            int(jnp.prod(jnp.array(s))) for _, s in self.embed_param_shapes()
+        )
+        per_block = sum(
+            int(jnp.prod(jnp.array(s))) for _, s in self.block_param_shapes()
+        )
+        return n + per_block * self.layers
+
+
+def _ffn_llama(dim: int) -> int:
+    """LLaMa SwiGLU hidden size: 4*dim*2/3 rounded to a multiple of 32."""
+    f = int(4 * dim * 2 / 3)
+    return (f + 31) // 32 * 32
+
+
+# ---------------------------------------------------------------------------
+# Presets. `tiny`/`e2e` are the CPU-scale workhorses (tests, examples,
+# convergence experiments); `small124m`/`medium500m`/`large1p5b` are the
+# paper's exact Table 4 rows (artifact generation supported, training at
+# that scale is demonstrated for a handful of steps on this testbed —
+# see DESIGN.md §2 Substitutions).
+# ---------------------------------------------------------------------------
+PRESETS: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("tiny", vocab=256, dim=64, heads=4, layers=4, body_stages=2,
+                    ffn=_ffn_llama(64), context=32, microbatch=4,
+                    learning_rate=1e-3),
+        ModelConfig("e2e", vocab=512, dim=128, heads=4, layers=8, body_stages=4,
+                    ffn=_ffn_llama(128), context=64, microbatch=8,
+                    learning_rate=6e-4),
+        ModelConfig("convergence", vocab=512, dim=192, heads=6, layers=12,
+                    body_stages=4, ffn=_ffn_llama(192), context=64,
+                    microbatch=8, learning_rate=6e-4),
+        ModelConfig("small124m", vocab=32000, dim=512, heads=8, layers=12,
+                    body_stages=4, ffn=_ffn_llama(512), context=512,
+                    microbatch=4, learning_rate=6e-4),
+        ModelConfig("medium500m", vocab=32000, dim=1024, heads=16, layers=24,
+                    body_stages=6, ffn=_ffn_llama(1024), context=1024,
+                    microbatch=2, learning_rate=3e-4),
+        ModelConfig("large1p5b", vocab=32000, dim=2048, heads=16, layers=24,
+                    body_stages=6, ffn=_ffn_llama(2048), context=4096,
+                    microbatch=1, learning_rate=3e-4),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Initialization (used by python tests; the Rust side reproduces the same
+# scheme from the manifest's init spec — plain scaled-normal / ones).
+# ---------------------------------------------------------------------------
+def init_spec(name: str) -> dict:
+    """Init rule per tensor name suffix: norms are ones, matrices N(0, 0.02)."""
+    if name.endswith("norm"):
+        return {"kind": "ones"}
+    return {"kind": "normal", "std": 0.02}
+
+
+def init_block_params(cfg: ModelConfig, key: jax.Array) -> list[jax.Array]:
+    out = []
+    for name, shape in cfg.block_param_shapes():
+        spec = init_spec(name)
+        if spec["kind"] == "ones":
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            out.append(jax.random.normal(sub, shape, jnp.float32) * spec["std"])
+    return out
+
+
+def init_stage_params(cfg: ModelConfig, key: jax.Array) -> list[jax.Array]:
+    out = []
+    for _ in range(cfg.blocks_per_stage):
+        key, sub = jax.random.split(key)
+        out.extend(init_block_params(cfg, sub))
+    return out
+
+
+def init_embed_params(cfg: ModelConfig, key: jax.Array) -> list[jax.Array]:
+    k1, k2 = jax.random.split(key)
+    return [
+        jax.random.normal(k1, (cfg.vocab, cfg.dim), jnp.float32) * 0.02,
+        jax.random.normal(k2, (cfg.dim, cfg.vocab), jnp.float32) * 0.02,
+        jnp.ones((cfg.dim,), jnp.float32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def _rope_tables(seq: int, dh: int) -> tuple[jax.Array, jax.Array]:
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)  # (S, dh/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., :half], x[..., half:]). x: (BH, S, dh)."""
+    _, s, dh = x.shape
+    cos, sin = _rope_tables(s, dh)
+    half = dh // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block + stage functions
+# ---------------------------------------------------------------------------
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    b, s, d = x.shape
+    dh = d // heads
+    return x.reshape(b, s, heads, dh).transpose(0, 2, 1, 3).reshape(b * heads, s, dh)
+
+
+def _merge_heads(x: jax.Array, batch: int, heads: int) -> jax.Array:
+    bh, s, dh = x.shape
+    return (
+        x.reshape(batch, heads, s, dh).transpose(0, 2, 1, 3).reshape(batch, s, heads * dh)
+    )
+
+
+def block_fwd(cfg: ModelConfig, p: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+    """One pre-norm LLaMa block. ``p`` in BLOCK_PARAM_NAMES order."""
+    attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down = p
+    b = h.shape[0]
+    x = rmsnorm(h, attn_norm)
+    q = _split_heads(x @ wq, cfg.heads)
+    k = _split_heads(x @ wk, cfg.heads)
+    v = _split_heads(x @ wv, cfg.heads)
+    q = apply_rope(q)
+    k = apply_rope(k)
+    attn = _merge_heads(flash_attention(q, k, v), b, cfg.heads)
+    h = h + attn @ wo
+    x = rmsnorm(h, mlp_norm)
+    mlp = (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+    return h + mlp
+
+
+def body_stage_fwd(cfg: ModelConfig, params: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+    """``blocks_per_stage`` blocks; ``params`` is the flat per-stage list."""
+    n = N_BLOCK_PARAMS
+    assert len(params) == n * cfg.blocks_per_stage, (
+        f"expected {n * cfg.blocks_per_stage} params, got {len(params)}"
+    )
+    for i in range(cfg.blocks_per_stage):
+        h = block_fwd(cfg, params[i * n : (i + 1) * n], h)
+    return h
+
+
+def embed_fwd(embed: jax.Array, ids: jax.Array) -> jax.Array:
+    """``ids: (B, S) int32`` → ``(B, S, D)``."""
+    return embed[ids]
+
+
+def head_loss(
+    deembed: jax.Array, final_norm: jax.Array, h: jax.Array, ids: jax.Array
+) -> jax.Array:
+    """Mean next-token cross-entropy (targets = ids shifted left)."""
+    x = rmsnorm(h, final_norm)
+    logits = x @ deembed  # (B, S, V)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    targets = jnp.roll(ids, -1, axis=1)
+    tok_lp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    # mask the final position of each row (no next token)
+    s = ids.shape[1]
+    mask = (jnp.arange(s) < s - 1).astype(jnp.float32)[None, :]
+    return -(tok_lp * mask).sum() / (mask.sum() * ids.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: flattened positional signatures
+# ---------------------------------------------------------------------------
+def make_entry_points(cfg: ModelConfig):
+    """Build the six flattened functions the AOT pipeline lowers.
+
+    Returns ``{name: (fn, example_args)}``; shapes use ``cfg.microbatch`` ×
+    ``cfg.context``.
+    """
+    b, s = cfg.microbatch, cfg.context
+    f32, i32 = jnp.float32, jnp.int32
+    spec = jax.ShapeDtypeStruct
+    h_spec = spec((b, s, cfg.dim), f32)
+    ids_spec = spec((b, s), i32)
+    embed_spec = spec((cfg.vocab, cfg.dim), f32)
+    deembed_spec = spec((cfg.dim, cfg.vocab), f32)
+    norm_spec = spec((cfg.dim,), f32)
+    stage_specs = [spec(shape, f32) for _, shape in cfg.stage_param_shapes()]
+
+    def embed_fwd_fn(embed, ids):
+        return (embed_fwd(embed, ids),)
+
+    def embed_bwd_fn(embed, ids, gh):
+        _, vjp = jax.vjp(lambda e: embed_fwd(e, ids), embed)
+        return (vjp(gh)[0],)
+
+    def body_fwd_fn(*args):
+        params, h = args[:-1], args[-1]
+        return (body_stage_fwd(cfg, params, h),)
+
+    def body_bwd_fn(*args):
+        params, h, g = args[:-2], args[-2], args[-1]
+        _, vjp = jax.vjp(
+            lambda *ph: body_stage_fwd(cfg, ph[:-1], ph[-1]), *params, h
+        )
+        grads = vjp(g)
+        return (grads[-1],) + tuple(grads[:-1])  # (gh, gparams…)
+
+    def head_fwd_fn(deembed, final_norm, h, ids):
+        return (head_loss(deembed, final_norm, h, ids),)
+
+    def head_bwd_fn(deembed, final_norm, h, ids):
+        loss, grads = jax.value_and_grad(head_loss, argnums=(0, 1, 2))(
+            deembed, final_norm, h, ids
+        )
+        gd, gn, gh = grads
+        return (loss, gh, gd, gn)
+
+    return {
+        "embed_fwd": (embed_fwd_fn, (embed_spec, ids_spec)),
+        "embed_bwd": (embed_bwd_fn, (embed_spec, ids_spec, h_spec)),
+        "body_fwd": (body_fwd_fn, (*stage_specs, h_spec)),
+        "body_bwd": (body_bwd_fn, (*stage_specs, h_spec, h_spec)),
+        "head_fwd": (head_fwd_fn, (deembed_spec, norm_spec, h_spec, ids_spec)),
+        "head_bwd": (head_bwd_fn, (deembed_spec, norm_spec, h_spec, ids_spec)),
+    }

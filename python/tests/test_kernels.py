@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the CORE correctness signal for Layer 1. hypothesis sweeps shapes
+(batch*heads, sequence, head-dim, row counts) and checks allclose; explicit
+tests cover gradients through the custom_vjp wrappers and the tiling edge
+cases (single block, many blocks, non-square tiles).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention,
+    flash_attention_pallas,
+    vmem_bytes_estimate,
+)
+from compile.kernels.ref import ref_attention, ref_rmsnorm
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_pallas
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _qkv(key, bh, s, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return tuple(jax.random.normal(k, (bh, s, dh), dtype) for k in ks)
+
+
+# ---------------------------------------------------------------------------
+# attention forward
+# ---------------------------------------------------------------------------
+class TestAttentionForward:
+    @pytest.mark.parametrize("bh,s,dh", [
+        (1, 8, 8),        # single tile
+        (2, 64, 16),      # exactly one q block
+        (4, 128, 32),     # multiple q and k blocks
+        (3, 256, 16),     # more k blocks than q rows per block
+        (8, 16, 64),      # wide head dim
+    ])
+    def test_matches_ref(self, bh, s, dh):
+        q, k, v = _qkv(jax.random.PRNGKey(0), bh, s, dh)
+        out = flash_attention_pallas(q, k, v)
+        np.testing.assert_allclose(out, ref_attention(q, k, v), atol=ATOL, rtol=RTOL)
+
+    def test_block_sizes_dont_change_result(self):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 16)
+        base = flash_attention_pallas(q, k, v, block_q=128, block_k=128)
+        for bq, bk in [(16, 16), (32, 64), (64, 32), (128, 16)]:
+            out = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(out, base, atol=ATOL, rtol=RTOL)
+
+    def test_causality(self):
+        """Changing future tokens must not change earlier outputs."""
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 64, 16)
+        out1 = flash_attention_pallas(q, k, v)
+        k2 = k.at[:, 32:, :].set(99.0)
+        v2 = v.at[:, 32:, :].set(-99.0)
+        out2 = flash_attention_pallas(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :32], out2[:, :32], atol=ATOL, rtol=RTOL)
+
+    def test_indivisible_seq_raises(self):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 1, 48, 8)
+        with pytest.raises(ValueError, match="not divisible"):
+            flash_attention_pallas(q, k, v, block_q=64, block_k=32)
+
+    def test_jit_compatible(self):
+        q, k, v = _qkv(jax.random.PRNGKey(4), 2, 32, 8)
+        out = jax.jit(flash_attention)(q, k, v)
+        np.testing.assert_allclose(out, ref_attention(q, k, v), atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        bh=st.integers(1, 4),
+        s_pow=st.integers(3, 8),  # 8..256
+        dh_pow=st.integers(2, 5),  # 4..32
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, bh, s_pow, dh_pow, seed):
+        s, dh = 2**s_pow, 2**dh_pow
+        q, k, v = _qkv(jax.random.PRNGKey(seed), bh, s, dh)
+        out = flash_attention_pallas(q, k, v)
+        np.testing.assert_allclose(out, ref_attention(q, k, v), atol=5e-5, rtol=5e-5)
+
+    def test_extreme_values_stable(self):
+        """Online softmax must not overflow with large logits."""
+        q, k, v = _qkv(jax.random.PRNGKey(5), 1, 64, 8)
+        out = flash_attention_pallas(q * 100.0, k * 100.0, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# attention backward (custom_vjp)
+# ---------------------------------------------------------------------------
+class TestAttentionBackward:
+    def test_grads_match_ref(self):
+        q, k, v = _qkv(jax.random.PRNGKey(6), 2, 64, 16)
+
+        def loss_pallas(q, k, v):
+            return jnp.sum(flash_attention(q, k, v) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref_attention(q, k, v) ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+    def test_grad_finite_differences(self):
+        q, k, v = _qkv(jax.random.PRNGKey(7), 1, 16, 4)
+        w = jax.random.normal(jax.random.PRNGKey(8), q.shape)
+
+        def f(q):
+            return jnp.vdot(flash_attention(q, k, v), w)
+
+        g = jax.grad(f)(q)
+        eps = 1e-3
+        d = jax.random.normal(jax.random.PRNGKey(9), q.shape)
+        num = (f(q + eps * d) - f(q - eps * d)) / (2 * eps)
+        np.testing.assert_allclose(jnp.vdot(g, d), num, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+class TestRmsNorm:
+    @pytest.mark.parametrize("shape", [(4, 8), (2, 16, 32), (1, 128), (256, 64), (3, 5, 7, 16)])
+    def test_matches_ref(self, shape):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, shape)
+        w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+        np.testing.assert_allclose(
+            rmsnorm_pallas(x, w), ref_rmsnorm(x, w), atol=ATOL, rtol=RTOL
+        )
+
+    def test_row_padding_path(self):
+        """Row counts not divisible by the block exercise the pad/unpad path."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (130, 16))
+        w = jnp.ones((16,))
+        np.testing.assert_allclose(
+            rmsnorm_pallas(x, w, block_rows=64), ref_rmsnorm(x, w), atol=ATOL, rtol=RTOL
+        )
+
+    def test_unit_scale_preserves_rms(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (32, 64)) * 3.0
+        y = rmsnorm_pallas(x, jnp.ones((64,)))
+        rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones_like(rms), atol=1e-3)
+
+    def test_grads_match_ref(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(5), (32,))
+        gp = jax.grad(lambda x, w: jnp.sum(rmsnorm(x, w) ** 2), argnums=(0, 1))(x, w)
+        gr = jax.grad(lambda x, w: jnp.sum(ref_rmsnorm(x, w) ** 2), argnums=(0, 1))(x, w)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 300),
+        d_pow=st.integers(2, 7),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, rows, d_pow, seed):
+        d = 2**d_pow
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d))
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+        np.testing.assert_allclose(
+            rmsnorm_pallas(x, w), ref_rmsnorm(x, w), atol=5e-5, rtol=5e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# perf-model helpers
+# ---------------------------------------------------------------------------
+class TestVmemEstimate:
+    def test_monotone_in_seq(self):
+        assert vmem_bytes_estimate(512, 64) > vmem_bytes_estimate(64, 64)
+
+    def test_small_config_fits_vmem(self):
+        # 16 MiB VMEM per TPU core: all shipped configs must fit.
+        assert vmem_bytes_estimate(4096, 128) < 16 * 2**20

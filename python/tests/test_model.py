@@ -1,0 +1,234 @@
+"""L2 correctness: stage graphs — shapes, gradients, end-to-end trainability.
+
+Validates the exact functions the AOT pipeline lowers: forward chaining
+(embed → body stages → head) reproduces a monolithic reference model built
+purely from ref.py ops, backward entry points agree with autodiff of that
+reference, and a few optimizer steps reduce the loss (the signal the Rust
+coordinator consumes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_attention, ref_rmsnorm
+from compile.model import (
+    BLOCK_PARAM_NAMES,
+    N_BLOCK_PARAMS,
+    PRESETS,
+    ModelConfig,
+    apply_rope,
+    block_fwd,
+    body_stage_fwd,
+    embed_fwd,
+    head_loss,
+    init_embed_params,
+    init_stage_params,
+    make_entry_points,
+)
+
+CFG = PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, CFG.body_stages + 2)
+    stages = [init_stage_params(CFG, k) for k in ks[: CFG.body_stages]]
+    embed = init_embed_params(CFG, ks[-2])
+    ids = jax.random.randint(ks[-1], (CFG.microbatch, CFG.context), 0, CFG.vocab)
+    return stages, embed, ids
+
+
+# ---------------------------------------------------------------------------
+# Reference monolith built from ref.py ops only (no pallas)
+# ---------------------------------------------------------------------------
+def _ref_block(cfg: ModelConfig, p, h):
+    attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down = p
+    b, s, d = h.shape
+    dh = d // cfg.heads
+
+    def split(x):
+        return x.reshape(b, s, cfg.heads, dh).transpose(0, 2, 1, 3).reshape(b * cfg.heads, s, dh)
+
+    x = ref_rmsnorm(h, attn_norm)
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    q, k = apply_rope(q), apply_rope(k)
+    a = ref_attention(q, k, v)
+    a = a.reshape(b, cfg.heads, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + a @ wo
+    x = ref_rmsnorm(h, mlp_norm)
+    return h + (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _ref_forward_loss(cfg: ModelConfig, stages, embed_params, ids):
+    E, D, nw = embed_params
+    h = E[ids]
+    for sp in stages:
+        for i in range(cfg.blocks_per_stage):
+            h = _ref_block(cfg, sp[i * N_BLOCK_PARAMS : (i + 1) * N_BLOCK_PARAMS], h)
+    x = ref_rmsnorm(h, nw)
+    logits = x @ D
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    targets = jnp.roll(ids, -1, axis=1)
+    tok_lp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    s = ids.shape[1]
+    mask = (jnp.arange(s) < s - 1).astype(jnp.float32)[None, :]
+    return -(tok_lp * mask).sum() / (mask.sum() * ids.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# forward parity
+# ---------------------------------------------------------------------------
+class TestForward:
+    def test_block_matches_ref(self, params):
+        stages, _, _ = params
+        h = jax.random.normal(jax.random.PRNGKey(0), (2, CFG.context, CFG.dim))
+        got = block_fwd(CFG, stages[0][:N_BLOCK_PARAMS], h)
+        want = _ref_block(CFG, stages[0][:N_BLOCK_PARAMS], h)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_pipeline_matches_monolith(self, params):
+        stages, embed_params, ids = params
+        E, D, nw = embed_params
+        h = embed_fwd(E, ids)
+        for sp in stages:
+            h = body_stage_fwd(CFG, sp, h)
+        loss = head_loss(D, nw, h, ids)
+        ref = _ref_forward_loss(CFG, stages, embed_params, ids)
+        np.testing.assert_allclose(loss, ref, atol=1e-4, rtol=1e-4)
+
+    def test_initial_loss_near_uniform(self, params):
+        """Untrained model ≈ uniform over vocab: loss ≈ ln(V)."""
+        stages, embed_params, ids = params
+        E, D, nw = embed_params
+        h = embed_fwd(E, ids)
+        for sp in stages:
+            h = body_stage_fwd(CFG, sp, h)
+        loss = head_loss(D, nw, h, ids)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_wrong_param_count_asserts(self):
+        h = jnp.zeros((1, CFG.context, CFG.dim))
+        with pytest.raises(AssertionError):
+            body_stage_fwd(CFG, [jnp.zeros((CFG.dim,))] * 3, h)
+
+
+# ---------------------------------------------------------------------------
+# backward entry points vs autodiff of the chained forward
+# ---------------------------------------------------------------------------
+class TestBackward:
+    def test_chained_bwd_matches_monolith_grad(self, params):
+        """Full manual backward chain == jax.grad of the monolith."""
+        stages, embed_params, ids = params
+        E, D, nw = embed_params
+        eps = make_entry_points(CFG)
+
+        # forward, saving stage inputs
+        h0 = eps["embed_fwd"][0](E, ids)[0]
+        hs = [h0]
+        for sp in stages:
+            hs.append(eps["body_fwd"][0](*sp, hs[-1])[0])
+
+        # backward chain through the entry points
+        loss, gh, gD, gnw = eps["head_bwd"][0](D, nw, hs[-1], ids)
+        stage_grads = []
+        for sp, hin in zip(reversed(stages), reversed(hs[:-1])):
+            outs = eps["body_bwd"][0](*sp, hin, gh)
+            gh, gp = outs[0], outs[1:]
+            stage_grads.append(gp)
+        stage_grads.reverse()
+        gE = eps["embed_bwd"][0](E, ids, gh)[0]
+
+        # autodiff ground truth
+        def monolith(E, D, nw, stages_flat):
+            return _ref_forward_loss(CFG, stages_flat, (E, D, nw), ids)
+
+        ref_loss, ref_grads = jax.value_and_grad(monolith, argnums=(0, 1, 2, 3))(
+            E, D, nw, [list(s) for s in stages]
+        )
+        rE, rD, rnw, rstages = ref_grads
+        np.testing.assert_allclose(loss, ref_loss, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(gE, rE, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(gD, rD, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(gnw, rnw, atol=1e-3, rtol=1e-3)
+        for got_stage, ref_stage in zip(stage_grads, rstages):
+            for g, r in zip(got_stage, ref_stage):
+                np.testing.assert_allclose(g, r, atol=1e-3, rtol=1e-3)
+
+    def test_body_bwd_output_order(self, params):
+        """body_bwd returns (gh, then params in flattening order)."""
+        stages, _, _ = params
+        eps = make_entry_points(CFG)
+        h = jax.random.normal(jax.random.PRNGKey(1), (CFG.microbatch, CFG.context, CFG.dim))
+        g = jnp.ones_like(h)
+        outs = eps["body_bwd"][0](*stages[0], h, g)
+        assert outs[0].shape == h.shape
+        shapes = [tuple(p.shape) for p in stages[0]]
+        assert [tuple(o.shape) for o in outs[1:]] == shapes
+
+
+# ---------------------------------------------------------------------------
+# trainability: a few SGD steps through the entry points reduce loss
+# ---------------------------------------------------------------------------
+class TestTrainability:
+    def test_loss_decreases(self, params):
+        stages, embed_params, ids = params
+        E, D, nw = embed_params
+        stages = [list(s) for s in stages]
+        eps = make_entry_points(CFG)
+        lr = 0.05
+        losses = []
+        for _ in range(8):
+            h0 = eps["embed_fwd"][0](E, ids)[0]
+            hs = [h0]
+            for sp in stages:
+                hs.append(eps["body_fwd"][0](*sp, hs[-1])[0])
+            loss, gh, gD, gnw = eps["head_bwd"][0](D, nw, hs[-1], ids)
+            losses.append(float(loss))
+            new_stages = []
+            for sp, hin in zip(reversed(stages), reversed(hs[:-1])):
+                outs = eps["body_bwd"][0](*sp, hin, gh)
+                gh, gp = outs[0], outs[1:]
+                new_stages.append([p - lr * g for p, g in zip(sp, gp)])
+            new_stages.reverse()
+            stages = new_stages
+            gE = eps["embed_bwd"][0](E, ids, gh)[0]
+            E, D, nw = E - lr * gE, D - lr * gD, nw - lr * gnw
+        assert losses[-1] < losses[0] - 0.3, losses
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+class TestConfigs:
+    def test_presets_paper_table4(self):
+        """Paper Table 4 hyperparameters are encoded faithfully."""
+        s = PRESETS["small124m"]
+        assert (s.dim, s.heads, s.layers, s.body_stages, s.context) == (512, 8, 12, 4, 512)
+        m = PRESETS["medium500m"]
+        assert (m.dim, m.heads, m.layers, m.body_stages, m.context) == (1024, 16, 24, 6, 1024)
+        l = PRESETS["large1p5b"]
+        assert (l.dim, l.heads, l.layers, l.body_stages, l.context) == (2048, 16, 24, 6, 4096)
+        assert s.learning_rate == 6e-4 and m.learning_rate == 3e-4 and l.learning_rate == 3e-4
+
+    def test_param_counts_match_paper_scale(self):
+        # paper: 124M / 500M / 1.5B. With the paper's Table 4 dims and a
+        # 32k vocab, the strict LLaMa block (SwiGLU ffn = 8/3·dim) gives
+        # ~71M for "small" — the paper's 124M label presumably counts a
+        # GPT-2-style 50k vocab; dims are what we hold faithful.
+        assert 60e6 < PRESETS["small124m"].param_count() < 160e6
+        assert 350e6 < PRESETS["medium500m"].param_count() < 650e6
+        assert 1.1e9 < PRESETS["large1p5b"].param_count() < 2.0e9
+
+    def test_invalid_configs_raise(self):
+        with pytest.raises(ValueError):
+            ModelConfig("bad", 256, 64, 4, 5, 2, 128, 32, 4, 1e-3)  # 5 % 2
+        with pytest.raises(ValueError):
+            ModelConfig("bad2", 256, 65, 4, 4, 2, 128, 32, 4, 1e-3)  # 65 % 4
+
+    def test_block_param_names_stable(self):
+        assert BLOCK_PARAM_NAMES == (
+            "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+        )

@@ -1,0 +1,65 @@
+"""Perf-analysis tooling: HLO cost model sanity and structural targets.
+
+These tests pin the §Perf invariants: every shipped config fits the
+16 MiB VMEM budget, the HLO cost analysis is self-consistent (backward ≈
+2× forward FLOPs, costs scale with model size), and MXU alignment math is
+correct.
+"""
+
+import pytest
+
+from compile.kernels.attention import vmem_bytes_estimate
+from compile.model import PRESETS
+from compile.perf import hlo_cost, mxu_alignment
+
+
+@pytest.fixture(scope="module")
+def tiny_costs():
+    from compile.model import make_entry_points
+
+    cfg = PRESETS["tiny"]
+    return {name: hlo_cost(fn, specs) for name, (fn, specs) in make_entry_points(cfg).items()}
+
+
+class TestHloCost:
+    def test_backward_costs_more_than_forward(self, tiny_costs):
+        assert tiny_costs["body_bwd"]["flops"] > 2.0 * tiny_costs["body_fwd"]["flops"]
+        assert tiny_costs["head_bwd"]["flops"] > tiny_costs["head_fwd"]["flops"]
+
+    def test_body_dominates_embed(self, tiny_costs):
+        assert tiny_costs["body_fwd"]["flops"] > 100 * tiny_costs["embed_fwd"]["flops"]
+
+    def test_bytes_accessed_positive(self, tiny_costs):
+        for name, c in tiny_costs.items():
+            assert c["bytes accessed"] > 0, name
+
+    def test_body_fwd_flops_match_analytic(self, tiny_costs):
+        """body_fwd ≈ 2 · stage_params · tokens (dense matmul estimate)."""
+        cfg = PRESETS["tiny"]
+        per_block = sum(
+            int(__import__("math").prod(s)) for _, s in cfg.block_param_shapes()
+        )
+        stage_params = per_block * cfg.blocks_per_stage
+        tokens = cfg.microbatch * cfg.context
+        analytic = 2 * stage_params * tokens
+        got = tiny_costs["body_fwd"]["flops"]
+        # attention quadratic term and norms push it above the matmul floor
+        assert 0.8 * analytic < got < 3.0 * analytic, (got, analytic)
+
+
+class TestStructuralTargets:
+    @pytest.mark.parametrize("name", sorted(PRESETS))
+    def test_all_configs_fit_vmem(self, name):
+        cfg = PRESETS[name]
+        assert vmem_bytes_estimate(cfg.context, cfg.head_dim) < 16 * 2**20, name
+
+    def test_mxu_alignment_bounds(self):
+        assert mxu_alignment(128) == 1.0
+        assert mxu_alignment(256) == 1.0
+        assert mxu_alignment(192) == pytest.approx(128 / 192)
+        assert mxu_alignment(64) == pytest.approx(0.5)
+
+    def test_paper_scale_dims_fully_aligned(self):
+        for name in ["small124m", "medium500m", "large1p5b"]:
+            cfg = PRESETS[name]
+            assert mxu_alignment(cfg.dim) == 1.0, name

@@ -1,0 +1,97 @@
+//! Bench: the L3 hot path — full training iterations through the PJRT
+//! executables, plus the Rust-side pieces (Adam, gradient accumulation,
+//! weighted-average recovery) in isolation. This is the §Perf
+//! before/after harness: PJRT execute time should dominate (compute-
+//! bound); if the Rust share grows, the coordinator has become the
+//! bottleneck.
+
+use checkfree::config::{Strategy, TrainConfig};
+use checkfree::coordinator::PipelineEngine;
+use checkfree::model::GradBuffer;
+use checkfree::recovery::checkfree::weighted_average;
+use checkfree::runtime::HostTensor;
+use checkfree::util::bench::{bench_with, fmt_dur};
+use std::time::Duration;
+
+fn main() {
+    for model in ["tiny", "e2e"] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            strategy: Strategy::CheckFree,
+            microbatches_per_iter: 2,
+            ..TrainConfig::default()
+        };
+        let mut e = match PipelineEngine::from_config(&cfg) {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!("skipping {model}: {err:#}");
+                continue;
+            }
+        };
+        let stats = bench_with(
+            &format!("train_iteration ({model}, 2 microbatches)"),
+            Duration::from_secs(6),
+            5,
+            200,
+            || {
+                e.train_iteration().unwrap();
+            },
+        );
+        println!("{}", stats.report());
+
+        let batch = checkfree::data::BatchIter::validation_set(
+            checkfree::data::Domain::Stories,
+            1,
+            1,
+            e.runtime.manifest.config.microbatch,
+            e.runtime.manifest.config.context,
+            e.runtime.manifest.config.vocab,
+        )
+        .pop()
+        .unwrap();
+        let stats = bench_with(
+            &format!("eval_loss forward-only ({model})"),
+            Duration::from_secs(3),
+            5,
+            200,
+            || {
+                e.eval_loss(&batch).unwrap();
+            },
+        );
+        println!("{}", stats.report());
+
+        // PJRT vs Rust-side split for the perf report
+        let total: f64 = e
+            .runtime
+            .exec_stats()
+            .iter()
+            .map(|(_, d, _)| d.as_secs_f64())
+            .sum();
+        println!("  cumulative PJRT execute time this process: {}", fmt_dur(Duration::from_secs_f64(total)));
+    }
+
+    // Rust-side hot pieces in isolation (e2e body-stage sizes)
+    let n = 1_600_000; // ≈ e2e body stage elements
+    let a = vec![0.5f32; n];
+    let g = vec![0.01f32; n];
+    let mut adam = checkfree::model::Adam::new(&[n]);
+    let mut p = a.clone();
+    let stats = bench_with("adam update 1.6M params", Duration::from_secs(2), 5, 500, || {
+        adam.update(&mut [&mut p], &[&g], 1e-3);
+    });
+    println!("{}", stats.report());
+
+    let mut gb = GradBuffer::new(&[n]);
+    let gt = [HostTensor::from_f32_vec(vec![n], g.clone())];
+    let stats = bench_with("grad accumulate 1.6M params", Duration::from_secs(2), 5, 500, || {
+        gb.accumulate(&gt);
+    });
+    println!("{}", stats.report());
+
+    let ta = vec![HostTensor::from_f32_vec(vec![n], a.clone())];
+    let tb = vec![HostTensor::from_f32_vec(vec![n], g.clone())];
+    let stats = bench_with("weighted_average 1.6M params", Duration::from_secs(2), 5, 500, || {
+        std::hint::black_box(weighted_average(&ta, &tb, 1.0, 2.0));
+    });
+    println!("{}", stats.report());
+}

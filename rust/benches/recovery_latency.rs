@@ -1,0 +1,44 @@
+//! Bench: simulated recovery latency across model scales and stages —
+//! backs the paper's §5.1 claim that CheckFree stage recovery takes
+//! ≈30 s at the 500M scale, and shows how it scales with stage size and
+//! placement vs checkpoint-download recovery.
+
+use checkfree::netsim::{Network, Region};
+use checkfree::util::bench::bench;
+
+fn main() {
+    println!("--- simulated recovery latencies (netsim) ---");
+    let scales: [(&str, u64, u64); 3] = [
+        ("small-124M (4+1 stages)", 124_000_000 / 4 * 4, 124_000_000 * 4),
+        ("medium-500M (6+1 stages)", 333_000_000, 2_000_000_000),
+        ("large-1.5B (6+1 stages)", 1_000_000_000, 6_000_000_000),
+    ];
+    for (label, stage_bytes, model_bytes) in scales {
+        let stages = if label.starts_with("small") { 5 } else { 7 };
+        let net = Network::round_robin(stages);
+        let cf: f64 = (1..stages)
+            .map(|s| net.checkfree_recovery_seconds(stage_bytes, s).unwrap())
+            .fold(0.0, f64::max);
+        let ck_down = net.storage_transfer_seconds(stage_bytes);
+        let ck_up = net.storage_transfer_seconds(model_bytes);
+        println!(
+            "{label:<28} checkfree {cf:>7.1}s | ckpt download {ck_down:>7.1}s | ckpt upload {ck_up:>8.1}s"
+        );
+    }
+
+    println!("\n--- netsim micro-benchmarks ---");
+    let net = Network::round_robin(7);
+    let stats = bench("transfer_seconds (single edge)", || {
+        std::hint::black_box(net.transfer_seconds(333_000_000, 2, 3).unwrap());
+    });
+    println!("{}", stats.report());
+    let stats = bench("checkfree_recovery_seconds (both neighbours)", || {
+        std::hint::black_box(net.checkfree_recovery_seconds(333_000_000, 3).unwrap());
+    });
+    println!("{}", stats.report());
+    let single = Network::single_region(7, Region::UsCentral);
+    let stats = bench("recovery in single-region cluster", || {
+        std::hint::black_box(single.checkfree_recovery_seconds(333_000_000, 3).unwrap());
+    });
+    println!("{}", stats.report());
+}

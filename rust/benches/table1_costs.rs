@@ -1,0 +1,64 @@
+//! Bench: recovery-operation micro-costs backing paper **Table 1**.
+//!
+//! Table 1 is analytic (printed by `checkfree costs`); this bench measures
+//! the *actual* Rust-side cost of each strategy's recovery mechanism on a
+//! live engine — weighted averaging vs copy vs random reinit vs full
+//! snapshot/rollback — demonstrating that CheckFree's recovery work is
+//! O(stage) with a small constant.
+
+use checkfree::config::{default_artifacts_root, ReinitKind, Strategy, TrainConfig};
+use checkfree::coordinator::PipelineEngine;
+use checkfree::manifest::Manifest;
+use checkfree::netsim::Network;
+use checkfree::recovery::costs::render_table1;
+use checkfree::recovery::{
+    CheckFreeRecovery, CheckpointRecovery, RecoveryStrategy, RedundantRecovery,
+};
+use checkfree::util::bench::bench;
+
+fn engine() -> PipelineEngine {
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        strategy: Strategy::CheckFree,
+        microbatches_per_iter: 2,
+        ..TrainConfig::default()
+    };
+    let mut e = PipelineEngine::from_config(&cfg).unwrap();
+    e.train_iteration().unwrap(); // populate ω
+    e
+}
+
+fn main() {
+    let manifest = Manifest::load_config(default_artifacts_root(), "tiny").unwrap();
+    println!("{}", render_table1(&manifest));
+    println!("--- measured recovery-op costs (tiny model, per event) ---");
+
+    let mut e = engine();
+    let net = Network::round_robin(e.stages.len());
+
+    for reinit in [ReinitKind::WeightedAverage, ReinitKind::Copy, ReinitKind::Random] {
+        let mut s = CheckFreeRecovery::new(reinit, 1.1, 0);
+        let stats = bench(&format!("checkfree on_failure ({:?})", reinit), || {
+            s.on_failure(&mut e, &net, 1).unwrap();
+        });
+        println!("{}", stats.report());
+    }
+
+    let mut ck = CheckpointRecovery::new(1);
+    ck.after_iteration(&mut e, &net).unwrap();
+    let stats = bench("checkpoint snapshot (after_iteration)", || {
+        ck.after_iteration(&mut e, &net).unwrap();
+    });
+    println!("{}", stats.report());
+    let stats = bench("checkpoint rollback (on_failure)", || {
+        ck.on_failure(&mut e, &net, 1).unwrap();
+    });
+    println!("{}", stats.report());
+
+    let mut rd = RedundantRecovery::new();
+    let stats = bench("redundant on_failure (shadow takeover)", || {
+        rd.after_iteration(&mut e, &net).unwrap();
+        rd.on_failure(&mut e, &net, 1).unwrap();
+    });
+    println!("{}", stats.report());
+}

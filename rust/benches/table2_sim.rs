@@ -1,0 +1,48 @@
+//! Bench: the paper-scale **Table 2** simulator itself — full 12-cell
+//! table regeneration plus the per-cell GPipe makespan kernel. Keeps the
+//! table cheap enough to sweep (the ablation harnesses re-run it across
+//! parameter grids).
+
+use checkfree::config::Strategy;
+use checkfree::netsim::Network;
+use checkfree::sim::{
+    gpipe_makespan, iteration_seconds, paper_converged_iterations, simulate_training, SimParams,
+};
+use checkfree::util::bench::bench;
+
+fn main() {
+    let stats = bench("gpipe_makespan 7 stages × 8 microbatches", || {
+        let fwd = [1.0; 7];
+        let bwd = [2.0; 7];
+        let comm = [0.1; 6];
+        std::hint::black_box(gpipe_makespan(&fwd, &bwd, &comm, 8));
+    });
+    println!("{}", stats.report());
+
+    let p = SimParams::paper_medium(Strategy::CheckFree, 0.10);
+    let net = Network::round_robin(p.stages);
+    let stats = bench("iteration_seconds (steady-state model)", || {
+        std::hint::black_box(iteration_seconds(&p, &net));
+    });
+    println!("{}", stats.report());
+
+    let stats = bench("simulate_training 16k iterations @10%", || {
+        std::hint::black_box(simulate_training(&p, 16_000));
+    });
+    println!("{}", stats.report());
+
+    let stats = bench("full Table 2 (4 strategies × 3 rates)", || {
+        for s in [
+            Strategy::Checkpoint,
+            Strategy::Redundant,
+            Strategy::CheckFree,
+            Strategy::CheckFreePlus,
+        ] {
+            for r in [0.05, 0.10, 0.16] {
+                let p = SimParams::paper_medium(s, r);
+                std::hint::black_box(simulate_training(&p, paper_converged_iterations(s, r)));
+            }
+        }
+    });
+    println!("{}", stats.report());
+}

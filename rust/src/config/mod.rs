@@ -1,0 +1,436 @@
+//! Run configuration: everything a training or simulation run needs,
+//! loadable from JSON (`--config run.json`, parsed by the from-scratch
+//! [`crate::util::json`] module) or built from presets that mirror the
+//! paper's experimental setups.
+
+use std::path::PathBuf;
+use std::str::FromStr;
+
+use crate::util::json::{self, Json};
+use crate::{anyhow, Context, Result};
+
+/// Which recovery strategy the run uses (paper Table 1 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// No failures tolerated — baseline for no-failure convergence refs.
+    None,
+    /// Periodic full-model checkpoint to remote storage; rollback on failure.
+    Checkpoint,
+    /// Bamboo-style redundant forward computation (Thorpe et al., 2023).
+    Redundant,
+    /// CheckFree: gradient-norm-weighted neighbour averaging (paper §4.2).
+    CheckFree,
+    /// CheckFree+: CheckFree + out-of-order swaps + (de)embedding
+    /// replication, recovering first/last stages too (paper §4.3).
+    CheckFreePlus,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::None,
+        Strategy::Checkpoint,
+        Strategy::Redundant,
+        Strategy::CheckFree,
+        Strategy::CheckFreePlus,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::None => "no-failures",
+            Strategy::Checkpoint => "checkpointing",
+            Strategy::Redundant => "redundant-comp",
+            Strategy::CheckFree => "checkfree",
+            Strategy::CheckFreePlus => "checkfree+",
+        }
+    }
+
+    /// Does the pipeline run the CheckFree+ out-of-order swap schedule?
+    pub fn uses_swaps(&self) -> bool {
+        matches!(self, Strategy::CheckFreePlus)
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "no-failures" => Ok(Strategy::None),
+            "checkpoint" | "checkpointing" => Ok(Strategy::Checkpoint),
+            "redundant" | "redundant-comp" => Ok(Strategy::Redundant),
+            "checkfree" => Ok(Strategy::CheckFree),
+            "checkfree+" | "checkfree-plus" | "checkfreeplus" => Ok(Strategy::CheckFreePlus),
+            other => Err(anyhow!(
+                "unknown strategy '{other}' (none|checkpoint|redundant|checkfree|checkfree+)"
+            )),
+        }
+    }
+}
+
+/// Reinitialization rule for a lost intermediate stage (paper Fig 2
+/// ablation: random / copy / weighted averaging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReinitKind {
+    Random,
+    Copy,
+    WeightedAverage,
+}
+
+impl ReinitKind {
+    pub const ALL: [ReinitKind; 3] =
+        [ReinitKind::Random, ReinitKind::Copy, ReinitKind::WeightedAverage];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReinitKind::Random => "random",
+            ReinitKind::Copy => "copy",
+            ReinitKind::WeightedAverage => "weighted",
+        }
+    }
+}
+
+impl FromStr for ReinitKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(ReinitKind::Random),
+            "copy" => Ok(ReinitKind::Copy),
+            "weighted" | "weighted-average" => Ok(ReinitKind::WeightedAverage),
+            other => Err(anyhow!("unknown reinit '{other}' (random|copy|weighted)")),
+        }
+    }
+}
+
+/// How stage failures are sampled.
+///
+/// The paper expresses churn as "probability of a stage failure within an
+/// hour" (5/10/16%) over iterations that take ~91 s at its testbed scale.
+/// Convergence experiments on this testbed run far fewer, much faster
+/// iterations, so the injector also accepts a direct per-iteration rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureSpec {
+    /// Paper-style: hourly per-stage failure probability + the (simulated)
+    /// duration of one iteration in seconds.
+    PerHour { rate: f64, iteration_seconds: f64 },
+    /// Direct per-stage, per-iteration failure probability.
+    PerIteration { rate: f64 },
+}
+
+impl FailureSpec {
+    /// Per-stage per-iteration failure probability.
+    pub fn per_iteration(&self) -> f64 {
+        match *self {
+            FailureSpec::PerHour { rate, iteration_seconds } => {
+                1.0 - (1.0 - rate).powf(iteration_seconds / 3600.0)
+            }
+            FailureSpec::PerIteration { rate } => rate,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            FailureSpec::PerHour { rate, iteration_seconds } => Json::obj(vec![
+                ("kind", Json::str("per-hour")),
+                ("rate", Json::num(rate)),
+                ("iteration_seconds", Json::num(iteration_seconds)),
+            ]),
+            FailureSpec::PerIteration { rate } => Json::obj(vec![
+                ("kind", Json::str("per-iteration")),
+                ("rate", Json::num(rate)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "per-hour" => Ok(FailureSpec::PerHour {
+                rate: v.get("rate")?.as_f64()?,
+                iteration_seconds: v.get("iteration_seconds")?.as_f64()?,
+            }),
+            "per-iteration" => Ok(FailureSpec::PerIteration { rate: v.get("rate")?.as_f64()? }),
+            other => Err(anyhow!("unknown failure kind '{other}'")),
+        }
+    }
+}
+
+/// One training run (real compute through the PJRT executables).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest config name under `artifacts/` (e.g. "tiny", "e2e").
+    pub model: String,
+    pub artifacts_root: PathBuf,
+    pub iterations: u64,
+    /// Gradient-accumulation microbatches per iteration (pipeline depth).
+    pub microbatches_per_iter: usize,
+    pub strategy: Strategy,
+    /// Reinit rule for CheckFree-style recovery (Fig 2 ablation).
+    pub reinit: ReinitKind,
+    pub failure: FailureSpec,
+    /// Checkpoint period in iterations (Checkpoint strategy only).
+    pub checkpoint_every: u64,
+    /// Master seed: init, data order, failure schedule all derive from it.
+    pub seed: u64,
+    /// Override the preset learning rate.
+    pub lr: Option<f32>,
+    /// Stop early once smoothed validation loss goes below this.
+    pub target_loss: Option<f32>,
+    /// Learning-rate multiplier applied to a stage on CheckFree recovery
+    /// (paper Algorithm 1 line 4: 1.1).
+    pub recovery_lr_boost: f32,
+    /// Validation cadence (iterations).
+    pub eval_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            artifacts_root: default_artifacts_root(),
+            iterations: 100,
+            microbatches_per_iter: 4,
+            strategy: Strategy::CheckFree,
+            reinit: ReinitKind::WeightedAverage,
+            failure: FailureSpec::PerIteration { rate: 0.0 },
+            checkpoint_every: 50,
+            seed: 42,
+            lr: None,
+            target_loss: None,
+            recovery_lr_boost: 1.1,
+            eval_every: 10,
+        }
+    }
+}
+
+/// Locate `artifacts/` relative to the crate root (works from tests,
+/// benches, and examples regardless of CWD).
+pub fn default_artifacts_root() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("artifacts_root", Json::str(self.artifacts_root.to_string_lossy())),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("microbatches_per_iter", Json::num(self.microbatches_per_iter as f64)),
+            ("strategy", Json::str(self.strategy.label())),
+            ("reinit", Json::str(self.reinit.label())),
+            ("failure", self.failure.to_json()),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "lr",
+                self.lr.map(|x| Json::num(x as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "target_loss",
+                self.target_loss.map(|x| Json::num(x as f64)).unwrap_or(Json::Null),
+            ),
+            ("recovery_lr_boost", Json::num(self.recovery_lr_boost as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = TrainConfig::default();
+        let opt_f32 = |key: &str| -> Result<Option<f32>> {
+            match v.opt(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(x) => Ok(Some(x.as_f32()?)),
+            }
+        };
+        Ok(Self {
+            model: match v.opt("model") {
+                Some(x) => x.as_str()?.to_string(),
+                None => d.model,
+            },
+            artifacts_root: match v.opt("artifacts_root") {
+                Some(x) => PathBuf::from(x.as_str()?),
+                None => d.artifacts_root,
+            },
+            iterations: match v.opt("iterations") {
+                Some(x) => x.as_u64()?,
+                None => d.iterations,
+            },
+            microbatches_per_iter: match v.opt("microbatches_per_iter") {
+                Some(x) => x.as_usize()?,
+                None => d.microbatches_per_iter,
+            },
+            strategy: match v.opt("strategy") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.strategy,
+            },
+            reinit: match v.opt("reinit") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.reinit,
+            },
+            failure: match v.opt("failure") {
+                Some(x) => FailureSpec::from_json(x)?,
+                None => d.failure,
+            },
+            checkpoint_every: match v.opt("checkpoint_every") {
+                Some(x) => x.as_u64()?,
+                None => d.checkpoint_every,
+            },
+            seed: match v.opt("seed") {
+                Some(x) => x.as_u64()?,
+                None => d.seed,
+            },
+            lr: opt_f32("lr")?,
+            target_loss: opt_f32("target_loss")?,
+            recovery_lr_boost: match v.opt("recovery_lr_boost") {
+                Some(x) => x.as_f32()?,
+                None => d.recovery_lr_boost,
+            },
+            eval_every: match v.opt("eval_every") {
+                Some(x) => x.as_u64()?,
+                None => d.eval_every,
+            },
+        })
+    }
+
+    pub fn from_json_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.microbatches_per_iter == 0 {
+            return Err(anyhow!("microbatches_per_iter must be ≥ 1"));
+        }
+        if self.strategy == Strategy::Checkpoint && self.checkpoint_every == 0 {
+            return Err(anyhow!("checkpoint_every must be ≥ 1 for Checkpoint strategy"));
+        }
+        if self.strategy.uses_swaps() && self.microbatches_per_iter % 2 != 0 {
+            return Err(anyhow!(
+                "CheckFree+ swaps half the microbatches: microbatches_per_iter must be even"
+            ));
+        }
+        if self.recovery_lr_boost < 1.0 {
+            return Err(anyhow!("recovery_lr_boost must be ≥ 1.0"));
+        }
+        Ok(())
+    }
+}
+
+/// Paper experiment presets (see DESIGN.md §3 experiment index).
+pub mod presets {
+    use super::*;
+
+    /// Fig 3-style convergence comparison at a given per-iteration rate.
+    pub fn convergence(
+        model: &str,
+        strategy: Strategy,
+        rate: f64,
+        iters: u64,
+        seed: u64,
+    ) -> TrainConfig {
+        TrainConfig {
+            model: model.into(),
+            iterations: iters,
+            strategy,
+            failure: FailureSpec::PerIteration { rate },
+            checkpoint_every: 25,
+            seed,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// Paper §5.1 throughput setting: hourly rates over 91.3 s iterations.
+    pub fn paper_failure(rate_per_hour: f64) -> FailureSpec {
+        FailureSpec::PerHour { rate: rate_per_hour, iteration_seconds: 91.3 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_hour_conversion_matches_closed_form() {
+        let f = FailureSpec::PerHour { rate: 0.10, iteration_seconds: 3600.0 };
+        assert!((f.per_iteration() - 0.10).abs() < 1e-12);
+        let f = FailureSpec::PerHour { rate: 0.05, iteration_seconds: 91.3 };
+        // 1 - 0.95^(91.3/3600) ≈ 1.3e-3
+        assert!((f.per_iteration() - 1.3e-3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn per_iteration_passthrough() {
+        assert_eq!(FailureSpec::PerIteration { rate: 0.02 }.per_iteration(), 0.02);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TrainConfig {
+            strategy: Strategy::CheckFreePlus,
+            lr: Some(3e-4),
+            target_loss: None,
+            failure: FailureSpec::PerHour { rate: 0.16, iteration_seconds: 91.3 },
+            ..TrainConfig::default()
+        };
+        let text = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.failure, cfg.failure);
+        assert_eq!(back.lr, cfg.lr);
+        assert_eq!(back.target_loss, None);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(cfg.model, "e2e");
+        assert_eq!(cfg.iterations, TrainConfig::default().iterations);
+    }
+
+    #[test]
+    fn strategy_parse_all_labels() {
+        for s in Strategy::ALL {
+            assert_eq!(s.label().parse::<Strategy>().unwrap(), s);
+        }
+        assert!("bogus".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn reinit_parse_all_labels() {
+        for r in ReinitKind::ALL {
+            assert_eq!(r.label().parse::<ReinitKind>().unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_odd_microbatches_with_swaps() {
+        let cfg = TrainConfig {
+            strategy: Strategy::CheckFreePlus,
+            microbatches_per_iter: 3,
+            ..TrainConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_ckpt_period() {
+        let cfg = TrainConfig {
+            strategy: Strategy::Checkpoint,
+            checkpoint_every: 0,
+            ..TrainConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_labels_unique() {
+        use std::collections::HashSet;
+        let labels: HashSet<_> = Strategy::ALL.iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), Strategy::ALL.len());
+    }
+}

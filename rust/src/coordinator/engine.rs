@@ -1,0 +1,350 @@
+//! The pipeline-parallel training engine: owns the stages, drives the
+//! microbatch schedule through the PJRT executables, accumulates
+//! gradients, and steps the optimizer.
+//!
+//! One `train_iteration` =
+//! `microbatches_per_iter` × (embed_fwd → body_fwd per route stage →
+//! head_bwd → body_bwd in reverse route order → embed_bwd), then one Adam
+//! step per stage from the accumulated gradients — a GPipe-style
+//! fill/drain with gradient accumulation. With swaps enabled
+//! (CheckFree+), odd microbatches traverse the swapped route from
+//! [`super::schedule`].
+//!
+//! The engine itself is failure-oblivious: the [`super::trainer`] injects
+//! failures and calls a [`crate::recovery::RecoveryStrategy`] to rebuild
+//! stage state between iterations.
+
+use crate::config::TrainConfig;
+use crate::coordinator::schedule;
+use crate::data::{BatchIter, Domain};
+use crate::model::{GradBuffer, Stage};
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, Runtime};
+use crate::{anyhow, Context, Result};
+
+/// Result of one training iteration.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iteration: u64,
+    /// Mean microbatch loss.
+    pub loss: f32,
+    /// ω = ‖∇W‖² per stage after this iteration (index 0 = embed).
+    pub omegas: Vec<f64>,
+}
+
+pub struct PipelineEngine {
+    pub runtime: Runtime,
+    /// Index 0 = embed stage (E, E⁻¹, final norm); 1..=L = body stages.
+    pub stages: Vec<Stage>,
+    grad_bufs: Vec<GradBuffer>,
+    data: BatchIter,
+    val_set: Vec<HostTensor>,
+    pub iteration: u64,
+    pub use_swaps: bool,
+    pub microbatches: usize,
+}
+
+impl PipelineEngine {
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let runtime = Runtime::load_config(&cfg.artifacts_root, &cfg.model)
+            .with_context(|| format!("loading model config '{}'", cfg.model))?;
+        Self::new(runtime, cfg)
+    }
+
+    pub fn new(runtime: Runtime, cfg: &TrainConfig) -> Result<Self> {
+        let mc = runtime.manifest.config.clone();
+        let lr = cfg.lr.unwrap_or(mc.learning_rate);
+        let mut rng = Rng::new(cfg.seed);
+        let mut stages = Vec::with_capacity(mc.total_stages());
+        stages.push(Stage::new_embed(&runtime.manifest, lr, &mut rng.fork(0)));
+        for i in 1..=mc.body_stages {
+            stages.push(Stage::new_body(&runtime.manifest, i, lr, &mut rng.fork(i as u64)));
+        }
+        let grad_bufs = stages.iter().map(|s| GradBuffer::new(&s.tensor_sizes())).collect();
+        let data = BatchIter::new(Domain::Stories, cfg.seed, mc.microbatch, mc.context, mc.vocab);
+        let val_set = BatchIter::validation_set(
+            Domain::Stories,
+            cfg.seed,
+            4,
+            mc.microbatch,
+            mc.context,
+            mc.vocab,
+        );
+        Ok(Self {
+            runtime,
+            stages,
+            grad_bufs,
+            data,
+            val_set,
+            iteration: 0,
+            use_swaps: cfg.strategy.uses_swaps(),
+            microbatches: cfg.microbatches_per_iter,
+        })
+    }
+
+    pub fn body_stages(&self) -> usize {
+        self.stages.len() - 1
+    }
+
+    /// Bytes of one body stage (recovery-cost accounting).
+    pub fn body_stage_bytes(&self) -> u64 {
+        self.runtime.manifest.body_stage_bytes()
+    }
+
+    pub fn embed_stage_bytes(&self) -> u64 {
+        self.runtime.manifest.embed_stage_bytes()
+    }
+
+    /// Marshal every stage's parameters into XLA literals once (per
+    /// iteration), so the microbatch loop reuses them instead of copying
+    /// all parameters on every executable call. Safe because nothing
+    /// mutates parameters within an iteration (Adam and recovery both run
+    /// between iterations).
+    fn build_param_literals(&self) -> Result<Vec<Vec<xla::Literal>>> {
+        self.stages
+            .iter()
+            .map(|stage| stage.params.iter().map(|p| p.to_literal()).collect())
+            .collect()
+    }
+
+    /// Full forward + backward of one microbatch along `route`;
+    /// accumulates gradients into every stage's buffer, returns the loss.
+    fn microbatch_pass(
+        &mut self,
+        ids: &HostTensor,
+        route: &[usize],
+        param_lits: &[Vec<xla::Literal>],
+    ) -> Result<f32> {
+        let ids_lit = ids.to_literal()?;
+        let (e, d, nw) = (&param_lits[0][0], &param_lits[0][1], &param_lits[0][2]);
+
+        // ---- forward ----
+        let embed_fwd = self.runtime.executable("embed_fwd")?;
+        let h0 = embed_fwd
+            .run_literals(&[e, &ids_lit])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+        // hs[i] = activation INTO route[i]; last = activation into head
+        let mut hs: Vec<HostTensor> = Vec::with_capacity(route.len() + 1);
+        hs.push(h0);
+        let body_fwd = self.runtime.executable("body_fwd")?;
+        for &s in route {
+            debug_assert!(self.stages[s].index >= 1);
+            let mut args: Vec<&xla::Literal> = param_lits[s].iter().collect();
+            let h_lit = hs.last().unwrap().to_literal()?;
+            args.push(&h_lit);
+            let h_out = body_fwd
+                .run_literals(&args)?
+                .pop()
+                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?;
+            hs.push(h_out);
+        }
+
+        // ---- head: loss + gradients wrt (h, deembed, final_norm) ----
+        let head_bwd = self.runtime.executable("head_bwd")?;
+        let h_last = hs.last().unwrap().to_literal()?;
+        let mut outs = head_bwd.run_literals(&[d, nw, &h_last, &ids_lit])?;
+        if outs.len() != 4 {
+            return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
+        }
+        let gnw = outs.pop().unwrap();
+        let gd = outs.pop().unwrap();
+        let mut gh = outs.pop().unwrap();
+        let loss = outs.pop().unwrap().scalar_f32()?;
+
+        // ---- backward through body stages in reverse route order ----
+        let body_bwd = self.runtime.executable("body_bwd")?;
+        for (pos, &s) in route.iter().enumerate().rev() {
+            let mut args: Vec<&xla::Literal> = param_lits[s].iter().collect();
+            let h_lit = hs[pos].to_literal()?;
+            let gh_lit = gh.to_literal()?;
+            args.push(&h_lit);
+            args.push(&gh_lit);
+            let mut bouts = body_bwd.run_literals(&args)?;
+            // (gh, gparams…)
+            let gparams = bouts.split_off(1);
+            gh = bouts.pop().unwrap();
+            self.grad_bufs[s].accumulate(&gparams);
+        }
+
+        // ---- embedding backward ----
+        let embed_bwd = self.runtime.executable("embed_bwd")?;
+        let gh_lit = gh.to_literal()?;
+        let ge = embed_bwd
+            .run_literals(&[e, &ids_lit, &gh_lit])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
+        self.grad_bufs[0].accumulate(&[ge, gd, gnw]);
+        Ok(loss)
+    }
+
+    /// One full training iteration; optimizer steps every stage.
+    pub fn train_iteration(&mut self) -> Result<IterStats> {
+        let mut loss_sum = 0.0f64;
+        let param_lits = self.build_param_literals()?;
+        for mb in 0..self.microbatches {
+            let ids = self.data.next_batch();
+            let route = schedule::route(self.body_stages(), mb, self.use_swaps);
+            loss_sum += self.microbatch_pass(&ids, &route, &param_lits)? as f64;
+        }
+        for (stage, gb) in self.stages.iter_mut().zip(&mut self.grad_bufs) {
+            debug_assert_eq!(gb.microbatches() as usize, self.microbatches);
+            stage.apply_grads(gb);
+        }
+        self.iteration += 1;
+        Ok(IterStats {
+            iteration: self.iteration,
+            loss: (loss_sum / self.microbatches as f64) as f32,
+            omegas: self.stages.iter().map(|s| s.omega).collect(),
+        })
+    }
+
+    /// Forward-only loss of one batch (standard route).
+    pub fn eval_loss(&self, ids: &HostTensor) -> Result<f32> {
+        let embed_params = &self.stages[0].params;
+        let (e, d, nw) = (&embed_params[0], &embed_params[1], &embed_params[2]);
+        let embed_fwd = self.runtime.executable("embed_fwd")?;
+        let mut h = embed_fwd
+            .run(&[e, ids])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+        let body_fwd = self.runtime.executable("body_fwd")?;
+        for s in 1..self.stages.len() {
+            let mut args: Vec<&HostTensor> = self.stages[s].params.iter().collect();
+            args.push(&h);
+            h = body_fwd
+                .run(&args)?
+                .pop()
+                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?;
+        }
+        let head_fwd = self.runtime.executable("head_fwd")?;
+        head_fwd.run(&[d, nw, &h, ids])?[0].scalar_f32()
+    }
+
+    /// Mean loss over the held-out validation set.
+    pub fn validate(&self) -> Result<f32> {
+        let mut sum = 0.0f64;
+        for batch in &self.val_set {
+            sum += self.eval_loss(batch)? as f64;
+        }
+        Ok((sum / self.val_set.len() as f64) as f32)
+    }
+
+    /// Perplexity on `k` fresh batches of a domain (Table 3).
+    pub fn perplexity(&self, domain: Domain, seed: u64, k: usize) -> Result<f64> {
+        let mc = &self.runtime.manifest.config;
+        let batches =
+            BatchIter::validation_set(domain, seed, k, mc.microbatch, mc.context, mc.vocab);
+        let mut sum = 0.0f64;
+        for b in &batches {
+            sum += self.eval_loss(b)? as f64;
+        }
+        Ok((sum / batches.len() as f64).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+
+    fn engine(strategy: Strategy, seed: u64) -> PipelineEngine {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy,
+            microbatches_per_iter: 2,
+            seed,
+            ..TrainConfig::default()
+        };
+        PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn initial_val_loss_near_log_vocab() {
+        let e = engine(Strategy::None, 1);
+        let vocab = e.runtime.manifest.config.vocab as f32;
+        let v = e.validate().unwrap();
+        assert!((v - vocab.ln()).abs() < 0.6, "loss {v} vs ln(V)={}", vocab.ln());
+    }
+
+    #[test]
+    fn loss_decreases_over_iterations() {
+        let mut e = engine(Strategy::None, 2);
+        let first = e.train_iteration().unwrap().loss;
+        let mut last = first;
+        for _ in 0..14 {
+            last = e.train_iteration().unwrap().loss;
+        }
+        assert!(
+            last < first - 0.7,
+            "loss did not drop: first {first}, last {last}"
+        );
+    }
+
+    #[test]
+    fn omegas_populated_for_all_stages() {
+        let mut e = engine(Strategy::None, 3);
+        let stats = e.train_iteration().unwrap();
+        assert_eq!(stats.omegas.len(), e.stages.len());
+        assert!(stats.omegas.iter().all(|&o| o > 0.0), "{:?}", stats.omegas);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = engine(Strategy::None, 7);
+        let mut b = engine(Strategy::None, 7);
+        for _ in 0..3 {
+            let sa = a.train_iteration().unwrap();
+            let sb = b.train_iteration().unwrap();
+            assert_eq!(sa.loss, sb.loss);
+        }
+        assert_eq!(a.stages[1].params, b.stages[1].params);
+    }
+
+    #[test]
+    fn different_seed_different_run() {
+        let mut a = engine(Strategy::None, 7);
+        let mut b = engine(Strategy::None, 8);
+        assert_ne!(a.train_iteration().unwrap().loss, b.train_iteration().unwrap().loss);
+    }
+
+    #[test]
+    fn swap_schedule_changes_training() {
+        // Same seed, swaps on vs off → different weights after an iteration.
+        let mut plain = engine(Strategy::None, 9);
+        let mut swapped = engine(Strategy::CheckFreePlus, 9);
+        plain.train_iteration().unwrap();
+        swapped.train_iteration().unwrap();
+        assert_ne!(plain.stages[1].params, swapped.stages[1].params);
+    }
+
+    #[test]
+    fn swaps_still_converge() {
+        let mut e = engine(Strategy::CheckFreePlus, 10);
+        let first = e.train_iteration().unwrap().loss;
+        let mut last = first;
+        for _ in 0..14 {
+            last = e.train_iteration().unwrap().loss;
+        }
+        assert!(last < first - 0.5, "first {first}, last {last}");
+    }
+
+    #[test]
+    fn iteration_counter_advances() {
+        let mut e = engine(Strategy::None, 11);
+        assert_eq!(e.iteration, 0);
+        e.train_iteration().unwrap();
+        e.train_iteration().unwrap();
+        assert_eq!(e.iteration, 2);
+    }
+
+    #[test]
+    fn perplexity_is_exp_loss_scale() {
+        let e = engine(Strategy::None, 12);
+        let ppl = e.perplexity(Domain::Stories, 5, 2).unwrap();
+        let vocab = e.runtime.manifest.config.vocab as f64;
+        // untrained: ppl ≈ vocab
+        assert!(ppl > vocab * 0.4 && ppl < vocab * 2.5, "{ppl}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 coordinator: pipeline engine, microbatch schedules, trainer.
+//!
+//! * [`schedule`] — microbatch routes, incl. the CheckFree+ out-of-order
+//!   swap schedule (paper §4.3);
+//! * [`engine`] — the pipeline-parallel training engine driving the PJRT
+//!   executables (embed/body/head fwd+bwd, gradient accumulation, Adam);
+//! * [`trainer`] — the leader loop tying engine + failure injector +
+//!   recovery strategy + metrics together.
+
+pub mod engine;
+pub mod schedule;
+pub mod trainer;
+
+pub use engine::{IterStats, PipelineEngine};
+pub use trainer::{RunSummary, Trainer, PAPER_ITER_SECONDS};

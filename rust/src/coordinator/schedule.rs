@@ -1,0 +1,146 @@
+//! Microbatch routes: the order body stages are applied to a microbatch.
+//!
+//! Standard pipeline order is `S1, S2, …, SL` (with `S0` — embedding +
+//! deembedding — wrapped around both ends, paper §4.3 footnote 3).
+//!
+//! **CheckFree+ out-of-order swaps** (paper §4.3): for half the
+//! microbatches the order of the first two and last two *transformer*
+//! stages is swapped — `S0, S2, S1, …, SL, S(L-1), S0` — so `S2` regularly
+//! stands in the `S1` slot (and `S(L-1)` in the `SL` slot). The two stages
+//! learn each other's behaviour and a crashed boundary stage can be
+//! recovered by copying its swap partner.
+
+/// A route is the sequence of body-stage indices (1-based) a microbatch
+/// traverses between embedding and head.
+pub type Route = Vec<usize>;
+
+/// Build the route for microbatch `mb` of an iteration.
+///
+/// With `swaps` enabled, odd microbatches run the swapped order —
+/// exactly half of them for an even microbatch count (the configuration
+/// validator enforces evenness for CheckFree+).
+pub fn route(body_stages: usize, mb: usize, swaps: bool) -> Route {
+    let mut r: Route = (1..=body_stages).collect();
+    if swaps && mb % 2 == 1 {
+        apply_swap(&mut r);
+    }
+    r
+}
+
+/// In-place transposition (S1 S2)(S(L-1) SL) on the standard route.
+///
+/// For pipelines too short for two disjoint swaps (L < 4) only the front
+/// swap is applied — with 2 or 3 body stages the "first two" and "last
+/// two" overlap and the paper's construction degenerates.
+pub fn apply_swap(r: &mut Route) {
+    let l = r.len();
+    if l >= 2 {
+        r.swap(0, 1);
+    }
+    if l >= 4 {
+        r.swap(l - 2, l - 1);
+    }
+}
+
+/// The swap partner of a boundary stage (who learns to mimic whom):
+/// `S1 ↔ S2`, `SL ↔ S(L-1)`. Intermediate stages have no partner.
+pub fn swap_partner(stage: usize, body_stages: usize) -> Option<usize> {
+    let l = body_stages;
+    if l < 2 {
+        return None;
+    }
+    match stage {
+        1 => Some(2),
+        2 if l < 4 => Some(1), // degenerate short pipeline
+        s if s == l && l >= 4 => Some(l - 1),
+        s if s == l - 1 && l >= 4 => Some(l),
+        2 => Some(1),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_route_is_identity() {
+        assert_eq!(route(6, 0, true), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(route(6, 2, true), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(route(6, 1, false), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn swapped_route_matches_paper() {
+        // paper §4.3: S0, S2, S1 ... SL, S(L-1)
+        assert_eq!(route(6, 1, true), vec![2, 1, 3, 4, 6, 5]);
+        assert_eq!(route(4, 3, true), vec![2, 1, 4, 3]);
+    }
+
+    #[test]
+    fn short_pipelines_swap_front_only() {
+        assert_eq!(route(2, 1, true), vec![2, 1]);
+        assert_eq!(route(3, 1, true), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn every_stage_visited_exactly_once() {
+        for l in 1..10 {
+            for mb in 0..4 {
+                let mut r = route(l, mb, true);
+                r.sort_unstable();
+                assert_eq!(r, (1..=l).collect::<Vec<_>>(), "l={l} mb={mb}");
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_half_microbatches_swapped() {
+        let l = 6;
+        let n = 8;
+        let swapped = (0..n)
+            .filter(|&mb| route(l, mb, true) != route(l, 0, false))
+            .count();
+        assert_eq!(swapped, n / 2);
+    }
+
+    #[test]
+    fn swap_is_involution() {
+        let mut r: Route = (1..=6).collect();
+        apply_swap(&mut r);
+        apply_swap(&mut r);
+        assert_eq!(r, (1..=6).collect::<Route>());
+    }
+
+    #[test]
+    fn swap_partners_symmetric() {
+        for l in [4usize, 5, 6, 8] {
+            for s in 1..=l {
+                if let Some(p) = swap_partner(s, l) {
+                    assert_eq!(swap_partner(p, l), Some(s), "l={l} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intermediate_stages_have_no_partner() {
+        assert_eq!(swap_partner(3, 6), None);
+        assert_eq!(swap_partner(4, 6), None);
+    }
+
+    #[test]
+    fn property_swapped_route_is_permutation() {
+        crate::util::propcheck::forall(
+            "route-permutation",
+            200,
+            123,
+            |r, size| (1 + r.below(size.max(1)), r.below(16)),
+            |&(l, mb)| {
+                let mut got = route(l, mb, true);
+                got.sort_unstable();
+                got == (1..=l).collect::<Vec<_>>()
+            },
+        );
+    }
+}

@@ -1,0 +1,368 @@
+//! Synthetic training data: a seeded grammar corpus + tokenizer.
+//!
+//! Substitution for the paper's datasets (TinyStories / OpenWebText /
+//! RedPajamas — see DESIGN.md §2): the object of study is how *recovery
+//! strategies* perturb convergence, which needs a real next-token task
+//! with a nontrivial loss curve, not a specific corpus. The generator
+//! produces template-grammar English with long-range structure (subject
+//! agreement across clauses, quote closure), tokenized at word level
+//! against a fixed vocabulary, deterministic under seed.
+//!
+//! Four **domains** with distinct grammar mixtures stand in for the four
+//! Table 3 perplexity datasets (OpenWebText / Common Crawl / Stack
+//! Exchange / Arxiv): `Stories` is the training distribution; `Web`,
+//! `Qa`, and `Arxiv` shift the template mix and vocabulary emphasis so
+//! held-out perplexity degrades out-of-domain, mirroring the paper's
+//! in-domain vs out-of-domain gap.
+
+use crate::rng::Rng;
+use crate::runtime::HostTensor;
+
+/// Special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Word table; token id = index + FIRST_WORD.
+pub const FIRST_WORD: usize = 3;
+
+#[rustfmt::skip]
+pub const WORDS: &[&str] = &[
+    // punctuation + glue
+    ".", ",", "?", "\"", "the", "a", "and", "then", "but", "because", "so",
+    "very", "of", "to", "in", "on", "with", "was", "is", "said", "that",
+    // names (stories)
+    "tom", "lily", "max", "anna", "ben", "mia", "sam", "zoe",
+    // nouns
+    "cat", "dog", "ball", "tree", "house", "bird", "fish", "book", "star",
+    "river", "mountain", "garden", "cake", "door", "window", "friend",
+    "mother", "father", "teacher", "robot", "dragon", "boat", "cloud",
+    // verbs
+    "ran", "jumped", "smiled", "laughed", "found", "saw", "liked", "made",
+    "took", "gave", "opened", "closed", "climbed", "painted", "visited",
+    "helped", "watched", "carried", "dropped", "wanted",
+    // adjectives
+    "big", "small", "red", "blue", "happy", "sad", "old", "new", "fast",
+    "slow", "bright", "dark", "quiet", "loud", "warm", "cold", "kind",
+    // web-ish
+    "click", "here", "free", "online", "news", "today", "report", "market",
+    "price", "share", "update", "video", "photo", "link", "page", "site",
+    // qa / stack-exchange-ish
+    "how", "why", "what", "error", "function", "code", "answer", "question",
+    "thanks", "works", "tried", "using", "version", "install", "run",
+    // arxiv-ish
+    "we", "propose", "method", "model", "theorem", "proof", "lemma",
+    "bound", "convergence", "gradient", "matrix", "layer", "training",
+    "result", "experiment", "dataset", "baseline", "approach", "novel",
+];
+
+/// Smallest model vocab that can host the full word table.
+pub fn min_vocab() -> usize {
+    FIRST_WORD + WORDS.len()
+}
+
+/// Token id for a word (panics if absent — test helper).
+pub fn word_id(w: &str) -> i32 {
+    (WORDS.iter().position(|&x| x == w).expect("word in table") + FIRST_WORD) as i32
+}
+
+/// Render ids back to text (debugging / demos).
+pub fn detokenize(ids: &[i32]) -> String {
+    ids.iter()
+        .map(|&id| match id {
+            PAD => "<pad>",
+            BOS => "<bos>",
+            EOS => "<eos>",
+            _ => {
+                let w = id as usize - FIRST_WORD;
+                WORDS.get(w).copied().unwrap_or("<unk>")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Evaluation domains (Table 3 analogues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// Training distribution (≈ OpenWebText role in Table 3).
+    Stories,
+    /// Noisy listy text (≈ Common Crawl).
+    Web,
+    /// Question/answer turns (≈ Stack Exchange).
+    Qa,
+    /// Methods-section boilerplate (≈ Arxiv).
+    Arxiv,
+}
+
+impl Domain {
+    pub const ALL: [Domain; 4] = [Domain::Stories, Domain::Web, Domain::Qa, Domain::Arxiv];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Domain::Stories => "stories (in-domain)",
+            Domain::Web => "web",
+            Domain::Qa => "qa",
+            Domain::Arxiv => "arxiv",
+        }
+    }
+}
+
+/// Infinite seeded token stream for one domain.
+pub struct Corpus {
+    rng: Rng,
+    domain: Domain,
+    buf: Vec<i32>,
+    pos: usize,
+}
+
+impl Corpus {
+    pub fn new(domain: Domain, seed: u64) -> Self {
+        Self { rng: Rng::new(seed ^ 0xC0FFEE), domain, buf: Vec::new(), pos: 0 }
+    }
+
+    fn w(&mut self, choices: &[&str]) -> i32 {
+        word_id(choices[self.rng.below(choices.len())])
+    }
+
+    fn push_sentence(&mut self) {
+        const NAMES: &[&str] = &["tom", "lily", "max", "anna", "ben", "mia", "sam", "zoe"];
+        const NOUNS: &[&str] = &[
+            "cat", "dog", "ball", "tree", "house", "bird", "fish", "book", "star", "river",
+            "garden", "cake", "door", "friend", "robot", "dragon", "boat",
+        ];
+        const VERBS: &[&str] = &[
+            "ran", "jumped", "smiled", "found", "saw", "liked", "made", "took", "gave",
+            "opened", "climbed", "painted", "visited", "helped", "watched", "carried",
+        ];
+        const ADJS: &[&str] = &[
+            "big", "small", "red", "blue", "happy", "sad", "old", "new", "fast", "bright",
+            "quiet", "warm", "kind",
+        ];
+        const WEBW: &[&str] = &[
+            "click", "here", "free", "online", "news", "today", "report", "market", "price",
+            "share", "update", "video", "photo", "link", "page", "site",
+        ];
+        const QAW: &[&str] = &[
+            "error", "function", "code", "answer", "question", "thanks", "works", "tried",
+            "using", "version", "install", "run",
+        ];
+        const ARXW: &[&str] = &[
+            "method", "model", "theorem", "proof", "lemma", "bound", "convergence",
+            "gradient", "matrix", "layer", "training", "result", "experiment", "dataset",
+            "baseline", "approach",
+        ];
+
+        let dot = word_id(".");
+        let the = word_id("the");
+        match self.domain {
+            Domain::Stories => {
+                // [name] [verb] the [adj] [noun] (and [verb] the [noun])? .
+                let s = [
+                    self.w(NAMES),
+                    self.w(VERBS),
+                    the,
+                    self.w(ADJS),
+                    self.w(NOUNS),
+                ];
+                self.buf.extend_from_slice(&s);
+                if self.rng.chance(0.4) {
+                    let t = [word_id("and"), self.w(VERBS), the, self.w(NOUNS)];
+                    self.buf.extend_from_slice(&t);
+                }
+                self.buf.push(dot);
+            }
+            Domain::Web => {
+                // [web] [web] : [web] [noun] [web] today .  (listy, low syntax)
+                for _ in 0..2 + self.rng.below(4) {
+                    let x = self.w(WEBW);
+                    self.buf.push(x);
+                }
+                let t_ = self.w(NOUNS);
+                self.buf.push(t_);
+                self.buf.push(word_id("today"));
+                self.buf.push(dot);
+            }
+            Domain::Qa => {
+                // how [verb] the [qa-noun] ? [qa] [qa] works thanks .
+                let t_ = self.w(&["how", "why", "what"]);
+                self.buf.push(t_);
+                let v = self.w(VERBS);
+                self.buf.push(v);
+                self.buf.push(the);
+                let t_ = self.w(QAW);
+                self.buf.push(t_);
+                self.buf.push(word_id("?"));
+                for _ in 0..1 + self.rng.below(3) {
+                    let x = self.w(QAW);
+                    self.buf.push(x);
+                }
+                self.buf.push(word_id("works"));
+                self.buf.push(word_id("thanks"));
+                self.buf.push(dot);
+            }
+            Domain::Arxiv => {
+                // we propose a [adj] [arx] and the [arx] of the [arx] is [adj] .
+                self.buf.push(word_id("we"));
+                self.buf.push(word_id("propose"));
+                self.buf.push(word_id("a"));
+                let t_ = self.w(&["novel", "new", "fast"]);
+                self.buf.push(t_);
+                let t_ = self.w(ARXW);
+                self.buf.push(t_);
+                self.buf.push(word_id("and"));
+                self.buf.push(the);
+                let t_ = self.w(ARXW);
+                self.buf.push(t_);
+                self.buf.push(word_id("of"));
+                self.buf.push(the);
+                let t_ = self.w(ARXW);
+                self.buf.push(t_);
+                self.buf.push(word_id("is"));
+                let t_ = self.w(ADJS);
+                self.buf.push(t_);
+                self.buf.push(dot);
+            }
+        }
+    }
+
+    /// Next `n` tokens of the stream (documents separated by BOS/EOS).
+    pub fn next_tokens(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if self.pos >= self.buf.len() {
+                self.buf.clear();
+                self.pos = 0;
+                self.buf.push(BOS);
+                for _ in 0..4 + self.rng.below(6) {
+                    self.push_sentence();
+                }
+                self.buf.push(EOS);
+            }
+            let take = (n - out.len()).min(self.buf.len() - self.pos);
+            out.extend_from_slice(&self.buf[self.pos..self.pos + take]);
+            self.pos += take;
+        }
+        out
+    }
+}
+
+/// Batches `(B, S)` id tensors off a corpus.
+pub struct BatchIter {
+    corpus: Corpus,
+    batch: usize,
+    context: usize,
+    vocab: usize,
+}
+
+impl BatchIter {
+    pub fn new(domain: Domain, seed: u64, batch: usize, context: usize, vocab: usize) -> Self {
+        assert!(
+            vocab >= min_vocab(),
+            "model vocab {vocab} smaller than corpus vocab {}",
+            min_vocab()
+        );
+        Self { corpus: Corpus::new(domain, seed), batch, context, vocab }
+    }
+
+    pub fn next_batch(&mut self) -> HostTensor {
+        let n = self.batch * self.context;
+        let ids = self.corpus.next_tokens(n);
+        debug_assert!(ids.iter().all(|&t| (t as usize) < self.vocab));
+        HostTensor::from_i32(vec![self.batch, self.context], &ids)
+    }
+
+    /// A fixed validation set: `k` batches from a dedicated seed stream.
+    pub fn validation_set(
+        domain: Domain,
+        seed: u64,
+        k: usize,
+        batch: usize,
+        context: usize,
+        vocab: usize,
+    ) -> Vec<HostTensor> {
+        let mut it = Self::new(domain, seed ^ 0x5EED_u64, batch, context, vocab);
+        (0..k).map(|_| it.next_batch()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_smallest_model() {
+        assert!(min_vocab() <= 256, "word table too large: {}", min_vocab());
+    }
+
+    #[test]
+    fn word_ids_unique() {
+        use std::collections::HashSet;
+        let ids: HashSet<_> = WORDS.iter().map(|w| word_id(w)).collect();
+        assert_eq!(ids.len(), WORDS.len());
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = Corpus::new(Domain::Stories, 11);
+        let mut b = Corpus::new(Domain::Stories, 11);
+        assert_eq!(a.next_tokens(500), b.next_tokens(500));
+        let mut c = Corpus::new(Domain::Stories, 12);
+        assert_ne!(a.next_tokens(500), c.next_tokens(500));
+    }
+
+    #[test]
+    fn domains_differ() {
+        let a = Corpus::new(Domain::Stories, 1).next_tokens(300);
+        let b = Corpus::new(Domain::Arxiv, 1).next_tokens(300);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        for d in Domain::ALL {
+            let toks = Corpus::new(d, 3).next_tokens(2000);
+            assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < min_vocab()), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn detokenize_roundtrips_words() {
+        let ids = [word_id("tom"), word_id("ran"), word_id("."), BOS];
+        assert_eq!(detokenize(&ids), "tom ran . <bos>");
+    }
+
+    #[test]
+    fn batch_iter_shapes() {
+        let mut it = BatchIter::new(Domain::Stories, 5, 4, 32, 256);
+        let b = it.next_batch();
+        assert_eq!(b.shape(), &[4, 32]);
+        let b2 = it.next_batch();
+        assert_ne!(b.as_i32(), b2.as_i32(), "stream advances");
+    }
+
+    #[test]
+    fn validation_set_fixed() {
+        let v1 = BatchIter::validation_set(Domain::Stories, 7, 3, 2, 16, 256);
+        let v2 = BatchIter::validation_set(Domain::Stories, 7, 3, 2, 16, 256);
+        assert_eq!(v1.len(), 3);
+        for (a, b) in v1.iter().zip(&v2) {
+            assert_eq!(a.as_i32(), b.as_i32());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "vocab")]
+    fn small_vocab_rejected() {
+        BatchIter::new(Domain::Stories, 1, 1, 8, 10);
+    }
+
+    #[test]
+    fn text_has_sentence_structure() {
+        let toks = Corpus::new(Domain::Stories, 9).next_tokens(400);
+        let text = detokenize(&toks);
+        assert!(text.contains(" . "), "{text}");
+        let dots = toks.iter().filter(|&&t| t == word_id(".")).count();
+        assert!(dots >= 10, "expected many sentences, got {dots}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Seeded stage-failure injector (paper §3 "Failure pattern").
+//!
+//! Semantics follow the paper exactly:
+//! * only **whole-stage** failures are modelled (partial-node failures are
+//!   trivially recovered from same-stage replicas and are out of scope);
+//! * the embed stage `S0` never fails in the throughput/convergence tests
+//!   (§5.1: "All nodes, except for those in the first stage (holding E and
+//!   E⁻¹) can fail") — configurable for the CheckFree+ replication test;
+//! * **no two consecutive stages fail together** (assumption shared with
+//!   Bamboo's redundant computation);
+//! * the schedule is a pure function of the seed, so different recovery
+//!   strategies are evaluated against the *same* failure pattern (§5.1).
+
+use crate::config::FailureSpec;
+use crate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FailureInjector {
+    rng: Rng,
+    /// Per-stage per-iteration failure probability.
+    p: f64,
+    /// Stage indices that are allowed to fail.
+    failable: Vec<usize>,
+    /// Extra deterministic events: (iteration, stage).
+    forced: Vec<(u64, usize)>,
+}
+
+impl FailureInjector {
+    /// `total_stages` includes the embed stage at index 0.
+    /// `embed_can_fail` adds stage 0 to the failable set (CheckFree+
+    /// replication experiments only).
+    pub fn new(spec: FailureSpec, total_stages: usize, embed_can_fail: bool, seed: u64) -> Self {
+        let mut failable: Vec<usize> = (1..total_stages).collect();
+        if embed_can_fail {
+            failable.insert(0, 0);
+        }
+        Self {
+            rng: Rng::new(seed ^ 0xFA11),
+            p: spec.per_iteration(),
+            failable,
+            forced: Vec::new(),
+        }
+    }
+
+    /// Schedule a deterministic failure (tests, Fig 2 ablation).
+    pub fn force(&mut self, iteration: u64, stage: usize) {
+        self.forced.push((iteration, stage));
+    }
+
+    pub fn failable(&self) -> &[usize] {
+        &self.failable
+    }
+
+    /// Sample failures for this iteration. Multiple stages can fail in one
+    /// iteration, but never two adjacent ones (the later one is deferred —
+    /// its node survives this round, matching the paper's assumption that
+    /// the adversary never removes two consecutive stages at once).
+    pub fn sample(&mut self, iteration: u64) -> Vec<usize> {
+        let mut failed: Vec<usize> = Vec::new();
+        for (it, stage) in self.forced.clone() {
+            if it == iteration {
+                failed.push(stage);
+            }
+        }
+        // Bernoulli per failable stage — the same draws happen in the same
+        // order regardless of which stages end up filtered, so the pattern
+        // is strategy-independent for a fixed seed.
+        for &stage in &self.failable {
+            if self.rng.chance(self.p) {
+                failed.push(stage);
+            }
+        }
+        failed.sort_unstable();
+        failed.dedup();
+        // enforce the non-consecutive assumption: keep the earlier stage
+        let mut kept: Vec<usize> = Vec::with_capacity(failed.len());
+        for s in failed {
+            if kept.last().is_some_and(|&k| k + 1 == s) {
+                continue;
+            }
+            kept.push(s);
+        }
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn per_iter(rate: f64) -> FailureSpec {
+        FailureSpec::PerIteration { rate }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = FailureInjector::new(per_iter(0.05), 7, false, 9);
+        let mut b = FailureInjector::new(per_iter(0.05), 7, false, 9);
+        for it in 0..500 {
+            assert_eq!(a.sample(it), b.sample(it));
+        }
+    }
+
+    #[test]
+    fn embed_stage_protected_by_default() {
+        let mut inj = FailureInjector::new(per_iter(0.5), 5, false, 3);
+        for it in 0..200 {
+            assert!(!inj.sample(it).contains(&0));
+        }
+    }
+
+    #[test]
+    fn embed_stage_failable_when_enabled() {
+        let mut inj = FailureInjector::new(per_iter(0.5), 5, true, 3);
+        let mut saw0 = false;
+        for it in 0..200 {
+            saw0 |= inj.sample(it).contains(&0);
+        }
+        assert!(saw0);
+    }
+
+    #[test]
+    fn never_two_consecutive_stages() {
+        let mut inj = FailureInjector::new(per_iter(0.6), 8, false, 4);
+        for it in 0..500 {
+            let f = inj.sample(it);
+            for w in f.windows(2) {
+                assert!(w[1] > w[0] + 1, "consecutive stages {w:?} failed at {it}");
+            }
+        }
+    }
+
+    #[test]
+    fn frequency_matches_rate() {
+        let mut inj = FailureInjector::new(per_iter(0.01), 2, false, 5);
+        // single failable stage (index 1): count failures over many iters
+        let n = 20_000;
+        let mut count = 0;
+        for it in 0..n {
+            count += inj.sample(it).len();
+        }
+        let observed = count as f64 / n as f64;
+        assert!((observed - 0.01).abs() < 0.003, "observed {observed}");
+    }
+
+    #[test]
+    fn forced_events_fire_exactly_once() {
+        let mut inj = FailureInjector::new(per_iter(0.0), 6, false, 0);
+        inj.force(10, 3);
+        inj.force(20, 2);
+        for it in 0..30 {
+            let f = inj.sample(it);
+            match it {
+                10 => assert_eq!(f, vec![3]),
+                20 => assert_eq!(f, vec![2]),
+                _ => assert!(f.is_empty(), "unexpected {f:?} at {it}"),
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_fails() {
+        let mut inj = FailureInjector::new(per_iter(0.0), 7, true, 1);
+        for it in 0..1000 {
+            assert!(inj.sample(it).is_empty());
+        }
+    }
+
+    #[test]
+    fn property_non_consecutive_for_random_rates() {
+        crate::util::propcheck::forall(
+            "injector-non-consecutive",
+            50,
+            77,
+            |r, size| (r.uniform(), 2 + r.below(size.max(2)), r.next_u64()),
+            |&(rate, stages, seed)| {
+                let mut inj =
+                    FailureInjector::new(per_iter(rate), stages, false, seed);
+                (0..100).all(|it| {
+                    inj.sample(it).windows(2).all(|w| w[1] > w[0] + 1)
+                })
+            },
+        );
+    }
+}

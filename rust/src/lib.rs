@@ -1,0 +1,42 @@
+//! # checkfree — LLM recovery without checkpoints
+//!
+//! Reproduction of *"All is Not Lost: LLM Recovery without Checkpoints"*
+//! (Blagoev, Ersoy, Chen — 2025) as a three-layer Rust + JAX + Pallas
+//! system. This crate is Layer 3: the coordinator that owns the
+//! pipeline-parallel training loop, failure injection, and the paper's
+//! recovery strategies. Compute graphs are AOT-compiled from JAX/Pallas
+//! (`python/compile/`) into HLO-text artifacts and executed through the
+//! PJRT C API ([`runtime`]); Python never runs on the training path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | run configuration: model presets, failure/recovery/schedule knobs |
+//! | [`manifest`] | the artifact manifest contract with the AOT pipeline |
+//! | [`runtime`] | PJRT client + executable registry (HLO text → compiled) |
+//! | [`model`] | stage parameter store, deterministic init, Adam, grad norms |
+//! | [`data`] | synthetic corpus generator + tokenizer + domains (Table 3) |
+//! | [`coordinator`] | pipeline engine, microbatch schedules (incl. CheckFree+ swaps), trainer |
+//! | [`recovery`] | CheckFree, CheckFree+, checkpointing, redundant computation |
+//! | [`failures`] | seeded stage-failure injector (paper §3 failure pattern) |
+//! | [`netsim`] | 5-region geo-distributed network model (paper §5 setup) |
+//! | [`sim`] | event-driven throughput simulator (Table 2 wall-clock) |
+//! | [`metrics`] | loss/throughput recorders, CSV emitters for every figure |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod failures;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod recovery;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use anyhow::{anyhow, Context, Result};

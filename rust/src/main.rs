@@ -1,0 +1,238 @@
+//! `checkfree` — CLI for the CheckFree/CheckFree+ reproduction.
+//!
+//! ```text
+//! checkfree train    [--model M] [--strategy S] [--iterations N]
+//!                    [--failure-rate R] [--microbatches K] [--seed X]
+//!                    [--checkpoint-every C] [--reinit KIND]
+//!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
+//! checkfree costs    [--model M]                 # paper Table 1
+//! checkfree simulate [--rates 5,10,16]           # paper Table 2
+//! checkfree info     [--model M]                 # manifest summary
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the offline build); every
+//! flag has the form `--key value`.
+
+use std::collections::BTreeMap;
+
+use checkfree::config::{default_artifacts_root, FailureSpec, Strategy, TrainConfig};
+use checkfree::coordinator::Trainer;
+use checkfree::manifest::Manifest;
+use checkfree::metrics::write_csv;
+use checkfree::recovery::costs::render_table1;
+use checkfree::sim::{paper_converged_iterations, simulate_training, SimParams};
+use checkfree::{anyhow, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `--key value` pairs after the subcommand.
+struct Args(BTreeMap<String, String>);
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{}'", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{k} needs a value"))?;
+            map.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Self(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+
+    fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("invalid --{key} '{v}': {e}")),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    match cmd {
+        "train" => cmd_train(&Args::parse(rest)?),
+        "costs" => cmd_costs(&Args::parse(rest)?),
+        "simulate" => cmd_simulate(&Args::parse(rest)?),
+        "info" => cmd_info(&Args::parse(rest)?),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try `checkfree help`)")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "checkfree — LLM recovery without checkpoints (Blagoev et al., 2025)\n\n\
+         commands:\n\
+         \x20 train     run pipeline-parallel training with failures + recovery\n\
+         \x20 costs     print paper Table 1 (per-strategy overhead)\n\
+         \x20 simulate  print paper Table 2 (iteration/train time at paper scale)\n\
+         \x20 info      show a compiled model config\n\n\
+         see `rust/src/main.rs` docs for flags; examples/ for full experiments"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_json_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.parse_opt::<Strategy>("strategy")? {
+        cfg.strategy = s;
+    }
+    if let Some(n) = args.parse_opt::<u64>("iterations")? {
+        cfg.iterations = n;
+    }
+    if let Some(r) = args.parse_opt::<f64>("failure-rate")? {
+        cfg.failure = FailureSpec::PerIteration { rate: r };
+    }
+    if let Some(k) = args.parse_opt::<usize>("microbatches")? {
+        cfg.microbatches_per_iter = k;
+    }
+    if let Some(x) = args.parse_opt::<u64>("seed")? {
+        cfg.seed = x;
+    }
+    if let Some(c) = args.parse_opt::<u64>("checkpoint-every")? {
+        cfg.checkpoint_every = c;
+    }
+    if let Some(r) = args.parse_opt::<checkfree::config::ReinitKind>("reinit")? {
+        cfg.reinit = r;
+    }
+    if let Some(t) = args.parse_opt::<f32>("target-loss")? {
+        cfg.target_loss = Some(t);
+    }
+    cfg.validate()?;
+
+    println!("config: {}", cfg.to_json());
+    let mut trainer = Trainer::new(cfg)?;
+    let summary = trainer.run()?;
+    println!(
+        "\nrun '{}': {} iterations, {} failures, final train loss {:.4}, \
+         final val loss {:.4}, simulated {:.1} h",
+        summary.label,
+        summary.iterations_run,
+        summary.failures,
+        summary.final_train_loss,
+        summary.final_val_loss,
+        summary.sim_hours
+    );
+    if let Some(at) = summary.reached_target_at {
+        println!("target loss reached at iteration {at}");
+    }
+    if let Some(out) = args.get("out") {
+        write_csv(out, &trainer.record.curve_csv())?;
+        let events_path = out.replace(".csv", ".events.csv");
+        write_csv(&events_path, &trainer.record.events_csv())?;
+        println!("wrote {out} and {events_path}");
+    }
+    Ok(())
+}
+
+fn cmd_costs(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("tiny");
+    let manifest = Manifest::load_config(default_artifacts_root(), model)?;
+    print!("{}", render_table1(&manifest));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let rates: Vec<f64> = args
+        .get("rates")
+        .unwrap_or("5,10,16")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map(|x| x / 100.0))
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("bad --rates: {e}"))?;
+    println!(
+        "Table 2 — paper-scale throughput simulation (500M model, 7 stages, 5 regions)\n"
+    );
+    println!(
+        "{:<16} {:>8} {:>14} {:>12} {:>10} {:>12}",
+        "strategy", "rate", "iter time (s)", "train (h)", "failures", "rollback it"
+    );
+    for strategy in [
+        Strategy::Checkpoint,
+        Strategy::Redundant,
+        Strategy::CheckFree,
+        Strategy::CheckFreePlus,
+    ] {
+        for &rate in &rates {
+            let p = SimParams::paper_medium(strategy, rate);
+            let iters = paper_converged_iterations(strategy, rate);
+            let run = simulate_training(&p, iters);
+            println!(
+                "{:<16} {:>7.0}% {:>14.1} {:>12.1} {:>10} {:>12}",
+                strategy.label(),
+                rate * 100.0,
+                run.iteration_seconds,
+                run.train_hours,
+                run.failures,
+                run.rollback_iterations
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("tiny");
+    let m = Manifest::load_config(default_artifacts_root(), model)?;
+    let c = &m.config;
+    println!("model '{}' ({:.1}M params)", c.name, c.param_count as f64 / 1e6);
+    println!(
+        "  dim {} heads {} layers {} body-stages {} (×{} blocks) ctx {} vocab {}",
+        c.dim, c.heads, c.layers, c.body_stages, c.blocks_per_stage, c.context, c.vocab
+    );
+    println!(
+        "  stage bytes: body {} / embed {}",
+        checkfree::recovery::costs::human_bytes(m.body_stage_bytes()),
+        checkfree::recovery::costs::human_bytes(m.embed_stage_bytes()),
+    );
+    println!("  artifacts ({}):", m.artifacts.len());
+    for (name, art) in &m.artifacts {
+        println!(
+            "    {:<10} {:>2} inputs {:>2} outputs  {}",
+            name,
+            art.inputs.len(),
+            art.outputs.len(),
+            art.file
+        );
+    }
+    for (k, v) in &m.perf {
+        println!("  perf.{k} = {v}");
+    }
+    Ok(())
+}

@@ -1,0 +1,354 @@
+//! The artifact manifest — the contract between the AOT pipeline
+//! (`python/compile/aot.py`) and the Rust runtime.
+//!
+//! `artifacts/<config>/manifest.json` records, per model config:
+//! * the model hyperparameters (paper Table 4 analogue),
+//! * the flattened parameter layout of the embed stage and of one body
+//!   stage (tensor names, shapes, element offsets, init spec),
+//! * every HLO artifact with its exact input/output specs.
+//!
+//! The runtime validates literal shapes against these specs at load time so
+//! that a stale `artifacts/` directory fails loudly instead of producing
+//! garbage. Parsing goes through the from-scratch [`crate::util::json`]
+//! module (no serde offline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::{anyhow, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u64,
+    pub config: ModelConfig,
+    pub param_layout: ParamLayout,
+    pub perf: BTreeMap<String, f64>,
+    pub artifacts: BTreeMap<String, Artifact>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+/// Model hyperparameters, mirroring `compile.model.ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub body_stages: usize,
+    pub blocks_per_stage: usize,
+    pub ffn: usize,
+    pub context: usize,
+    pub microbatch: usize,
+    pub learning_rate: f32,
+    pub param_count: u64,
+}
+
+impl ModelConfig {
+    /// Total stage count including the embed stage `S0`.
+    pub fn total_stages(&self) -> usize {
+        self.body_stages + 1
+    }
+
+    /// FLOPs of one microbatch forward+backward through ONE body stage
+    /// (the standard 6·params·tokens estimate: 2 fwd + 4 bwd).
+    pub fn stage_flops(&self, params_per_stage: u64) -> f64 {
+        6.0 * params_per_stage as f64 * (self.microbatch * self.context) as f64
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            vocab: v.get("vocab")?.as_usize()?,
+            dim: v.get("dim")?.as_usize()?,
+            heads: v.get("heads")?.as_usize()?,
+            layers: v.get("layers")?.as_usize()?,
+            body_stages: v.get("body_stages")?.as_usize()?,
+            blocks_per_stage: v.get("blocks_per_stage")?.as_usize()?,
+            ffn: v.get("ffn")?.as_usize()?,
+            context: v.get("context")?.as_usize()?,
+            microbatch: v.get("microbatch")?.as_usize()?,
+            learning_rate: v.get("learning_rate")?.as_f32()?,
+            param_count: v.get("param_count")?.as_u64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub embed_stage: Vec<TensorSpec>,
+    pub body_stage: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub elements: usize,
+    pub offset: usize,
+    pub init: InitSpec,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitSpec {
+    Ones,
+    Normal { std: f32 },
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let init_v = v.get("init")?;
+        let init = match init_v.get("kind")?.as_str()? {
+            "ones" => InitSpec::Ones,
+            "normal" => InitSpec::Normal { std: init_v.get("std")?.as_f32()? },
+            other => return Err(anyhow!("unknown init kind '{other}'")),
+        };
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            elements: v.get("elements")?.as_usize()?,
+            offset: v.get("offset")?.as_usize()?,
+            init,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl Artifact {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)?.as_arr()?.iter().map(IoSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: v.get("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+impl ParamLayout {
+    pub fn embed_elements(&self) -> usize {
+        layout_elements(&self.embed_stage)
+    }
+
+    pub fn body_elements(&self) -> usize {
+        layout_elements(&self.body_stage)
+    }
+}
+
+fn layout_elements(layout: &[TensorSpec]) -> usize {
+    layout.last().map(|t| t.offset + t.elements).unwrap_or(0)
+}
+
+fn layout_from_json(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()?.iter().map(TensorSpec::from_json).collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json` and sanity-check internal consistency.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let m = Self::from_json(&v, dir).with_context(|| format!("interpreting {path:?}"))?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_json(v: &Json, dir: &Path) -> Result<Self> {
+        let layout_v = v.get("param_layout")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), Artifact::from_json(art)?);
+        }
+        let mut perf = BTreeMap::new();
+        if let Some(p) = v.opt("perf") {
+            for (k, val) in p.as_obj()? {
+                perf.insert(k.clone(), val.as_f64()?);
+            }
+        }
+        Ok(Self {
+            format_version: v.get("format_version")?.as_u64()?,
+            config: ModelConfig::from_json(v.get("config")?)?,
+            param_layout: ParamLayout {
+                embed_stage: layout_from_json(layout_v.get("embed_stage")?)?,
+                body_stage: layout_from_json(layout_v.get("body_stage")?)?,
+            },
+            perf,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load `<root>/<config>/manifest.json`.
+    pub fn load_config(artifacts_root: impl AsRef<Path>, config: &str) -> Result<Self> {
+        Self::load(artifacts_root.as_ref().join(config))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' missing from manifest ({:?})", self.dir))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.format_version != 1 {
+            return Err(anyhow!("unsupported manifest format {}", self.format_version));
+        }
+        for required in ["embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd", "head_bwd"]
+        {
+            if !self.artifacts.contains_key(required) {
+                return Err(anyhow!("manifest missing required artifact '{required}'"));
+            }
+        }
+        // Layout offsets must be contiguous.
+        for (label, layout) in [
+            ("embed_stage", &self.param_layout.embed_stage),
+            ("body_stage", &self.param_layout.body_stage),
+        ] {
+            let mut offset = 0;
+            for t in layout {
+                if t.offset != offset || t.elements != t.shape.iter().product::<usize>() {
+                    return Err(anyhow!("non-contiguous param layout in {label} at '{}'", t.name));
+                }
+                offset += t.elements;
+            }
+        }
+        // body_fwd inputs = body params + hidden.
+        let body_fwd = &self.artifacts["body_fwd"];
+        if body_fwd.inputs.len() != self.param_layout.body_stage.len() + 1 {
+            return Err(anyhow!(
+                "body_fwd input arity {} != body layout {} + 1",
+                body_fwd.inputs.len(),
+                self.param_layout.body_stage.len()
+            ));
+        }
+        for (spec, t) in body_fwd.inputs.iter().zip(&self.param_layout.body_stage) {
+            if spec.shape != t.shape {
+                return Err(anyhow!("body_fwd input shape mismatch at '{}'", t.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes of one body stage's parameters (f32).
+    pub fn body_stage_bytes(&self) -> u64 {
+        self.param_layout.body_elements() as u64 * 4
+    }
+
+    /// Bytes of the embed stage's parameters (f32).
+    pub fn embed_stage_bytes(&self) -> u64 {
+        self.param_layout.embed_elements() as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.total_stages(), m.config.body_stages + 1);
+        assert_eq!(m.artifacts.len(), 6);
+    }
+
+    #[test]
+    fn layout_element_counts() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        let body = m.param_layout.body_elements();
+        let embed = m.param_layout.embed_elements();
+        assert!(body > 0 && embed > 0);
+        // total params = embed + body * body_stages
+        assert_eq!(
+            embed as u64 + (body * m.config.body_stages) as u64,
+            m.config.param_count
+        );
+    }
+
+    #[test]
+    fn artifact_paths_exist() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        for name in m.artifacts.keys() {
+            assert!(m.artifact_path(name).unwrap().exists(), "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load_config(artifacts_root(), "no-such-config")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn norm_tensors_init_ones() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        for t in &m.param_layout.body_stage {
+            if t.name.ends_with("norm") {
+                assert!(matches!(t.init, InitSpec::Ones), "{}", t.name);
+            } else {
+                assert!(matches!(t.init, InitSpec::Normal { .. }), "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn perf_estimates_surfaced() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        assert!(m.perf.contains_key("attn_vmem_bytes_per_cell"));
+    }
+
+    #[test]
+    fn paper_style_flops_positive() {
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        let f = m.config.stage_flops(m.param_layout.body_elements() as u64);
+        assert!(f > 0.0);
+    }
+}

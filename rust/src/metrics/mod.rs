@@ -1,0 +1,239 @@
+//! Run metrics: loss curves, events, throughput accounting, CSV emission.
+//!
+//! Every experiment harness (`examples/fig*`, `examples/table*`) records
+//! through this module and writes `results/<id>.csv`, so the paper's
+//! figures can be regenerated from flat files.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::{Context, Result};
+
+/// One recorded training-run point.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub iteration: u64,
+    pub train_loss: f32,
+    pub val_loss: Option<f32>,
+    /// Simulated wall-clock since run start (seconds).
+    pub sim_time_s: f64,
+}
+
+/// A recovery / checkpoint event on the timeline.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub iteration: u64,
+    pub kind: EventKind,
+    pub stage: Option<usize>,
+    /// Simulated seconds this event cost.
+    pub cost_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    StageFailure,
+    Recovery,
+    CheckpointTaken,
+    Rollback,
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::StageFailure => "failure",
+            EventKind::Recovery => "recovery",
+            EventKind::CheckpointTaken => "checkpoint",
+            EventKind::Rollback => "rollback",
+        }
+    }
+}
+
+/// Full record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub curve: Vec<CurvePoint>,
+    pub events: Vec<Event>,
+}
+
+impl RunRecord {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), ..Default::default() }
+    }
+
+    pub fn point(&mut self, iteration: u64, train_loss: f32, val_loss: Option<f32>, sim_time_s: f64) {
+        self.curve.push(CurvePoint { iteration, train_loss, val_loss, sim_time_s });
+    }
+
+    pub fn event(&mut self, iteration: u64, kind: EventKind, stage: Option<usize>, cost_s: f64) {
+        self.events.push(Event { iteration, kind, stage, cost_s });
+    }
+
+    pub fn failures(&self) -> usize {
+        self.events.iter().filter(|e| e.kind == EventKind::StageFailure).count()
+    }
+
+    pub fn final_val_loss(&self) -> Option<f32> {
+        self.curve.iter().rev().find_map(|p| p.val_loss)
+    }
+
+    /// First iteration whose validation loss is below `target` (train-time
+    /// metric of paper Table 2).
+    pub fn iterations_to_target(&self, target: f32) -> Option<u64> {
+        self.curve
+            .iter()
+            .find(|p| p.val_loss.is_some_and(|v| v < target))
+            .map(|p| p.iteration)
+    }
+
+    /// Simulated seconds at which validation loss first dips below target.
+    pub fn time_to_target(&self, target: f32) -> Option<f64> {
+        self.curve
+            .iter()
+            .find(|p| p.val_loss.is_some_and(|v| v < target))
+            .map(|p| p.sim_time_s)
+    }
+
+    pub fn total_event_cost_s(&self) -> f64 {
+        self.events.iter().map(|e| e.cost_s).sum()
+    }
+
+    /// CSV: `iteration,train_loss,val_loss,sim_time_s`.
+    pub fn curve_csv(&self) -> String {
+        let mut out = String::from("iteration,train_loss,val_loss,sim_time_s\n");
+        for p in &self.curve {
+            let val = p.val_loss.map(|v| v.to_string()).unwrap_or_default();
+            let _ = writeln!(out, "{},{},{},{:.3}", p.iteration, p.train_loss, val, p.sim_time_s);
+        }
+        out
+    }
+
+    /// CSV: `iteration,kind,stage,cost_s`.
+    pub fn events_csv(&self) -> String {
+        let mut out = String::from("iteration,kind,stage,cost_s\n");
+        for e in &self.events {
+            let stage = e.stage.map(|s| s.to_string()).unwrap_or_default();
+            let _ = writeln!(out, "{},{},{},{:.3}", e.iteration, e.kind.label(), stage, e.cost_s);
+        }
+        out
+    }
+}
+
+/// Write any CSV produced above (creates parent dirs).
+pub fn write_csv(path: impl AsRef<Path>, content: &str) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    }
+    std::fs::write(path, content).with_context(|| format!("writing {path:?}"))
+}
+
+/// Multi-run comparison table (one column per run), joined on iteration —
+/// the exact shape of the paper's convergence figures.
+pub fn comparison_csv(runs: &[&RunRecord], val: bool) -> String {
+    let mut out = String::from("iteration");
+    for r in runs {
+        let _ = write!(out, ",{}", r.label);
+    }
+    out.push('\n');
+    let mut iters: Vec<u64> = runs
+        .iter()
+        .flat_map(|r| r.curve.iter().map(|p| p.iteration))
+        .collect();
+    iters.sort_unstable();
+    iters.dedup();
+    for it in iters {
+        let _ = write!(out, "{it}");
+        for r in runs {
+            let v = r.curve.iter().find(|p| p.iteration == it).and_then(|p| {
+                if val {
+                    p.val_loss
+                } else {
+                    Some(p.train_loss)
+                }
+            });
+            match v {
+                Some(x) => {
+                    let _ = write!(out, ",{x}");
+                }
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> RunRecord {
+        let mut r = RunRecord::new("checkfree");
+        r.point(0, 5.5, Some(5.6), 0.0);
+        r.point(10, 4.0, Some(4.1), 910.0);
+        r.point(20, 3.0, Some(2.8), 1830.0);
+        r.event(15, EventKind::StageFailure, Some(3), 0.0);
+        r.event(15, EventKind::Recovery, Some(3), 30.0);
+        r
+    }
+
+    #[test]
+    fn iterations_to_target() {
+        let r = record();
+        assert_eq!(r.iterations_to_target(2.85), Some(20));
+        assert_eq!(r.iterations_to_target(1.0), None);
+    }
+
+    #[test]
+    fn time_to_target() {
+        let r = record();
+        assert_eq!(r.time_to_target(2.85), Some(1830.0));
+    }
+
+    #[test]
+    fn counts_failures_and_costs() {
+        let r = record();
+        assert_eq!(r.failures(), 1);
+        assert!((r.total_event_cost_s() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn curve_csv_format() {
+        let csv = record().curve_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "iteration,train_loss,val_loss,sim_time_s");
+        assert!(lines.next().unwrap().starts_with("0,5.5,5.6,"));
+    }
+
+    #[test]
+    fn events_csv_format() {
+        let csv = record().events_csv();
+        assert!(csv.contains("15,failure,3,"));
+        assert!(csv.contains("15,recovery,3,30.000"));
+    }
+
+    #[test]
+    fn comparison_joins_on_iteration() {
+        let a = record();
+        let mut b = RunRecord::new("checkpointing");
+        b.point(0, 5.5, Some(5.7), 0.0);
+        b.point(20, 3.5, Some(3.4), 1900.0);
+        let csv = comparison_csv(&[&a, &b], true);
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines[0], "iteration,checkfree,checkpointing");
+        assert!(lines[1].starts_with("0,5.6,5.7"));
+        // iteration 10 exists only in `a` → empty cell for b
+        assert!(lines[2].starts_with("10,4.1,"));
+        assert!(lines[2].ends_with(','));
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("cfree-test-{}", std::process::id()));
+        let path = dir.join("nested/out.csv");
+        write_csv(&path, "a,b\n1,2\n").unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,155 @@
+//! Adam optimizer on flat host buffers (paper Appendix A.2: Adam,
+//! betas (0.9, 0.999), no weight decay).
+//!
+//! Lives in Rust rather than in an HLO artifact so that recovery can
+//! manipulate optimizer state directly (a replacement stage starts with
+//! fresh moments — a new node has no optimizer history to download, which
+//! is exactly the paper's storage-free premise).
+
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    /// First-moment estimates, one flat buffer per parameter tensor.
+    m: Vec<Vec<f32>>,
+    /// Second-moment estimates.
+    v: Vec<Vec<f32>>,
+    /// Steps taken (bias correction).
+    step: u64,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Adam {
+    /// Moments shaped after `sizes` (element count per tensor).
+    pub fn new(sizes: &[usize]) -> Self {
+        Self {
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            step: 0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Reset moments and step (a freshly recovered stage).
+    pub fn reset(&mut self) {
+        for b in self.m.iter_mut().chain(self.v.iter_mut()) {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.step = 0;
+    }
+
+    /// One Adam update over all tensors. `params[i]` and `grads[i]` must
+    /// have the length the optimizer was built with.
+    pub fn update(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]], lr: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.step += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        // bias corrections
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let eps = self.eps;
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.len(), m.len());
+            assert_eq!(g.len(), m.len());
+            for i in 0..p.len() {
+                let gi = g[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference implementation for bit-exactness checks.
+    fn scalar_adam(p0: f32, gs: &[f32], lr: f32) -> f32 {
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let (mut p, mut m, mut v) = (p0, 0.0f32, 0.0f32);
+        for (t, &g) in gs.iter().enumerate() {
+            let step = (t + 1) as i32;
+            m = b1 * m + (1.0 - b1) * g;
+            v = b2 * v + (1.0 - b2) * g * g;
+            let mhat = m / (1.0 - b1.powi(step));
+            let vhat = v / (1.0 - b2.powi(step));
+            p -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        p
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        // 1-ULP slack: release-mode codegen may schedule the powi/rsqrt
+        // sequence differently between the two implementations.
+        let gs = [0.5f32, -0.2, 0.1, 0.9, -1.5];
+        let mut adam = Adam::new(&[1]);
+        let mut p = [1.0f32];
+        for &g in &gs {
+            adam.update(&mut [&mut p], &[&[g]], 0.01);
+        }
+        let want = scalar_adam(1.0, &gs, 0.01);
+        assert!((p[0] - want).abs() <= f32::EPSILON * want.abs().max(1.0), "{} vs {want}", p[0]);
+    }
+
+    #[test]
+    fn first_step_moves_by_lr() {
+        // With bias correction, |Δp| of step 1 ≈ lr regardless of g scale.
+        let mut adam = Adam::new(&[1]);
+        let mut p = [0.0f32];
+        adam.update(&mut [&mut p], &[&[123.0]], 0.01);
+        assert!((p[0] + 0.01).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        // minimize (x-3)^2
+        let mut adam = Adam::new(&[1]);
+        let mut p = [0.0f32];
+        for _ in 0..2000 {
+            let g = 2.0 * (p[0] - 3.0);
+            adam.update(&mut [&mut p], &[&[g]], 0.01);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut adam = Adam::new(&[2]);
+        let mut p = [1.0f32, 2.0];
+        adam.update(&mut [&mut p], &[&[1.0, 1.0]], 0.1);
+        assert_eq!(adam.step_count(), 1);
+        adam.reset();
+        assert_eq!(adam.step_count(), 0);
+        // next step behaves like a first step again
+        let mut q = [0.0f32, 0.0];
+        adam.update(&mut [&mut q], &[&[5.0, -5.0]], 0.01);
+        assert!((q[0] + 0.01).abs() < 1e-6);
+        assert!((q[1] - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_arity_mismatch_panics() {
+        let mut adam = Adam::new(&[1, 1]);
+        let mut p = [0.0f32];
+        adam.update(&mut [&mut p], &[&[1.0]], 0.1);
+    }
+}

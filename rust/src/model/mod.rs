@@ -1,0 +1,309 @@
+//! Stage parameter store: the weights, optimizer state, and gradient-norm
+//! bookkeeping of one pipeline stage (paper §3 notation: stage `S_i` with
+//! weights `W_{s,i}` and tracked `ω_i = ‖∇W_{s,i}‖²`).
+//!
+//! Parameters live as one [`HostTensor`] per manifest-layout tensor so the
+//! hot loop can hand them straight to the PJRT executables without
+//! re-slicing; optimizer and recovery math iterate the same list.
+
+mod adam;
+
+pub use adam::Adam;
+
+use crate::manifest::{InitSpec, Manifest, TensorSpec};
+use crate::rng::Rng;
+use crate::runtime::HostTensor;
+
+/// What a stage holds (paper: `S0` = embedding + deembedding + final norm;
+/// body stages = consecutive transformer blocks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Embed,
+    Body,
+}
+
+/// Gradient accumulation buffer for one stage (one flat buf per tensor).
+#[derive(Debug, Clone)]
+pub struct GradBuffer {
+    bufs: Vec<Vec<f32>>,
+    /// Microbatches accumulated since last `take`.
+    count: u32,
+}
+
+impl GradBuffer {
+    pub fn new(sizes: &[usize]) -> Self {
+        Self { bufs: sizes.iter().map(|&n| vec![0.0; n]).collect(), count: 0 }
+    }
+
+    /// Add one microbatch's gradients (manifest order).
+    pub fn accumulate(&mut self, grads: &[HostTensor]) {
+        assert_eq!(grads.len(), self.bufs.len(), "gradient arity mismatch");
+        for (buf, g) in self.bufs.iter_mut().zip(grads) {
+            let gs = g.as_f32();
+            assert_eq!(buf.len(), gs.len());
+            for (b, &x) in buf.iter_mut().zip(gs) {
+                *b += x;
+            }
+        }
+        self.count += 1;
+    }
+
+    pub fn microbatches(&self) -> u32 {
+        self.count
+    }
+
+    /// Mean-scale by accumulated count, return slices, and reset count
+    /// afterwards with `clear`.
+    pub fn scale(&mut self) {
+        if self.count > 1 {
+            let s = 1.0 / self.count as f32;
+            for buf in &mut self.bufs {
+                for x in buf.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+    }
+
+    pub fn as_slices(&self) -> Vec<&[f32]> {
+        self.bufs.iter().map(|b| b.as_slice()).collect()
+    }
+
+    /// ‖∇W‖² over the whole stage.
+    pub fn sq_norm(&self) -> f64 {
+        self.bufs
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum()
+    }
+
+    pub fn clear(&mut self) {
+        for b in &mut self.bufs {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.count = 0;
+    }
+}
+
+/// One pipeline stage: parameters + Adam + CheckFree's ω scalar.
+#[derive(Debug)]
+pub struct Stage {
+    pub kind: StageKind,
+    /// Pipeline position: 0 = embed stage, 1..=L = body stages.
+    pub index: usize,
+    pub params: Vec<HostTensor>,
+    pub adam: Adam,
+    pub lr: f32,
+    /// ω_i = ‖∇W_{s,i}‖² from the most recent optimizer step — the single
+    /// scalar each stage stores/sends for CheckFree (paper Algorithm 1).
+    pub omega: f64,
+}
+
+/// Deterministically initialize parameters from a manifest layout.
+pub fn init_params(layout: &[TensorSpec], rng: &mut Rng) -> Vec<HostTensor> {
+    layout
+        .iter()
+        .map(|t| {
+            let mut data = vec![0.0f32; t.elements];
+            match t.init {
+                InitSpec::Ones => data.iter_mut().for_each(|x| *x = 1.0),
+                InitSpec::Normal { std } => rng.fill_normal(&mut data, std),
+            }
+            HostTensor::from_f32_vec(t.shape.clone(), data)
+        })
+        .collect()
+}
+
+impl Stage {
+    pub fn new_embed(manifest: &Manifest, lr: f32, rng: &mut Rng) -> Self {
+        let layout = &manifest.param_layout.embed_stage;
+        let params = init_params(layout, rng);
+        let sizes: Vec<usize> = layout.iter().map(|t| t.elements).collect();
+        Self { kind: StageKind::Embed, index: 0, params, adam: Adam::new(&sizes), lr, omega: 0.0 }
+    }
+
+    pub fn new_body(manifest: &Manifest, index: usize, lr: f32, rng: &mut Rng) -> Self {
+        assert!(index >= 1, "body stages are 1-indexed");
+        let layout = &manifest.param_layout.body_stage;
+        let params = init_params(layout, rng);
+        let sizes: Vec<usize> = layout.iter().map(|t| t.elements).collect();
+        Self { kind: StageKind::Body, index, params, adam: Adam::new(&sizes), lr, omega: 0.0 }
+    }
+
+    pub fn tensor_sizes(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.len()).collect()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.total_elements() as u64 * 4
+    }
+
+    /// Apply one optimizer step from an accumulated gradient buffer;
+    /// records ω = ‖∇W‖² (of the mean gradient) and clears the buffer.
+    pub fn apply_grads(&mut self, grads: &mut GradBuffer) {
+        grads.scale();
+        self.omega = grads.sq_norm();
+        let slices = grads.as_slices();
+        let mut params: Vec<&mut [f32]> =
+            self.params.iter_mut().map(|p| p.as_f32_mut()).collect();
+        self.adam.update(&mut params, &slices, self.lr);
+        grads.clear();
+    }
+
+    /// Full deep copy (checkpoint baseline, redundant-computation shadow).
+    pub fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            kind: self.kind,
+            index: self.index,
+            params: self.params.clone(),
+            adam: self.adam.clone(),
+            lr: self.lr,
+            omega: self.omega,
+        }
+    }
+
+    pub fn restore(&mut self, snap: &StageSnapshot) {
+        assert_eq!(self.kind, snap.kind);
+        self.params = snap.params.clone();
+        self.adam = snap.adam.clone();
+        self.lr = snap.lr;
+        self.omega = snap.omega;
+        self.index = snap.index;
+    }
+
+    /// Simulate total loss of the stage (paper §3: `W_{s,i} = 0`).
+    /// Recovery strategies then rebuild `params`/`adam`.
+    pub fn wipe(&mut self) {
+        for p in &mut self.params {
+            p.as_f32_mut().iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.adam.reset();
+        self.omega = 0.0;
+    }
+}
+
+/// Owned copy of a stage's full state.
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    pub kind: StageKind,
+    pub index: usize,
+    pub params: Vec<HostTensor>,
+    pub adam: Adam,
+    pub lr: f32,
+    pub omega: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+    use crate::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::load_config(default_artifacts_root(), "tiny").unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let m = manifest();
+        let a = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(5));
+        let b = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(5));
+        let c = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(6));
+        assert_eq!(a.params, b.params);
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn norm_params_init_to_ones() {
+        let m = manifest();
+        let s = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(0));
+        for (t, p) in m.param_layout.body_stage.iter().zip(&s.params) {
+            if t.name.ends_with("norm") {
+                assert!(p.as_f32().iter().all(|&x| x == 1.0), "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn embed_stage_element_count_matches_layout() {
+        let m = manifest();
+        let s = Stage::new_embed(&m, 1e-3, &mut Rng::new(0));
+        assert_eq!(s.total_elements(), m.param_layout.embed_elements());
+        assert_eq!(s.bytes(), m.embed_stage_bytes());
+    }
+
+    #[test]
+    fn grad_accumulate_scale_and_norm() {
+        let mut gb = GradBuffer::new(&[2, 1]);
+        let g1 = [
+            HostTensor::from_f32(vec![2], &[1.0, 2.0]),
+            HostTensor::from_f32(vec![1], &[3.0]),
+        ];
+        let g2 = [
+            HostTensor::from_f32(vec![2], &[3.0, 2.0]),
+            HostTensor::from_f32(vec![1], &[1.0]),
+        ];
+        gb.accumulate(&g1);
+        gb.accumulate(&g2);
+        assert_eq!(gb.microbatches(), 2);
+        gb.scale();
+        // means: [2, 2], [2] → sq norm = 4+4+4 = 12
+        assert!((gb.sq_norm() - 12.0).abs() < 1e-9);
+        gb.clear();
+        assert_eq!(gb.microbatches(), 0);
+        assert_eq!(gb.sq_norm(), 0.0);
+    }
+
+    #[test]
+    fn apply_grads_moves_params_and_sets_omega() {
+        let m = manifest();
+        let mut s = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(1));
+        let before = s.params.clone();
+        let mut gb = GradBuffer::new(&s.tensor_sizes());
+        let fake: Vec<HostTensor> = s
+            .params
+            .iter()
+            .map(|p| HostTensor::from_f32_vec(p.shape().to_vec(), vec![0.5; p.len()]))
+            .collect();
+        gb.accumulate(&fake);
+        s.apply_grads(&mut gb);
+        assert_ne!(s.params, before);
+        assert!(s.omega > 0.0);
+        assert_eq!(s.adam.step_count(), 1);
+        assert_eq!(gb.microbatches(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let m = manifest();
+        let mut s = Stage::new_body(&m, 2, 1e-3, &mut Rng::new(2));
+        let snap = s.snapshot();
+        let mut gb = GradBuffer::new(&s.tensor_sizes());
+        let fake: Vec<HostTensor> = s
+            .params
+            .iter()
+            .map(|p| HostTensor::from_f32_vec(p.shape().to_vec(), vec![1.0; p.len()]))
+            .collect();
+        gb.accumulate(&fake);
+        s.apply_grads(&mut gb);
+        assert_ne!(s.params, snap.params);
+        s.restore(&snap);
+        assert_eq!(s.params, snap.params);
+        assert_eq!(s.adam.step_count(), 0);
+    }
+
+    #[test]
+    fn wipe_zeroes_everything() {
+        let m = manifest();
+        let mut s = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(3));
+        s.omega = 5.0;
+        s.wipe();
+        assert!(s.params.iter().all(|p| p.as_f32().iter().all(|&x| x == 0.0)));
+        assert_eq!(s.omega, 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Geo-distributed network model (paper §5 Setup / A.4).
+//!
+//! The paper simulates communication "based on realistic bandwidth and
+//! latency measurements between 5 geo-distributed locations from Google
+//! Cloud" — it never sends real traffic in its convergence tests either.
+//! This module is that substrate: a 5-region latency/bandwidth matrix
+//! (values in the range published for GCP inter-region links), a node →
+//! region placement, and transfer-time accounting used by
+//! * the trainer's simulated wall-clock,
+//! * recovery-cost accounting (stage download ≈ 30 s claim, §5.1),
+//! * the Table 2 throughput simulator ([`crate::sim`]).
+
+use crate::{anyhow, Result};
+
+/// The five regions (paper: "5 geo-distributed locations from Google Cloud").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Region {
+    UsCentral,
+    UsEast,
+    EuropeWest,
+    AsiaEast,
+    AustraliaSoutheast,
+}
+
+pub const REGIONS: [Region; 5] = [
+    Region::UsCentral,
+    Region::UsEast,
+    Region::EuropeWest,
+    Region::AsiaEast,
+    Region::AustraliaSoutheast,
+];
+
+impl Region {
+    pub fn index(&self) -> usize {
+        REGIONS.iter().position(|r| r == self).unwrap()
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Region::UsCentral => "us-central1",
+            Region::UsEast => "us-east1",
+            Region::EuropeWest => "europe-west4",
+            Region::AsiaEast => "asia-east1",
+            Region::AustraliaSoutheast => "australia-southeast1",
+        }
+    }
+}
+
+/// Round-trip latency in milliseconds between region pairs (public
+/// GCP inter-region measurements, order-of-magnitude faithful).
+#[rustfmt::skip]
+const LATENCY_MS: [[f64; 5]; 5] = [
+    //          usc    use    euw    asi    aus
+    /* usc */ [  0.5,  32.0, 103.0, 118.0, 176.0],
+    /* use */ [ 32.0,   0.5,  93.0, 152.0, 198.0],
+    /* euw */ [103.0,  93.0,   0.5, 252.0, 277.0],
+    /* asi */ [118.0, 152.0, 252.0,   0.5, 131.0],
+    /* aus */ [176.0, 198.0, 277.0, 131.0,   0.5],
+];
+
+/// Sustained throughput in Gbit/s between region pairs (intra-region
+/// links are fast; intercontinental links are the ~0.25–2 Gbit/s a
+/// spot-instance VM actually sees).
+#[rustfmt::skip]
+const BANDWIDTH_GBPS: [[f64; 5]; 5] = [
+    /* usc */ [10.0,  4.0,  1.5,  1.0,  0.6],
+    /* use */ [ 4.0, 10.0,  2.0,  0.8,  0.5],
+    /* euw */ [ 1.5,  2.0, 10.0,  0.5,  0.25],
+    /* asi */ [ 1.0,  0.8,  0.5, 10.0,  1.5],
+    /* aus */ [ 0.6,  0.5,  0.25, 1.5, 10.0],
+];
+
+/// Bandwidth to the non-faulty checkpoint storage (paper §1: "even on high
+/// bandwidth networks" 500 Mb/s — footnote 2).
+pub const STORAGE_GBPS: f64 = 0.5;
+pub const STORAGE_LATENCY_MS: f64 = 40.0;
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Per-stage region placement; index = pipeline stage (0 = embed).
+    pub placement: Vec<Region>,
+}
+
+impl Network {
+    /// Place `stages` pipeline stages round-robin across the 5 regions —
+    /// the paper's "datacenter responsible per stage" deployment (§5 fn 4).
+    pub fn round_robin(stages: usize) -> Self {
+        Self { placement: (0..stages).map(|i| REGIONS[i % REGIONS.len()]).collect() }
+    }
+
+    /// All stages in one region (ablation: fast homogeneous cluster).
+    pub fn single_region(stages: usize, region: Region) -> Self {
+        Self { placement: vec![region; stages] }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.placement.len()
+    }
+
+    pub fn region_of(&self, stage: usize) -> Result<Region> {
+        self.placement
+            .get(stage)
+            .copied()
+            .ok_or_else(|| anyhow!("stage {stage} out of range ({})", self.placement.len()))
+    }
+
+    /// Seconds to move `bytes` from region `a` to region `b`:
+    /// latency floor + bytes / bandwidth.
+    pub fn transfer_seconds_between(&self, bytes: u64, a: Region, b: Region) -> f64 {
+        let (i, j) = (a.index(), b.index());
+        let lat_s = LATENCY_MS[i][j] / 1e3;
+        let bw_bytes_per_s = BANDWIDTH_GBPS[i][j] * 1e9 / 8.0;
+        lat_s + bytes as f64 / bw_bytes_per_s
+    }
+
+    /// Seconds to move `bytes` between two pipeline stages.
+    pub fn transfer_seconds(&self, bytes: u64, from_stage: usize, to_stage: usize) -> Result<f64> {
+        Ok(self.transfer_seconds_between(
+            bytes,
+            self.region_of(from_stage)?,
+            self.region_of(to_stage)?,
+        ))
+    }
+
+    /// Seconds to upload/download `bytes` to the checkpoint storage.
+    pub fn storage_transfer_seconds(&self, bytes: u64) -> f64 {
+        STORAGE_LATENCY_MS / 1e3 + bytes as f64 / (STORAGE_GBPS * 1e9 / 8.0)
+    }
+
+    /// CheckFree recovery transfer: the new node for `stage` downloads both
+    /// neighbours' weights (`stage_bytes` each) + two ω scalars (free).
+    /// Downloads are concurrent → the max of the two, per paper §4.2.
+    pub fn checkfree_recovery_seconds(&self, stage_bytes: u64, stage: usize) -> Result<f64> {
+        let s = self.stages();
+        let prev = if stage == 0 { s - 1 } else { stage - 1 };
+        let next = (stage + 1) % s;
+        let a = self.transfer_seconds(stage_bytes, prev, stage)?;
+        let b = self.transfer_seconds(stage_bytes, next, stage)?;
+        Ok(a.max(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrices_are_symmetric_with_zero_diag() {
+        for i in 0..5 {
+            assert!(LATENCY_MS[i][i] < 1.0);
+            for j in 0..5 {
+                assert_eq!(LATENCY_MS[i][j], LATENCY_MS[j][i]);
+                assert_eq!(BANDWIDTH_GBPS[i][j], BANDWIDTH_GBPS[j][i]);
+                assert!(BANDWIDTH_GBPS[i][j] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let net = Network::round_robin(7);
+        let a = net.transfer_seconds(1 << 20, 0, 1).unwrap();
+        let b = net.transfer_seconds(1 << 30, 0, 1).unwrap();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn transfer_has_latency_floor() {
+        let net = Network::round_robin(7);
+        let t = net.transfer_seconds(1, 0, 2).unwrap();
+        assert!(t >= 0.09, "{t}"); // europe-west round trip ≥ 93 ms
+    }
+
+    #[test]
+    fn intra_region_fast() {
+        let net = Network::single_region(4, Region::UsCentral);
+        let t = net.transfer_seconds(1 << 30, 1, 2).unwrap(); // 1 GiB
+        assert!(t < 1.5, "{t}"); // 10 Gbit/s → ~0.86 s
+    }
+
+    #[test]
+    fn paper_recovery_time_claim_order_of_magnitude() {
+        // Paper §5.1: "recovery time of that stage is around 30 seconds".
+        // Medium (500M / 7 stages) body stage ≈ 500M/6 params × 4 B ≈ 333 MB.
+        let net = Network::round_robin(7);
+        let stage_bytes = 333_000_000;
+        let t = net.checkfree_recovery_seconds(stage_bytes, 3).unwrap();
+        assert!(t > 1.0 && t < 60.0, "recovery {t}s should be tens of seconds");
+    }
+
+    #[test]
+    fn checkpoint_upload_dominates_recovery() {
+        // Full 500M model (2 GB) to 500 Mb/s storage ≈ 32 s ≫ stage download.
+        let net = Network::round_robin(7);
+        let up = net.storage_transfer_seconds(2_000_000_000);
+        assert!(up > 30.0, "{up}");
+        let stage = net.checkfree_recovery_seconds(333_000_000, 3).unwrap();
+        assert!(up > stage);
+    }
+
+    #[test]
+    fn round_robin_covers_all_regions() {
+        let net = Network::round_robin(10);
+        for r in REGIONS {
+            assert!(net.placement.contains(&r));
+        }
+    }
+
+    #[test]
+    fn out_of_range_stage_errors() {
+        let net = Network::round_robin(3);
+        assert!(net.region_of(3).is_err());
+        assert!(net.transfer_seconds(1, 0, 9).is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! CheckFree and CheckFree+ (paper §4.2, §4.3, Algorithm 1).
+//!
+//! CheckFree rebuilds a lost intermediate stage as the gradient-norm-
+//! weighted average of its two body neighbours:
+//!
+//! ```text
+//! W_i ← (ω_{i-1}·W_{i-1} + ω_{i+1}·W_{i+1}) / (ω_{i-1} + ω_{i+1}),
+//! ω_j = ‖∇W_j‖²      (Algorithm 1, line 3)
+//! λ   ← 1.1·λ        (Algorithm 1, line 4)
+//! ```
+//!
+//! ω is the single scalar each stage already tracks ([`crate::model::Stage`]);
+//! more weight goes to the less-converged neighbour, partially offloading
+//! its functionality onto the rebuilt stage.
+//!
+//! Boundary body stages (S1, SL) have only one transformer neighbour;
+//! plain CheckFree falls back to copying it (the paper's Fig 2 "copy"
+//! showing why this is worse — and why CheckFree converges below
+//! CheckFree+). CheckFree+ runs the out-of-order swap schedule so S2/S(L-1)
+//! have *learned* the boundary behaviour, making the copy principled, and
+//! replicates the (de)embedding stage to its neighbours for exact recovery.
+
+use crate::config::ReinitKind;
+use crate::coordinator::{schedule, PipelineEngine};
+use crate::metrics::EventKind;
+use crate::model::{init_params, StageKind};
+use crate::netsim::Network;
+use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy};
+use crate::rng::Rng;
+use crate::runtime::HostTensor;
+use crate::{anyhow, Result};
+
+/// Element-wise `(wa·A + wb·B)/(wa+wb)`; uniform average when both
+/// weights vanish (e.g. a failure before the first optimizer step).
+pub fn weighted_average(a: &[HostTensor], b: &[HostTensor], wa: f64, wb: f64) -> Vec<HostTensor> {
+    assert_eq!(a.len(), b.len());
+    let (ca, cb) = if wa + wb > 0.0 {
+        ((wa / (wa + wb)) as f32, (wb / (wa + wb)) as f32)
+    } else {
+        (0.5, 0.5)
+    };
+    a.iter()
+        .zip(b)
+        .map(|(ta, tb)| {
+            assert_eq!(ta.shape(), tb.shape());
+            let data: Vec<f32> = ta
+                .as_f32()
+                .iter()
+                .zip(tb.as_f32())
+                .map(|(&x, &y)| ca * x + cb * y)
+                .collect();
+            HostTensor::from_f32_vec(ta.shape().to_vec(), data)
+        })
+        .collect()
+}
+
+/// How a body stage was rebuilt (metrics detail).
+fn reinit_stage(
+    engine: &mut PipelineEngine,
+    stage: usize,
+    reinit: ReinitKind,
+    lr_boost: f32,
+    rng: &mut Rng,
+) -> Result<(String, u64)> {
+    let l = engine.body_stages();
+    if stage == 0 || stage > l {
+        return Err(anyhow!("reinit_stage called for non-body stage {stage}"));
+    }
+    debug_assert_eq!(engine.stages[stage].kind, StageKind::Body);
+    let stage_bytes = engine.body_stage_bytes();
+    let (desc, bytes) = match reinit {
+        ReinitKind::Random => {
+            let layout = engine.runtime.manifest.param_layout.body_stage.clone();
+            engine.stages[stage].params = init_params(&layout, rng);
+            ("random reinit".to_string(), 0)
+        }
+        ReinitKind::Copy => {
+            // paper Fig 2 "copy": clone the previous stage (next if S1).
+            let src = if stage > 1 { stage - 1 } else { stage + 1 };
+            engine.stages[stage].params = engine.stages[src].params.clone();
+            (format!("copy of S{src}"), stage_bytes)
+        }
+        ReinitKind::WeightedAverage => {
+            if stage > 1 && stage < l {
+                let (wa, wb) = (engine.stages[stage - 1].omega, engine.stages[stage + 1].omega);
+                let avg = weighted_average(
+                    &engine.stages[stage - 1].params,
+                    &engine.stages[stage + 1].params,
+                    wa,
+                    wb,
+                );
+                engine.stages[stage].params = avg;
+                (
+                    format!(
+                        "ω-weighted avg of S{} (ω={wa:.3e}) and S{} (ω={wb:.3e})",
+                        stage - 1,
+                        stage + 1
+                    ),
+                    2 * stage_bytes,
+                )
+            } else {
+                // boundary: single body neighbour → copy (see module docs)
+                let src = if stage == 1 { 2.min(l) } else { l - 1 };
+                if src == stage || src == 0 {
+                    return Err(anyhow!("pipeline too short to recover stage {stage}"));
+                }
+                engine.stages[stage].params = engine.stages[src].params.clone();
+                (format!("boundary copy of S{src}"), stage_bytes)
+            }
+        }
+    };
+    // New node: fresh optimizer, boosted lr (Algorithm 1 line 4).
+    engine.stages[stage].adam.reset();
+    engine.stages[stage].lr *= lr_boost;
+    engine.stages[stage].omega = 0.0;
+    Ok((desc, bytes))
+}
+
+// ---------------------------------------------------------------------------
+// CheckFree
+// ---------------------------------------------------------------------------
+
+pub struct CheckFreeRecovery {
+    reinit: ReinitKind,
+    lr_boost: f32,
+    rng: Rng,
+}
+
+impl CheckFreeRecovery {
+    pub fn new(reinit: ReinitKind, lr_boost: f32, seed: u64) -> Self {
+        Self { reinit, lr_boost, rng: Rng::new(seed ^ 0x5EC0FE) }
+    }
+}
+
+impl RecoveryStrategy for CheckFreeRecovery {
+    fn name(&self) -> &'static str {
+        "checkfree"
+    }
+
+    fn after_iteration(
+        &mut self,
+        _engine: &mut PipelineEngine,
+        _net: &Network,
+    ) -> Result<Option<MaintenanceCost>> {
+        Ok(None) // the whole point: zero steady-state overhead
+    }
+
+    fn on_failure(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome> {
+        if stage == 0 {
+            return Err(anyhow!("CheckFree cannot recover the (de)embedding stage"));
+        }
+        let (description, transfer_bytes) =
+            reinit_stage(engine, stage, self.reinit, self.lr_boost, &mut self.rng)?;
+        let downtime_s = net.checkfree_recovery_seconds(engine.body_stage_bytes(), stage)?;
+        Ok(RecoveryOutcome {
+            description,
+            downtime_s,
+            rollback_iterations: 0,
+            transfer_bytes,
+            exact: false,
+        })
+    }
+
+    fn can_recover(&self, stage: usize, body_stages: usize) -> bool {
+        stage >= 1 && stage <= body_stages && body_stages >= 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckFree+
+// ---------------------------------------------------------------------------
+
+pub struct CheckFreePlusRecovery {
+    reinit: ReinitKind,
+    lr_boost: f32,
+    rng: Rng,
+    /// Replicated copy of the (de)embedding stage held by the neighbours
+    /// (paper §4.3: "we simply send their weights to the previous and
+    /// following stages"). Refreshed after every iteration.
+    embed_replica: Option<Vec<HostTensor>>,
+}
+
+impl CheckFreePlusRecovery {
+    pub fn new(reinit: ReinitKind, lr_boost: f32, seed: u64) -> Self {
+        Self { reinit, lr_boost, rng: Rng::new(seed ^ 0x5EC0FF), embed_replica: None }
+    }
+}
+
+impl RecoveryStrategy for CheckFreePlusRecovery {
+    fn name(&self) -> &'static str {
+        "checkfree+"
+    }
+
+    fn after_iteration(
+        &mut self,
+        engine: &mut PipelineEngine,
+        _net: &Network,
+    ) -> Result<Option<MaintenanceCost>> {
+        // Refresh the neighbour-held replica of E / E⁻¹. The send overlaps
+        // with compute (it is tiny relative to activations), so it costs
+        // bytes but no pipeline stall.
+        self.embed_replica = Some(engine.stages[0].params.clone());
+        Ok(Some(MaintenanceCost {
+            kind: EventKind::CheckpointTaken,
+            stall_s: 0.0,
+            bytes: engine.embed_stage_bytes(),
+        }))
+    }
+
+    fn on_failure(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome> {
+        let l = engine.body_stages();
+        if stage == 0 {
+            // Exact recovery from the neighbour-held replica.
+            let replica = self
+                .embed_replica
+                .clone()
+                .ok_or_else(|| anyhow!("embedding replica not yet initialized"))?;
+            engine.stages[0].params = replica;
+            engine.stages[0].adam.reset();
+            let bytes = engine.embed_stage_bytes();
+            return Ok(RecoveryOutcome {
+                description: "exact (de)embedding restore from neighbour replica".into(),
+                downtime_s: net.transfer_seconds(bytes, 1, 0)?,
+                rollback_iterations: 0,
+                transfer_bytes: bytes,
+                exact: true,
+            });
+        }
+        let stage_bytes = engine.body_stage_bytes();
+        if let Some(partner) = schedule::swap_partner(stage, l) {
+            // Swap-trained partner has learned this slot's behaviour:
+            // recover by copying it (paper §4.3).
+            engine.stages[stage].params = engine.stages[partner].params.clone();
+            engine.stages[stage].adam.reset();
+            engine.stages[stage].lr *= self.lr_boost;
+            engine.stages[stage].omega = 0.0;
+            Ok(RecoveryOutcome {
+                description: format!("copy of swap partner S{partner}"),
+                downtime_s: net.transfer_seconds(stage_bytes, partner, stage)?,
+                rollback_iterations: 0,
+                transfer_bytes: stage_bytes,
+                exact: false,
+            })
+        } else {
+            let (description, transfer_bytes) =
+                reinit_stage(engine, stage, self.reinit, self.lr_boost, &mut self.rng)?;
+            Ok(RecoveryOutcome {
+                description,
+                downtime_s: net.checkfree_recovery_seconds(stage_bytes, stage)?,
+                rollback_iterations: 0,
+                transfer_bytes,
+                exact: false,
+            })
+        }
+    }
+
+    fn can_recover(&self, _stage: usize, body_stages: usize) -> bool {
+        body_stages >= 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Strategy, TrainConfig};
+    use crate::util::propcheck;
+
+    fn engine() -> PipelineEngine {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy: Strategy::CheckFree,
+            microbatches_per_iter: 2,
+            seed: 5,
+            ..TrainConfig::default()
+        };
+        PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn ht(vals: &[f32]) -> HostTensor {
+        HostTensor::from_f32(vec![vals.len()], vals)
+    }
+
+    #[test]
+    fn weighted_average_formula() {
+        let a = vec![ht(&[1.0, 2.0])];
+        let b = vec![ht(&[3.0, 6.0])];
+        // ω_a = 1, ω_b = 3 → (1·a + 3·b)/4
+        let avg = weighted_average(&a, &b, 1.0, 3.0);
+        assert_eq!(avg[0].as_f32(), &[2.5, 5.0]);
+    }
+
+    #[test]
+    fn weighted_average_degenerates_to_copy() {
+        let a = vec![ht(&[1.0, 2.0])];
+        let b = vec![ht(&[9.0, 9.0])];
+        let avg = weighted_average(&a, &b, 1.0, 0.0);
+        assert_eq!(avg[0].as_f32(), a[0].as_f32());
+    }
+
+    #[test]
+    fn weighted_average_zero_weights_uniform() {
+        let a = vec![ht(&[2.0])];
+        let b = vec![ht(&[4.0])];
+        let avg = weighted_average(&a, &b, 0.0, 0.0);
+        assert_eq!(avg[0].as_f32(), &[3.0]);
+    }
+
+    #[test]
+    fn property_average_convex() {
+        // every element lies within [min, max] of the neighbours
+        propcheck::forall_explain(
+            "weighted-average-convex",
+            100,
+            42,
+            |r, size| {
+                let n = 1 + r.below(size.max(1));
+                let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                (a, b, r.uniform(), r.uniform())
+            },
+            |(a, b, wa, wb)| {
+                let avg = weighted_average(&[ht(a)], &[ht(b)], *wa, *wb);
+                for ((&x, &y), &z) in a.iter().zip(b).zip(avg[0].as_f32()) {
+                    let (lo, hi) = (x.min(y), x.max(y));
+                    if z < lo - 1e-5 || z > hi + 1e-5 {
+                        return Err(format!("{z} outside [{lo}, {hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn checkfree_intermediate_uses_weighted_average() {
+        let mut e = engine();
+        e.train_iteration().unwrap();
+        // tiny has 2 body stages → no intermediate; emulate by checking
+        // boundary fallback below and the weighted path via e2e-like math.
+        let mut s = CheckFreeRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        let net = Network::round_robin(e.stages.len());
+        let lr_before = e.stages[1].lr;
+        let out = s.on_failure(&mut e, &net, 1).unwrap();
+        assert!(!out.exact);
+        assert!(out.downtime_s > 0.0);
+        assert!((e.stages[1].lr / lr_before - 1.1).abs() < 1e-6, "lr boost applied");
+        assert_eq!(e.stages[1].adam.step_count(), 0, "fresh optimizer");
+        // boundary S1 with L=2 copies S2
+        assert_eq!(e.stages[1].params, e.stages[2].params);
+    }
+
+    #[test]
+    fn checkfree_rejects_embed_stage() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreeRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        assert!(s.on_failure(&mut e, &net, 0).is_err());
+        assert!(!s.can_recover(0, e.body_stages()));
+    }
+
+    #[test]
+    fn random_reinit_differs_from_neighbours() {
+        let mut e = engine();
+        e.train_iteration().unwrap();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreeRecovery::new(ReinitKind::Random, 1.1, 7);
+        s.on_failure(&mut e, &net, 1).unwrap();
+        assert_ne!(e.stages[1].params, e.stages[2].params);
+    }
+
+    #[test]
+    fn plus_recovers_embed_exactly() {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy: Strategy::CheckFreePlus,
+            microbatches_per_iter: 2,
+            seed: 6,
+            ..TrainConfig::default()
+        };
+        let mut e = PipelineEngine::from_config(&cfg).unwrap();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        e.train_iteration().unwrap();
+        s.after_iteration(&mut e, &net).unwrap();
+        let want = e.stages[0].params.clone();
+        // corrupt, then recover
+        e.stages[0].wipe();
+        let out = s.on_failure(&mut e, &net, 0).unwrap();
+        assert!(out.exact);
+        assert_eq!(e.stages[0].params, want);
+    }
+
+    #[test]
+    fn plus_fails_without_replica() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        assert!(s.on_failure(&mut e, &net, 0).is_err());
+    }
+
+    #[test]
+    fn plus_boundary_copies_swap_partner() {
+        let mut e = engine();
+        e.train_iteration().unwrap();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        let out = s.on_failure(&mut e, &net, 1).unwrap();
+        assert!(out.description.contains("swap partner"));
+        assert_eq!(e.stages[1].params, e.stages[2].params);
+    }
+
+    #[test]
+    fn maintenance_cost_is_embed_bytes_no_stall() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        let cost = s.after_iteration(&mut e, &net).unwrap().unwrap();
+        assert_eq!(cost.bytes, e.embed_stage_bytes());
+        assert_eq!(cost.stall_s, 0.0);
+    }
+}

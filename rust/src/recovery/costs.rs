@@ -1,0 +1,205 @@
+//! Analytic per-strategy overhead — reproduces **paper Table 1**.
+//!
+//! "Comparison of failure recovery strategies regarding the additional
+//! costs required even in the non-failure cases": additional memory,
+//! additional communication, additional computation, the need for
+//! non-faulty storage, and which stages are recoverable. Evaluated
+//! against a concrete model manifest so the table shows real byte counts
+//! next to the asymptotic class.
+
+use crate::manifest::Manifest;
+use crate::recovery::redundant::ITERATION_TIME_FACTOR;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostClass {
+    /// 0
+    Zero,
+    /// O(|E|): the (de)embedding layers only
+    Embedding,
+    /// O(|F|): the full model
+    FullModel,
+}
+
+impl CostClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CostClass::Zero => "0",
+            CostClass::Embedding => "O(|E|)",
+            CostClass::FullModel => "O(|F|)",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StrategyCosts {
+    pub strategy: &'static str,
+    pub additional_memory: CostClass,
+    pub additional_memory_bytes: u64,
+    /// Steady-state communication per checkpoint period / iteration.
+    pub additional_comm: CostClass,
+    pub additional_comm_bytes: u64,
+    /// Extra compute as a multiplier on iteration time (1.0 = none).
+    pub compute_factor: f64,
+    pub needs_nonfaulty_storage: bool,
+    pub recoverable: &'static str,
+}
+
+/// Paper Table 1, instantiated for a model config.
+pub fn table1(manifest: &Manifest) -> Vec<StrategyCosts> {
+    let model_bytes: u64 =
+        manifest.embed_stage_bytes() + manifest.body_stage_bytes() * manifest.config.body_stages as u64;
+    let embed_bytes = manifest.embed_stage_bytes();
+    vec![
+        StrategyCosts {
+            strategy: "checkpointing",
+            // every node keeps a local copy + remote storage holds one
+            additional_memory: CostClass::FullModel,
+            additional_memory_bytes: model_bytes,
+            additional_comm: CostClass::FullModel,
+            additional_comm_bytes: model_bytes,
+            compute_factor: 1.0,
+            needs_nonfaulty_storage: true,
+            recoverable: "all stages",
+        },
+        StrategyCosts {
+            strategy: "redundant-comp",
+            additional_memory: CostClass::FullModel,
+            additional_memory_bytes: model_bytes,
+            additional_comm: CostClass::FullModel,
+            additional_comm_bytes: model_bytes,
+            compute_factor: ITERATION_TIME_FACTOR,
+            needs_nonfaulty_storage: false,
+            recoverable: "non-consecutive stages",
+        },
+        StrategyCosts {
+            strategy: "checkfree",
+            additional_memory: CostClass::Zero,
+            additional_memory_bytes: 0,
+            additional_comm: CostClass::Zero,
+            additional_comm_bytes: 0,
+            compute_factor: 1.0,
+            needs_nonfaulty_storage: false,
+            recoverable: "non-consecutive intermediate stages",
+        },
+        StrategyCosts {
+            strategy: "checkfree+",
+            additional_memory: CostClass::Embedding,
+            additional_memory_bytes: embed_bytes,
+            additional_comm: CostClass::Embedding,
+            additional_comm_bytes: embed_bytes,
+            compute_factor: 1.0,
+            needs_nonfaulty_storage: false,
+            recoverable: "non-consecutive stages",
+        },
+    ]
+}
+
+/// Render Table 1 as printable text.
+pub fn render_table1(manifest: &Manifest) -> String {
+    let rows = table1(manifest);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 1 — additional costs in non-failure cases (model '{}', {:.1}M params)\n",
+        manifest.config.name,
+        manifest.config.param_count as f64 / 1e6
+    ));
+    out.push_str(&format!(
+        "{:<16} {:>18} {:>18} {:>12} {:>9} {}\n",
+        "strategy", "add. memory", "add. comm", "add. comp", "storage", "recovers"
+    ));
+    for r in rows {
+        let mem = format!("{} ({})", r.additional_memory.label(), human_bytes(r.additional_memory_bytes));
+        let comm = format!("{} ({})", r.additional_comm.label(), human_bytes(r.additional_comm_bytes));
+        let comp = if r.compute_factor > 1.0 {
+            format!("{:.2}x fwd", r.compute_factor)
+        } else {
+            "0".to_string()
+        };
+        out.push_str(&format!(
+            "{:<16} {:>18} {:>18} {:>12} {:>9} {}\n",
+            r.strategy,
+            mem,
+            comm,
+            comp,
+            if r.needs_nonfaulty_storage { "yes" } else { "no" },
+            r.recoverable
+        ));
+    }
+    out
+}
+
+pub fn human_bytes(b: u64) -> String {
+    if b == 0 {
+        "0".into()
+    } else if b < 1 << 20 {
+        format!("{:.0}KiB", b as f64 / 1024.0)
+    } else if b < 1 << 30 {
+        format!("{:.1}MiB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.2}GiB", b as f64 / (1 << 30) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+
+    fn manifest() -> Manifest {
+        Manifest::load_config(default_artifacts_root(), "tiny").unwrap()
+    }
+
+    #[test]
+    fn checkfree_has_zero_overhead() {
+        let rows = table1(&manifest());
+        let cf = rows.iter().find(|r| r.strategy == "checkfree").unwrap();
+        assert_eq!(cf.additional_memory, CostClass::Zero);
+        assert_eq!(cf.additional_comm_bytes, 0);
+        assert_eq!(cf.compute_factor, 1.0);
+        assert!(!cf.needs_nonfaulty_storage);
+    }
+
+    #[test]
+    fn plus_pays_only_embedding() {
+        let m = manifest();
+        let rows = table1(&m);
+        let p = rows.iter().find(|r| r.strategy == "checkfree+").unwrap();
+        assert_eq!(p.additional_memory, CostClass::Embedding);
+        assert_eq!(p.additional_memory_bytes, m.embed_stage_bytes());
+        assert!(p.additional_memory_bytes < m.body_stage_bytes() * m.config.body_stages as u64);
+    }
+
+    #[test]
+    fn only_checkpointing_needs_storage() {
+        for r in table1(&manifest()) {
+            assert_eq!(r.needs_nonfaulty_storage, r.strategy == "checkpointing", "{}", r.strategy);
+        }
+    }
+
+    #[test]
+    fn only_redundant_pays_compute() {
+        for r in table1(&manifest()) {
+            if r.strategy == "redundant-comp" {
+                assert!(r.compute_factor > 1.5);
+            } else {
+                assert_eq!(r.compute_factor, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let text = render_table1(&manifest());
+        for s in ["checkpointing", "redundant-comp", "checkfree", "checkfree+"] {
+            assert!(text.contains(s), "{text}");
+        }
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0");
+        assert!(human_bytes(2048).ends_with("KiB"));
+        assert!(human_bytes(5 << 20).ends_with("MiB"));
+        assert!(human_bytes(3 << 30).ends_with("GiB"));
+    }
+}

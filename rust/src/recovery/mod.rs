@@ -1,0 +1,159 @@
+//! Failure-recovery strategies (paper Table 1 columns).
+//!
+//! A [`RecoveryStrategy`] is consulted by the trainer at two points:
+//! after every completed iteration (`after_iteration` — checkpoint
+//! cadence, replication refresh) and when the injector kills a stage
+//! (`on_failure` — rebuild that stage's state in the engine).
+//!
+//! | impl | paper | mechanism |
+//! |---|---|---|
+//! | [`CheckFreeRecovery`] | §4.2 | ω-weighted neighbour averaging, lr ×1.1 |
+//! | [`CheckFreePlusRecovery`] | §4.3 | + out-of-order swaps, partner copy for S1/SL, (de)embedding replication |
+//! | [`CheckpointRecovery`] | Wang et al. 2023 | periodic full snapshot to remote storage, rollback |
+//! | [`RedundantRecovery`] | Thorpe et al. 2023 (Bamboo) | shadow forward computation on the previous stage |
+
+pub mod checkfree;
+pub mod checkpoint;
+pub mod costs;
+pub mod redundant;
+
+pub use checkfree::{CheckFreePlusRecovery, CheckFreeRecovery};
+pub use checkpoint::CheckpointRecovery;
+pub use redundant::RedundantRecovery;
+
+use crate::config::{ReinitKind, Strategy, TrainConfig};
+use crate::coordinator::PipelineEngine;
+use crate::metrics::EventKind;
+use crate::netsim::Network;
+use crate::{anyhow, Result};
+
+/// What a recovery did, for metrics + simulated wall-clock.
+#[derive(Debug, Clone)]
+pub struct RecoveryOutcome {
+    pub description: String,
+    /// Simulated seconds the pipeline stalls for this recovery.
+    pub downtime_s: f64,
+    /// Iterations of training progress lost (checkpoint rollback).
+    pub rollback_iterations: u64,
+    /// Bytes moved over the network to recover.
+    pub transfer_bytes: u64,
+    /// Were the exact pre-failure weights restored?
+    pub exact: bool,
+}
+
+/// Periodic bookkeeping cost (checkpoint upload, replication refresh).
+#[derive(Debug, Clone)]
+pub struct MaintenanceCost {
+    pub kind: EventKind,
+    /// Simulated seconds of pipeline stall (0 when fully overlapped).
+    pub stall_s: f64,
+    pub bytes: u64,
+}
+
+pub trait RecoveryStrategy {
+    fn name(&self) -> &'static str;
+
+    /// Called once before training starts (e.g. take the initial
+    /// checkpoint so a failure before the first cadence point is safe).
+    fn on_start(&mut self, _engine: &mut PipelineEngine, _net: &Network) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called after every completed iteration.
+    fn after_iteration(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+    ) -> Result<Option<MaintenanceCost>>;
+
+    /// Rebuild `stage` after total loss of its nodes.
+    fn on_failure(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome>;
+
+    /// Steady-state multiplier on iteration compute time (paper Table 2:
+    /// redundant computation ≈ 151.0 / 91.3 ≈ 1.65; everyone else 1.0).
+    fn iteration_time_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Can this strategy survive a failure of `stage`?
+    fn can_recover(&self, stage: usize, body_stages: usize) -> bool;
+}
+
+/// Build the strategy an experiment asked for.
+pub fn make_strategy(cfg: &TrainConfig) -> Result<Box<dyn RecoveryStrategy>> {
+    Ok(match cfg.strategy {
+        Strategy::None => Box::new(NoRecovery),
+        Strategy::CheckFree => {
+            Box::new(CheckFreeRecovery::new(cfg.reinit, cfg.recovery_lr_boost, cfg.seed))
+        }
+        Strategy::CheckFreePlus => Box::new(CheckFreePlusRecovery::new(
+            ReinitKind::WeightedAverage,
+            cfg.recovery_lr_boost,
+            cfg.seed,
+        )),
+        Strategy::Checkpoint => Box::new(CheckpointRecovery::new(cfg.checkpoint_every)),
+        Strategy::Redundant => Box::new(RedundantRecovery::new()),
+    })
+}
+
+/// The no-failure baseline: any failure is fatal.
+pub struct NoRecovery;
+
+impl RecoveryStrategy for NoRecovery {
+    fn name(&self) -> &'static str {
+        "no-failures"
+    }
+
+    fn after_iteration(
+        &mut self,
+        _engine: &mut PipelineEngine,
+        _net: &Network,
+    ) -> Result<Option<MaintenanceCost>> {
+        Ok(None)
+    }
+
+    fn on_failure(
+        &mut self,
+        _engine: &mut PipelineEngine,
+        _net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome> {
+        Err(anyhow!("stage {stage} failed but strategy is 'none'"))
+    }
+
+    fn can_recover(&self, _stage: usize, _body_stages: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_each_strategy() {
+        for s in Strategy::ALL {
+            let cfg = TrainConfig { strategy: s, ..TrainConfig::default() };
+            let b = make_strategy(&cfg).unwrap();
+            assert_eq!(b.name(), s.label());
+        }
+    }
+
+    #[test]
+    fn only_redundant_slows_iterations() {
+        for s in Strategy::ALL {
+            let cfg = TrainConfig { strategy: s, ..TrainConfig::default() };
+            let b = make_strategy(&cfg).unwrap();
+            if s == Strategy::Redundant {
+                assert!(b.iteration_time_factor() > 1.3);
+            } else {
+                assert_eq!(b.iteration_time_factor(), 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute`. Text is the interchange format because jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects —
+//! the text parser reassigns ids (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+//!
+//! Every executable is validated against the manifest's input/output specs
+//! at load time, and every call validates argument shapes, so a stale
+//! `artifacts/` tree fails loudly.
+
+mod tensor;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::manifest::{Artifact, IoSpec, Manifest};
+use crate::{anyhow, Context, Result};
+
+pub use tensor::HostTensor;
+
+/// A loaded + compiled stage computation.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Cumulative execute() wall time (perf accounting).
+    exec_time: std::cell::Cell<Duration>,
+    exec_count: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns host tensors (tuple flattened).
+    pub fn run(&self, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&self.inputs).enumerate() {
+            arg.check_spec(spec).with_context(|| {
+                format!("{}: input {i} spec mismatch", self.name)
+            })?;
+            literals.push(arg.to_literal()?);
+        }
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Execute with pre-built literals (the hot loop caches parameter
+    /// literals once per iteration instead of re-marshalling them for
+    /// every microbatch — see `PipelineEngine::train_iteration`).
+    /// Arity is checked; shape validation happened when the literals were
+    /// built from spec-checked tensors.
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        if literals.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                literals.len()
+            ));
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        self.exec_time.set(self.exec_time.get() + t0.elapsed());
+        self.exec_count.set(self.exec_count.get() + 1);
+        // AOT lowers with return_tuple=True: unpack N-tuple.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&self.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+            .collect()
+    }
+
+    /// (total wall time in execute, number of calls) since load.
+    pub fn stats(&self) -> (Duration, u64) {
+        (self.exec_time.get(), self.exec_count.get())
+    }
+}
+
+/// PJRT client plus the full executable registry for one model config.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: BTreeMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest and compile it on the CPU client.
+    pub fn load(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, art) in &manifest.artifacts {
+            let exe = Self::compile_artifact(&client, &manifest, name, art)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Self { client, manifest, exes })
+    }
+
+    /// Convenience: load by artifacts root + config name.
+    pub fn load_config(artifacts_root: impl AsRef<std::path::Path>, config: &str) -> Result<Self> {
+        Self::load(Manifest::load_config(artifacts_root, config)?)
+    }
+
+    fn compile_artifact(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        name: &str,
+        art: &Artifact,
+    ) -> Result<Executable> {
+        let path = manifest.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("PJRT compile {name}: {e}"))?;
+        Ok(Executable {
+            name: name.to_string(),
+            exe,
+            inputs: art.inputs.clone(),
+            outputs: art.outputs.clone(),
+            exec_time: std::cell::Cell::new(Duration::ZERO),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&Executable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))
+    }
+
+    /// Per-executable (name, total execute time, calls) — perf report.
+    pub fn exec_stats(&self) -> Vec<(String, Duration, u64)> {
+        self.exes
+            .iter()
+            .map(|(n, e)| {
+                let (t, c) = e.stats();
+                (n.clone(), t, c)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+
+    fn runtime() -> Runtime {
+        Runtime::load_config(default_artifacts_root(), "tiny").expect("run `make artifacts`")
+    }
+
+    #[test]
+    fn loads_and_compiles_all_artifacts() {
+        let rt = runtime();
+        for name in ["embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd", "head_bwd"] {
+            assert!(rt.executable(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn embed_fwd_gathers_rows() {
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let mut embed = HostTensor::zeros_f32(vec![c.vocab, c.dim]);
+        // row v filled with value v
+        for v in 0..c.vocab {
+            for d in 0..c.dim {
+                embed.as_f32_mut()[v * c.dim + d] = v as f32;
+            }
+        }
+        let ids = HostTensor::from_i32(
+            vec![c.microbatch, c.context],
+            &vec![3i32; c.microbatch * c.context],
+        );
+        let exe = rt.executable("embed_fwd").unwrap();
+        let out = exe.run(&[&embed, &ids]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[c.microbatch, c.context, c.dim]);
+        assert!(out[0].as_f32().iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let rt = runtime();
+        let exe = rt.executable("embed_fwd").unwrap();
+        let t = HostTensor::zeros_f32(vec![1]);
+        assert!(exe.run(&[&t]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let exe = rt.executable("embed_fwd").unwrap();
+        let embed = HostTensor::zeros_f32(vec![c.vocab, c.dim + 1]); // bad
+        let ids = HostTensor::from_i32(
+            vec![c.microbatch, c.context],
+            &vec![0i32; c.microbatch * c.context],
+        );
+        assert!(exe.run(&[&embed, &ids]).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let exe = rt.executable("embed_fwd").unwrap();
+        let embed = HostTensor::zeros_f32(vec![c.vocab, c.dim]);
+        let ids_f32 = HostTensor::zeros_f32(vec![c.microbatch, c.context]); // bad dtype
+        assert!(exe.run(&[&embed, &ids_f32]).is_err());
+    }
+
+    #[test]
+    fn head_fwd_loss_near_log_vocab_for_random_params() {
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let mut rng = crate::rng::Rng::new(0);
+        let mut deembed = HostTensor::zeros_f32(vec![c.dim, c.vocab]);
+        rng.fill_normal(deembed.as_f32_mut(), 0.02);
+        let norm = HostTensor::from_f32(vec![c.dim], &vec![1.0f32; c.dim]);
+        let mut h = HostTensor::zeros_f32(vec![c.microbatch, c.context, c.dim]);
+        rng.fill_normal(h.as_f32_mut(), 1.0);
+        let ids: Vec<i32> = (0..c.microbatch * c.context)
+            .map(|_| rng.below(c.vocab) as i32)
+            .collect();
+        let ids = HostTensor::from_i32(vec![c.microbatch, c.context], &ids);
+        let exe = rt.executable("head_fwd").unwrap();
+        let out = exe.run(&[&deembed, &norm, &h, &ids]).unwrap();
+        let loss = out[0].scalar_f32().unwrap();
+        assert!((loss - (c.vocab as f32).ln()).abs() < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn exec_stats_accumulate() {
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let exe = rt.executable("embed_fwd").unwrap();
+        let embed = HostTensor::zeros_f32(vec![c.vocab, c.dim]);
+        let ids = HostTensor::from_i32(
+            vec![c.microbatch, c.context],
+            &vec![0i32; c.microbatch * c.context],
+        );
+        exe.run(&[&embed, &ids]).unwrap();
+        exe.run(&[&embed, &ids]).unwrap();
+        let (t, n) = exe.stats();
+        assert_eq!(n, 2);
+        assert!(t > Duration::ZERO);
+    }
+}

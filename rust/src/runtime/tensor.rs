@@ -1,0 +1,193 @@
+//! Host-side tensors: the only data type that crosses the Rust ⇄ PJRT
+//! boundary. Deliberately minimal — flat `Vec<f32>`/`Vec<i32>` plus shape —
+//! because all heavy math happens inside the compiled HLO; the Rust side
+//! only needs elementwise access for the optimizer and recovery math.
+
+use crate::manifest::IoSpec;
+use crate::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: HostData,
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: HostData::F32(vec![0.0; n]) }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data: HostData::F32(data.to_vec()) }
+    }
+
+    pub fn from_f32_vec(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data: HostData::F32(data) }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data: HostData::I32(data.to_vec()) }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: HostData::F32(vec![v]) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            HostData::F32(_) => "f32",
+            HostData::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            HostData::F32(v) => v,
+            HostData::I32(_) => panic!("tensor is i32, not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            HostData::F32(v) => v,
+            HostData::I32(_) => panic!("tensor is i32, not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            HostData::I32(v) => v,
+            HostData::F32(_) => panic!("tensor is f32, not i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        if self.len() != 1 {
+            return Err(anyhow!("expected scalar, shape {:?}", self.shape));
+        }
+        Ok(self.as_f32()[0])
+    }
+
+    /// Validate against a manifest IoSpec.
+    pub fn check_spec(&self, spec: &IoSpec) -> Result<()> {
+        if self.shape != spec.shape {
+            return Err(anyhow!("shape {:?} != spec {:?}", self.shape, spec.shape));
+        }
+        if self.dtype() != spec.dtype {
+            return Err(anyhow!("dtype {} != spec {}", self.dtype(), spec.dtype));
+        }
+        Ok(())
+    }
+
+    /// Build an `xla::Literal` (host → device copy happens at execute).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
+            HostData::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+            HostData::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)
+            .map_err(|e| anyhow!("literal create: {e}"))
+    }
+
+    /// Read a literal back into host memory, checking it against the spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Self> {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype.as_str() {
+            "f32" => {
+                let mut buf = vec![0.0f32; n];
+                lit.copy_raw_to(&mut buf).map_err(|e| anyhow!("literal read: {e}"))?;
+                Ok(Self { shape: spec.shape.clone(), data: HostData::F32(buf) })
+            }
+            "i32" => {
+                let mut buf = vec![0i32; n];
+                lit.copy_raw_to(&mut buf).map_err(|e| anyhow!("literal read: {e}"))?;
+                Ok(Self { shape: spec.shape.clone(), data: HostData::I32(buf) })
+            }
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+
+    /// Sum of squares (used for gradient norms ‖∇W‖²).
+    pub fn sq_norm(&self) -> f64 {
+        self.as_f32().iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // safe: f32 has no invalid bit patterns and alignment of u8 is 1
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_literal() {
+        let t = HostTensor::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let spec = IoSpec { shape: vec![2, 3], dtype: "f32".into() };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_i32_literal() {
+        let t = HostTensor::from_i32(vec![4], &[7, -1, 0, 3]);
+        let lit = t.to_literal().unwrap();
+        let spec = IoSpec { shape: vec![4], dtype: "i32".into() };
+        assert_eq!(HostTensor::from_literal(&lit, &spec).unwrap(), t);
+    }
+
+    #[test]
+    fn spec_check_catches_mismatches() {
+        let t = HostTensor::zeros_f32(vec![2, 2]);
+        assert!(t.check_spec(&IoSpec { shape: vec![2, 2], dtype: "f32".into() }).is_ok());
+        assert!(t.check_spec(&IoSpec { shape: vec![4], dtype: "f32".into() }).is_err());
+        assert!(t.check_spec(&IoSpec { shape: vec![2, 2], dtype: "i32".into() }).is_err());
+    }
+
+    #[test]
+    fn sq_norm() {
+        let t = HostTensor::from_f32(vec![3], &[1., 2., 2.]);
+        assert!((t.sq_norm() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "i32, not f32")]
+    fn wrong_accessor_panics() {
+        HostTensor::from_i32(vec![1], &[1]).as_f32();
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        assert_eq!(HostTensor::scalar(4.5).scalar_f32().unwrap(), 4.5);
+        assert!(HostTensor::zeros_f32(vec![2]).scalar_f32().is_err());
+    }
+}

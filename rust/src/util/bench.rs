@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations until a wall-clock budget or iteration cap, then
+//! mean / stddev / min / p50 / p95 in criterion-like output lines.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} ± {:<10} (min {:>10}, p50 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, spending at most `budget` wall time (after 3 warmups),
+/// with at least `min_iters` and at most `max_iters` samples.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    mut f: F,
+) -> BenchStats {
+    for _ in 0..3.min(max_iters) {
+        f(); // warmup
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_iters || start.elapsed() < budget) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, samples)
+}
+
+/// Default budget: 2 s, 10..=1000 samples.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench_with(name, Duration::from_secs(2), 10, 1000, f)
+}
+
+fn stats_from(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean.as_secs_f64();
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_min_iters() {
+        let s = bench_with("noop", Duration::ZERO, 5, 100, || {});
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let s = bench_with("noop", Duration::from_secs(60), 1, 7, || {});
+        assert_eq!(s.iters, 7);
+    }
+
+    #[test]
+    fn ordering_of_quantiles() {
+        let s = bench_with("sleepy", Duration::ZERO, 20, 20, || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(s.mean >= Duration::from_micros(40));
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

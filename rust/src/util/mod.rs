@@ -1,0 +1,7 @@
+//! Small from-scratch substrates the offline build environment forces us
+//! to own: JSON parsing/writing ([`json`]), a statistics-aware bench timer
+//! ([`bench`]), and a seeded property-testing helper ([`propcheck`]).
+
+pub mod bench;
+pub mod json;
+pub mod propcheck;

