@@ -1,97 +1,180 @@
 //! Bench: the L3 hot path — full training iterations through the PJRT
-//! executables, plus the Rust-side pieces (Adam, gradient accumulation,
-//! weighted-average recovery) in isolation. This is the §Perf
-//! before/after harness: PJRT execute time should dominate (compute-
-//! bound); if the Rust share grows, the coordinator has become the
-//! bottleneck.
+//! executables, sequential vs pipelined, plus the Rust-side pieces
+//! (Adam, gradient accumulation, weighted-average recovery) in
+//! isolation.
+//!
+//! This is the perf before/after harness for the concurrent fill/drain
+//! executor: the `sequential` exec mode is the seed's reference
+//! schedule, `pipelined` is the worker-thread executor, and the speedup
+//! between them (≥4 microbatches so the pipe actually fills) is the
+//! number the acceptance criteria track. Results are also written to
+//! `BENCH_hot_path.json` at the repo root so future PRs can diff the
+//! perf trajectory.
+//!
+//! Pass `--smoke` for a quick tiny-model-only run (used by
+//! `scripts/tier1.sh` as the train_iteration timing check); smoke
+//! results go to the gitignored `BENCH_hot_path.smoke.json` so they
+//! never clobber the committed full-run trajectory.
 
-use checkfree::config::{Strategy, TrainConfig};
+use checkfree::config::{ExecMode, Strategy, TrainConfig};
 use checkfree::coordinator::PipelineEngine;
 use checkfree::model::GradBuffer;
 use checkfree::recovery::checkfree::weighted_average;
 use checkfree::runtime::HostTensor;
 use checkfree::util::bench::{bench_with, fmt_dur};
+use checkfree::util::json::Json;
 use std::time::Duration;
 
+const MICROBATCHES: usize = 4;
+
 fn main() {
-    for model in ["tiny", "e2e"] {
-        let cfg = TrainConfig {
-            model: model.into(),
-            strategy: Strategy::CheckFree,
-            microbatches_per_iter: 2,
-            ..TrainConfig::default()
-        };
-        let mut e = match PipelineEngine::from_config(&cfg) {
-            Ok(e) => e,
-            Err(err) => {
-                eprintln!("skipping {model}: {err:#}");
-                continue;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let models: &[&str] = if smoke { &["tiny"] } else { &["tiny", "e2e"] };
+    let iter_budget = Duration::from_secs(if smoke { 2 } else { 6 });
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+
+    'models: for &model in models {
+        let mut mode_means: Vec<(ExecMode, f64)> = Vec::new();
+        for mode in [ExecMode::Sequential, ExecMode::Pipelined] {
+            let cfg = TrainConfig {
+                model: model.into(),
+                strategy: Strategy::CheckFree,
+                microbatches_per_iter: MICROBATCHES,
+                exec_mode: mode,
+                ..TrainConfig::default()
+            };
+            let mut e = match PipelineEngine::from_config(&cfg) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("skipping {model}: {err:#}");
+                    continue 'models;
+                }
+            };
+            let stats = bench_with(
+                &format!("train_iteration ({model}, {}, {MICROBATCHES} mb)", mode.label()),
+                iter_budget,
+                5,
+                200,
+                || {
+                    e.train_iteration().unwrap();
+                },
+            );
+            println!("{}", stats.report());
+            let mut j = stats.to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert("model".into(), Json::str(model));
+                map.insert("exec_mode".into(), Json::str(mode.label()));
+                map.insert("microbatches".into(), Json::num(MICROBATCHES as f64));
             }
-        };
-        let stats = bench_with(
-            &format!("train_iteration ({model}, 2 microbatches)"),
-            Duration::from_secs(6),
-            5,
-            200,
-            || {
-                e.train_iteration().unwrap();
-            },
-        );
-        println!("{}", stats.report());
+            results.push(j);
+            mode_means.push((mode, stats.mean.as_secs_f64()));
 
-        let batch = checkfree::data::BatchIter::validation_set(
-            checkfree::data::Domain::Stories,
-            1,
-            1,
-            e.runtime.manifest.config.microbatch,
-            e.runtime.manifest.config.context,
-            e.runtime.manifest.config.vocab,
-        )
-        .pop()
-        .unwrap();
-        let stats = bench_with(
-            &format!("eval_loss forward-only ({model})"),
-            Duration::from_secs(3),
-            5,
-            200,
-            || {
-                e.eval_loss(&batch).unwrap();
-            },
-        );
-        println!("{}", stats.report());
+            if mode == ExecMode::Pipelined {
+                let stats = bench_with(
+                    &format!("validate — 4 cache-served eval batches ({model})"),
+                    Duration::from_secs(if smoke { 1 } else { 3 }),
+                    5,
+                    200,
+                    || {
+                        e.validate().unwrap();
+                    },
+                );
+                println!("{}", stats.report());
+                results.push(stats.to_json());
 
-        // PJRT vs Rust-side split for the perf report
-        let total: f64 = e
-            .runtime
-            .exec_stats()
-            .iter()
-            .map(|(_, d, _)| d.as_secs_f64())
-            .sum();
-        println!("  cumulative PJRT execute time this process: {}", fmt_dur(Duration::from_secs_f64(total)));
+                // PJRT vs Rust-side split for the perf report.
+                let exec = e.runtime.exec_stats();
+                let total: f64 = exec.iter().map(|(_, d, _)| d.as_secs_f64()).sum();
+                println!(
+                    "  cumulative PJRT execute time this engine: {}",
+                    fmt_dur(Duration::from_secs_f64(total))
+                );
+                for (name, d, calls) in &exec {
+                    let share = if total > 0.0 { d.as_secs_f64() / total } else { 0.0 };
+                    println!(
+                        "    {name:<10} {:>10} over {calls:>6} calls ({:4.1}%)",
+                        fmt_dur(*d),
+                        share * 100.0
+                    );
+                    results.push(Json::obj(vec![
+                        ("name", Json::str(format!("exec_share ({model}, {name})"))),
+                        ("model", Json::str(model)),
+                        ("executable", Json::str(name.clone())),
+                        ("total_s", Json::num(d.as_secs_f64())),
+                        ("calls", Json::num(*calls as f64)),
+                        ("share", Json::num(share)),
+                    ]));
+                }
+            }
+        }
+        if let (Some((_, seq)), Some((_, pipe))) = (
+            mode_means.iter().find(|(m, _)| *m == ExecMode::Sequential),
+            mode_means.iter().find(|(m, _)| *m == ExecMode::Pipelined),
+        ) {
+            let speedup = seq / pipe;
+            println!("  {model}: pipelined speedup over sequential = {speedup:.2}×\n");
+            speedups.push((model.to_string(), speedup));
+        }
     }
 
-    // Rust-side hot pieces in isolation (e2e body-stage sizes)
+    // Rust-side hot pieces in isolation (e2e body-stage sizes).
     let n = 1_600_000; // ≈ e2e body stage elements
+    let host_budget = Duration::from_secs(if smoke { 1 } else { 2 });
     let a = vec![0.5f32; n];
     let g = vec![0.01f32; n];
     let mut adam = checkfree::model::Adam::new(&[n]);
     let mut p = a.clone();
-    let stats = bench_with("adam update 1.6M params", Duration::from_secs(2), 5, 500, || {
+    let stats = bench_with("adam update 1.6M params", host_budget, 5, 500, || {
         adam.update(&mut [&mut p], &[&g], 1e-3);
     });
     println!("{}", stats.report());
+    results.push(stats.to_json());
 
     let mut gb = GradBuffer::new(&[n]);
     let gt = [HostTensor::from_f32_vec(vec![n], g.clone())];
-    let stats = bench_with("grad accumulate 1.6M params", Duration::from_secs(2), 5, 500, || {
+    let stats = bench_with("grad accumulate 1.6M params", host_budget, 5, 500, || {
         gb.accumulate(&gt);
     });
     println!("{}", stats.report());
+    results.push(stats.to_json());
 
     let ta = vec![HostTensor::from_f32_vec(vec![n], a.clone())];
     let tb = vec![HostTensor::from_f32_vec(vec![n], g.clone())];
-    let stats = bench_with("weighted_average 1.6M params", Duration::from_secs(2), 5, 500, || {
+    let stats = bench_with("weighted_average 1.6M params", host_budget, 5, 500, || {
         std::hint::black_box(weighted_average(&ta, &tb, 1.0, 2.0));
     });
     println!("{}", stats.report());
+    results.push(stats.to_json());
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("hot_path")),
+        ("schema", Json::num(1.0)),
+        ("status", Json::str("measured")),
+        ("generated_by", Json::str("cargo bench --bench hot_path [-- --smoke]")),
+        ("smoke", Json::Bool(smoke)),
+        ("microbatches", Json::num(MICROBATCHES as f64)),
+        (
+            "pipelined_speedup",
+            Json::Obj(
+                speedups
+                    .iter()
+                    .map(|(m, s)| (m.clone(), Json::num(*s)))
+                    .collect(),
+            ),
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    // Smoke runs (tiny-only, short budgets) go to a sidecar file so they
+    // never clobber the committed full-run perf trajectory.
+    let path = if smoke {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_path.smoke.json")
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_path.json")
+    };
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

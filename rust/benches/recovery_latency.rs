@@ -2,11 +2,19 @@
 //! backs the paper's §5.1 claim that CheckFree stage recovery takes
 //! ≈30 s at the 500M scale, and shows how it scales with stage size and
 //! placement vs checkpoint-download recovery.
+//!
+//! Emits `BENCH_recovery.json` at the repo root (simulated latencies +
+//! netsim micro-bench stats) so the perf trajectory is diffable across
+//! PRs.
 
 use checkfree::netsim::{Network, Region};
 use checkfree::util::bench::bench;
+use checkfree::util::json::Json;
 
 fn main() {
+    let mut latencies: Vec<Json> = Vec::new();
+    let mut micro: Vec<Json> = Vec::new();
+
     println!("--- simulated recovery latencies (netsim) ---");
     let scales: [(&str, u64, u64); 3] = [
         ("small-124M (4+1 stages)", 124_000_000 / 4 * 4, 124_000_000 * 4),
@@ -24,6 +32,14 @@ fn main() {
         println!(
             "{label:<28} checkfree {cf:>7.1}s | ckpt download {ck_down:>7.1}s | ckpt upload {ck_up:>8.1}s"
         );
+        latencies.push(Json::obj(vec![
+            ("scale", Json::str(label)),
+            ("stage_bytes", Json::num(stage_bytes as f64)),
+            ("model_bytes", Json::num(model_bytes as f64)),
+            ("checkfree_worst_s", Json::num(cf)),
+            ("ckpt_download_s", Json::num(ck_down)),
+            ("ckpt_upload_s", Json::num(ck_up)),
+        ]));
     }
 
     println!("\n--- netsim micro-benchmarks ---");
@@ -32,13 +48,30 @@ fn main() {
         std::hint::black_box(net.transfer_seconds(333_000_000, 2, 3).unwrap());
     });
     println!("{}", stats.report());
+    micro.push(stats.to_json());
     let stats = bench("checkfree_recovery_seconds (both neighbours)", || {
         std::hint::black_box(net.checkfree_recovery_seconds(333_000_000, 3).unwrap());
     });
     println!("{}", stats.report());
+    micro.push(stats.to_json());
     let single = Network::single_region(7, Region::UsCentral);
     let stats = bench("recovery in single-region cluster", || {
         std::hint::black_box(single.checkfree_recovery_seconds(333_000_000, 3).unwrap());
     });
     println!("{}", stats.report());
+    micro.push(stats.to_json());
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("recovery")),
+        ("schema", Json::num(1.0)),
+        ("status", Json::str("measured")),
+        ("generated_by", Json::str("cargo bench --bench recovery_latency")),
+        ("simulated_latencies", Json::Arr(latencies)),
+        ("microbench", Json::Arr(micro)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -67,6 +67,42 @@ impl FromStr for Strategy {
     }
 }
 
+/// How `train_iteration` drives the microbatch schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One microbatch at a time, fully serialized — the reference path
+    /// (bitwise-identical results to `Pipelined`; kept for A/B perf
+    /// comparison and as the fallback for degenerate pipelines).
+    Sequential,
+    /// Fill/drain pipeline executor: one worker thread per pipeline
+    /// position, bounded channels carrying activations between stages
+    /// (see `coordinator::executor`).
+    Pipelined,
+}
+
+impl ExecMode {
+    pub const ALL: [ExecMode; 2] = [ExecMode::Sequential, ExecMode::Pipelined];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+impl FromStr for ExecMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Ok(ExecMode::Sequential),
+            "pipelined" | "pipeline" | "concurrent" => Ok(ExecMode::Pipelined),
+            other => Err(anyhow!("unknown exec mode '{other}' (sequential|pipelined)")),
+        }
+    }
+}
+
 /// Reinitialization rule for a lost intermediate stage (paper Fig 2
 /// ablation: random / copy / weighted averaging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -180,6 +216,9 @@ pub struct TrainConfig {
     pub recovery_lr_boost: f32,
     /// Validation cadence (iterations).
     pub eval_every: u64,
+    /// Microbatch scheduling: concurrent fill/drain pipeline (default)
+    /// or the sequential reference path.
+    pub exec_mode: ExecMode,
 }
 
 impl Default for TrainConfig {
@@ -198,6 +237,7 @@ impl Default for TrainConfig {
             target_loss: None,
             recovery_lr_boost: 1.1,
             eval_every: 10,
+            exec_mode: ExecMode::Pipelined,
         }
     }
 }
@@ -232,6 +272,7 @@ impl TrainConfig {
             ),
             ("recovery_lr_boost", Json::num(self.recovery_lr_boost as f64)),
             ("eval_every", Json::num(self.eval_every as f64)),
+            ("exec_mode", Json::str(self.exec_mode.label())),
         ])
     }
 
@@ -289,6 +330,10 @@ impl TrainConfig {
             eval_every: match v.opt("eval_every") {
                 Some(x) => x.as_u64()?,
                 None => d.eval_every,
+            },
+            exec_mode: match v.opt("exec_mode") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.exec_mode,
             },
         })
     }
@@ -405,6 +450,30 @@ mod tests {
         for r in ReinitKind::ALL {
             assert_eq!(r.label().parse::<ReinitKind>().unwrap(), r);
         }
+    }
+
+    #[test]
+    fn exec_mode_parse_all_labels() {
+        for m in ExecMode::ALL {
+            assert_eq!(m.label().parse::<ExecMode>().unwrap(), m);
+        }
+        assert_eq!("seq".parse::<ExecMode>().unwrap(), ExecMode::Sequential);
+        assert!("bogus".parse::<ExecMode>().is_err());
+    }
+
+    #[test]
+    fn exec_mode_defaults_to_pipelined_and_roundtrips() {
+        assert_eq!(TrainConfig::default().exec_mode, ExecMode::Pipelined);
+        let cfg = TrainConfig { exec_mode: ExecMode::Sequential, ..TrainConfig::default() };
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(&cfg.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.exec_mode, ExecMode::Sequential);
+        // absent key → default
+        let cfg =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(cfg.exec_mode, ExecMode::Pipelined);
     }
 
     #[test]

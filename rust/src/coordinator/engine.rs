@@ -2,24 +2,42 @@
 //! microbatch schedule through the PJRT executables, accumulates
 //! gradients, and steps the optimizer.
 //!
-//! One `train_iteration` =
-//! `microbatches_per_iter` × (embed_fwd → body_fwd per route stage →
-//! head_bwd → body_bwd in reverse route order → embed_bwd), then one Adam
-//! step per stage from the accumulated gradients — a GPipe-style
-//! fill/drain with gradient accumulation. With swaps enabled
-//! (CheckFree+), odd microbatches traverse the swapped route from
-//! [`super::schedule`].
+//! One `train_iteration` = `microbatches_per_iter` × (embed_fwd →
+//! body_fwd per route stage → head_bwd → body_bwd in reverse route order
+//! → embed_bwd), then one Adam step per stage from the accumulated
+//! gradients — a GPipe-style fill/drain with gradient accumulation. With
+//! swaps enabled (CheckFree+), odd microbatches traverse the swapped
+//! route from [`super::schedule`].
+//!
+//! Two scheduling backends share that definition
+//! ([`crate::config::ExecMode`]):
+//!
+//! * **Pipelined** (default) — the concurrent fill/drain executor
+//!   ([`super::executor`]): one worker thread per pipeline position,
+//!   bounded channels between stages, microbatch *m+1* overlapping
+//!   microbatch *m*;
+//! * **Sequential** — the single-threaded reference loop.
+//!
+//! Both read parameters through the versioned
+//! [`crate::runtime::LiteralCache`] (marshalled once per parameter
+//! rewrite, not per call) and both produce **bitwise-identical**
+//! results: per-microbatch compute is the same, and gradient
+//! accumulation is forced into microbatch order (see
+//! `executor::OrderedSink`), so f32 rounding cannot depend on thread
+//! scheduling.
 //!
 //! The engine itself is failure-oblivious: the [`super::trainer`] injects
 //! failures and calls a [`crate::recovery::RecoveryStrategy`] to rebuild
 //! stage state between iterations.
 
-use crate::config::TrainConfig;
-use crate::coordinator::schedule;
+use std::cell::RefCell;
+
+use crate::config::{ExecMode, TrainConfig};
+use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
 use crate::model::{GradBuffer, Stage};
 use crate::rng::Rng;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{HostTensor, LiteralCache, Runtime};
 use crate::{anyhow, Context, Result};
 
 /// Result of one training iteration.
@@ -37,11 +55,16 @@ pub struct PipelineEngine {
     /// Index 0 = embed stage (E, E⁻¹, final norm); 1..=L = body stages.
     pub stages: Vec<Stage>,
     grad_bufs: Vec<GradBuffer>,
+    /// Versioned parameter literals; refreshed lazily against
+    /// `Stage::params_version` (RefCell so `&self` eval paths can
+    /// refresh after recovery rewrote a stage).
+    lit_cache: RefCell<LiteralCache>,
     data: BatchIter,
     val_set: Vec<HostTensor>,
     pub iteration: u64,
     pub use_swaps: bool,
     pub microbatches: usize,
+    pub exec_mode: ExecMode,
 }
 
 impl PipelineEngine {
@@ -75,11 +98,13 @@ impl PipelineEngine {
             runtime,
             stages,
             grad_bufs,
+            lit_cache: RefCell::new(LiteralCache::new()),
             data,
             val_set,
             iteration: 0,
             use_swaps: cfg.strategy.uses_swaps(),
             microbatches: cfg.microbatches_per_iter,
+            exec_mode: cfg.exec_mode,
         })
     }
 
@@ -96,31 +121,40 @@ impl PipelineEngine {
         self.runtime.manifest.embed_stage_bytes()
     }
 
-    /// Marshal every stage's parameters into XLA literals once (per
-    /// iteration), so the microbatch loop reuses them instead of copying
-    /// all parameters on every executable call. Safe because nothing
-    /// mutates parameters within an iteration (Adam and recovery both run
-    /// between iterations).
-    fn build_param_literals(&self) -> Result<Vec<Vec<xla::Literal>>> {
-        self.stages
-            .iter()
-            .map(|stage| stage.params.iter().map(|p| p.to_literal()).collect())
-            .collect()
+    /// Bring the literal cache up to date with every stage's parameter
+    /// version. Cheap when nothing changed (a version compare per
+    /// stage); re-marshals exactly the stages that were rewritten since
+    /// the last call (optimizer step, recovery, wipe).
+    fn refresh_cache(&self) -> Result<()> {
+        let mut cache = self.lit_cache.borrow_mut();
+        for (i, s) in self.stages.iter().enumerate() {
+            cache.refresh(i, s.params_version(), &s.params)?;
+        }
+        Ok(())
     }
 
-    /// Full forward + backward of one microbatch along `route`;
-    /// accumulates gradients into every stage's buffer, returns the loss.
+    /// `(hits, misses)` of the parameter-literal cache — invalidation
+    /// tests and the perf report read this.
+    pub fn literal_cache_stats(&self) -> (u64, u64) {
+        self.lit_cache.borrow().stats()
+    }
+
+    /// Sequential reference path: full forward + backward of one
+    /// microbatch along `route`; accumulates gradients into every
+    /// stage's buffer, returns the loss.
     fn microbatch_pass(
-        &mut self,
+        runtime: &Runtime,
+        cache: &LiteralCache,
+        grad_bufs: &mut [GradBuffer],
         ids: &HostTensor,
         route: &[usize],
-        param_lits: &[Vec<xla::Literal>],
     ) -> Result<f32> {
         let ids_lit = ids.to_literal()?;
-        let (e, d, nw) = (&param_lits[0][0], &param_lits[0][1], &param_lits[0][2]);
+        let st0 = cache.stage(0);
+        let (e, d, nw) = (&st0[0], &st0[1], &st0[2]);
 
         // ---- forward ----
-        let embed_fwd = self.runtime.executable("embed_fwd")?;
+        let embed_fwd = runtime.executable("embed_fwd")?;
         let h0 = embed_fwd
             .run_literals(&[e, &ids_lit])?
             .pop()
@@ -128,65 +162,103 @@ impl PipelineEngine {
         // hs[i] = activation INTO route[i]; last = activation into head
         let mut hs: Vec<HostTensor> = Vec::with_capacity(route.len() + 1);
         hs.push(h0);
-        let body_fwd = self.runtime.executable("body_fwd")?;
+        let body_fwd = runtime.executable("body_fwd")?;
         for &s in route {
-            debug_assert!(self.stages[s].index >= 1);
-            let mut args: Vec<&xla::Literal> = param_lits[s].iter().collect();
-            let h_lit = hs.last().unwrap().to_literal()?;
-            args.push(&h_lit);
-            let h_out = body_fwd
-                .run_literals(&args)?
-                .pop()
-                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?;
+            let h_lit = hs.last().expect("seeded with h0").to_literal()?;
+            let h_out = {
+                let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
+                args.push(&h_lit);
+                body_fwd
+                    .run_literals(&args)?
+                    .pop()
+                    .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+            };
             hs.push(h_out);
         }
 
         // ---- head: loss + gradients wrt (h, deembed, final_norm) ----
-        let head_bwd = self.runtime.executable("head_bwd")?;
-        let h_last = hs.last().unwrap().to_literal()?;
+        let head_bwd = runtime.executable("head_bwd")?;
+        let h_last = hs.last().expect("nonempty").to_literal()?;
         let mut outs = head_bwd.run_literals(&[d, nw, &h_last, &ids_lit])?;
         if outs.len() != 4 {
             return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
         }
-        let gnw = outs.pop().unwrap();
-        let gd = outs.pop().unwrap();
-        let mut gh = outs.pop().unwrap();
-        let loss = outs.pop().unwrap().scalar_f32()?;
+        let gnw = outs.pop().expect("len checked");
+        let gd = outs.pop().expect("len checked");
+        let mut gh = outs.pop().expect("len checked");
+        let loss = outs.pop().expect("len checked").scalar_f32()?;
 
         // ---- backward through body stages in reverse route order ----
-        let body_bwd = self.runtime.executable("body_bwd")?;
+        let body_bwd = runtime.executable("body_bwd")?;
         for (pos, &s) in route.iter().enumerate().rev() {
-            let mut args: Vec<&xla::Literal> = param_lits[s].iter().collect();
             let h_lit = hs[pos].to_literal()?;
             let gh_lit = gh.to_literal()?;
-            args.push(&h_lit);
-            args.push(&gh_lit);
-            let mut bouts = body_bwd.run_literals(&args)?;
+            let mut bouts = {
+                let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
+                args.push(&h_lit);
+                args.push(&gh_lit);
+                body_bwd.run_literals(&args)?
+            };
             // (gh, gparams…)
             let gparams = bouts.split_off(1);
-            gh = bouts.pop().unwrap();
-            self.grad_bufs[s].accumulate(&gparams);
+            gh = bouts.pop().ok_or_else(|| anyhow!("body_bwd returned nothing"))?;
+            grad_bufs[s].accumulate(&gparams);
         }
 
         // ---- embedding backward ----
-        let embed_bwd = self.runtime.executable("embed_bwd")?;
+        let embed_bwd = runtime.executable("embed_bwd")?;
         let gh_lit = gh.to_literal()?;
         let ge = embed_bwd
             .run_literals(&[e, &ids_lit, &gh_lit])?
             .pop()
             .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
-        self.grad_bufs[0].accumulate(&[ge, gd, gnw]);
+        grad_bufs[0].accumulate(&[ge, gd, gnw]);
         Ok(loss)
     }
 
     /// One full training iteration; optimizer steps every stage.
+    ///
+    /// Returns identical results in both exec modes (see module docs for
+    /// the determinism contract).
     pub fn train_iteration(&mut self) -> Result<IterStats> {
+        // Draw every microbatch up front, in microbatch order, so the
+        // data stream is independent of the scheduling backend.
+        let batches: Vec<HostTensor> =
+            (0..self.microbatches).map(|_| self.data.next_batch()).collect();
+        self.refresh_cache()?;
+
+        let use_pipeline = self.exec_mode == ExecMode::Pipelined && self.body_stages() >= 1;
+        let losses: Vec<f32> = if use_pipeline {
+            let cache = self.lit_cache.borrow();
+            executor::run_iteration(
+                &self.runtime,
+                &cache,
+                &batches,
+                self.stages.len() - 1,
+                self.use_swaps,
+                &mut self.grad_bufs,
+            )?
+        } else {
+            let cache = self.lit_cache.borrow();
+            let body_stages = self.stages.len() - 1;
+            let mut ls = Vec::with_capacity(batches.len());
+            for (mb, ids) in batches.iter().enumerate() {
+                let route = schedule::route(body_stages, mb, self.use_swaps);
+                ls.push(Self::microbatch_pass(
+                    &self.runtime,
+                    &cache,
+                    &mut self.grad_bufs,
+                    ids,
+                    &route,
+                )?);
+            }
+            ls
+        };
+
+        // Mean loss summed in microbatch order (bitwise-stable).
         let mut loss_sum = 0.0f64;
-        let param_lits = self.build_param_literals()?;
-        for mb in 0..self.microbatches {
-            let ids = self.data.next_batch();
-            let route = schedule::route(self.body_stages(), mb, self.use_swaps);
-            loss_sum += self.microbatch_pass(&ids, &route, &param_lits)? as f64;
+        for &l in &losses {
+            loss_sum += l as f64;
         }
         for (stage, gb) in self.stages.iter_mut().zip(&mut self.grad_bufs) {
             debug_assert_eq!(gb.microbatches() as usize, self.microbatches);
@@ -200,26 +272,34 @@ impl PipelineEngine {
         })
     }
 
-    /// Forward-only loss of one batch (standard route).
+    /// Forward-only loss of one batch (standard route), served from the
+    /// literal cache — repeated validation stops re-marshalling
+    /// parameters.
     pub fn eval_loss(&self, ids: &HostTensor) -> Result<f32> {
-        let embed_params = &self.stages[0].params;
-        let (e, d, nw) = (&embed_params[0], &embed_params[1], &embed_params[2]);
+        self.refresh_cache()?;
+        let cache = self.lit_cache.borrow();
+        let ids_lit = ids.to_literal()?;
+        let st0 = cache.stage(0);
         let embed_fwd = self.runtime.executable("embed_fwd")?;
         let mut h = embed_fwd
-            .run(&[e, ids])?
+            .run_literals(&[&st0[0], &ids_lit])?
             .pop()
             .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
         let body_fwd = self.runtime.executable("body_fwd")?;
         for s in 1..self.stages.len() {
-            let mut args: Vec<&HostTensor> = self.stages[s].params.iter().collect();
-            args.push(&h);
-            h = body_fwd
-                .run(&args)?
-                .pop()
-                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?;
+            let h_lit = h.to_literal()?;
+            h = {
+                let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
+                args.push(&h_lit);
+                body_fwd
+                    .run_literals(&args)?
+                    .pop()
+                    .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+            };
         }
         let head_fwd = self.runtime.executable("head_fwd")?;
-        head_fwd.run(&[d, nw, &h, ids])?[0].scalar_f32()
+        let h_lit = h.to_literal()?;
+        head_fwd.run_literals(&[&st0[1], &st0[2], &h_lit, &ids_lit])?[0].scalar_f32()
     }
 
     /// Mean loss over the held-out validation set.
@@ -249,15 +329,25 @@ mod tests {
     use super::*;
     use crate::config::Strategy;
 
-    fn engine(strategy: Strategy, seed: u64) -> PipelineEngine {
+    fn engine_with_mode(
+        strategy: Strategy,
+        seed: u64,
+        microbatches: usize,
+        exec_mode: ExecMode,
+    ) -> PipelineEngine {
         let cfg = TrainConfig {
             model: "tiny".into(),
             strategy,
-            microbatches_per_iter: 2,
+            microbatches_per_iter: microbatches,
             seed,
+            exec_mode,
             ..TrainConfig::default()
         };
         PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn engine(strategy: Strategy, seed: u64) -> PipelineEngine {
+        engine_with_mode(strategy, seed, 2, ExecMode::Pipelined)
     }
 
     #[test]
@@ -300,6 +390,66 @@ mod tests {
             assert_eq!(sa.loss, sb.loss);
         }
         assert_eq!(a.stages[1].params, b.stages[1].params);
+    }
+
+    #[test]
+    fn pipelined_matches_sequential_bitwise() {
+        // The executor's determinism contract: same seed, same losses
+        // and same weights as the sequential reference path, bit for
+        // bit, including under the CheckFree+ swap schedule.
+        for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+            let mut seq = engine_with_mode(strategy, 77, 4, ExecMode::Sequential);
+            let mut pipe = engine_with_mode(strategy, 77, 4, ExecMode::Pipelined);
+            for it in 0..5 {
+                let a = seq.train_iteration().unwrap();
+                let b = pipe.train_iteration().unwrap();
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "loss diverged at iteration {it} ({strategy:?}): {} vs {}",
+                    a.loss,
+                    b.loss
+                );
+                assert_eq!(a.omegas, b.omegas, "omegas diverged at iteration {it}");
+            }
+            for (s, p) in seq.stages.iter().zip(&pipe.stages) {
+                assert_eq!(s.params, p.params, "stage {} weights diverged", s.index);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_handles_many_microbatches() {
+        // More microbatches than pipeline positions: fill/drain with a
+        // deep in-flight queue.
+        let mut e = engine_with_mode(Strategy::None, 13, 8, ExecMode::Pipelined);
+        let first = e.train_iteration().unwrap().loss;
+        let second = e.train_iteration().unwrap().loss;
+        assert!(first.is_finite() && second.is_finite());
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn literal_cache_hits_within_and_across_evals() {
+        let e = engine(Strategy::None, 19);
+        e.validate().unwrap();
+        let (h1, m1) = e.literal_cache_stats();
+        assert_eq!(m1, e.stages.len() as u64, "first refresh marshals every stage");
+        e.validate().unwrap();
+        let (h2, m2) = e.literal_cache_stats();
+        assert_eq!(m2, m1, "no parameter changed — no re-marshal");
+        assert!(h2 > h1);
+    }
+
+    #[test]
+    fn literal_cache_invalidates_after_apply_grads() {
+        let mut e = engine(Strategy::None, 23);
+        e.train_iteration().unwrap();
+        let (_, m1) = e.literal_cache_stats();
+        e.train_iteration().unwrap();
+        let (_, m2) = e.literal_cache_stats();
+        // the optimizer rewrote every stage between iterations
+        assert_eq!(m2 - m1, e.stages.len() as u64);
     }
 
     #[test]

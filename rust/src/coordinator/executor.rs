@@ -1,0 +1,457 @@
+//! Concurrent fill/drain pipeline executor.
+//!
+//! The seed engine ran the GPipe schedule strictly sequentially: one
+//! microbatch fully traversed embed→body→head→backward before the next
+//! started, so the simulated "pipeline" never overlapped anything. This
+//! module gives every pipeline position its own worker thread:
+//!
+//! ```text
+//! embed ──f0──▶ slot 0 ──f1──▶ … ──fL-1──▶ slot L-1 ──fL──▶ head
+//!   ▲            │  ▲                         │  ▲            │
+//!   └────b0──────┘  └─────────…───bL-1────────┘  └────bL──────┘
+//!   ▲                                                         │
+//!   └───────────────────── head grads (gd, gnw) ──────────────┘
+//! ```
+//!
+//! * forward links `f*` are **bounded** (`FWD_CHANNEL_CAP`), so at most a
+//!   couple of activations are in flight per link — microbatch *m+1*
+//!   enters slot 0 while microbatch *m* is still deeper in the pipe;
+//! * backward links `b*` are unbounded by design: in a fill/drain
+//!   schedule the head can emit every backward gradient while early
+//!   slots are still forwarding, and a bound there would deadlock (the
+//!   backlog is capped at `microbatches` messages);
+//! * each slot worker stashes the marshalled activation INTO it during
+//!   the forward pass and reuses the literal for the backward pass —
+//!   one host↔literal round-trip less per slot per microbatch than the
+//!   sequential path.
+//!
+//! **Memory trade-off:** full fill/drain keeps every slot's stashed
+//! activation for every in-flight microbatch alive at once — peak
+//! resident activations are O(`microbatches` × stages), vs the
+//! sequential path's O(stages) (it frees each microbatch's `hs` before
+//! starting the next). That is the classic GPipe memory/throughput
+//! trade; raising the microbatch count raises peak memory linearly.
+//! 1F1B interleaving inside the slot workers would cut this back to
+//! O(pipeline depth) — tracked in ROADMAP open items.
+//!
+//! **Determinism contract:** results are bitwise-identical to the
+//! sequential reference path. Per-microbatch compute uses the same
+//! cached literals and executables in the same order; the only
+//! scheduling freedom is *when* gradients arrive at a stage's
+//! accumulation buffer, and [`OrderedSink`] restores strict microbatch
+//! order there (f32 addition is not associative, so order is what makes
+//! the loss trajectory reproducible). With CheckFree+ swaps a stage's
+//! gradients arrive from two different slot workers — that is the one
+//! place reordering can actually happen, and the sink's pending map
+//! absorbs it.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Mutex;
+
+use crate::coordinator::schedule;
+use crate::model::GradBuffer;
+use crate::runtime::{HostTensor, LiteralCache, Runtime, SharedLiterals};
+use crate::{anyhow, Result};
+
+/// In-flight forward activations allowed per inter-stage link. Two keeps
+/// every worker busy without ballooning resident activations.
+pub const FWD_CHANNEL_CAP: usize = 2;
+
+/// Marker for "a neighbour hung up" errors, so the real root cause (the
+/// worker that actually failed) wins error reporting.
+const LINK_CLOSED: &str = "pipeline link closed";
+
+fn link_closed(link: &str) -> anyhow::Error {
+    anyhow!("{LINK_CLOSED} ({link})")
+}
+
+struct FwdMsg {
+    mb: usize,
+    h: HostTensor,
+}
+
+struct BwdMsg {
+    mb: usize,
+    gh: HostTensor,
+}
+
+/// Stage-0 gradient pieces the head computes (`∂L/∂deembed`,
+/// `∂L/∂final_norm`), routed straight to the embed worker which joins
+/// them with `∂L/∂embed` per microbatch.
+struct HeadGrads {
+    mb: usize,
+    gd: HostTensor,
+    gnw: HostTensor,
+}
+
+/// Accumulates per-microbatch gradients into a stage's [`GradBuffer`]
+/// in strict microbatch order, buffering early arrivals.
+struct OrderedSink<'a> {
+    gb: &'a mut GradBuffer,
+    next: usize,
+    pending: BTreeMap<usize, Vec<HostTensor>>,
+}
+
+impl<'a> OrderedSink<'a> {
+    fn new(gb: &'a mut GradBuffer) -> Self {
+        Self { gb, next: 0, pending: BTreeMap::new() }
+    }
+
+    /// Deposit microbatch `mb`'s gradients. The in-order case (the
+    /// overwhelmingly common one — each stage has a single writer per
+    /// parity) accumulates straight from the borrowed slice; only
+    /// out-of-order arrivals pay a copy into the pending map.
+    ///
+    /// Uses sequential accumulation: the callers *are* the parallel
+    /// workers, and this runs under the stage's sink lock.
+    fn deposit(&mut self, mb: usize, grads: &[HostTensor]) {
+        if mb == self.next {
+            self.gb.accumulate_seq(grads);
+            self.next += 1;
+            while let Some(g) = self.pending.remove(&self.next) {
+                self.gb.accumulate_seq(&g);
+                self.next += 1;
+            }
+        } else {
+            debug_assert!(mb > self.next, "microbatch {mb} deposited twice");
+            self.pending.insert(mb, grads.to_vec());
+        }
+    }
+}
+
+/// Run one full training iteration through the concurrent pipeline:
+/// forward + backward for every microbatch in `batches`, gradients
+/// accumulated into `grad_bufs` (index 0 = embed stage) in microbatch
+/// order. Returns the per-microbatch losses, index = microbatch.
+///
+/// The caller refreshes `lits` for every stage beforehand; this function
+/// only reads it.
+pub fn run_iteration(
+    runtime: &Runtime,
+    lits: &LiteralCache,
+    batches: &[HostTensor],
+    body_stages: usize,
+    use_swaps: bool,
+    grad_bufs: &mut [GradBuffer],
+) -> Result<Vec<f32>> {
+    let m = batches.len();
+    let l = body_stages;
+    if l == 0 {
+        return Err(anyhow!("pipeline executor needs at least one body stage"));
+    }
+    if m == 0 {
+        return Ok(Vec::new());
+    }
+    assert_eq!(grad_bufs.len(), l + 1, "one grad buffer per stage (embed + body)");
+
+    // Marshal every microbatch's token ids once; embed (fwd+bwd) and
+    // head workers index this shared pool instead of re-converting.
+    let ids = SharedLiterals::build(batches)?;
+
+    let sinks: Vec<Mutex<OrderedSink>> =
+        grad_bufs.iter_mut().map(|gb| Mutex::new(OrderedSink::new(gb))).collect();
+
+    // Forward link p: position p → p+1 (0 = embed, 1..=l = slots, head last).
+    let mut ftx: Vec<Option<SyncSender<FwdMsg>>> = Vec::with_capacity(l + 1);
+    let mut frx: Vec<Option<Receiver<FwdMsg>>> = Vec::with_capacity(l + 1);
+    // Backward link p: position p+1 → p (unbounded; see module docs).
+    let mut btx: Vec<Option<Sender<BwdMsg>>> = Vec::with_capacity(l + 1);
+    let mut brx: Vec<Option<Receiver<BwdMsg>>> = Vec::with_capacity(l + 1);
+    for _ in 0..=l {
+        let (t, r) = sync_channel(FWD_CHANNEL_CAP);
+        ftx.push(Some(t));
+        frx.push(Some(r));
+        let (t, r) = channel();
+        btx.push(Some(t));
+        brx.push(Some(r));
+    }
+    let (aux_tx, aux_rx) = channel::<HeadGrads>();
+
+    let losses = std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(l + 1);
+
+        // --- embed worker (position 0) ---
+        {
+            let fwd_tx = ftx[0].take().expect("embed fwd link");
+            let bwd_rx = brx[0].take().expect("embed bwd link");
+            let (ids, sinks) = (&ids, &sinks);
+            workers.push(scope.spawn(move || {
+                embed_worker(runtime, lits, ids, m, fwd_tx, bwd_rx, aux_rx, sinks)
+            }));
+        }
+
+        // --- body slot workers (positions 1..=l) ---
+        for p in 1..=l {
+            let fwd_rx = frx[p - 1].take().expect("slot fwd in");
+            let fwd_tx = ftx[p].take().expect("slot fwd out");
+            let bwd_rx = brx[p].take().expect("slot bwd in");
+            let bwd_tx = btx[p - 1].take().expect("slot bwd out");
+            let sinks = &sinks;
+            workers.push(scope.spawn(move || {
+                slot_worker(
+                    runtime, lits, l, use_swaps, p - 1, m, fwd_rx, fwd_tx, bwd_rx, bwd_tx, sinks,
+                )
+            }));
+        }
+
+        // --- head (runs on the coordinating thread) ---
+        let fwd_rx = frx[l].take().expect("head fwd in");
+        let bwd_tx = btx[l].take().expect("head bwd out");
+        let head_res = head_worker(runtime, lits, &ids, m, fwd_rx, bwd_tx, aux_tx);
+
+        let mut errs: Vec<anyhow::Error> = Vec::new();
+        for w in workers {
+            match w.join() {
+                Err(_) => errs.push(anyhow!("pipeline worker panicked")),
+                Ok(Err(e)) => errs.push(e),
+                Ok(Ok(())) => {}
+            }
+        }
+        match head_res {
+            Ok(losses) if errs.is_empty() => Ok(losses),
+            Ok(_) => Err(pick_root_cause(errs)),
+            Err(e) => {
+                errs.push(e);
+                Err(pick_root_cause(errs))
+            }
+        }
+    })?;
+
+    // Every stage must have accumulated every microbatch exactly once.
+    for (i, sink) in sinks.iter().enumerate() {
+        let sink = sink.lock().expect("grad sink lock");
+        if sink.next != m || !sink.pending.is_empty() {
+            return Err(anyhow!(
+                "stage {i} accumulated {}/{m} microbatch gradients",
+                sink.next
+            ));
+        }
+    }
+    Ok(losses)
+}
+
+/// Prefer the first error that is not a mere closed-link symptom.
+fn pick_root_cause(mut errs: Vec<anyhow::Error>) -> anyhow::Error {
+    let i = errs
+        .iter()
+        .position(|e| !e.to_string().contains(LINK_CLOSED))
+        .unwrap_or(0);
+    errs.swap_remove(i)
+}
+
+/// Position 0: `embed_fwd` for every microbatch (pipeline fill), then
+/// join each returning `∂L/∂h0` with the head's stage-0 pieces and run
+/// `embed_bwd` (pipeline drain).
+fn embed_worker(
+    runtime: &Runtime,
+    lits: &LiteralCache,
+    ids: &SharedLiterals,
+    m: usize,
+    fwd_tx: SyncSender<FwdMsg>,
+    bwd_rx: Receiver<BwdMsg>,
+    aux_rx: Receiver<HeadGrads>,
+    sinks: &[Mutex<OrderedSink>],
+) -> Result<()> {
+    let embed_fwd = runtime.executable("embed_fwd")?;
+    let embed_bwd = runtime.executable("embed_bwd")?;
+    let e = &lits.stage(0)[0];
+    for mb in 0..m {
+        let h0 = embed_fwd
+            .run_literals(&[e, &ids[mb]])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+        fwd_tx.send(FwdMsg { mb, h: h0 }).map_err(|_| link_closed("embed→S1"))?;
+    }
+    let mut aux: BTreeMap<usize, (HostTensor, HostTensor)> = BTreeMap::new();
+    for _ in 0..m {
+        let BwdMsg { mb, gh } = bwd_rx.recv().map_err(|_| link_closed("S1→embed"))?;
+        while !aux.contains_key(&mb) {
+            let g = aux_rx.recv().map_err(|_| link_closed("head→embed"))?;
+            aux.insert(g.mb, (g.gd, g.gnw));
+        }
+        let (gd, gnw) = aux.remove(&mb).expect("aux joined above");
+        let gh_lit = gh.to_literal()?;
+        let ge = embed_bwd
+            .run_literals(&[e, &ids[mb], &gh_lit])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
+        sinks[0].lock().expect("grad sink lock").deposit(mb, &[ge, gd, gnw]);
+    }
+    Ok(())
+}
+
+/// Positions 1..=L: forward all microbatches through this slot's stage
+/// (which stage depends on the microbatch's route under CheckFree+
+/// swaps), then drain the backward passes, depositing each stage
+/// gradient into that stage's ordered sink.
+#[allow(clippy::too_many_arguments)]
+fn slot_worker(
+    runtime: &Runtime,
+    lits: &LiteralCache,
+    body_stages: usize,
+    use_swaps: bool,
+    slot: usize,
+    m: usize,
+    fwd_rx: Receiver<FwdMsg>,
+    fwd_tx: SyncSender<FwdMsg>,
+    bwd_rx: Receiver<BwdMsg>,
+    bwd_tx: Sender<BwdMsg>,
+    sinks: &[Mutex<OrderedSink>],
+) -> Result<()> {
+    let body_fwd = runtime.executable("body_fwd")?;
+    let body_bwd = runtime.executable("body_bwd")?;
+    // Activation INTO this slot, per microbatch, kept as the already-
+    // marshalled literal: the backward pass reuses it (the distributed
+    // equivalent of the seed's `hs` stash).
+    let mut stash: Vec<Option<xla::Literal>> = (0..m).map(|_| None).collect();
+    for _ in 0..m {
+        let FwdMsg { mb, h } = fwd_rx.recv().map_err(|_| link_closed("fwd into slot"))?;
+        let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+        let h_lit = h.to_literal()?;
+        let h_out = {
+            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+            args.push(&h_lit);
+            body_fwd
+                .run_literals(&args)?
+                .pop()
+                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+        };
+        stash[mb] = Some(h_lit);
+        fwd_tx.send(FwdMsg { mb, h: h_out }).map_err(|_| link_closed("fwd out of slot"))?;
+    }
+    // Backward drain; `scratch` reuses the gradient read buffers across
+    // microbatches (no per-call allocation after the first).
+    let mut scratch: Vec<HostTensor> = Vec::new();
+    for _ in 0..m {
+        let BwdMsg { mb, gh } = bwd_rx.recv().map_err(|_| link_closed("bwd into slot"))?;
+        let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+        let h_lit = stash[mb]
+            .take()
+            .ok_or_else(|| anyhow!("no stashed activation for microbatch {mb}"))?;
+        let gh_lit = gh.to_literal()?;
+        {
+            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+            args.push(&h_lit);
+            args.push(&gh_lit);
+            body_bwd.run_literals_into(&args, &mut scratch)?;
+        }
+        if scratch.len() < 2 {
+            return Err(anyhow!("body_bwd returned {} outputs", scratch.len()));
+        }
+        // scratch = [gh_out, gparams…]; gh_out moves downstream, the
+        // parameter gradients accumulate here.
+        let gh_out = std::mem::take(&mut scratch[0]);
+        sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch[1..]);
+        bwd_tx.send(BwdMsg { mb, gh: gh_out }).map_err(|_| link_closed("bwd out of slot"))?;
+    }
+    Ok(())
+}
+
+/// Final position: `head_bwd` per microbatch as activations arrive —
+/// loss + `∂L/∂h` (sent back down the pipe) + stage-0 pieces (sent to
+/// the embed worker).
+fn head_worker(
+    runtime: &Runtime,
+    lits: &LiteralCache,
+    ids: &SharedLiterals,
+    m: usize,
+    fwd_rx: Receiver<FwdMsg>,
+    bwd_tx: Sender<BwdMsg>,
+    aux_tx: Sender<HeadGrads>,
+) -> Result<Vec<f32>> {
+    let head_bwd = runtime.executable("head_bwd")?;
+    let st0 = lits.stage(0);
+    let (d, nw) = (&st0[1], &st0[2]);
+    let mut losses = vec![0.0f32; m];
+    for _ in 0..m {
+        let FwdMsg { mb, h } = fwd_rx.recv().map_err(|_| link_closed("SL→head"))?;
+        let h_lit = h.to_literal()?;
+        let mut outs = head_bwd.run_literals(&[d, nw, &h_lit, &ids[mb]])?;
+        if outs.len() != 4 {
+            return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
+        }
+        let gnw = outs.pop().expect("len checked");
+        let gd = outs.pop().expect("len checked");
+        let gh = outs.pop().expect("len checked");
+        losses[mb] = outs.pop().expect("len checked").scalar_f32()?;
+        aux_tx.send(HeadGrads { mb, gd, gnw }).map_err(|_| link_closed("head→embed"))?;
+        bwd_tx.send(BwdMsg { mb, gh }).map_err(|_| link_closed("head→SL"))?;
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads(vals: &[f32]) -> Vec<HostTensor> {
+        vec![HostTensor::from_f32(vec![vals.len()], vals)]
+    }
+
+    #[test]
+    fn ordered_sink_restores_microbatch_order() {
+        // Values chosen so f32 summation order changes the result:
+        // (1e8 + 1) - 1e8 = 0.0 but (1e8 - 1e8) + 1 = 1.0.
+        let g0 = grads(&[1e8]);
+        let g1 = grads(&[1.0]);
+        let g2 = grads(&[-1e8]);
+
+        let mut seq = GradBuffer::new(&[1]);
+        seq.accumulate(&g0);
+        seq.accumulate(&g1);
+        seq.accumulate(&g2);
+        let want = seq.as_slices()[0][0];
+
+        // Deposit out of order: 2, 0, 1 — the sink must still accumulate
+        // as 0, 1, 2.
+        let mut gb = GradBuffer::new(&[1]);
+        let mut sink = OrderedSink::new(&mut gb);
+        sink.deposit(2, &g2);
+        sink.deposit(0, &g0);
+        sink.deposit(1, &g1);
+        assert_eq!(sink.next, 3);
+        assert!(sink.pending.is_empty());
+        assert_eq!(gb.as_slices()[0][0].to_bits(), want.to_bits());
+        assert_eq!(gb.microbatches(), 3);
+    }
+
+    #[test]
+    fn ordered_sink_in_order_fast_path() {
+        let mut gb = GradBuffer::new(&[2]);
+        let mut sink = OrderedSink::new(&mut gb);
+        sink.deposit(0, &grads(&[1.0, 2.0]));
+        assert!(sink.pending.is_empty(), "in-order deposit must not copy");
+        sink.deposit(1, &grads(&[3.0, 4.0]));
+        assert_eq!(sink.next, 2);
+        assert_eq!(gb.as_slices()[0], &[4.0, 6.0]);
+    }
+
+    #[test]
+    fn ordered_sink_buffers_gaps() {
+        let mut gb = GradBuffer::new(&[1]);
+        let mut sink = OrderedSink::new(&mut gb);
+        sink.deposit(1, &grads(&[10.0]));
+        sink.deposit(3, &grads(&[30.0]));
+        assert_eq!(sink.next, 0);
+        assert_eq!(sink.pending.len(), 2);
+        sink.deposit(0, &grads(&[1.0]));
+        assert_eq!(sink.next, 2, "0 then pending 1 must drain");
+        sink.deposit(2, &grads(&[20.0]));
+        assert_eq!(sink.next, 4);
+        assert!(sink.pending.is_empty());
+        assert_eq!(gb.microbatches(), 4);
+    }
+
+    #[test]
+    fn pick_root_cause_skips_link_noise() {
+        let errs = vec![
+            link_closed("a→b"),
+            anyhow!("real failure"),
+            link_closed("b→c"),
+        ];
+        assert_eq!(pick_root_cause(errs).to_string(), "real failure");
+        let only_links = vec![link_closed("a→b"), link_closed("b→c")];
+        assert!(pick_root_cause(only_links).to_string().contains(LINK_CLOSED));
+    }
+}

@@ -2,12 +2,16 @@
 //!
 //! * [`schedule`] — microbatch routes, incl. the CheckFree+ out-of-order
 //!   swap schedule (paper §4.3);
+//! * [`executor`] — the concurrent fill/drain pipeline executor (one
+//!   worker thread per pipeline position, bounded channels between
+//!   stages, deterministic microbatch-ordered gradient accumulation);
 //! * [`engine`] — the pipeline-parallel training engine driving the PJRT
 //!   executables (embed/body/head fwd+bwd, gradient accumulation, Adam);
 //! * [`trainer`] — the leader loop tying engine + failure injector +
 //!   recovery strategy + metrics together.
 
 pub mod engine;
+pub mod executor;
 pub mod schedule;
 pub mod trainer;
 

@@ -42,6 +42,33 @@ pub fn apply_swap(r: &mut Route) {
     }
 }
 
+/// Which body stage occupies pipeline slot `slot` (0-based) for
+/// microbatch `mb` — `route(l, mb, swaps)[slot]` without building the
+/// route vector. The pipeline executor's slot workers call this once per
+/// microbatch, so it must be allocation-free.
+pub fn slot_stage(body_stages: usize, mb: usize, slot: usize, swaps: bool) -> usize {
+    let l = body_stages;
+    debug_assert!(slot < l, "slot {slot} out of range for {l} body stages");
+    if !(swaps && mb % 2 == 1) {
+        return slot + 1;
+    }
+    // Mirror `apply_swap`: front transposition for l ≥ 2, back
+    // transposition only when disjoint (l ≥ 4).
+    if l >= 2 && slot == 0 {
+        return 2;
+    }
+    if l >= 2 && slot == 1 {
+        return 1;
+    }
+    if l >= 4 && slot == l - 2 {
+        return l;
+    }
+    if l >= 4 && slot == l - 1 {
+        return l - 1;
+    }
+    slot + 1
+}
+
 /// The swap partner of a boundary stage (who learns to mimic whom):
 /// `S1 ↔ S2`, `SL ↔ S(L-1)`. Intermediate stages have no partner.
 pub fn swap_partner(stage: usize, body_stages: usize) -> Option<usize> {
@@ -127,6 +154,59 @@ mod tests {
     fn intermediate_stages_have_no_partner() {
         assert_eq!(swap_partner(3, 6), None);
         assert_eq!(swap_partner(4, 6), None);
+    }
+
+    #[test]
+    fn slot_stage_matches_route_exhaustively() {
+        for l in 1..10 {
+            for mb in 0..6 {
+                for swaps in [false, true] {
+                    let r = route(l, mb, swaps);
+                    for slot in 0..l {
+                        assert_eq!(
+                            slot_stage(l, mb, slot, swaps),
+                            r[slot],
+                            "l={l} mb={mb} slot={slot} swaps={swaps}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slot_stage_swapped_boundaries() {
+        // paper §4.3 odd-microbatch route: S2 stands in the S1 slot and
+        // S(L-1) in the SL slot.
+        assert_eq!(slot_stage(6, 1, 0, true), 2);
+        assert_eq!(slot_stage(6, 1, 1, true), 1);
+        assert_eq!(slot_stage(6, 1, 4, true), 6);
+        assert_eq!(slot_stage(6, 1, 5, true), 5);
+        // intermediates untouched
+        assert_eq!(slot_stage(6, 1, 2, true), 3);
+        assert_eq!(slot_stage(6, 1, 3, true), 4);
+    }
+
+    #[test]
+    fn slot_stage_even_microbatches_identity() {
+        for slot in 0..6 {
+            assert_eq!(slot_stage(6, 2, slot, true), slot + 1);
+            assert_eq!(slot_stage(6, 3, slot, false), slot + 1);
+        }
+    }
+
+    #[test]
+    fn property_slot_stage_agrees_with_route() {
+        crate::util::propcheck::forall(
+            "slot-stage-route-agreement",
+            300,
+            321,
+            |r, size| (1 + r.below(size.max(1)), r.below(32), r.uniform() < 0.5),
+            |&(l, mb, swaps)| {
+                let r = route(l, mb, swaps);
+                (0..l).all(|slot| slot_stage(l, mb, slot, swaps) == r[slot])
+            },
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! checkfree train    [--model M] [--strategy S] [--iterations N]
 //!                    [--failure-rate R] [--microbatches K] [--seed X]
 //!                    [--checkpoint-every C] [--reinit KIND]
+//!                    [--exec-mode sequential|pipelined]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -133,6 +134,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(t) = args.parse_opt::<f32>("target-loss")? {
         cfg.target_loss = Some(t);
+    }
+    if let Some(m) = args.parse_opt::<checkfree::config::ExecMode>("exec-mode")? {
+        cfg.exec_mode = m;
     }
     cfg.validate()?;
 

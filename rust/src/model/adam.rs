@@ -47,6 +47,11 @@ impl Adam {
 
     /// One Adam update over all tensors. `params[i]` and `grads[i]` must
     /// have the length the optimizer was built with.
+    ///
+    /// Large tensors are updated by parallel chunks
+    /// ([`crate::util::par`]); the math is purely elementwise, so the
+    /// result is bitwise-identical to the sequential loop regardless of
+    /// thread count.
     pub fn update(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]], lr: f32) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.len(), self.m.len());
@@ -64,14 +69,16 @@ impl Adam {
         {
             assert_eq!(p.len(), m.len());
             assert_eq!(g.len(), m.len());
-            for i in 0..p.len() {
-                let gi = g[i];
-                m[i] = b1 * m[i] + (1.0 - b1) * gi;
-                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
-                let mhat = m[i] / bc1;
-                let vhat = v[i] / bc2;
-                p[i] -= lr * mhat / (vhat.sqrt() + eps);
-            }
+            crate::util::par::par_zip4(&mut p[..], &g[..], &mut m[..], &mut v[..], |p, g, m, v| {
+                for i in 0..p.len() {
+                    let gi = g[i];
+                    m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                    v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    p[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            });
         }
     }
 }
@@ -143,6 +150,26 @@ mod tests {
         adam.update(&mut [&mut q], &[&[5.0, -5.0]], 0.01);
         assert!((q[0] + 0.01).abs() < 1e-6);
         assert!((q[1] - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_path_matches_sequential_reference_bitwise() {
+        // len > PAR_MIN_LEN forces chunked multi-threaded execution;
+        // elementwise math must stay bitwise-identical to this loop.
+        let n = crate::util::par::PAR_MIN_LEN + 33;
+        let g: Vec<f32> = (0..n).map(|i| ((i % 1000) as f32 - 500.0) / 250.0).collect();
+        let mut adam = Adam::new(&[n]);
+        let mut p = vec![1.0f32; n];
+        adam.update(&mut [&mut p], &[&g], 0.01);
+
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let (bc1, bc2) = (1.0 - b1, 1.0 - b2);
+        for (i, &gi) in g.iter().enumerate() {
+            let m = (1.0 - b1) * gi;
+            let v = (1.0 - b2) * gi * gi;
+            let want = 1.0 - 0.01 * (m / bc1) / ((v / bc2).sqrt() + eps);
+            assert_eq!(p[i].to_bits(), want.to_bits(), "element {i}");
+        }
     }
 
     #[test]

@@ -36,13 +36,38 @@ impl GradBuffer {
     }
 
     /// Add one microbatch's gradients (manifest order).
+    ///
+    /// Large tensors accumulate by parallel chunks — elementwise adds,
+    /// so bitwise-identical to the sequential loop. Note the *order in
+    /// which microbatches are accumulated* does affect f32 rounding;
+    /// the pipeline executor's ordered sink guarantees microbatch order
+    /// even when backward passes complete out of order.
     pub fn accumulate(&mut self, grads: &[HostTensor]) {
+        self.accumulate_impl(grads, true);
+    }
+
+    /// Sequential accumulation for callers that already run on executor
+    /// worker threads (one level of parallelism at a time — nesting
+    /// chunk-threads inside L+1 concurrent workers oversubscribes the
+    /// cores). Bitwise-identical to [`Self::accumulate`].
+    pub(crate) fn accumulate_seq(&mut self, grads: &[HostTensor]) {
+        self.accumulate_impl(grads, false);
+    }
+
+    fn accumulate_impl(&mut self, grads: &[HostTensor], parallel: bool) {
         assert_eq!(grads.len(), self.bufs.len(), "gradient arity mismatch");
+        let add = |b: &mut [f32], g: &[f32]| {
+            for (b, &x) in b.iter_mut().zip(g) {
+                *b += x;
+            }
+        };
         for (buf, g) in self.bufs.iter_mut().zip(grads) {
             let gs = g.as_f32();
             assert_eq!(buf.len(), gs.len());
-            for (b, &x) in buf.iter_mut().zip(gs) {
-                *b += x;
+            if parallel {
+                crate::util::par::par_zip2(buf, gs, add);
+            } else {
+                add(buf, gs);
             }
         }
         self.count += 1;
@@ -87,6 +112,11 @@ impl GradBuffer {
 }
 
 /// One pipeline stage: parameters + Adam + CheckFree's ω scalar.
+///
+/// `params` stays publicly readable, but every *write* must go through
+/// the mutating methods (`apply_grads`, `wipe`, `restore`,
+/// `copy_params_from`, `set_params`, `with_params_mut`) so the version
+/// counter advances and the runtime literal cache re-marshals the stage.
 #[derive(Debug)]
 pub struct Stage {
     pub kind: StageKind,
@@ -98,6 +128,9 @@ pub struct Stage {
     /// ω_i = ‖∇W_{s,i}‖² from the most recent optimizer step — the single
     /// scalar each stage stores/sends for CheckFree (paper Algorithm 1).
     pub omega: f64,
+    /// Bumped on every parameter rewrite; the literal cache's staleness
+    /// signal ([`crate::runtime::LiteralCache`]).
+    version: u64,
 }
 
 /// Deterministically initialize parameters from a manifest layout.
@@ -120,7 +153,15 @@ impl Stage {
         let layout = &manifest.param_layout.embed_stage;
         let params = init_params(layout, rng);
         let sizes: Vec<usize> = layout.iter().map(|t| t.elements).collect();
-        Self { kind: StageKind::Embed, index: 0, params, adam: Adam::new(&sizes), lr, omega: 0.0 }
+        Self {
+            kind: StageKind::Embed,
+            index: 0,
+            params,
+            adam: Adam::new(&sizes),
+            lr,
+            omega: 0.0,
+            version: 0,
+        }
     }
 
     pub fn new_body(manifest: &Manifest, index: usize, lr: f32, rng: &mut Rng) -> Self {
@@ -128,7 +169,15 @@ impl Stage {
         let layout = &manifest.param_layout.body_stage;
         let params = init_params(layout, rng);
         let sizes: Vec<usize> = layout.iter().map(|t| t.elements).collect();
-        Self { kind: StageKind::Body, index, params, adam: Adam::new(&sizes), lr, omega: 0.0 }
+        Self {
+            kind: StageKind::Body,
+            index,
+            params,
+            adam: Adam::new(&sizes),
+            lr,
+            omega: 0.0,
+            version: 0,
+        }
     }
 
     pub fn tensor_sizes(&self) -> Vec<usize> {
@@ -143,6 +192,38 @@ impl Stage {
         self.total_elements() as u64 * 4
     }
 
+    /// The current parameter version (see [`crate::runtime::LiteralCache`]).
+    pub fn params_version(&self) -> u64 {
+        self.version
+    }
+
+    fn bump_version(&mut self) {
+        self.version = self.version.wrapping_add(1);
+    }
+
+    /// In-place overwrite of the parameters from `src`, reusing the
+    /// existing buffers when layouts match (the recovery fast path —
+    /// avoids cloning whole stage parameter vectors).
+    pub fn copy_params_from(&mut self, src: &[HostTensor]) {
+        copy_tensors_into(&mut self.params, src);
+        self.bump_version();
+    }
+
+    /// Replace the parameters wholesale (e.g. a random reinit).
+    pub fn set_params(&mut self, params: Vec<HostTensor>) {
+        self.params = params;
+        self.bump_version();
+    }
+
+    /// Mutate the parameters through a closure; the version is bumped
+    /// afterwards so the literal cache invalidates. Use for in-place
+    /// math that reads other stages (e.g. weighted averaging).
+    pub fn with_params_mut<R>(&mut self, f: impl FnOnce(&mut Vec<HostTensor>) -> R) -> R {
+        let r = f(&mut self.params);
+        self.bump_version();
+        r
+    }
+
     /// Apply one optimizer step from an accumulated gradient buffer;
     /// records ω = ‖∇W‖² (of the mean gradient) and clears the buffer.
     pub fn apply_grads(&mut self, grads: &mut GradBuffer) {
@@ -153,6 +234,7 @@ impl Stage {
             self.params.iter_mut().map(|p| p.as_f32_mut()).collect();
         self.adam.update(&mut params, &slices, self.lr);
         grads.clear();
+        self.bump_version();
     }
 
     /// Full deep copy (checkpoint baseline, redundant-computation shadow).
@@ -169,11 +251,12 @@ impl Stage {
 
     pub fn restore(&mut self, snap: &StageSnapshot) {
         assert_eq!(self.kind, snap.kind);
-        self.params = snap.params.clone();
+        copy_tensors_into(&mut self.params, &snap.params);
         self.adam = snap.adam.clone();
         self.lr = snap.lr;
         self.omega = snap.omega;
         self.index = snap.index;
+        self.bump_version();
     }
 
     /// Simulate total loss of the stage (paper §3: `W_{s,i} = 0`).
@@ -184,6 +267,38 @@ impl Stage {
         }
         self.adam.reset();
         self.omega = 0.0;
+        self.bump_version();
+    }
+}
+
+/// Overwrite `dst` from `src`, reusing `dst`'s allocations when the
+/// layouts line up (they always do between same-kind stages); falls back
+/// to cloning on mismatch.
+pub fn copy_tensors_into(dst: &mut Vec<HostTensor>, src: &[HostTensor]) {
+    let layouts_match = dst.len() == src.len()
+        && dst
+            .iter()
+            .zip(src)
+            .all(|(d, s)| d.shape() == s.shape() && d.dtype() == s.dtype());
+    if layouts_match {
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.copy_from(s);
+        }
+    } else {
+        *dst = src.to_vec();
+    }
+}
+
+/// Disjoint mutable access to two stages of one pipeline (recovery reads
+/// a live source stage while rewriting the lost one in place).
+pub fn two_stages_mut(stages: &mut [Stage], a: usize, b: usize) -> (&mut Stage, &mut Stage) {
+    assert_ne!(a, b, "two_stages_mut needs distinct indices");
+    if a < b {
+        let (left, right) = stages.split_at_mut(b);
+        (&mut left[a], &mut right[0])
+    } else {
+        let (left, right) = stages.split_at_mut(a);
+        (&mut right[0], &mut left[b])
     }
 }
 
@@ -295,6 +410,86 @@ mod tests {
         s.restore(&snap);
         assert_eq!(s.params, snap.params);
         assert_eq!(s.adam.step_count(), 0);
+    }
+
+    #[test]
+    fn every_param_write_bumps_version() {
+        let m = manifest();
+        let mut s = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(4));
+        let mut last = s.params_version();
+        let mut expect_bumped = |s: &Stage, what: &str| {
+            assert_ne!(s.params_version(), last, "{what} did not bump the version");
+            last = s.params_version();
+        };
+
+        let mut gb = GradBuffer::new(&s.tensor_sizes());
+        let fake: Vec<HostTensor> = s
+            .params
+            .iter()
+            .map(|p| HostTensor::from_f32_vec(p.shape().to_vec(), vec![0.25; p.len()]))
+            .collect();
+        gb.accumulate(&fake);
+        s.apply_grads(&mut gb);
+        expect_bumped(&s, "apply_grads");
+
+        s.wipe();
+        expect_bumped(&s, "wipe");
+
+        let snap = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(5)).snapshot();
+        s.restore(&snap);
+        expect_bumped(&s, "restore");
+
+        let other = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(6));
+        s.copy_params_from(&other.params);
+        expect_bumped(&s, "copy_params_from");
+        assert_eq!(s.params, other.params);
+
+        s.set_params(other.params.clone());
+        expect_bumped(&s, "set_params");
+
+        s.with_params_mut(|p| p[0].as_f32_mut()[0] = 9.0);
+        expect_bumped(&s, "with_params_mut");
+    }
+
+    #[test]
+    fn copy_params_from_reuses_buffers() {
+        let m = manifest();
+        let mut dst = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(7));
+        let src = Stage::new_body(&m, 1, 1e-3, &mut Rng::new(8));
+        let ptr = dst.params[0].as_f32().as_ptr();
+        dst.copy_params_from(&src.params);
+        assert_eq!(dst.params, src.params);
+        assert_eq!(dst.params[0].as_f32().as_ptr(), ptr, "buffer was reallocated");
+    }
+
+    #[test]
+    fn copy_tensors_into_falls_back_to_clone_on_mismatch() {
+        let src = vec![HostTensor::from_f32(vec![3], &[1., 2., 3.])];
+        let mut dst = vec![HostTensor::zeros_f32(vec![2]), HostTensor::zeros_f32(vec![2])];
+        copy_tensors_into(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn two_stages_mut_returns_disjoint_refs_in_order() {
+        let m = manifest();
+        let mut stages = vec![
+            Stage::new_embed(&m, 1e-3, &mut Rng::new(0)),
+            Stage::new_body(&m, 1, 1e-3, &mut Rng::new(1)),
+            Stage::new_body(&m, 2, 1e-3, &mut Rng::new(2)),
+        ];
+        let (a, b) = two_stages_mut(&mut stages, 1, 2);
+        assert_eq!((a.index, b.index), (1, 2));
+        let (a, b) = two_stages_mut(&mut stages, 2, 1);
+        assert_eq!((a.index, b.index), (2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct indices")]
+    fn two_stages_mut_rejects_same_index() {
+        let m = manifest();
+        let mut stages = vec![Stage::new_embed(&m, 1e-3, &mut Rng::new(0))];
+        let _ = two_stages_mut(&mut stages, 0, 0);
     }
 
     #[test]

@@ -23,35 +23,55 @@
 use crate::config::ReinitKind;
 use crate::coordinator::{schedule, PipelineEngine};
 use crate::metrics::EventKind;
-use crate::model::{init_params, StageKind};
+use crate::model::{copy_tensors_into, init_params, two_stages_mut, StageKind};
 use crate::netsim::Network;
 use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy};
 use crate::rng::Rng;
 use crate::runtime::HostTensor;
+use crate::util::par;
 use crate::{anyhow, Result};
 
-/// Element-wise `(wa·A + wb·B)/(wa+wb)`; uniform average when both
-/// weights vanish (e.g. a failure before the first optimizer step).
-pub fn weighted_average(a: &[HostTensor], b: &[HostTensor], wa: f64, wb: f64) -> Vec<HostTensor> {
-    assert_eq!(a.len(), b.len());
-    let (ca, cb) = if wa + wb > 0.0 {
+/// The convex coefficients of Algorithm 1 line 3; uniform average when
+/// both weights vanish (e.g. a failure before the first optimizer step).
+fn average_coeffs(wa: f64, wb: f64) -> (f32, f32) {
+    if wa + wb > 0.0 {
         ((wa / (wa + wb)) as f32, (wb / (wa + wb)) as f32)
     } else {
         (0.5, 0.5)
-    };
-    a.iter()
-        .zip(b)
-        .map(|(ta, tb)| {
-            assert_eq!(ta.shape(), tb.shape());
-            let data: Vec<f32> = ta
-                .as_f32()
-                .iter()
-                .zip(tb.as_f32())
-                .map(|(&x, &y)| ca * x + cb * y)
-                .collect();
-            HostTensor::from_f32_vec(ta.shape().to_vec(), data)
-        })
-        .collect()
+    }
+}
+
+/// Element-wise `dst = (wa·A + wb·B)/(wa+wb)` written into `dst`'s
+/// existing buffers (the recovery hot path overwrites the wiped stage's
+/// own allocation instead of materializing a fresh parameter vector).
+/// Large tensors average by parallel chunks ([`crate::util::par`]).
+pub fn weighted_average_into(
+    dst: &mut [HostTensor],
+    a: &[HostTensor],
+    b: &[HostTensor],
+    wa: f64,
+    wb: f64,
+) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(dst.len(), a.len());
+    let (ca, cb) = average_coeffs(wa, wb);
+    for ((td, ta), tb) in dst.iter_mut().zip(a).zip(b) {
+        assert_eq!(ta.shape(), tb.shape());
+        assert_eq!(td.shape(), ta.shape());
+        par::par_zip3(td.as_f32_mut(), ta.as_f32(), tb.as_f32(), |d, x, y| {
+            for i in 0..d.len() {
+                d[i] = ca * x[i] + cb * y[i];
+            }
+        });
+    }
+}
+
+/// Allocating convenience wrapper around [`weighted_average_into`].
+pub fn weighted_average(a: &[HostTensor], b: &[HostTensor], wa: f64, wb: f64) -> Vec<HostTensor> {
+    let mut dst: Vec<HostTensor> =
+        a.iter().map(|t| HostTensor::zeros_f32(t.shape().to_vec())).collect();
+    weighted_average_into(&mut dst, a, b, wa, wb);
+    dst
 }
 
 /// How a body stage was rebuilt (metrics detail).
@@ -68,28 +88,34 @@ fn reinit_stage(
     }
     debug_assert_eq!(engine.stages[stage].kind, StageKind::Body);
     let stage_bytes = engine.body_stage_bytes();
+    // All writes below go through the version-bumping `Stage` methods so
+    // the runtime literal cache re-marshals the rebuilt stage, and they
+    // overwrite the lost stage's existing buffers in place (the source
+    // stages stay live, so wholesale clones are pure churn).
     let (desc, bytes) = match reinit {
         ReinitKind::Random => {
             let layout = engine.runtime.manifest.param_layout.body_stage.clone();
-            engine.stages[stage].params = init_params(&layout, rng);
+            engine.stages[stage].set_params(init_params(&layout, rng));
             ("random reinit".to_string(), 0)
         }
         ReinitKind::Copy => {
-            // paper Fig 2 "copy": clone the previous stage (next if S1).
+            // paper Fig 2 "copy": mirror the previous stage (next if S1).
             let src = if stage > 1 { stage - 1 } else { stage + 1 };
-            engine.stages[stage].params = engine.stages[src].params.clone();
+            let (dst, src_stage) = two_stages_mut(&mut engine.stages, stage, src);
+            dst.copy_params_from(&src_stage.params);
             (format!("copy of S{src}"), stage_bytes)
         }
         ReinitKind::WeightedAverage => {
             if stage > 1 && stage < l {
                 let (wa, wb) = (engine.stages[stage - 1].omega, engine.stages[stage + 1].omega);
-                let avg = weighted_average(
-                    &engine.stages[stage - 1].params,
-                    &engine.stages[stage + 1].params,
-                    wa,
-                    wb,
-                );
-                engine.stages[stage].params = avg;
+                // stage-1 | stage | stage+1 are disjoint slices of the
+                // stage vector: average the neighbours straight into the
+                // lost stage's buffers.
+                let (left, rest) = engine.stages.split_at_mut(stage);
+                let (mid, right) = rest.split_at_mut(1);
+                mid[0].with_params_mut(|p| {
+                    weighted_average_into(p, &left[stage - 1].params, &right[0].params, wa, wb)
+                });
                 (
                     format!(
                         "ω-weighted avg of S{} (ω={wa:.3e}) and S{} (ω={wb:.3e})",
@@ -104,7 +130,8 @@ fn reinit_stage(
                 if src == stage || src == 0 {
                     return Err(anyhow!("pipeline too short to recover stage {stage}"));
                 }
-                engine.stages[stage].params = engine.stages[src].params.clone();
+                let (dst, src_stage) = two_stages_mut(&mut engine.stages, stage, src);
+                dst.copy_params_from(&src_stage.params);
                 (format!("boundary copy of S{src}"), stage_bytes)
             }
         }
@@ -203,8 +230,13 @@ impl RecoveryStrategy for CheckFreePlusRecovery {
     ) -> Result<Option<MaintenanceCost>> {
         // Refresh the neighbour-held replica of E / E⁻¹. The send overlaps
         // with compute (it is tiny relative to activations), so it costs
-        // bytes but no pipeline stall.
-        self.embed_replica = Some(engine.stages[0].params.clone());
+        // bytes but no pipeline stall. The replica's buffers are reused
+        // across iterations — this runs after *every* iteration, so
+        // re-cloning the embed stage each time was steady-state churn.
+        match self.embed_replica.as_mut() {
+            Some(replica) => copy_tensors_into(replica, &engine.stages[0].params),
+            None => self.embed_replica = Some(engine.stages[0].params.clone()),
+        }
         Ok(Some(MaintenanceCost {
             kind: EventKind::CheckpointTaken,
             stall_s: 0.0,
@@ -220,12 +252,13 @@ impl RecoveryStrategy for CheckFreePlusRecovery {
     ) -> Result<RecoveryOutcome> {
         let l = engine.body_stages();
         if stage == 0 {
-            // Exact recovery from the neighbour-held replica.
+            // Exact recovery from the neighbour-held replica (copied in
+            // place — the replica stays with the neighbours).
             let replica = self
                 .embed_replica
-                .clone()
+                .as_ref()
                 .ok_or_else(|| anyhow!("embedding replica not yet initialized"))?;
-            engine.stages[0].params = replica;
+            engine.stages[0].copy_params_from(replica);
             engine.stages[0].adam.reset();
             let bytes = engine.embed_stage_bytes();
             return Ok(RecoveryOutcome {
@@ -239,11 +272,12 @@ impl RecoveryStrategy for CheckFreePlusRecovery {
         let stage_bytes = engine.body_stage_bytes();
         if let Some(partner) = schedule::swap_partner(stage, l) {
             // Swap-trained partner has learned this slot's behaviour:
-            // recover by copying it (paper §4.3).
-            engine.stages[stage].params = engine.stages[partner].params.clone();
-            engine.stages[stage].adam.reset();
-            engine.stages[stage].lr *= self.lr_boost;
-            engine.stages[stage].omega = 0.0;
+            // recover by copying it (paper §4.3), in place.
+            let (dst, src) = two_stages_mut(&mut engine.stages, stage, partner);
+            dst.copy_params_from(&src.params);
+            dst.adam.reset();
+            dst.lr *= self.lr_boost;
+            dst.omega = 0.0;
             Ok(RecoveryOutcome {
                 description: format!("copy of swap partner S{partner}"),
                 downtime_s: net.transfer_seconds(stage_bytes, partner, stage)?,
@@ -313,6 +347,33 @@ mod tests {
         let b = vec![ht(&[4.0])];
         let avg = weighted_average(&a, &b, 0.0, 0.0);
         assert_eq!(avg[0].as_f32(), &[3.0]);
+    }
+
+    #[test]
+    fn weighted_average_into_reuses_dst_buffers() {
+        let a = vec![ht(&[1.0, 2.0])];
+        let b = vec![ht(&[3.0, 6.0])];
+        let mut dst = vec![ht(&[0.0, 0.0])];
+        let ptr = dst[0].as_f32().as_ptr();
+        weighted_average_into(&mut dst, &a, &b, 1.0, 3.0);
+        assert_eq!(dst[0].as_f32(), &[2.5, 5.0]);
+        assert_eq!(dst[0].as_f32().as_ptr(), ptr, "dst was reallocated");
+    }
+
+    #[test]
+    fn weighted_average_into_matches_allocating_version_bitwise() {
+        let n = crate::util::par::PAR_MIN_LEN + 5; // exercise parallel chunks
+        let av: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let bv: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let a = vec![HostTensor::from_f32_vec(vec![n], av.clone())];
+        let b = vec![HostTensor::from_f32_vec(vec![n], bv.clone())];
+        let alloc = weighted_average(&a, &b, 0.3, 1.7);
+        let (ca, cb) = (0.3f64 / 2.0, 1.7f64 / 2.0);
+        let (ca, cb) = (ca as f32, cb as f32);
+        for (i, &got) in alloc[0].as_f32().iter().enumerate() {
+            let want = ca * av[i] + cb * bv[i];
+            assert_eq!(got.to_bits(), want.to_bits(), "element {i}");
+        }
     }
 
     #[test]
@@ -417,6 +478,66 @@ mod tests {
         let out = s.on_failure(&mut e, &net, 1).unwrap();
         assert!(out.description.contains("swap partner"));
         assert_eq!(e.stages[1].params, e.stages[2].params);
+    }
+
+    #[test]
+    fn recovery_bumps_stage_version_for_literal_cache() {
+        // Every recovery path rewrites parameters, so each must advance
+        // the stage's version — that is what invalidates the runtime
+        // literal cache before the next iteration/eval.
+        for reinit in [ReinitKind::Random, ReinitKind::Copy, ReinitKind::WeightedAverage] {
+            let mut e = engine();
+            e.train_iteration().unwrap();
+            let net = Network::round_robin(e.stages.len());
+            let mut s = CheckFreeRecovery::new(reinit, 1.1, 0);
+            let before = e.stages[1].params_version();
+            s.on_failure(&mut e, &net, 1).unwrap();
+            assert_ne!(
+                e.stages[1].params_version(),
+                before,
+                "{reinit:?} recovery did not bump the version"
+            );
+        }
+    }
+
+    #[test]
+    fn plus_recovery_bumps_versions_too() {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy: Strategy::CheckFreePlus,
+            microbatches_per_iter: 2,
+            seed: 6,
+            ..TrainConfig::default()
+        };
+        let mut e = PipelineEngine::from_config(&cfg).unwrap();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        e.train_iteration().unwrap();
+        s.after_iteration(&mut e, &net).unwrap();
+        // swap-partner copy path
+        let v1 = e.stages[1].params_version();
+        s.on_failure(&mut e, &net, 1).unwrap();
+        assert_ne!(e.stages[1].params_version(), v1);
+        // exact embed restore path
+        let v0 = e.stages[0].params_version();
+        s.on_failure(&mut e, &net, 0).unwrap();
+        assert_ne!(e.stages[0].params_version(), v0);
+    }
+
+    #[test]
+    fn recovered_engine_serves_fresh_literals() {
+        // End-to-end cache invalidation: recovery rewrites S1, the next
+        // eval must re-marshal exactly the rewritten stage.
+        let mut e = engine();
+        e.train_iteration().unwrap();
+        e.validate().unwrap(); // cache now fresh for all stages
+        let (_, misses_before) = e.literal_cache_stats();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreeRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        s.on_failure(&mut e, &net, 1).unwrap();
+        e.validate().unwrap();
+        let (_, misses_after) = e.literal_cache_stats();
+        assert_eq!(misses_after - misses_before, 1, "exactly S1 re-marshalled");
     }
 
     #[test]

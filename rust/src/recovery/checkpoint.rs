@@ -160,6 +160,25 @@ mod tests {
     }
 
     #[test]
+    fn rollback_bumps_every_stage_version() {
+        // Rollback rewrites all stages; each must advance its parameter
+        // version so the runtime literal cache re-marshals (a rollback
+        // that served stale literals would silently train on pre-failure
+        // weights).
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckpointRecovery::new(1);
+        e.train_iteration().unwrap();
+        s.after_iteration(&mut e, &net).unwrap();
+        e.train_iteration().unwrap();
+        let before: Vec<u64> = e.stages.iter().map(|st| st.params_version()).collect();
+        s.on_failure(&mut e, &net, 1).unwrap();
+        for (st, v) in e.stages.iter().zip(&before) {
+            assert_ne!(st.params_version(), *v, "stage {} not invalidated", st.index);
+        }
+    }
+
+    #[test]
     fn failure_before_first_checkpoint_errors() {
         let mut e = engine();
         let net = Network::round_robin(e.stages.len());

@@ -1,0 +1,173 @@
+//! Per-stage parameter-literal cache: marshal each stage's parameters
+//! into `xla::Literal`s once, and re-marshal only when the stage's
+//! version counter says the parameters actually changed.
+//!
+//! The seed engine rebuilt every stage's literals at the top of every
+//! `train_iteration` *and* re-marshalled raw tensors on every
+//! `eval_loss` call. With this cache the marshalling tax is paid exactly
+//! once per parameter rewrite: [`crate::model::Stage`] bumps its version
+//! on `apply_grads`, `wipe`, `restore`, and every recovery-path param
+//! write, and [`LiteralCache::refresh`] compares versions before doing
+//! any work. Validation and eval between optimizer steps therefore hit
+//! the cache, as does every microbatch of an iteration.
+//!
+//! The cache is read-shared across the pipeline executor's stage worker
+//! threads (all refreshes happen on the coordinator thread before the
+//! workers spawn).
+
+use crate::runtime::HostTensor;
+use crate::Result;
+
+struct StageEntry {
+    /// Last [`crate::model::Stage::params_version`] marshalled; the
+    /// sentinel `u64::MAX` marks a slot that has never been filled.
+    version: u64,
+    lits: Vec<xla::Literal>,
+}
+
+/// Versioned per-stage literal store. Index 0 = embed stage, matching
+/// `PipelineEngine::stages`.
+#[derive(Default)]
+pub struct LiteralCache {
+    stages: Vec<StageEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+// SAFETY: `xla::Literal` is an immutable host-side buffer once built (the
+// cache hands out `&Literal` only for PJRT execute arguments, which read
+// it); the `xla` crate lacks the auto traits only because it stores raw
+// pointers. All mutation (`refresh`) takes `&mut self`, so the usual
+// borrow rules already serialize writers against the executor's readers.
+unsafe impl Send for LiteralCache {}
+unsafe impl Sync for LiteralCache {}
+
+impl LiteralCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure stage `idx` holds literals for `params` at `version`,
+    /// rebuilding only on version change (or first touch).
+    pub fn refresh(&mut self, idx: usize, version: u64, params: &[HostTensor]) -> Result<()> {
+        while self.stages.len() <= idx {
+            self.stages.push(StageEntry { version: u64::MAX, lits: Vec::new() });
+        }
+        let entry = &mut self.stages[idx];
+        if entry.version == version && entry.lits.len() == params.len() {
+            self.hits += 1;
+            return Ok(());
+        }
+        entry.lits = params.iter().map(|p| p.to_literal()).collect::<Result<_>>()?;
+        entry.version = version;
+        self.misses += 1;
+        Ok(())
+    }
+
+    /// The cached literals of stage `idx` (panics if never refreshed —
+    /// the engine refreshes all stages before any executor/eval use).
+    pub fn stage(&self, idx: usize) -> &[xla::Literal] {
+        let entry = &self.stages[idx];
+        assert_ne!(entry.version, u64::MAX, "literal cache: stage {idx} never refreshed");
+        &entry.lits
+    }
+
+    /// Is stage `idx` cached at exactly `version`?
+    pub fn is_fresh(&self, idx: usize, version: u64) -> bool {
+        self.stages
+            .get(idx)
+            .map(|e| e.version == version && version != u64::MAX)
+            .unwrap_or(false)
+    }
+
+    /// `(hits, misses)` since construction — the invalidation tests and
+    /// the perf report read this.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+/// A read-only pool of literals shared across pipeline worker threads
+/// (the per-iteration microbatch token ids).
+pub struct SharedLiterals(Vec<xla::Literal>);
+
+// SAFETY: same argument as `LiteralCache` — immutable after build,
+// readers only.
+unsafe impl Send for SharedLiterals {}
+unsafe impl Sync for SharedLiterals {}
+
+impl SharedLiterals {
+    pub fn build(tensors: &[HostTensor]) -> Result<Self> {
+        Ok(Self(tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?))
+    }
+}
+
+impl std::ops::Deref for SharedLiterals {
+    type Target = [xla::Literal];
+
+    fn deref(&self) -> &[xla::Literal] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(v: f32) -> Vec<HostTensor> {
+        vec![
+            HostTensor::from_f32(vec![2, 2], &[v, v, v, v]),
+            HostTensor::from_f32(vec![3], &[v, 2.0 * v, 3.0 * v]),
+        ]
+    }
+
+    #[test]
+    fn first_refresh_is_a_miss_then_hits() {
+        let mut c = LiteralCache::new();
+        let p = params(1.0);
+        c.refresh(0, 0, &p).unwrap();
+        assert_eq!(c.stats(), (0, 1));
+        c.refresh(0, 0, &p).unwrap();
+        c.refresh(0, 0, &p).unwrap();
+        assert_eq!(c.stats(), (2, 1));
+        assert_eq!(c.stage(0).len(), 2);
+    }
+
+    #[test]
+    fn version_bump_invalidates() {
+        let mut c = LiteralCache::new();
+        c.refresh(0, 0, &params(1.0)).unwrap();
+        assert!(c.is_fresh(0, 0));
+        assert!(!c.is_fresh(0, 1));
+        c.refresh(0, 1, &params(2.0)).unwrap();
+        assert_eq!(c.stats(), (0, 2));
+        assert!(c.is_fresh(0, 1));
+    }
+
+    #[test]
+    fn stages_are_independent() {
+        let mut c = LiteralCache::new();
+        c.refresh(0, 0, &params(1.0)).unwrap();
+        c.refresh(2, 5, &params(2.0)).unwrap();
+        assert!(c.is_fresh(0, 0));
+        assert!(!c.is_fresh(1, 0), "gap slot must not report fresh");
+        assert!(c.is_fresh(2, 5));
+        c.refresh(0, 0, &params(1.0)).unwrap();
+        assert_eq!(c.stats(), (1, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "never refreshed")]
+    fn reading_unrefreshed_stage_panics() {
+        let mut c = LiteralCache::new();
+        c.refresh(1, 0, &params(1.0)).unwrap();
+        c.stage(0);
+    }
+
+    #[test]
+    fn shared_literals_roundtrip() {
+        let ts = params(3.0);
+        let pool = SharedLiterals::build(&ts).unwrap();
+        assert_eq!(pool.len(), 2);
+    }
+}

@@ -18,6 +18,14 @@ pub struct HostTensor {
     data: HostData,
 }
 
+/// The empty tensor (shape `[0]`): a placeholder for `std::mem::take` in
+/// scratch-buffer code; any real read replaces it.
+impl Default for HostTensor {
+    fn default() -> Self {
+        Self { shape: vec![0], data: HostData::F32(Vec::new()) }
+    }
+}
+
 impl HostTensor {
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
@@ -111,6 +119,37 @@ impl HostTensor {
             .map_err(|e| anyhow!("literal create: {e}"))
     }
 
+    /// Overwrite `self` from a literal, reusing the existing allocation
+    /// when shape and dtype already match the spec (the executor's
+    /// scratch-buffer path: per-microbatch gradient reads stop allocating
+    /// after the first call). Falls back to a fresh read otherwise.
+    pub fn copy_from_literal(&mut self, lit: &xla::Literal, spec: &IoSpec) -> Result<()> {
+        if self.shape != spec.shape || self.dtype() != spec.dtype {
+            *self = Self::from_literal(lit, spec)?;
+            return Ok(());
+        }
+        match &mut self.data {
+            HostData::F32(buf) => {
+                lit.copy_raw_to(buf).map_err(|e| anyhow!("literal read: {e}"))
+            }
+            HostData::I32(buf) => {
+                lit.copy_raw_to(buf).map_err(|e| anyhow!("literal read: {e}"))
+            }
+        }
+    }
+
+    /// In-place copy from another tensor of identical shape and dtype
+    /// (recovery's copy-on-write path: overwrite a wiped stage's buffers
+    /// instead of cloning the source stage's vectors).
+    pub fn copy_from(&mut self, src: &HostTensor) {
+        assert_eq!(self.shape, src.shape, "copy_from shape mismatch");
+        match (&mut self.data, &src.data) {
+            (HostData::F32(d), HostData::F32(s)) => d.copy_from_slice(s),
+            (HostData::I32(d), HostData::I32(s)) => d.copy_from_slice(s),
+            _ => panic!("copy_from dtype mismatch"),
+        }
+    }
+
     /// Read a literal back into host memory, checking it against the spec.
     pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Self> {
         let n: usize = spec.shape.iter().product();
@@ -189,5 +228,49 @@ mod tests {
     fn scalar_helpers() {
         assert_eq!(HostTensor::scalar(4.5).scalar_f32().unwrap(), 4.5);
         assert!(HostTensor::zeros_f32(vec![2]).scalar_f32().is_err());
+    }
+
+    #[test]
+    fn copy_from_literal_reuses_matching_buffer() {
+        let src = HostTensor::from_f32(vec![2, 2], &[1., 2., 3., 4.]);
+        let lit = src.to_literal().unwrap();
+        let spec = IoSpec { shape: vec![2, 2], dtype: "f32".into() };
+        let mut dst = HostTensor::zeros_f32(vec![2, 2]);
+        let ptr_before = dst.as_f32().as_ptr();
+        dst.copy_from_literal(&lit, &spec).unwrap();
+        assert_eq!(dst, src);
+        assert_eq!(dst.as_f32().as_ptr(), ptr_before, "buffer was reallocated");
+    }
+
+    #[test]
+    fn copy_from_literal_reallocates_on_mismatch() {
+        let src = HostTensor::from_f32(vec![3], &[1., 2., 3.]);
+        let lit = src.to_literal().unwrap();
+        let spec = IoSpec { shape: vec![3], dtype: "f32".into() };
+        let mut dst = HostTensor::default();
+        dst.copy_from_literal(&lit, &spec).unwrap();
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn copy_from_overwrites_in_place() {
+        let src = HostTensor::from_f32(vec![2], &[5., 6.]);
+        let mut dst = HostTensor::zeros_f32(vec![2]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn copy_from_rejects_shape_mismatch() {
+        let src = HostTensor::from_f32(vec![2], &[5., 6.]);
+        HostTensor::zeros_f32(vec![3]).copy_from(&src);
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let t = HostTensor::default();
+        assert!(t.is_empty());
+        assert_eq!(t.dtype(), "f32");
     }
 }

@@ -18,6 +18,23 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Machine-readable form for the committed `BENCH_*.json`
+    /// perf-trajectory files (diffed across PRs).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mean_s = self.mean.as_secs_f64();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(mean_s)),
+            ("stddev_s", Json::num(self.stddev.as_secs_f64())),
+            ("min_s", Json::num(self.min.as_secs_f64())),
+            ("p50_s", Json::num(self.p50.as_secs_f64())),
+            ("p95_s", Json::num(self.p95.as_secs_f64())),
+            ("per_sec", Json::num(if mean_s > 0.0 { 1.0 / mean_s } else { 0.0 })),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} ± {:<10} (min {:>10}, p50 {:>10}, p95 {:>10}, n={})",
@@ -120,6 +137,18 @@ mod tests {
         });
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
         assert!(s.mean >= Duration::from_micros(40));
+    }
+
+    #[test]
+    fn to_json_exposes_rate_and_quantiles() {
+        let s = bench_with("noop", Duration::ZERO, 5, 100, || {
+            std::thread::sleep(Duration::from_micros(10));
+        });
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "noop");
+        assert!(j.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("p95_s").unwrap().as_f64().unwrap() >= j.get("p50_s").unwrap().as_f64().unwrap());
     }
 
     #[test]

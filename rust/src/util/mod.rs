@@ -1,7 +1,9 @@
 //! Small from-scratch substrates the offline build environment forces us
 //! to own: JSON parsing/writing ([`json`]), a statistics-aware bench timer
-//! ([`bench`]), and a seeded property-testing helper ([`propcheck`]).
+//! ([`bench`]), a seeded property-testing helper ([`propcheck`]), and
+//! scoped-thread data-parallel helpers ([`par`], rayon is unavailable).
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod propcheck;

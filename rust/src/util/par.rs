@@ -1,0 +1,258 @@
+//! Scoped-thread data-parallel helpers for the host-side hot loops
+//! (Adam, gradient accumulation, weighted averaging).
+//!
+//! The offline build ships no rayon, so this is the minimal substitute:
+//! split equal-length slices into per-thread contiguous chunks and run a
+//! closure over each chunk via `std::thread::scope`. Only *elementwise*
+//! operations go through here — chunking an elementwise map never changes
+//! results, so parallel runs stay bitwise-identical to sequential ones
+//! (reductions such as `sq_norm` deliberately stay sequential for the
+//! same determinism guarantee). The final chunk runs on the calling
+//! thread, which would otherwise idle in the scope join.
+//!
+//! Small inputs take the sequential path: below [`PAR_MIN_LEN`] elements
+//! the work is cheaper than spawning threads. One level of parallelism
+//! at a time: code that already runs on executor worker threads (e.g.
+//! gradient sinks) should use the sequential variants rather than
+//! nesting chunk-threads on top of worker-threads and oversubscribing
+//! the cores.
+
+/// Below this many elements the sequential path always wins.
+pub const PAR_MIN_LEN: usize = 1 << 16;
+
+/// Minimum elements each spawned thread should own.
+const PAR_CHUNK_FLOOR: usize = 1 << 15;
+
+/// How many threads to use for an `n`-element elementwise op.
+pub fn threads_for(n: usize) -> usize {
+    if n < PAR_MIN_LEN {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    hw.min(n / PAR_CHUNK_FLOOR).max(1)
+}
+
+/// Split a mutable slice into disjoint chunks of at most `chunk` elements.
+fn split_mut(mut s: &mut [f32], chunk: usize) -> Vec<&mut [f32]> {
+    let mut out = Vec::with_capacity(s.len() / chunk.max(1) + 1);
+    while !s.is_empty() {
+        let k = chunk.min(s.len());
+        let (head, tail) = std::mem::take(&mut s).split_at_mut(k);
+        out.push(head);
+        s = tail;
+    }
+    out
+}
+
+/// Split a shared slice into chunks of at most `chunk` elements.
+fn split_ref(mut s: &[f32], chunk: usize) -> Vec<&[f32]> {
+    let mut out = Vec::with_capacity(s.len() / chunk.max(1) + 1);
+    while !s.is_empty() {
+        let k = chunk.min(s.len());
+        let (head, tail) = s.split_at(k);
+        out.push(head);
+        s = tail;
+    }
+    out
+}
+
+fn chunk_len(n: usize, threads: usize) -> usize {
+    (n + threads - 1) / threads
+}
+
+/// Apply `f` to matching chunks of one mutable and one shared slice
+/// (gradient accumulation: `buf[i] += g[i]`).
+pub fn par_zip2<F>(a: &mut [f32], b: &[f32], f: F)
+where
+    F: Fn(&mut [f32], &[f32]) + Sync,
+{
+    let n = a.len();
+    assert_eq!(n, b.len());
+    let t = threads_for(n);
+    if t <= 1 {
+        f(a, b);
+        return;
+    }
+    let chunk = chunk_len(n, t);
+    let fr = &f;
+    std::thread::scope(|s| {
+        let mut parts = split_mut(a, chunk).into_iter().zip(split_ref(b, chunk)).peekable();
+        while let Some((a1, b1)) = parts.next() {
+            if parts.peek().is_none() {
+                fr(a1, b1); // last chunk on the calling thread
+            } else {
+                s.spawn(move || fr(a1, b1));
+            }
+        }
+    });
+}
+
+/// Apply `f` to matching chunks of one mutable and two shared slices
+/// (weighted averaging: `dst[i] = ca*x[i] + cb*y[i]`).
+pub fn par_zip3<F>(dst: &mut [f32], x: &[f32], y: &[f32], f: F)
+where
+    F: Fn(&mut [f32], &[f32], &[f32]) + Sync,
+{
+    let n = dst.len();
+    assert_eq!(n, x.len());
+    assert_eq!(n, y.len());
+    let t = threads_for(n);
+    if t <= 1 {
+        f(dst, x, y);
+        return;
+    }
+    let chunk = chunk_len(n, t);
+    let fr = &f;
+    std::thread::scope(|s| {
+        let mut parts = split_mut(dst, chunk)
+            .into_iter()
+            .zip(split_ref(x, chunk))
+            .zip(split_ref(y, chunk))
+            .peekable();
+        while let Some(((d1, x1), y1)) = parts.next() {
+            if parts.peek().is_none() {
+                fr(d1, x1, y1);
+            } else {
+                s.spawn(move || fr(d1, x1, y1));
+            }
+        }
+    });
+}
+
+/// Apply `f` to matching chunks of three mutable slices and one shared
+/// slice (the Adam update: params, moments m/v mutable; grads shared).
+pub fn par_zip4<F>(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], f: F)
+where
+    F: Fn(&mut [f32], &[f32], &mut [f32], &mut [f32]) + Sync,
+{
+    let n = p.len();
+    assert_eq!(n, g.len());
+    assert_eq!(n, m.len());
+    assert_eq!(n, v.len());
+    let t = threads_for(n);
+    if t <= 1 {
+        f(p, g, m, v);
+        return;
+    }
+    let chunk = chunk_len(n, t);
+    let fr = &f;
+    std::thread::scope(|s| {
+        let mut parts = split_mut(p, chunk)
+            .into_iter()
+            .zip(split_ref(g, chunk))
+            .zip(split_mut(m, chunk).into_iter().zip(split_mut(v, chunk)))
+            .peekable();
+        while let Some(((p1, g1), (m1, v1))) = parts.next() {
+            if parts.peek().is_none() {
+                fr(p1, g1, m1, v1);
+            } else {
+                s.spawn(move || fr(p1, g1, m1, v1));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(n: usize, seed: u32) -> Vec<f32> {
+        // cheap deterministic pseudo-values with varied magnitudes
+        (0..n)
+            .map(|i| {
+                let x = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+                ((x >> 8) as f32 / 1e6) - 8.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_inputs_run_sequentially() {
+        assert_eq!(threads_for(10), 1);
+        assert_eq!(threads_for(PAR_MIN_LEN - 1), 1);
+    }
+
+    #[test]
+    fn large_inputs_use_multiple_threads_when_available() {
+        let t = threads_for(1 << 22);
+        assert!(t >= 1);
+        let hw = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+        assert_eq!(t, hw.min((1 << 22) / (1 << 15)));
+    }
+
+    #[test]
+    fn split_helpers_cover_input_exactly() {
+        let mut a = filled(100, 0);
+        let chunks = split_mut(&mut a, 33);
+        assert_eq!(chunks.iter().map(|c| c.len()).collect::<Vec<_>>(), vec![33, 33, 33, 1]);
+        let b = filled(64, 0);
+        let chunks = split_ref(&b, 64);
+        assert_eq!(chunks.len(), 1);
+    }
+
+    #[test]
+    fn par_zip2_matches_sequential_bitwise() {
+        let n = PAR_MIN_LEN + 12345; // force the parallel path, odd tail
+        let mut a = filled(n, 1);
+        let b = filled(n, 2);
+        let mut want = a.clone();
+        for (w, &x) in want.iter_mut().zip(&b) {
+            *w += x;
+        }
+        par_zip2(&mut a, &b, |a, b| {
+            for (a, &x) in a.iter_mut().zip(b) {
+                *a += x;
+            }
+        });
+        assert!(a.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn par_zip3_matches_sequential_bitwise() {
+        let n = PAR_MIN_LEN + 777;
+        let x = filled(n, 3);
+        let y = filled(n, 4);
+        let mut dst = vec![0.0f32; n];
+        let mut want = vec![0.0f32; n];
+        for i in 0..n {
+            want[i] = 0.25 * x[i] + 0.75 * y[i];
+        }
+        par_zip3(&mut dst, &x, &y, |d, x, y| {
+            for i in 0..d.len() {
+                d[i] = 0.25 * x[i] + 0.75 * y[i];
+            }
+        });
+        assert!(dst.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn par_zip4_matches_sequential_bitwise() {
+        let n = PAR_MIN_LEN + 9;
+        let mut p = filled(n, 5);
+        let g = filled(n, 6);
+        let mut m = filled(n, 7);
+        let mut v: Vec<f32> = filled(n, 8).iter().map(|x| x.abs()).collect();
+        let (mut wp, mut wm, mut wv) = (p.clone(), m.clone(), v.clone());
+        for i in 0..n {
+            wm[i] = 0.9 * wm[i] + 0.1 * g[i];
+            wv[i] = 0.999 * wv[i] + 0.001 * g[i] * g[i];
+            wp[i] -= 0.01 * wm[i] / (wv[i].sqrt() + 1e-8);
+        }
+        par_zip4(&mut p, &g, &mut m, &mut v, |p, g, m, v| {
+            for i in 0..p.len() {
+                m[i] = 0.9 * m[i] + 0.1 * g[i];
+                v[i] = 0.999 * v[i] + 0.001 * g[i] * g[i];
+                p[i] -= 0.01 * m[i] / (v[i].sqrt() + 1e-8);
+            }
+        });
+        assert!(p.iter().zip(&wp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(m.iter().zip(&wm).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(v.iter().zip(&wv).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        let mut a: Vec<f32> = vec![];
+        par_zip2(&mut a, &[], |a, b| assert!(a.is_empty() && b.is_empty()));
+    }
+}

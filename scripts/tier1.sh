@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): release build + test suite +
+# clippy + a smoke train_iteration timing check that also refreshes
+# BENCH_hot_path.json.
+#
+# Usage: scripts/tier1.sh [--no-smoke]
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$repo_root/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — this container lacks the Rust toolchain." >&2
+    echo "       Run tier-1 in the rust_pallas toolchain image (needs cargo + vendored" >&2
+    echo "       'anyhow' and 'xla' crates + PJRT CPU plugin; see rust/Cargo.toml)." >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy unavailable; skipping lint gate" >&2
+fi
+
+if [[ "${1:-}" != "--no-smoke" ]]; then
+    echo "== smoke train_iteration timing (tiny, 4 microbatches, seq vs pipelined) =="
+    cargo bench --bench hot_path -- --smoke
+    echo "Smoke results in BENCH_hot_path.smoke.json (gitignored); run the full"
+    echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
+fi
+
+echo "tier-1 OK"
