@@ -1,13 +1,16 @@
 //! Bench: the L3 hot path — full training iterations through the PJRT
-//! executables, sequential vs pipelined, plus the Rust-side pieces
+//! executables across all three exec modes, plus the Rust-side pieces
 //! (Adam, gradient accumulation, weighted-average recovery) in
 //! isolation.
 //!
-//! This is the perf before/after harness for the concurrent fill/drain
-//! executor: the `sequential` exec mode is the seed's reference
-//! schedule, `pipelined` is the worker-thread executor, and the speedup
-//! between them (≥4 microbatches so the pipe actually fills) is the
-//! number the acceptance criteria track. Results are also written to
+//! This is the perf before/after harness for the concurrent executor:
+//! `sequential` is the seed's reference schedule, `pipelined` the GPipe
+//! fill/drain worker pool, `pipelined-1f1b` the 1F1B interleaved
+//! schedule. The speedups over sequential (≥4 microbatches so the pipe
+//! actually fills) are the numbers the acceptance criteria track, and
+//! the activation high-watermark section records peak resident
+//! activations of both pipelined schedules at 8 microbatches — the
+//! 1F1B memory gate (see docs/BENCHMARKS.md). Results are written to
 //! `BENCH_hot_path.json` at the repo root so future PRs can diff the
 //! perf trajectory.
 //!
@@ -26,6 +29,10 @@ use checkfree::util::json::Json;
 use std::time::Duration;
 
 const MICROBATCHES: usize = 4;
+/// Microbatch count of the activation-watermark runs: ≥ 2× the tiny
+/// pipeline depth, so fill/drain's O(m) stash visibly exceeds 1F1B's
+/// depth bound.
+const WATERMARK_MB: usize = 8;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -34,10 +41,12 @@ fn main() {
 
     let mut results: Vec<Json> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
+    let mut speedups_1f1b: Vec<(String, f64)> = Vec::new();
+    let mut watermarks: Vec<(String, Json)> = Vec::new();
 
     'models: for &model in models {
         let mut mode_means: Vec<(ExecMode, f64)> = Vec::new();
-        for mode in [ExecMode::Sequential, ExecMode::Pipelined] {
+        for mode in [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
             let cfg = TrainConfig {
                 model: model.into(),
                 strategy: Strategy::CheckFree,
@@ -71,7 +80,7 @@ fn main() {
             results.push(j);
             mode_means.push((mode, stats.mean.as_secs_f64()));
 
-            if mode == ExecMode::Pipelined {
+            if mode == ExecMode::Pipelined1F1B {
                 let stats = bench_with(
                     &format!("validate — 4 cache-served eval batches ({model})"),
                     Duration::from_secs(if smoke { 1 } else { 3 }),
@@ -109,13 +118,64 @@ fn main() {
                 }
             }
         }
-        if let (Some((_, seq)), Some((_, pipe))) = (
-            mode_means.iter().find(|(m, _)| *m == ExecMode::Sequential),
-            mode_means.iter().find(|(m, _)| *m == ExecMode::Pipelined),
-        ) {
+        let mean_of = |mode: ExecMode| {
+            mode_means.iter().find(|(m, _)| *m == mode).map(|&(_, s)| s)
+        };
+        if let (Some(seq), Some(pipe)) = (mean_of(ExecMode::Sequential), mean_of(ExecMode::Pipelined))
+        {
             let speedup = seq / pipe;
-            println!("  {model}: pipelined speedup over sequential = {speedup:.2}×\n");
+            println!("  {model}: pipelined speedup over sequential = {speedup:.2}×");
             speedups.push((model.to_string(), speedup));
+        }
+        if let (Some(seq), Some(ob)) =
+            (mean_of(ExecMode::Sequential), mean_of(ExecMode::Pipelined1F1B))
+        {
+            let speedup = seq / ob;
+            println!("  {model}: 1F1B speedup over sequential = {speedup:.2}×\n");
+            speedups_1f1b.push((model.to_string(), speedup));
+        }
+
+        // Activation high-watermark at WATERMARK_MB microbatches: the
+        // 1F1B memory gate (peak must sit strictly below fill/drain's
+        // L×m stash and within the Σ-warmup depth bound).
+        let peak_of = |mode: ExecMode| -> Option<(usize, usize)> {
+            let cfg = TrainConfig {
+                model: model.into(),
+                strategy: Strategy::CheckFree,
+                microbatches_per_iter: WATERMARK_MB,
+                exec_mode: mode,
+                ..TrainConfig::default()
+            };
+            let mut e = match PipelineEngine::from_config(&cfg) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("watermark run skipped ({model}, {}): {err:#}", mode.label());
+                    return None;
+                }
+            };
+            if let Err(err) = e.train_iteration() {
+                eprintln!("watermark run failed ({model}, {}): {err:#}", mode.label());
+                return None;
+            }
+            Some((e.peak_resident_activations(), e.body_stages()))
+        };
+        if let (Some((fd, l)), Some((ob, _))) =
+            (peak_of(ExecMode::Pipelined), peak_of(ExecMode::Pipelined1F1B))
+        {
+            let depth_bound = l * (l + 1) / 2;
+            println!(
+                "  {model}: peak resident activations @ {WATERMARK_MB} mb — \
+                 fill/drain {fd} (= {l}×{WATERMARK_MB}), 1F1B {ob} (bound {depth_bound})\n"
+            );
+            watermarks.push((
+                model.to_string(),
+                Json::obj(vec![
+                    ("fill_drain", Json::num(fd as f64)),
+                    ("one_f_one_b", Json::num(ob as f64)),
+                    ("depth_bound", Json::num(depth_bound as f64)),
+                    ("gate_1f1b_below_fill_drain", Json::Bool(ob < fd)),
+                ]),
+            ));
         }
     }
 
@@ -161,6 +221,23 @@ fn main() {
                 speedups
                     .iter()
                     .map(|(m, s)| (m.clone(), Json::num(*s)))
+                    .collect(),
+            ),
+        ),
+        (
+            "pipelined_1f1b_speedup",
+            Json::Obj(
+                speedups_1f1b
+                    .iter()
+                    .map(|(m, s)| (m.clone(), Json::num(*s)))
+                    .collect(),
+            ),
+        ),
+        (
+            "activation_watermark",
+            Json::obj(
+                std::iter::once(("microbatches", Json::num(WATERMARK_MB as f64)))
+                    .chain(watermarks.iter().map(|(m, j)| (m.as_str(), j.clone())))
                     .collect(),
             ),
         ),

@@ -68,25 +68,37 @@ impl FromStr for Strategy {
 }
 
 /// How `train_iteration` drives the microbatch schedule.
+///
+/// All three modes are **bitwise-identical** in results (losses, weights,
+/// ω) — they differ only in wall-clock and peak activation memory; see
+/// `coordinator::executor` for the determinism contract.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
     /// One microbatch at a time, fully serialized — the reference path
-    /// (bitwise-identical results to `Pipelined`; kept for A/B perf
-    /// comparison and as the fallback for degenerate pipelines).
+    /// (kept for A/B perf comparison, equivalence tests, and as the
+    /// fallback for degenerate pipelines).
     Sequential,
-    /// Fill/drain pipeline executor: one worker thread per pipeline
-    /// position, bounded channels carrying activations between stages
-    /// (see `coordinator::executor`).
+    /// GPipe fill/drain pipeline executor: one keep-warm worker per
+    /// pipeline position, all forwards then all backwards. Fastest ramp,
+    /// but peak resident activations grow O(microbatches) per slot.
     Pipelined,
+    /// 1F1B interleaved executor: same workers, but each position
+    /// alternates one backward with one forward once the pipe is full,
+    /// releasing every microbatch's activation at its backward. Peak
+    /// resident activations are O(pipeline depth), independent of the
+    /// microbatch count — the default.
+    Pipelined1F1B,
 }
 
 impl ExecMode {
-    pub const ALL: [ExecMode; 2] = [ExecMode::Sequential, ExecMode::Pipelined];
+    pub const ALL: [ExecMode; 3] =
+        [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B];
 
     pub fn label(&self) -> &'static str {
         match self {
             ExecMode::Sequential => "sequential",
             ExecMode::Pipelined => "pipelined",
+            ExecMode::Pipelined1F1B => "pipelined-1f1b",
         }
     }
 }
@@ -97,8 +109,11 @@ impl FromStr for ExecMode {
     fn from_str(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "sequential" | "seq" => Ok(ExecMode::Sequential),
-            "pipelined" | "pipeline" | "concurrent" => Ok(ExecMode::Pipelined),
-            other => Err(anyhow!("unknown exec mode '{other}' (sequential|pipelined)")),
+            "pipelined" | "pipeline" | "concurrent" | "fill-drain" => Ok(ExecMode::Pipelined),
+            "pipelined-1f1b" | "1f1b" | "interleaved" => Ok(ExecMode::Pipelined1F1B),
+            other => Err(anyhow!(
+                "unknown exec mode '{other}' (sequential|pipelined|pipelined-1f1b)"
+            )),
         }
     }
 }
@@ -216,8 +231,8 @@ pub struct TrainConfig {
     pub recovery_lr_boost: f32,
     /// Validation cadence (iterations).
     pub eval_every: u64,
-    /// Microbatch scheduling: concurrent fill/drain pipeline (default)
-    /// or the sequential reference path.
+    /// Microbatch scheduling: 1F1B interleaved pipeline (default),
+    /// fill/drain pipeline, or the sequential reference path.
     pub exec_mode: ExecMode,
 }
 
@@ -237,7 +252,7 @@ impl Default for TrainConfig {
             target_loss: None,
             recovery_lr_boost: 1.1,
             eval_every: 10,
-            exec_mode: ExecMode::Pipelined,
+            exec_mode: ExecMode::Pipelined1F1B,
         }
     }
 }
@@ -458,22 +473,27 @@ mod tests {
             assert_eq!(m.label().parse::<ExecMode>().unwrap(), m);
         }
         assert_eq!("seq".parse::<ExecMode>().unwrap(), ExecMode::Sequential);
+        assert_eq!("1f1b".parse::<ExecMode>().unwrap(), ExecMode::Pipelined1F1B);
+        assert_eq!("fill-drain".parse::<ExecMode>().unwrap(), ExecMode::Pipelined);
         assert!("bogus".parse::<ExecMode>().is_err());
     }
 
     #[test]
-    fn exec_mode_defaults_to_pipelined_and_roundtrips() {
-        assert_eq!(TrainConfig::default().exec_mode, ExecMode::Pipelined);
-        let cfg = TrainConfig { exec_mode: ExecMode::Sequential, ..TrainConfig::default() };
-        let back =
-            TrainConfig::from_json(&crate::util::json::parse(&cfg.to_json().to_string()).unwrap())
-                .unwrap();
-        assert_eq!(back.exec_mode, ExecMode::Sequential);
+    fn exec_mode_defaults_to_1f1b_and_roundtrips() {
+        assert_eq!(TrainConfig::default().exec_mode, ExecMode::Pipelined1F1B);
+        for mode in ExecMode::ALL {
+            let cfg = TrainConfig { exec_mode: mode, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.exec_mode, mode);
+        }
         // absent key → default
         let cfg =
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
-        assert_eq!(cfg.exec_mode, ExecMode::Pipelined);
+        assert_eq!(cfg.exec_mode, ExecMode::Pipelined1F1B);
     }
 
     #[test]

@@ -9,20 +9,31 @@
 //! swaps enabled (CheckFree+), odd microbatches traverse the swapped
 //! route from [`super::schedule`].
 //!
-//! Two scheduling backends share that definition
+//! Three scheduling backends share that definition
 //! ([`crate::config::ExecMode`]):
 //!
-//! * **Pipelined** (default) — the concurrent fill/drain executor
-//!   ([`super::executor`]): one worker thread per pipeline position,
-//!   bounded channels between stages, microbatch *m+1* overlapping
-//!   microbatch *m*;
+//! * **Pipelined1F1B** (default) — the concurrent executor
+//!   ([`super::executor`]) running the 1F1B interleaved step tables:
+//!   once a position's warmup is done it alternates one backward with
+//!   one forward, releasing each microbatch's stashed activation at its
+//!   backward, so peak resident activations are O(pipeline depth);
+//! * **Pipelined** — the same keep-warm workers running the GPipe
+//!   fill/drain tables (all forwards, then all backwards; peak resident
+//!   activations O(microbatches));
 //! * **Sequential** — the single-threaded reference loop.
 //!
-//! Both read parameters through the versioned
+//! The pipelined modes reuse a keep-warm [`executor::WorkerPool`]
+//! across iterations (no per-iteration thread spawning), and the peak
+//! stash count of every iteration is recorded in an
+//! [`crate::metrics::ActivationWatermark`]
+//! (see [`PipelineEngine::peak_resident_activations`]).
+//!
+//! All modes read parameters through the versioned
 //! [`crate::runtime::LiteralCache`] (marshalled once per parameter
-//! rewrite, not per call) and both produce **bitwise-identical**
-//! results: per-microbatch compute is the same, and gradient
-//! accumulation is forced into microbatch order (see
+//! rewrite, not per call) and all produce **bitwise-identical**
+//! results: per-microbatch compute is the same, per-position step
+//! tables keep forwards and backwards in ascending microbatch order,
+//! and gradient accumulation is forced into microbatch order (see
 //! `executor::OrderedSink`), so f32 rounding cannot depend on thread
 //! scheduling.
 //!
@@ -33,8 +44,10 @@
 use std::cell::RefCell;
 
 use crate::config::{ExecMode, TrainConfig};
+use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
+use crate::metrics::ActivationWatermark;
 use crate::model::{GradBuffer, Stage};
 use crate::rng::Rng;
 use crate::runtime::{HostTensor, LiteralCache, Runtime};
@@ -48,6 +61,9 @@ pub struct IterStats {
     pub loss: f32,
     /// ω = ‖∇W‖² per stage after this iteration (index 0 = embed).
     pub omegas: Vec<f64>,
+    /// Peak simultaneously-stashed slot activations this iteration
+    /// (0 in sequential mode, which frees per microbatch).
+    pub peak_resident_activations: usize,
 }
 
 pub struct PipelineEngine {
@@ -65,6 +81,13 @@ pub struct PipelineEngine {
     pub use_swaps: bool,
     pub microbatches: usize,
     pub exec_mode: ExecMode,
+    /// Keep-warm pipeline workers, spawned on the first pipelined
+    /// iteration and reused by every later one (no per-iteration thread
+    /// spawning on the hot path).
+    worker_pool: Option<executor::WorkerPool>,
+    /// Peak stashed slot activations, reset per iteration (see
+    /// [`Self::peak_resident_activations`]).
+    activations: ActivationWatermark,
 }
 
 impl PipelineEngine {
@@ -105,6 +128,8 @@ impl PipelineEngine {
             use_swaps: cfg.strategy.uses_swaps(),
             microbatches: cfg.microbatches_per_iter,
             exec_mode: cfg.exec_mode,
+            worker_pool: None,
+            activations: ActivationWatermark::new(),
         })
     }
 
@@ -218,7 +243,7 @@ impl PipelineEngine {
 
     /// One full training iteration; optimizer steps every stage.
     ///
-    /// Returns identical results in both exec modes (see module docs for
+    /// Returns identical results in every exec mode (see module docs for
     /// the determinism contract).
     pub fn train_iteration(&mut self) -> Result<IterStats> {
         // Draw every microbatch up front, in microbatch order, so the
@@ -226,33 +251,50 @@ impl PipelineEngine {
         let batches: Vec<HostTensor> =
             (0..self.microbatches).map(|_| self.data.next_batch()).collect();
         self.refresh_cache()?;
+        self.activations.reset();
 
-        let use_pipeline = self.exec_mode == ExecMode::Pipelined && self.body_stages() >= 1;
-        let losses: Vec<f32> = if use_pipeline {
-            let cache = self.lit_cache.borrow();
-            executor::run_iteration(
-                &self.runtime,
-                &cache,
-                &batches,
-                self.stages.len() - 1,
-                self.use_swaps,
-                &mut self.grad_bufs,
-            )?
-        } else {
-            let cache = self.lit_cache.borrow();
-            let body_stages = self.stages.len() - 1;
-            let mut ls = Vec::with_capacity(batches.len());
-            for (mb, ids) in batches.iter().enumerate() {
-                let route = schedule::route(body_stages, mb, self.use_swaps);
-                ls.push(Self::microbatch_pass(
+        let sched = match self.exec_mode {
+            ExecMode::Sequential => None,
+            ExecMode::Pipelined => Some(PipelineSchedule::FillDrain),
+            ExecMode::Pipelined1F1B => Some(PipelineSchedule::OneFOneB),
+        };
+        let losses: Vec<f32> = match sched {
+            Some(kind) if self.stages.len() >= 2 => {
+                if self.worker_pool.is_none() {
+                    // Embed + one worker per body slot; the head runs on
+                    // this thread. Spawned once, reused every iteration.
+                    self.worker_pool = Some(executor::WorkerPool::new(self.stages.len()));
+                }
+                let pool = self.worker_pool.as_mut().expect("pool just ensured");
+                let cache = self.lit_cache.borrow();
+                executor::run_iteration(
+                    pool,
                     &self.runtime,
                     &cache,
+                    &batches,
+                    self.stages.len() - 1,
+                    self.use_swaps,
+                    kind,
+                    &self.activations,
                     &mut self.grad_bufs,
-                    ids,
-                    &route,
-                )?);
+                )?
             }
-            ls
+            _ => {
+                let cache = self.lit_cache.borrow();
+                let body_stages = self.stages.len() - 1;
+                let mut ls = Vec::with_capacity(batches.len());
+                for (mb, ids) in batches.iter().enumerate() {
+                    let route = schedule::route(body_stages, mb, self.use_swaps);
+                    ls.push(Self::microbatch_pass(
+                        &self.runtime,
+                        &cache,
+                        &mut self.grad_bufs,
+                        ids,
+                        &route,
+                    )?);
+                }
+                ls
+            }
         };
 
         // Mean loss summed in microbatch order (bitwise-stable).
@@ -269,7 +311,18 @@ impl PipelineEngine {
             iteration: self.iteration,
             loss: (loss_sum / self.microbatches as f64) as f32,
             omegas: self.stages.iter().map(|s| s.omega).collect(),
+            peak_resident_activations: self.activations.peak(),
         })
+    }
+
+    /// Peak number of simultaneously-stashed slot activations during the
+    /// most recent `train_iteration` — the executor's activation
+    /// high-watermark. Fill/drain peaks at `body_stages × microbatches`;
+    /// 1F1B stays within `Σ warmup_forwards ≤ L·(L+1)/2`, independent of
+    /// the microbatch count. The sequential path stashes nothing across
+    /// microbatches and reports 0.
+    pub fn peak_resident_activations(&self) -> usize {
+        self.activations.peak()
     }
 
     /// Forward-only loss of one batch (standard route), served from the
@@ -396,37 +449,99 @@ mod tests {
     fn pipelined_matches_sequential_bitwise() {
         // The executor's determinism contract: same seed, same losses
         // and same weights as the sequential reference path, bit for
-        // bit, including under the CheckFree+ swap schedule.
-        for strategy in [Strategy::None, Strategy::CheckFreePlus] {
-            let mut seq = engine_with_mode(strategy, 77, 4, ExecMode::Sequential);
-            let mut pipe = engine_with_mode(strategy, 77, 4, ExecMode::Pipelined);
-            for it in 0..5 {
-                let a = seq.train_iteration().unwrap();
-                let b = pipe.train_iteration().unwrap();
-                assert_eq!(
-                    a.loss.to_bits(),
-                    b.loss.to_bits(),
-                    "loss diverged at iteration {it} ({strategy:?}): {} vs {}",
-                    a.loss,
-                    b.loss
-                );
-                assert_eq!(a.omegas, b.omegas, "omegas diverged at iteration {it}");
-            }
-            for (s, p) in seq.stages.iter().zip(&pipe.stages) {
-                assert_eq!(s.params, p.params, "stage {} weights diverged", s.index);
+        // bit, for BOTH pipelined schedules, including under the
+        // CheckFree+ swap schedule.
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+                let mut seq = engine_with_mode(strategy, 77, 4, ExecMode::Sequential);
+                let mut pipe = engine_with_mode(strategy, 77, 4, mode);
+                for it in 0..5 {
+                    let a = seq.train_iteration().unwrap();
+                    let b = pipe.train_iteration().unwrap();
+                    assert_eq!(
+                        a.loss.to_bits(),
+                        b.loss.to_bits(),
+                        "loss diverged at iteration {it} ({strategy:?}, {mode:?}): {} vs {}",
+                        a.loss,
+                        b.loss
+                    );
+                    assert_eq!(
+                        a.omegas, b.omegas,
+                        "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                }
+                for (s, p) in seq.stages.iter().zip(&pipe.stages) {
+                    assert_eq!(
+                        s.params, p.params,
+                        "stage {} weights diverged ({strategy:?}, {mode:?})",
+                        s.index
+                    );
+                }
             }
         }
     }
 
     #[test]
     fn pipelined_handles_many_microbatches() {
-        // More microbatches than pipeline positions: fill/drain with a
-        // deep in-flight queue.
-        let mut e = engine_with_mode(Strategy::None, 13, 8, ExecMode::Pipelined);
-        let first = e.train_iteration().unwrap().loss;
-        let second = e.train_iteration().unwrap().loss;
-        assert!(first.is_finite() && second.is_finite());
-        assert_ne!(first, second);
+        // More microbatches than pipeline positions: a deep in-flight
+        // queue under both pipelined schedules.
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            let mut e = engine_with_mode(Strategy::None, 13, 8, mode);
+            let first = e.train_iteration().unwrap().loss;
+            let second = e.train_iteration().unwrap().loss;
+            assert!(first.is_finite() && second.is_finite());
+            assert_ne!(first, second);
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_activations_by_depth_not_microbatches() {
+        // The 1F1B acceptance gate: at 8 microbatches the fill/drain
+        // executor stashes every microbatch at every slot (peak = L×m),
+        // while 1F1B stays within the sum of per-position warmups
+        // (≤ L·(L+1)/2) — strictly below, and independent of m.
+        let m = 8;
+        let mut fd = engine_with_mode(Strategy::None, 31, m, ExecMode::Pipelined);
+        fd.train_iteration().unwrap();
+        let l = fd.body_stages();
+        let peak_fd = fd.peak_resident_activations();
+        assert_eq!(
+            peak_fd,
+            l * m,
+            "fill/drain: no slot releases until the last slot finishes forwarding"
+        );
+
+        let mut ob = engine_with_mode(Strategy::None, 31, m, ExecMode::Pipelined1F1B);
+        let stats = ob.train_iteration().unwrap();
+        let peak_ob = ob.peak_resident_activations();
+        assert_eq!(stats.peak_resident_activations, peak_ob);
+        let depth_bound = l * (l + 1) / 2;
+        assert!(
+            peak_ob >= l && peak_ob <= depth_bound,
+            "1F1B peak {peak_ob} outside [{l}, {depth_bound}]"
+        );
+        assert!(
+            peak_ob < peak_fd,
+            "1F1B must beat fill/drain at {m} microbatches: {peak_ob} vs {peak_fd}"
+        );
+
+        // And the watermark must fully drain: nothing is resident
+        // between iterations.
+        assert_eq!(ob.activations.current(), 0);
+
+        // Growing the microbatch count grows fill/drain's peak linearly
+        // but leaves 1F1B's bound untouched.
+        let mut ob16 = engine_with_mode(Strategy::None, 31, 16, ExecMode::Pipelined1F1B);
+        ob16.train_iteration().unwrap();
+        assert!(ob16.peak_resident_activations() <= depth_bound);
+    }
+
+    #[test]
+    fn sequential_reports_zero_watermark() {
+        let mut e = engine_with_mode(Strategy::None, 37, 4, ExecMode::Sequential);
+        let stats = e.train_iteration().unwrap();
+        assert_eq!(stats.peak_resident_activations, 0);
+        assert_eq!(e.peak_resident_activations(), 0);
     }
 
     #[test]

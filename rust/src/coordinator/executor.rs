@@ -1,61 +1,77 @@
-//! Concurrent fill/drain pipeline executor.
+//! Concurrent pipeline executor: keep-warm workers driving a
+//! deterministic per-position step table (fill/drain or 1F1B).
 //!
 //! The seed engine ran the GPipe schedule strictly sequentially: one
 //! microbatch fully traversed embed→body→head→backward before the next
 //! started, so the simulated "pipeline" never overlapped anything. This
-//! module gives every pipeline position its own worker thread:
+//! module gives every pipeline position its own worker:
 //!
 //! ```text
 //! embed ──f0──▶ slot 0 ──f1──▶ … ──fL-1──▶ slot L-1 ──fL──▶ head
 //!   ▲            │  ▲                         │  ▲            │
-//!   └────b0──────┘  └─────────…───bL-1────────┘  └────bL──────┘
+//!   └────b0──────┘  └─────────…───bL-1────────┘  └────b L────┘
 //!   ▲                                                         │
 //!   └───────────────────── head grads (gd, gnw) ──────────────┘
 //! ```
 //!
-//! * forward links `f*` are **bounded** (`FWD_CHANNEL_CAP`), so at most a
-//!   couple of activations are in flight per link — microbatch *m+1*
-//!   enters slot 0 while microbatch *m* is still deeper in the pipe;
-//! * backward links `b*` are unbounded by design: in a fill/drain
-//!   schedule the head can emit every backward gradient while early
-//!   slots are still forwarding, and a bound there would deadlock (the
-//!   backlog is capped at `microbatches` messages);
+//! * workers live in a **keep-warm pool** (`WorkerPool`) owned by the
+//!   engine: threads are spawned once and reused by every
+//!   `run_iteration`, instead of paying a spawn/join per iteration
+//!   (ROADMAP follow-on to the PR 1 executor);
+//! * each position executes the deterministic step table from
+//!   [`crate::coordinator::schedule::step_table`] — under
+//!   [`schedule::PipelineSchedule::FillDrain`] that is "all forwards,
+//!   then all backwards" (the PR 1 behaviour); under
+//!   [`schedule::PipelineSchedule::OneFOneB`] each position alternates
+//!   one backward with one forward once its warmup is done, releasing a
+//!   microbatch's stashed activation as soon as its backward completes;
+//! * forward links are bounded channels; backward links are unbounded by
+//!   design (the backlog is capped at `microbatches` messages and in the
+//!   fill/drain schedule a bound there would deadlock);
 //! * each slot worker stashes the marshalled activation INTO it during
 //!   the forward pass and reuses the literal for the backward pass —
 //!   one host↔literal round-trip less per slot per microbatch than the
 //!   sequential path.
 //!
-//! **Memory trade-off:** full fill/drain keeps every slot's stashed
-//! activation for every in-flight microbatch alive at once — peak
-//! resident activations are O(`microbatches` × stages), vs the
-//! sequential path's O(stages) (it frees each microbatch's `hs` before
-//! starting the next). That is the classic GPipe memory/throughput
-//! trade; raising the microbatch count raises peak memory linearly.
-//! 1F1B interleaving inside the slot workers would cut this back to
-//! O(pipeline depth) — tracked in ROADMAP open items.
+//! **Memory contract:** every stash/release is counted by the shared
+//! [`ActivationWatermark`]. Fill/drain keeps every slot's stashed
+//! activation for every in-flight microbatch alive at once — its peak is
+//! exactly `slots × microbatches`. 1F1B bounds each position's residency
+//! by its warmup depth (`schedule::warmup_forwards`), so the global peak
+//! is at most `L·(L+1)/2` for `L` body slots — **independent of the
+//! microbatch count**. That is what lets CheckFree-style stage-parallel
+//! training raise gradient accumulation without drowning the very
+//! memory headroom a neighbour's recovery work needs.
 //!
-//! **Determinism contract:** results are bitwise-identical to the
-//! sequential reference path. Per-microbatch compute uses the same
-//! cached literals and executables in the same order; the only
-//! scheduling freedom is *when* gradients arrive at a stage's
-//! accumulation buffer, and [`OrderedSink`] restores strict microbatch
-//! order there (f32 addition is not associative, so order is what makes
-//! the loss trajectory reproducible). With CheckFree+ swaps a stage's
-//! gradients arrive from two different slot workers — that is the one
-//! place reordering can actually happen, and the sink's pending map
-//! absorbs it.
+//! **Determinism contract:** results are bitwise-identical across all
+//! [`crate::config::ExecMode`]s. Per-microbatch compute uses the same
+//! cached literals and executables; step tables keep each position's
+//! forwards (and backwards) in ascending microbatch order; and the only
+//! scheduling freedom left — *when* gradients arrive at a stage's
+//! accumulation buffer — is absorbed by `OrderedSink`, which restores
+//! strict microbatch order there (f32 addition is not associative, so
+//! order is what makes the loss trajectory reproducible). With
+//! CheckFree+ swaps a stage's gradients arrive from two different slot
+//! workers — that is the one place reordering can actually happen, and
+//! the sink's pending map absorbs it.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Mutex;
+use std::thread::JoinHandle;
 
-use crate::coordinator::schedule;
+use crate::coordinator::schedule::{self, PipelineSchedule, Step};
+use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
 use crate::runtime::{HostTensor, LiteralCache, Runtime, SharedLiterals};
 use crate::{anyhow, Result};
 
-/// In-flight forward activations allowed per inter-stage link. Two keeps
-/// every worker busy without ballooning resident activations.
+/// In-flight forward activations allowed per inter-stage link under the
+/// fill/drain schedule. Two keeps every worker busy without ballooning
+/// resident activations. (Under 1F1B the step tables themselves bound
+/// the in-flight count, so the links are sized to never block instead —
+/// see `run_iteration`.)
 pub const FWD_CHANNEL_CAP: usize = 2;
 
 /// Marker for "a neighbour hung up" errors, so the real root cause (the
@@ -84,6 +100,153 @@ struct HeadGrads {
     gd: HostTensor,
     gnw: HostTensor,
 }
+
+// ---------------------------------------------------------------------------
+// Keep-warm worker pool
+// ---------------------------------------------------------------------------
+
+/// A job dispatched to a pool worker for one iteration. The lifetime is
+/// the caller's stack frame: jobs borrow the iteration's literal cache,
+/// gradient sinks, and channels.
+pub type ScopedJob<'env> = Box<dyn FnOnce() -> Result<()> + Send + 'env>;
+
+struct PoolWorker {
+    /// `None` once the pool is shutting down (dropping the sender is the
+    /// hang-up signal the worker loop exits on).
+    tx: Option<Sender<ScopedJob<'static>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Long-lived pipeline worker threads, spawned once per engine and
+/// reused by every `run_iteration` — the keep-warm replacement for the
+/// PR 1 executor's per-iteration `thread::scope` spawns.
+///
+/// `scope` provides the same borrow guarantee `thread::scope` did: it
+/// does not return (or unwind) until every dispatched job has finished,
+/// so jobs may borrow from the caller's frame even though the threads
+/// outlive it.
+pub struct WorkerPool {
+    workers: Vec<PoolWorker>,
+    /// Kept alive so `done_rx.recv()` can never spuriously disconnect.
+    _done_tx: Sender<(usize, Result<()>)>,
+    done_rx: Receiver<(usize, Result<()>)>,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        let (done_tx, done_rx) = channel::<(usize, Result<()>)>();
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let (tx, rx) = channel::<ScopedJob<'static>>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pipeline-worker-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // A panicking job must not kill the keep-warm
+                        // thread: report it as an error and stay alive
+                        // for the next iteration.
+                        let result = catch_unwind(AssertUnwindSafe(job))
+                            .unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked")));
+                        if done.send((i, result)).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning pipeline worker thread");
+            workers.push(PoolWorker { tx: Some(tx), handle: Some(handle) });
+        }
+        Self { workers, _done_tx: done_tx, done_rx }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `jobs` on the keep-warm workers (job `i` on worker `i`) while
+    /// `coordinator` runs on the calling thread; returns the
+    /// coordinator's result and one result per job, in job order.
+    ///
+    /// Blocks until every dispatched job completed — including when the
+    /// coordinator panics (the panic is re-raised only after the joins),
+    /// which is what makes lending stack borrows to the workers sound.
+    /// Takes `&mut self` so a coordinator cannot reentrantly open a
+    /// nested scope on the same pool — the shared completion channel
+    /// makes interleaved scopes unsound (an inner scope could consume an
+    /// outer scope's completions and return while the outer jobs still
+    /// borrow the dead frame).
+    // The transmute below changes ONLY the trait object's lifetime bound
+    // ('env → 'static); clippy flags lifetime-only transmutes as useless
+    // on some toolchains.
+    #[allow(clippy::useless_transmute)]
+    pub fn scope<'env, R>(
+        &mut self,
+        jobs: Vec<ScopedJob<'env>>,
+        coordinator: impl FnOnce() -> Result<R>,
+    ) -> (Result<R>, Vec<Result<()>>) {
+        assert!(
+            jobs.len() <= self.workers.len(),
+            "worker pool too small: {} jobs for {} workers",
+            jobs.len(),
+            self.workers.len()
+        );
+        let n = jobs.len();
+        let mut results: Vec<Option<Result<()>>> = (0..n).map(|_| None).collect();
+        let mut outstanding = 0usize;
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the job's 'env borrows outlive its execution
+            // because this function does not return or unwind until one
+            // completion message per dispatched job has been received
+            // (see the loop below, which runs on the panic path too). If
+            // the send fails the job is dropped here, inside 'env.
+            let job: ScopedJob<'static> =
+                unsafe { std::mem::transmute::<ScopedJob<'env>, ScopedJob<'static>>(job) };
+            match self.workers[i].tx.as_ref().expect("pool not shut down").send(job) {
+                Ok(()) => outstanding += 1,
+                Err(_) => results[i] = Some(Err(anyhow!("pipeline worker {i} unavailable"))),
+            }
+        }
+
+        // The coordinator (the pipeline head) runs here, overlapped with
+        // the workers. Catch a panic so the completion joins below still
+        // run; re-raise it afterwards.
+        let coord = catch_unwind(AssertUnwindSafe(coordinator));
+
+        for _ in 0..outstanding {
+            let (i, res) = self
+                .done_rx
+                .recv()
+                .expect("pool keeps a live done-sender; workers always report");
+            results[i] = Some(res);
+        }
+        let results = results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or_else(|| Err(anyhow!("pipeline worker {i} reported nothing"))))
+            .collect();
+        match coord {
+            Ok(r) => (r, results),
+            Err(p) => resume_unwind(p),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            w.tx.take(); // hang up; the worker loop exits on the recv error
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ordered gradient sinks
+// ---------------------------------------------------------------------------
 
 /// Accumulates per-microbatch gradients into a stage's [`GradBuffer`]
 /// in strict microbatch order, buffering early arrivals.
@@ -120,19 +283,30 @@ impl<'a> OrderedSink<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// One iteration through the pipeline
+// ---------------------------------------------------------------------------
+
 /// Run one full training iteration through the concurrent pipeline:
 /// forward + backward for every microbatch in `batches`, gradients
 /// accumulated into `grad_bufs` (index 0 = embed stage) in microbatch
 /// order. Returns the per-microbatch losses, index = microbatch.
 ///
-/// The caller refreshes `lits` for every stage beforehand; this function
-/// only reads it.
+/// `sched` selects the step tables (fill/drain or 1F1B); `watermark` is
+/// reset by the engine and counts every slot stash/release. The caller
+/// refreshes `lits` for every stage beforehand; this function only reads
+/// it. `pool` must hold at least `body_stages + 1` workers (embed + one
+/// per slot; the head runs on the calling thread).
+#[allow(clippy::too_many_arguments)]
 pub fn run_iteration(
+    pool: &mut WorkerPool,
     runtime: &Runtime,
     lits: &LiteralCache,
     batches: &[HostTensor],
     body_stages: usize,
     use_swaps: bool,
+    sched: PipelineSchedule,
+    watermark: &ActivationWatermark,
     grad_bufs: &mut [GradBuffer],
 ) -> Result<Vec<f32>> {
     let m = batches.len();
@@ -144,6 +318,12 @@ pub fn run_iteration(
         return Ok(Vec::new());
     }
     assert_eq!(grad_bufs.len(), l + 1, "one grad buffer per stage (embed + body)");
+    assert!(
+        pool.size() >= l + 1,
+        "worker pool holds {} workers but the pipeline needs {}",
+        pool.size(),
+        l + 1
+    );
 
     // Marshal every microbatch's token ids once; embed (fwd+bwd) and
     // head workers index this shared pool instead of re-converting.
@@ -152,6 +332,16 @@ pub fn run_iteration(
     let sinks: Vec<Mutex<OrderedSink>> =
         grad_bufs.iter_mut().map(|gb| Mutex::new(OrderedSink::new(gb))).collect();
 
+    // Forward-link capacity. Fill/drain needs the bound for backpressure
+    // (its tables forward everything as fast as upstream allows). 1F1B
+    // tables already cap how far any producer runs ahead (its warmup
+    // depth), so links are sized to never block — sends stay wait-free
+    // and the schedule is deadlock-free by construction.
+    let fwd_cap = match sched {
+        PipelineSchedule::FillDrain => FWD_CHANNEL_CAP,
+        PipelineSchedule::OneFOneB => m,
+    };
+
     // Forward link p: position p → p+1 (0 = embed, 1..=l = slots, head last).
     let mut ftx: Vec<Option<SyncSender<FwdMsg>>> = Vec::with_capacity(l + 1);
     let mut frx: Vec<Option<Receiver<FwdMsg>>> = Vec::with_capacity(l + 1);
@@ -159,7 +349,7 @@ pub fn run_iteration(
     let mut btx: Vec<Option<Sender<BwdMsg>>> = Vec::with_capacity(l + 1);
     let mut brx: Vec<Option<Receiver<BwdMsg>>> = Vec::with_capacity(l + 1);
     for _ in 0..=l {
-        let (t, r) = sync_channel(FWD_CHANNEL_CAP);
+        let (t, r) = sync_channel(fwd_cap);
         ftx.push(Some(t));
         frx.push(Some(r));
         let (t, r) = channel();
@@ -168,55 +358,51 @@ pub fn run_iteration(
     }
     let (aux_tx, aux_rx) = channel::<HeadGrads>();
 
-    let losses = std::thread::scope(|scope| {
-        let mut workers = Vec::with_capacity(l + 1);
+    let mut jobs: Vec<ScopedJob> = Vec::with_capacity(l + 1);
 
-        // --- embed worker (position 0) ---
-        {
-            let fwd_tx = ftx[0].take().expect("embed fwd link");
-            let bwd_rx = brx[0].take().expect("embed bwd link");
-            let (ids, sinks) = (&ids, &sinks);
-            workers.push(scope.spawn(move || {
-                embed_worker(runtime, lits, ids, m, fwd_tx, bwd_rx, aux_rx, sinks)
-            }));
-        }
+    // --- embed worker (position 0) ---
+    {
+        let fwd_tx = ftx[0].take().expect("embed fwd link");
+        let bwd_rx = brx[0].take().expect("embed bwd link");
+        let (ids, sinks) = (&ids, &sinks);
+        let table = schedule::step_table(sched, l, 0, m);
+        jobs.push(Box::new(move || {
+            embed_worker(runtime, lits, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
+        }));
+    }
 
-        // --- body slot workers (positions 1..=l) ---
-        for p in 1..=l {
-            let fwd_rx = frx[p - 1].take().expect("slot fwd in");
-            let fwd_tx = ftx[p].take().expect("slot fwd out");
-            let bwd_rx = brx[p].take().expect("slot bwd in");
-            let bwd_tx = btx[p - 1].take().expect("slot bwd out");
-            let sinks = &sinks;
-            workers.push(scope.spawn(move || {
-                slot_worker(
-                    runtime, lits, l, use_swaps, p - 1, m, fwd_rx, fwd_tx, bwd_rx, bwd_tx, sinks,
-                )
-            }));
-        }
+    // --- body slot workers (positions 1..=l) ---
+    for p in 1..=l {
+        let fwd_rx = frx[p - 1].take().expect("slot fwd in");
+        let fwd_tx = ftx[p].take().expect("slot fwd out");
+        let bwd_rx = brx[p].take().expect("slot bwd in");
+        let bwd_tx = btx[p - 1].take().expect("slot bwd out");
+        let sinks = &sinks;
+        let table = schedule::step_table(sched, l, p, m);
+        jobs.push(Box::new(move || {
+            slot_worker(
+                runtime, lits, l, use_swaps, p - 1, m, &table, watermark, fwd_rx, fwd_tx, bwd_rx,
+                bwd_tx, sinks,
+            )
+        }));
+    }
 
-        // --- head (runs on the coordinating thread) ---
-        let fwd_rx = frx[l].take().expect("head fwd in");
-        let bwd_tx = btx[l].take().expect("head bwd out");
-        let head_res = head_worker(runtime, lits, &ids, m, fwd_rx, bwd_tx, aux_tx);
+    // --- head (runs on the coordinating thread, fused fwd+bwd) ---
+    let fwd_rx = frx[l].take().expect("head fwd in");
+    let bwd_tx = btx[l].take().expect("head bwd out");
+    let ids_ref = &ids;
+    let (head_res, job_results) =
+        pool.scope(jobs, move || head_worker(runtime, lits, ids_ref, m, fwd_rx, bwd_tx, aux_tx));
 
-        let mut errs: Vec<anyhow::Error> = Vec::new();
-        for w in workers {
-            match w.join() {
-                Err(_) => errs.push(anyhow!("pipeline worker panicked")),
-                Ok(Err(e)) => errs.push(e),
-                Ok(Ok(())) => {}
-            }
+    let mut errs: Vec<anyhow::Error> = job_results.into_iter().filter_map(|r| r.err()).collect();
+    let losses = match head_res {
+        Ok(losses) if errs.is_empty() => losses,
+        Ok(_) => return Err(pick_root_cause(errs)),
+        Err(e) => {
+            errs.push(e);
+            return Err(pick_root_cause(errs));
         }
-        match head_res {
-            Ok(losses) if errs.is_empty() => Ok(losses),
-            Ok(_) => Err(pick_root_cause(errs)),
-            Err(e) => {
-                errs.push(e);
-                Err(pick_root_cause(errs))
-            }
-        }
-    })?;
+    };
 
     // Every stage must have accumulated every microbatch exactly once.
     for (i, sink) in sinks.iter().enumerate() {
@@ -240,14 +426,15 @@ fn pick_root_cause(mut errs: Vec<anyhow::Error>) -> anyhow::Error {
     errs.swap_remove(i)
 }
 
-/// Position 0: `embed_fwd` for every microbatch (pipeline fill), then
-/// join each returning `∂L/∂h0` with the head's stage-0 pieces and run
-/// `embed_bwd` (pipeline drain).
+/// Position 0: `embed_fwd` / `embed_bwd` in step-table order. A backward
+/// step joins the returning `∂L/∂h0` with the head's stage-0 pieces
+/// (which arrive on their own link, buffered until needed).
+#[allow(clippy::too_many_arguments)]
 fn embed_worker(
     runtime: &Runtime,
     lits: &LiteralCache,
     ids: &SharedLiterals,
-    m: usize,
+    table: &[Step],
     fwd_tx: SyncSender<FwdMsg>,
     bwd_rx: Receiver<BwdMsg>,
     aux_rx: Receiver<HeadGrads>,
@@ -256,35 +443,41 @@ fn embed_worker(
     let embed_fwd = runtime.executable("embed_fwd")?;
     let embed_bwd = runtime.executable("embed_bwd")?;
     let e = &lits.stage(0)[0];
-    for mb in 0..m {
-        let h0 = embed_fwd
-            .run_literals(&[e, &ids[mb]])?
-            .pop()
-            .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
-        fwd_tx.send(FwdMsg { mb, h: h0 }).map_err(|_| link_closed("embed→S1"))?;
-    }
     let mut aux: BTreeMap<usize, (HostTensor, HostTensor)> = BTreeMap::new();
-    for _ in 0..m {
-        let BwdMsg { mb, gh } = bwd_rx.recv().map_err(|_| link_closed("S1→embed"))?;
-        while !aux.contains_key(&mb) {
-            let g = aux_rx.recv().map_err(|_| link_closed("head→embed"))?;
-            aux.insert(g.mb, (g.gd, g.gnw));
+    for step in table {
+        match *step {
+            Step::Forward(mb) => {
+                let h0 = embed_fwd
+                    .run_literals(&[e, &ids[mb]])?
+                    .pop()
+                    .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+                fwd_tx.send(FwdMsg { mb, h: h0 }).map_err(|_| link_closed("embed→S1"))?;
+            }
+            Step::Backward(_) => {
+                let BwdMsg { mb, gh } = bwd_rx.recv().map_err(|_| link_closed("S1→embed"))?;
+                while !aux.contains_key(&mb) {
+                    let g = aux_rx.recv().map_err(|_| link_closed("head→embed"))?;
+                    aux.insert(g.mb, (g.gd, g.gnw));
+                }
+                let (gd, gnw) = aux.remove(&mb).expect("aux joined above");
+                let gh_lit = gh.to_literal()?;
+                let ge = embed_bwd
+                    .run_literals(&[e, &ids[mb], &gh_lit])?
+                    .pop()
+                    .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
+                sinks[0].lock().expect("grad sink lock").deposit(mb, &[ge, gd, gnw]);
+            }
         }
-        let (gd, gnw) = aux.remove(&mb).expect("aux joined above");
-        let gh_lit = gh.to_literal()?;
-        let ge = embed_bwd
-            .run_literals(&[e, &ids[mb], &gh_lit])?
-            .pop()
-            .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
-        sinks[0].lock().expect("grad sink lock").deposit(mb, &[ge, gd, gnw]);
     }
     Ok(())
 }
 
-/// Positions 1..=L: forward all microbatches through this slot's stage
-/// (which stage depends on the microbatch's route under CheckFree+
-/// swaps), then drain the backward passes, depositing each stage
-/// gradient into that stage's ordered sink.
+/// Positions 1..=L: forward/backward microbatches through this slot's
+/// stage (which stage depends on the microbatch's route under CheckFree+
+/// swaps) in step-table order. Forward steps stash the marshalled input
+/// activation; backward steps consume and release it — under 1F1B that
+/// keeps at most `warmup_forwards` stashes resident, under fill/drain
+/// all of them. Every stash/release is counted by `watermark`.
 #[allow(clippy::too_many_arguments)]
 fn slot_worker(
     runtime: &Runtime,
@@ -293,6 +486,8 @@ fn slot_worker(
     use_swaps: bool,
     slot: usize,
     m: usize,
+    table: &[Step],
+    watermark: &ActivationWatermark,
     fwd_rx: Receiver<FwdMsg>,
     fwd_tx: SyncSender<FwdMsg>,
     bwd_rx: Receiver<BwdMsg>,
@@ -305,52 +500,68 @@ fn slot_worker(
     // marshalled literal: the backward pass reuses it (the distributed
     // equivalent of the seed's `hs` stash).
     let mut stash: Vec<Option<xla::Literal>> = (0..m).map(|_| None).collect();
-    for _ in 0..m {
-        let FwdMsg { mb, h } = fwd_rx.recv().map_err(|_| link_closed("fwd into slot"))?;
-        let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
-        let h_lit = h.to_literal()?;
-        let h_out = {
-            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
-            args.push(&h_lit);
-            body_fwd
-                .run_literals(&args)?
-                .pop()
-                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
-        };
-        stash[mb] = Some(h_lit);
-        fwd_tx.send(FwdMsg { mb, h: h_out }).map_err(|_| link_closed("fwd out of slot"))?;
-    }
-    // Backward drain; `scratch` reuses the gradient read buffers across
-    // microbatches (no per-call allocation after the first).
+    // `scratch` reuses the gradient read buffers across microbatches
+    // (no per-call allocation after the first backward).
     let mut scratch: Vec<HostTensor> = Vec::new();
-    for _ in 0..m {
-        let BwdMsg { mb, gh } = bwd_rx.recv().map_err(|_| link_closed("bwd into slot"))?;
-        let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
-        let h_lit = stash[mb]
-            .take()
-            .ok_or_else(|| anyhow!("no stashed activation for microbatch {mb}"))?;
-        let gh_lit = gh.to_literal()?;
-        {
-            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
-            args.push(&h_lit);
-            args.push(&gh_lit);
-            body_bwd.run_literals_into(&args, &mut scratch)?;
+    for step in table {
+        match *step {
+            Step::Forward(want) => {
+                let FwdMsg { mb, h } =
+                    fwd_rx.recv().map_err(|_| link_closed("fwd into slot"))?;
+                debug_assert_eq!(mb, want, "upstream emits forwards in table order");
+                let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+                let h_lit = h.to_literal()?;
+                let h_out = {
+                    let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+                    args.push(&h_lit);
+                    body_fwd
+                        .run_literals(&args)?
+                        .pop()
+                        .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+                };
+                stash[mb] = Some(h_lit);
+                watermark.acquire();
+                fwd_tx
+                    .send(FwdMsg { mb, h: h_out })
+                    .map_err(|_| link_closed("fwd out of slot"))?;
+            }
+            Step::Backward(_) => {
+                let BwdMsg { mb, gh } =
+                    bwd_rx.recv().map_err(|_| link_closed("bwd into slot"))?;
+                let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+                let h_lit = stash[mb]
+                    .take()
+                    .ok_or_else(|| anyhow!("no stashed activation for microbatch {mb}"))?;
+                let gh_lit = gh.to_literal()?;
+                {
+                    let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+                    args.push(&h_lit);
+                    args.push(&gh_lit);
+                    body_bwd.run_literals_into(&args, &mut scratch)?;
+                }
+                drop(h_lit);
+                watermark.release();
+                if scratch.len() < 2 {
+                    return Err(anyhow!("body_bwd returned {} outputs", scratch.len()));
+                }
+                // scratch = [gh_out, gparams…]; gh_out moves downstream,
+                // the parameter gradients accumulate here.
+                let gh_out = std::mem::take(&mut scratch[0]);
+                sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch[1..]);
+                bwd_tx
+                    .send(BwdMsg { mb, gh: gh_out })
+                    .map_err(|_| link_closed("bwd out of slot"))?;
+            }
         }
-        if scratch.len() < 2 {
-            return Err(anyhow!("body_bwd returned {} outputs", scratch.len()));
-        }
-        // scratch = [gh_out, gparams…]; gh_out moves downstream, the
-        // parameter gradients accumulate here.
-        let gh_out = std::mem::take(&mut scratch[0]);
-        sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch[1..]);
-        bwd_tx.send(BwdMsg { mb, gh: gh_out }).map_err(|_| link_closed("bwd out of slot"))?;
     }
     Ok(())
 }
 
 /// Final position: `head_bwd` per microbatch as activations arrive —
 /// loss + `∂L/∂h` (sent back down the pipe) + stage-0 pieces (sent to
-/// the embed worker).
+/// the embed worker). The head stashes nothing, so its "step table" is
+/// simply one fused forward+backward per arriving microbatch in both
+/// schedules.
 fn head_worker(
     runtime: &Runtime,
     lits: &LiteralCache,
@@ -384,6 +595,7 @@ fn head_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn grads(vals: &[f32]) -> Vec<HostTensor> {
         vec![HostTensor::from_f32(vec![vals.len()], vals)]
@@ -453,5 +665,104 @@ mod tests {
         assert_eq!(pick_root_cause(errs).to_string(), "real failure");
         let only_links = vec![link_closed("a→b"), link_closed("b→c")];
         assert!(pick_root_cause(only_links).to_string().contains(LINK_CLOSED));
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_coordinator_concurrently() {
+        let mut pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = vec![
+            Box::new(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }),
+            Box::new(|| {
+                counter.fetch_add(10, Ordering::SeqCst);
+                Ok(())
+            }),
+        ];
+        let (coord, results) = pool.scope(jobs, || {
+            counter.fetch_add(100, Ordering::SeqCst);
+            Ok(counter.load(Ordering::SeqCst))
+        });
+        assert!(coord.is_ok());
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(counter.load(Ordering::SeqCst), 111);
+    }
+
+    #[test]
+    fn pool_reuses_the_same_threads_across_scopes() {
+        let mut pool = WorkerPool::new(2);
+        let ids = Mutex::new(Vec::new());
+        for _ in 0..3 {
+            let jobs: Vec<ScopedJob> = (0..2)
+                .map(|_| {
+                    let ids = &ids;
+                    Box::new(move || {
+                        ids.lock().unwrap().push(std::thread::current().id());
+                        Ok(())
+                    }) as ScopedJob
+                })
+                .collect();
+            let (coord, _) = pool.scope(jobs, || Ok(()));
+            coord.unwrap();
+        }
+        let seen = ids.into_inner().unwrap();
+        assert_eq!(seen.len(), 6, "3 scopes × 2 jobs");
+        let distinct: std::collections::HashSet<_> = seen.into_iter().collect();
+        assert_eq!(distinct.len(), 2, "keep-warm: every scope ran on the same 2 threads");
+    }
+
+    #[test]
+    fn pool_reports_job_errors_in_job_order() {
+        let mut pool = WorkerPool::new(3);
+        let jobs: Vec<ScopedJob> = vec![
+            Box::new(|| Ok(())),
+            Box::new(|| Err(anyhow!("job one broke"))),
+            Box::new(|| Ok(())),
+        ];
+        let (coord, results) = pool.scope(jobs, || Ok(7));
+        assert_eq!(coord.unwrap(), 7);
+        assert!(results[0].is_ok());
+        assert_eq!(results[1].as_ref().unwrap_err().to_string(), "job one broke");
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let mut pool = WorkerPool::new(1);
+        let jobs: Vec<ScopedJob> = vec![Box::new(|| panic!("boom"))];
+        let (coord, results) = pool.scope(jobs, || Ok(()));
+        assert!(coord.is_ok());
+        assert!(
+            results[0].as_ref().unwrap_err().to_string().contains("panicked"),
+            "panic surfaces as an error"
+        );
+        // The keep-warm thread must still be alive for the next scope.
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = vec![Box::new(|| {
+            done.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })];
+        let (coord, results) = pool.scope(jobs, || Ok(()));
+        assert!(coord.is_ok() && results[0].is_ok());
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pool_scope_joins_before_returning() {
+        // A job borrowing stack data must have finished by the time
+        // `scope` returns — mutate a stack value and observe it after.
+        let mut pool = WorkerPool::new(1);
+        let value = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = vec![Box::new(|| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            value.store(42, Ordering::SeqCst);
+            Ok(())
+        })];
+        let (coord, _) = pool.scope(jobs, || Ok(()));
+        coord.unwrap();
+        assert_eq!(value.load(Ordering::SeqCst), 42);
     }
 }

@@ -1,10 +1,13 @@
 //! Layer-3 coordinator: pipeline engine, microbatch schedules, trainer.
 //!
-//! * [`schedule`] — microbatch routes, incl. the CheckFree+ out-of-order
-//!   swap schedule (paper §4.3);
-//! * [`executor`] — the concurrent fill/drain pipeline executor (one
-//!   worker thread per pipeline position, bounded channels between
-//!   stages, deterministic microbatch-ordered gradient accumulation);
+//! * [`schedule`] — microbatch routes (incl. the CheckFree+ out-of-order
+//!   swap schedule, paper §4.3) and the deterministic per-position step
+//!   tables for the fill/drain and 1F1B pipeline schedules;
+//! * [`executor`] — the concurrent pipeline executor: a keep-warm worker
+//!   pool (one thread per pipeline position, reused across iterations)
+//!   driving the step tables over bounded channels, with
+//!   microbatch-ordered gradient accumulation and an activation
+//!   high-watermark;
 //! * [`engine`] — the pipeline-parallel training engine driving the PJRT
 //!   executables (embed/body/head fwd+bwd, gradient accumulation, Adam);
 //! * [`trainer`] — the leader loop tying engine + failure injector +

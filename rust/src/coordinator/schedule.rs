@@ -1,4 +1,8 @@
-//! Microbatch routes: the order body stages are applied to a microbatch.
+//! Microbatch schedules: *routes* (which body stage a microbatch meets in
+//! which pipeline slot) and *step tables* (the order each pipeline
+//! position interleaves forward and backward work).
+//!
+//! ## Routes
 //!
 //! Standard pipeline order is `S1, S2, …, SL` (with `S0` — embedding +
 //! deembedding — wrapped around both ends, paper §4.3 footnote 3).
@@ -9,6 +13,40 @@
 //! stands in the `S1` slot (and `S(L-1)` in the `SL` slot). The two stages
 //! learn each other's behaviour and a crashed boundary stage can be
 //! recovered by copying its swap partner.
+//!
+//! ## Step tables
+//!
+//! The concurrent executor gives every pipeline position (embed + one
+//! worker per body slot) a deterministic [`step_table`]: the exact
+//! sequence of [`Step::Forward`] / [`Step::Backward`] actions it performs
+//! for one iteration. Two [`PipelineSchedule`]s share that machinery:
+//!
+//! * **[`PipelineSchedule::FillDrain`]** (GPipe): all `m` forwards, then
+//!   all `m` backwards. Maximal overlap, but every slot stashes every
+//!   in-flight microbatch's activation until the drain — peak resident
+//!   activations grow **O(microbatches)** per slot.
+//! * **[`PipelineSchedule::OneFOneB`]** (1F1B, PipeDream-flush style):
+//!   [`warmup_forwards`] forwards to fill the pipe, then strict
+//!   backward/forward alternation, then the cooldown backwards. A
+//!   microbatch's activation is released by the *first* backward after
+//!   the pipe fills, so peak resident activations are bounded by the
+//!   position's distance to the head — **O(pipeline depth)**, independent
+//!   of the microbatch count.
+//!
+//! ```text
+//!            1F1B, 2 body slots, 4 microbatches  (Fx = forward mb x,
+//!                                                 Bx = backward mb x)
+//! embed  F0 F1 F2       B0 F3    B1       B2       B3
+//! slot0  ·  F0 F1       B0 F2    B1 F3    B2       B3        warmup 2
+//! slot1  ·  ·  F0 B0    F1 B1    F2 B2    F3 B3              warmup 1
+//! head   ·  ·  ·  F0B0  · F1B1   · F2B2   · F3B3             fused
+//! ```
+//!
+//! Both tables issue every microbatch's forward before its backward and
+//! keep forwards (and backwards) in ascending microbatch order per
+//! position, so per-stage gradient accumulation order — and therefore
+//! every f32 rounding decision — is identical across schedules and to the
+//! sequential reference.
 
 /// A route is the sequence of body-stage indices (1-based) a microbatch
 /// traverses between embedding and head.
@@ -84,6 +122,86 @@ pub fn swap_partner(stage: usize, body_stages: usize) -> Option<usize> {
         2 => Some(1),
         _ => None,
     }
+}
+
+/// One action in a pipeline position's per-iteration step table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Run the forward pass of microbatch `.0` through this position.
+    Forward(usize),
+    /// Run the backward pass of microbatch `.0` through this position.
+    Backward(usize),
+}
+
+/// How the concurrent executor orders each position's forward/backward
+/// work (see the module docs for the memory trade-off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineSchedule {
+    /// GPipe fill/drain: all forwards, then all backwards.
+    FillDrain,
+    /// 1F1B: warmup forwards, strict one-backward-one-forward steady
+    /// state, cooldown backwards.
+    OneFOneB,
+}
+
+/// Warmup forwards position `pos` issues under 1F1B before its first
+/// backward: its distance to the head, capped by the microbatch count.
+///
+/// Positions are `0` = embed, `1..=l` = body slots; the head is excluded
+/// (it runs a fused forward+backward and stashes nothing). The warmup
+/// count is exactly the position's peak of simultaneously in-flight
+/// (forwarded but not yet backwarded) microbatches, so it is also the
+/// 1F1B activation-memory bound for that position.
+pub fn warmup_forwards(body_stages: usize, pos: usize, m: usize) -> usize {
+    debug_assert!(pos <= body_stages, "pos {pos} out of range for {body_stages} slots");
+    (body_stages + 1 - pos).min(m)
+}
+
+/// Build the deterministic step table for pipeline position `pos`
+/// (`0` = embed, `1..=l` = body slots) of an `l`-slot pipeline running
+/// `m` microbatches under `kind`.
+///
+/// Invariants (property-tested below, relied on by the executor):
+/// * exactly one `Forward(j)` and one `Backward(j)` per microbatch `j`;
+/// * `Forward(j)` precedes `Backward(j)`;
+/// * forwards ascend in `j`, and so do backwards — per-stage order is
+///   identical to the sequential reference schedule, which is what keeps
+///   gradient accumulation (and f32 rounding) schedule-independent.
+pub fn step_table(kind: PipelineSchedule, body_stages: usize, pos: usize, m: usize) -> Vec<Step> {
+    let mut steps = Vec::with_capacity(2 * m);
+    match kind {
+        PipelineSchedule::FillDrain => {
+            steps.extend((0..m).map(Step::Forward));
+            steps.extend((0..m).map(Step::Backward));
+        }
+        PipelineSchedule::OneFOneB => {
+            let w = warmup_forwards(body_stages, pos, m);
+            steps.extend((0..w).map(Step::Forward));
+            for mb in 0..m - w {
+                steps.push(Step::Backward(mb));
+                steps.push(Step::Forward(w + mb));
+            }
+            steps.extend((m - w..m).map(Step::Backward));
+        }
+    }
+    steps
+}
+
+/// Peak number of simultaneously in-flight (forwarded, not yet
+/// backwarded) microbatches a step table implies — the activation
+/// high-watermark the executor's stash will hit at that position.
+pub fn peak_in_flight(table: &[Step]) -> usize {
+    let (mut cur, mut peak) = (0usize, 0usize);
+    for s in table {
+        match s {
+            Step::Forward(_) => {
+                cur += 1;
+                peak = peak.max(cur);
+            }
+            Step::Backward(_) => cur = cur.saturating_sub(1),
+        }
+    }
+    peak
 }
 
 #[cfg(test)]
@@ -220,6 +338,136 @@ mod tests {
                 let mut got = route(l, mb, true);
                 got.sort_unstable();
                 got == (1..=l).collect::<Vec<_>>()
+            },
+        );
+    }
+
+    /// Every invariant the executor relies on, for one table.
+    fn assert_table_well_formed(kind: PipelineSchedule, l: usize, pos: usize, m: usize) {
+        let table = step_table(kind, l, pos, m);
+        assert_eq!(table.len(), 2 * m, "{kind:?} l={l} pos={pos} m={m}: 2 steps per mb");
+
+        let mut fwd_seen = vec![false; m];
+        let mut bwd_seen = vec![false; m];
+        let (mut last_fwd, mut last_bwd) = (None, None);
+        for step in &table {
+            match *step {
+                Step::Forward(mb) => {
+                    assert!(!fwd_seen[mb], "{kind:?} l={l} pos={pos}: forward {mb} twice");
+                    fwd_seen[mb] = true;
+                    assert!(last_fwd < Some(mb), "forwards must ascend (sequential order)");
+                    last_fwd = Some(mb);
+                }
+                Step::Backward(mb) => {
+                    assert!(fwd_seen[mb], "backward {mb} issued before its forward");
+                    assert!(!bwd_seen[mb], "{kind:?} l={l} pos={pos}: backward {mb} twice");
+                    bwd_seen[mb] = true;
+                    assert!(last_bwd < Some(mb), "backwards must ascend (sequential order)");
+                    last_bwd = Some(mb);
+                }
+            }
+        }
+        assert!(fwd_seen.iter().all(|&x| x), "every forward issued");
+        assert!(bwd_seen.iter().all(|&x| x), "every backward issued");
+
+        let peak = peak_in_flight(&table);
+        match kind {
+            PipelineSchedule::FillDrain => assert_eq!(peak, m, "fill/drain stashes everything"),
+            PipelineSchedule::OneFOneB => assert_eq!(
+                peak,
+                warmup_forwards(l, pos, m),
+                "1F1B peak is the warmup depth, independent of m"
+            ),
+        }
+    }
+
+    #[test]
+    fn step_tables_exhaustive_small() {
+        for l in 1..=6 {
+            for m in 0..=12 {
+                for pos in 0..=l {
+                    assert_table_well_formed(PipelineSchedule::FillDrain, l, pos, m);
+                    assert_table_well_formed(PipelineSchedule::OneFOneB, l, pos, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_matches_module_diagram() {
+        use Step::{Backward as B, Forward as F};
+        // l=2, m=4 — the worked example in the module docs.
+        assert_eq!(
+            step_table(PipelineSchedule::OneFOneB, 2, 0, 4),
+            vec![F(0), F(1), F(2), B(0), F(3), B(1), B(2), B(3)]
+        );
+        assert_eq!(
+            step_table(PipelineSchedule::OneFOneB, 2, 1, 4),
+            vec![F(0), F(1), B(0), F(2), B(1), F(3), B(2), B(3)]
+        );
+        assert_eq!(
+            step_table(PipelineSchedule::OneFOneB, 2, 2, 4),
+            vec![F(0), B(0), F(1), B(1), F(2), B(2), F(3), B(3)]
+        );
+    }
+
+    #[test]
+    fn one_f_one_b_degenerates_to_fill_drain_when_pipe_deeper_than_batch() {
+        // m ≤ warmup: the pipe never fills, so 1F1B IS fill/drain.
+        assert_eq!(
+            step_table(PipelineSchedule::OneFOneB, 6, 0, 3),
+            step_table(PipelineSchedule::FillDrain, 6, 0, 3)
+        );
+    }
+
+    #[test]
+    fn warmup_shrinks_toward_head() {
+        // Deeper positions wait on fewer downstream stages: w(pos) =
+        // l + 1 - pos, so adjacent positions differ by exactly one.
+        let (l, m) = (5, 32);
+        for pos in 0..l {
+            assert_eq!(
+                warmup_forwards(l, pos, m),
+                warmup_forwards(l, pos + 1, m) + 1
+            );
+        }
+        assert_eq!(warmup_forwards(l, l, m), 1, "last slot runs strict 1F1B");
+    }
+
+    #[test]
+    fn property_step_tables_well_formed() {
+        crate::util::propcheck::forall(
+            "step-table-well-formed",
+            400,
+            777,
+            |r, size| {
+                let l = 1 + r.below(size.max(1));
+                (l, r.below(l + 1), r.below(64), r.uniform() < 0.5)
+            },
+            |&(l, pos, m, one_f_one_b)| {
+                let kind = if one_f_one_b {
+                    PipelineSchedule::OneFOneB
+                } else {
+                    PipelineSchedule::FillDrain
+                };
+                assert_table_well_formed(kind, l, pos, m);
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn property_one_f_one_b_peak_bounded_by_depth_not_microbatches() {
+        crate::util::propcheck::forall(
+            "1f1b-peak-depth-bound",
+            300,
+            4242,
+            |r, size| (1 + r.below(size.max(1)), r.below(128)),
+            |&(l, m)| {
+                (0..=l).all(|pos| {
+                    let t = step_table(PipelineSchedule::OneFOneB, l, pos, m);
+                    peak_in_flight(&t) <= l + 1 - pos
+                })
             },
         );
     }

@@ -4,7 +4,7 @@
 //! checkfree train    [--model M] [--strategy S] [--iterations N]
 //!                    [--failure-rate R] [--microbatches K] [--seed X]
 //!                    [--checkpoint-every C] [--reinit KIND]
-//!                    [--exec-mode sequential|pipelined]
+//!                    [--exec-mode sequential|pipelined|pipelined-1f1b]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2

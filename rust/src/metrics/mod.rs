@@ -1,13 +1,73 @@
-//! Run metrics: loss curves, events, throughput accounting, CSV emission.
+//! Run metrics: loss curves, events, throughput accounting, the
+//! activation high-watermark, CSV emission.
 //!
 //! Every experiment harness (`examples/fig*`, `examples/table*`) records
 //! through this module and writes `results/<id>.csv`, so the paper's
-//! figures can be regenerated from flat files.
+//! figures can be regenerated from flat files. The concurrent executor
+//! additionally reports its peak resident activations through
+//! [`ActivationWatermark`] — the number that distinguishes the fill/drain
+//! schedule's O(microbatches) memory from 1F1B's O(pipeline depth).
 
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::{Context, Result};
+
+/// Concurrent high-watermark counter for resident activations.
+///
+/// Every pipeline slot worker calls [`acquire`](Self::acquire) when it
+/// stashes a microbatch's input activation for the backward pass and
+/// [`release`](Self::release) when the backward pass consumes it. The
+/// counter is shared across all worker threads of one engine, so
+/// [`peak`](Self::peak) is the *global* maximum of simultaneously
+/// resident activations during an iteration — the executor's actual
+/// memory footprint in activation units, and the metric the 1F1B
+/// acceptance gate compares across schedules (`BENCH_hot_path.json`,
+/// see `docs/BENCHMARKS.md`).
+///
+/// The engine resets it at the top of each `train_iteration`; the
+/// sequential reference path never stashes across microbatches, so it
+/// reports 0 by construction.
+#[derive(Debug, Default)]
+pub struct ActivationWatermark {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ActivationWatermark {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget both counters (top of an iteration).
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::SeqCst);
+        self.peak.store(0, Ordering::SeqCst);
+    }
+
+    /// One more activation became resident.
+    pub fn acquire(&self) {
+        let now = self.current.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// One resident activation was consumed/freed.
+    pub fn release(&self) {
+        let prev = self.current.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "activation watermark released below zero");
+    }
+
+    /// Activations resident right now (0 between iterations).
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::SeqCst)
+    }
+
+    /// Peak simultaneous residency since the last [`reset`](Self::reset).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
 
 /// One recorded training-run point.
 #[derive(Debug, Clone)]
@@ -167,6 +227,45 @@ pub fn comparison_csv(runs: &[&RunRecord], val: bool) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn watermark_tracks_peak_not_current() {
+        let w = ActivationWatermark::new();
+        w.acquire();
+        w.acquire();
+        w.acquire();
+        w.release();
+        w.acquire();
+        assert_eq!(w.current(), 3);
+        assert_eq!(w.peak(), 3, "peak reached before the release");
+        w.release();
+        w.release();
+        w.release();
+        assert_eq!(w.current(), 0);
+        assert_eq!(w.peak(), 3, "peak survives full drain");
+        w.reset();
+        assert_eq!((w.current(), w.peak()), (0, 0));
+    }
+
+    #[test]
+    fn watermark_is_exact_under_contention() {
+        // N threads each acquire/release in a tight loop around a
+        // barrier-aligned plateau: the peak must be exactly N.
+        let w = ActivationWatermark::new();
+        let n = 4;
+        let barrier = std::sync::Barrier::new(n);
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    w.acquire();
+                    barrier.wait(); // all N resident at once
+                    w.release();
+                });
+            }
+        });
+        assert_eq!(w.peak(), n);
+        assert_eq!(w.current(), 0);
+    }
 
     fn record() -> RunRecord {
         let mut r = RunRecord::new("checkfree");

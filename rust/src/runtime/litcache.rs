@@ -11,9 +11,10 @@
 //! any work. Validation and eval between optimizer steps therefore hit
 //! the cache, as does every microbatch of an iteration.
 //!
-//! The cache is read-shared across the pipeline executor's stage worker
-//! threads (all refreshes happen on the coordinator thread before the
-//! workers spawn).
+//! The cache is read-shared across the pipeline executor's keep-warm
+//! worker threads: all refreshes happen on the coordinator thread
+//! before an iteration's jobs are dispatched to the pool, so workers
+//! only ever read it (`&LiteralCache` across the scope, no locking).
 
 use crate::runtime::HostTensor;
 use crate::Result;

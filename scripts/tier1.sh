@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): release build + test suite +
-# clippy + a smoke train_iteration timing check that also refreshes
-# BENCH_hot_path.json.
+# clippy + docs/format gate + a smoke train_iteration timing check that
+# also refreshes BENCH_hot_path.json.
 #
-# Usage: scripts/tier1.sh [--no-smoke]
+# Usage: scripts/tier1.sh [--no-smoke] [--docs]
+#   --no-smoke  skip the timing smoke run
+#   --docs      run ONLY the documentation/format gate (fast local check)
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -14,6 +16,23 @@ if ! command -v cargo >/dev/null 2>&1; then
     echo "       Run tier-1 in the rust_pallas toolchain image (needs cargo + vendored" >&2
     echo "       'anyhow' and 'xla' crates + PJRT CPU plugin; see rust/Cargo.toml)." >&2
     exit 1
+fi
+
+docs_gate() {
+    echo "== cargo doc --no-deps (deny rustdoc warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+    echo "== cargo fmt --check =="
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --all -- --check
+    else
+        echo "rustfmt unavailable; skipping format gate" >&2
+    fi
+}
+
+if [[ "${1:-}" == "--docs" ]]; then
+    docs_gate
+    echo "docs gate OK"
+    exit 0
 fi
 
 echo "== cargo build --release =="
@@ -29,8 +48,10 @@ else
     echo "clippy unavailable; skipping lint gate" >&2
 fi
 
+docs_gate
+
 if [[ "${1:-}" != "--no-smoke" ]]; then
-    echo "== smoke train_iteration timing (tiny, 4 microbatches, seq vs pipelined) =="
+    echo "== smoke train_iteration timing (tiny, 4 microbatches, seq vs pipelined vs 1F1B) =="
     cargo bench --bench hot_path -- --smoke
     echo "Smoke results in BENCH_hot_path.smoke.json (gitignored); run the full"
     echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
