@@ -7,10 +7,14 @@
 //! `sequential` is the seed's reference schedule, `pipelined` the GPipe
 //! fill/drain worker pool, `pipelined-1f1b` the 1F1B interleaved
 //! schedule. The speedups over sequential (≥4 microbatches so the pipe
-//! actually fills) are the numbers the acceptance criteria track, and
-//! the activation high-watermark section records peak resident
-//! activations of both pipelined schedules at 8 microbatches — the
-//! 1F1B memory gate (see docs/BENCHMARKS.md). Results are written to
+//! actually fills) are the numbers the acceptance criteria track, the
+//! activation high-watermark section records peak resident activations
+//! of both pipelined schedules at 8 microbatches — the 1F1B memory gate
+//! — and the `device_residency` section records per-iteration host-sync
+//! counts and bytes moved for the device-resident activation plane vs
+//! the `--host-staging` baseline: the device gate requires 1F1B's
+//! device-resident host syncs strictly below the host-staging path's
+//! (see docs/BENCHMARKS.md). Results are written to
 //! `BENCH_hot_path.json` at the repo root so future PRs can diff the
 //! perf trajectory.
 //!
@@ -43,6 +47,7 @@ fn main() {
     let mut speedups: Vec<(String, f64)> = Vec::new();
     let mut speedups_1f1b: Vec<(String, f64)> = Vec::new();
     let mut watermarks: Vec<(String, Json)> = Vec::new();
+    let mut residency: Vec<(String, Json)> = Vec::new();
 
     'models: for &model in models {
         let mut mode_means: Vec<(ExecMode, f64)> = Vec::new();
@@ -177,6 +182,77 @@ fn main() {
                 ]),
             ));
         }
+
+        // Device residency: per-iteration transfer-ledger deltas of a
+        // steady-state iteration (the 2nd — the 1st pays the first param
+        // upload) for each mode, plus the host-staging baseline. Gate:
+        // device-resident 1F1B host syncs strictly below host-staging's.
+        let transfers_of =
+            |mode: ExecMode, host_staging: bool| -> Option<checkfree::metrics::TransferSnapshot> {
+                let cfg = TrainConfig {
+                    model: model.into(),
+                    strategy: Strategy::CheckFree,
+                    microbatches_per_iter: MICROBATCHES,
+                    exec_mode: mode,
+                    host_staging,
+                    ..TrainConfig::default()
+                };
+                let mut e = match PipelineEngine::from_config(&cfg) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        eprintln!("residency run skipped ({model}, {}): {err:#}", mode.label());
+                        return None;
+                    }
+                };
+                if let Err(err) = e.train_iteration() {
+                    eprintln!("residency warmup failed ({model}, {}): {err:#}", mode.label());
+                    return None;
+                }
+                let before = e.transfer_ledger().snapshot();
+                if let Err(err) = e.train_iteration() {
+                    eprintln!("residency run failed ({model}, {}): {err:#}", mode.label());
+                    return None;
+                }
+                Some(e.transfer_ledger().snapshot().since(&before))
+            };
+        let transfers_json = |d: &checkfree::metrics::TransferSnapshot| {
+            Json::obj(vec![
+                ("host_syncs", Json::num(d.host_syncs as f64)),
+                ("uploads", Json::num(d.uploads as f64)),
+                ("bytes_down", Json::num(d.bytes_down as f64)),
+                ("bytes_up", Json::num(d.bytes_up as f64)),
+                ("forced_tuple_roundtrips", Json::num(d.forced_tuple_roundtrips as f64)),
+            ])
+        };
+        let seq = transfers_of(ExecMode::Sequential, false);
+        let fd = transfers_of(ExecMode::Pipelined, false);
+        let ob = transfers_of(ExecMode::Pipelined1F1B, false);
+        let ob_host = transfers_of(ExecMode::Pipelined1F1B, true);
+        if let (Some(seq), Some(fd), Some(ob), Some(ob_host)) = (seq, fd, ob, ob_host) {
+            println!(
+                "  {model}: host syncs/iter @ {MICROBATCHES} mb — sequential {}, \
+                 fill/drain {}, 1F1B {}, 1F1B host-staging {} (gate: {} < {})\n",
+                seq.host_syncs,
+                fd.host_syncs,
+                ob.host_syncs,
+                ob_host.host_syncs,
+                ob.host_syncs,
+                ob_host.host_syncs,
+            );
+            residency.push((
+                model.to_string(),
+                Json::obj(vec![
+                    ("sequential", transfers_json(&seq)),
+                    ("pipelined", transfers_json(&fd)),
+                    ("pipelined-1f1b", transfers_json(&ob)),
+                    ("pipelined-1f1b-host-staging", transfers_json(&ob_host)),
+                    (
+                        "gate_1f1b_device_syncs_below_host_staging",
+                        Json::Bool(ob.host_syncs < ob_host.host_syncs),
+                    ),
+                ]),
+            ));
+        }
     }
 
     // Rust-side hot pieces in isolation (e2e body-stage sizes).
@@ -238,6 +314,14 @@ fn main() {
             Json::obj(
                 std::iter::once(("microbatches", Json::num(WATERMARK_MB as f64)))
                     .chain(watermarks.iter().map(|(m, j)| (m.as_str(), j.clone())))
+                    .collect(),
+            ),
+        ),
+        (
+            "device_residency",
+            Json::obj(
+                std::iter::once(("microbatches", Json::num(MICROBATCHES as f64)))
+                    .chain(residency.iter().map(|(m, j)| (m.as_str(), j.clone())))
                     .collect(),
             ),
         ),

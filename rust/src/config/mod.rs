@@ -118,6 +118,33 @@ impl FromStr for ExecMode {
     }
 }
 
+/// Where pipeline activations live between stages (orthogonal to
+/// [`ExecMode`]: any schedule can run either plane).
+///
+/// Bitwise-identical results either way — staging moves bytes, never
+/// changes them; only wall-clock and the transfer ledger differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Staging {
+    /// Activations stay PJRT-device-resident between stages; host syncs
+    /// happen only at the loss/gradient/validation boundaries and on
+    /// recovery. The default.
+    Device,
+    /// Every stage boundary round-trips through host tensors — the
+    /// pre-device-plane behaviour, kept as the `--host-staging` escape
+    /// hatch (A/B perf baseline, and the fallback if a PJRT plugin
+    /// mishandles untupled outputs; see `runtime` module docs).
+    Host,
+}
+
+impl Staging {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Staging::Device => "device-resident",
+            Staging::Host => "host-staging",
+        }
+    }
+}
+
 /// Reinitialization rule for a lost intermediate stage (paper Fig 2
 /// ablation: random / copy / weighted averaging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -234,6 +261,9 @@ pub struct TrainConfig {
     /// Microbatch scheduling: 1F1B interleaved pipeline (default),
     /// fill/drain pipeline, or the sequential reference path.
     pub exec_mode: ExecMode,
+    /// Escape hatch: stage activations through host tensors instead of
+    /// keeping them device-resident (see [`Staging`]).
+    pub host_staging: bool,
 }
 
 impl Default for TrainConfig {
@@ -253,6 +283,7 @@ impl Default for TrainConfig {
             recovery_lr_boost: 1.1,
             eval_every: 10,
             exec_mode: ExecMode::Pipelined1F1B,
+            host_staging: false,
         }
     }
 }
@@ -288,7 +319,20 @@ impl TrainConfig {
             ("recovery_lr_boost", Json::num(self.recovery_lr_boost as f64)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("exec_mode", Json::str(self.exec_mode.label())),
+            ("host_staging", Json::Bool(self.host_staging)),
         ])
+    }
+
+    /// The activation plane this run uses. Derived from the
+    /// `host_staging` escape hatch — except that [`ExecMode::Sequential`]
+    /// always host-stages: the sequential mode is the host-staged
+    /// reference by definition, so the knob is ignored there.
+    pub fn staging(&self) -> Staging {
+        if self.host_staging || self.exec_mode == ExecMode::Sequential {
+            Staging::Host
+        } else {
+            Staging::Device
+        }
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -349,6 +393,10 @@ impl TrainConfig {
             exec_mode: match v.opt("exec_mode") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.exec_mode,
+            },
+            host_staging: match v.opt("host_staging") {
+                Some(x) => x.as_bool()?,
+                None => d.host_staging,
             },
         })
     }
@@ -494,6 +542,28 @@ mod tests {
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
         assert_eq!(cfg.exec_mode, ExecMode::Pipelined1F1B);
+    }
+
+    #[test]
+    fn host_staging_defaults_off_and_roundtrips() {
+        let d = TrainConfig::default();
+        assert!(!d.host_staging);
+        assert_eq!(d.staging(), Staging::Device);
+        let cfg = TrainConfig { host_staging: true, ..TrainConfig::default() };
+        assert_eq!(cfg.staging(), Staging::Host);
+        // Sequential is the host-staged reference: it ignores the knob.
+        let cfg = TrainConfig { exec_mode: ExecMode::Sequential, ..TrainConfig::default() };
+        assert_eq!(cfg.staging(), Staging::Host);
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(&cfg.to_json().to_string()).unwrap())
+                .unwrap();
+        assert!(back.host_staging);
+        // absent key → default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert!(!back.host_staging);
+        assert_ne!(Staging::Device.label(), Staging::Host.label());
     }
 
     #[test]

@@ -28,14 +28,30 @@
 //! [`crate::metrics::ActivationWatermark`]
 //! (see [`PipelineEngine::peak_resident_activations`]).
 //!
+//! ## Activation plane
+//!
+//! The pipelined modes default to the **device-resident** plane
+//! ([`crate::config::Staging::Device`]): stage parameters are served as
+//! cached device buffers, activations chain between stages as PJRT
+//! buffers, and host syncs happen **only** at the loss / gradient /
+//! validation boundaries — the places where the host-side optimizer and
+//! CheckFree's recovery math genuinely need the numbers. Recovery stays
+//! host-side by design (weighted averaging reads host params, unchanged
+//! numerically); its writes bump `params_version`, which invalidates
+//! host literals *and* device mirrors alike. `--host-staging` flips the
+//! pipelined modes back to host tensors at every boundary; the
+//! sequential reference path always stages through host. Every crossing
+//! is billed to the engine's [`crate::metrics::TransferLedger`].
+//!
 //! All modes read parameters through the versioned
-//! [`crate::runtime::LiteralCache`] (marshalled once per parameter
-//! rewrite, not per call) and all produce **bitwise-identical**
-//! results: per-microbatch compute is the same, per-position step
-//! tables keep forwards and backwards in ascending microbatch order,
-//! and gradient accumulation is forced into microbatch order (see
-//! `executor::OrderedSink`), so f32 rounding cannot depend on thread
-//! scheduling.
+//! [`crate::runtime::LiteralCache`] (marshalled/uploaded once per
+//! parameter rewrite, not per call) and all produce
+//! **bitwise-identical** results: per-microbatch compute is the same,
+//! per-position step tables keep forwards and backwards in ascending
+//! microbatch order, and gradient accumulation is forced into
+//! microbatch order (see `executor::OrderedSink`), so f32 rounding
+//! cannot depend on thread scheduling — and staging moves bytes without
+//! changing them, so the plane cannot change results either.
 //!
 //! The engine itself is failure-oblivious: the [`super::trainer`] injects
 //! failures and calls a [`crate::recovery::RecoveryStrategy`] to rebuild
@@ -43,14 +59,14 @@
 
 use std::cell::RefCell;
 
-use crate::config::{ExecMode, TrainConfig};
+use crate::config::{ExecMode, Staging, TrainConfig};
 use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
-use crate::metrics::ActivationWatermark;
+use crate::metrics::{ActivationWatermark, TransferLedger};
 use crate::model::{GradBuffer, Stage};
 use crate::rng::Rng;
-use crate::runtime::{HostTensor, LiteralCache, Runtime};
+use crate::runtime::{DeviceBuffer, DevicePlane, HostTensor, LiteralCache, Runtime};
 use crate::{anyhow, Context, Result};
 
 /// Result of one training iteration.
@@ -81,6 +97,9 @@ pub struct PipelineEngine {
     pub use_swaps: bool,
     pub microbatches: usize,
     pub exec_mode: ExecMode,
+    /// Which activation plane the pipelined modes run
+    /// (`--host-staging` escape hatch; sequential always host-stages).
+    staging: Staging,
     /// Keep-warm pipeline workers, spawned on the first pipelined
     /// iteration and reused by every later one (no per-iteration thread
     /// spawning on the hot path).
@@ -88,6 +107,10 @@ pub struct PipelineEngine {
     /// Peak stashed slot activations, reset per iteration (see
     /// [`Self::peak_resident_activations`]).
     activations: ActivationWatermark,
+    /// Cumulative device↔host transfer accounting (see
+    /// [`Self::transfer_ledger`]); diff snapshots for per-iteration
+    /// numbers.
+    ledger: TransferLedger,
 }
 
 impl PipelineEngine {
@@ -117,6 +140,7 @@ impl PipelineEngine {
             mc.context,
             mc.vocab,
         );
+        let ledger = TransferLedger::new(stages.len());
         Ok(Self {
             runtime,
             stages,
@@ -128,8 +152,10 @@ impl PipelineEngine {
             use_swaps: cfg.strategy.uses_swaps(),
             microbatches: cfg.microbatches_per_iter,
             exec_mode: cfg.exec_mode,
+            staging: cfg.staging(),
             worker_pool: None,
             activations: ActivationWatermark::new(),
+            ledger,
         })
     }
 
@@ -158,17 +184,57 @@ impl PipelineEngine {
         Ok(())
     }
 
+    /// Like [`Self::refresh_cache`], but also brings every stage's
+    /// **device-resident** parameter buffers up to date (same version
+    /// protocol; uploads exactly the stages that were rewritten).
+    fn refresh_cache_device(&self, plane: &DevicePlane) -> Result<()> {
+        let mut cache = self.lit_cache.borrow_mut();
+        for (i, s) in self.stages.iter().enumerate() {
+            cache.refresh_device(plane, i, s.params_version(), &s.params)?;
+        }
+        Ok(())
+    }
+
     /// `(hits, misses)` of the parameter-literal cache — invalidation
     /// tests and the perf report read this.
     pub fn literal_cache_stats(&self) -> (u64, u64) {
         self.lit_cache.borrow().stats()
     }
 
+    /// `(hits, misses)` of the cache's device-buffer side.
+    pub fn literal_cache_device_stats(&self) -> (u64, u64) {
+        self.lit_cache.borrow().device_stats()
+    }
+
+    /// Cumulative device↔host transfer accounting for this engine —
+    /// host-sync counts, uploads, and bytes, per stage. Counters only
+    /// grow (like [`Runtime::exec_stats`]); diff
+    /// [`crate::metrics::TransferLedger::snapshot`]s around an iteration
+    /// for per-iteration numbers.
+    pub fn transfer_ledger(&self) -> &TransferLedger {
+        &self.ledger
+    }
+
+    /// The activation plane the pipelined modes run on.
+    pub fn staging(&self) -> Staging {
+        self.staging
+    }
+
+    /// Batches in the held-out validation set ([`Self::validate`] runs
+    /// one forward pass — and, on the device plane, exactly one host
+    /// sync — per batch).
+    pub fn validation_batches(&self) -> usize {
+        self.val_set.len()
+    }
+
     /// Sequential reference path: full forward + backward of one
     /// microbatch along `route`; accumulates gradients into every
-    /// stage's buffer, returns the loss.
+    /// stage's buffer, returns the loss. Always host-staged (it *is*
+    /// the host-staging reference); every call's transfer tax is billed
+    /// to `plane`'s ledger.
     fn microbatch_pass(
         runtime: &Runtime,
+        plane: &DevicePlane,
         cache: &LiteralCache,
         grad_bufs: &mut [GradBuffer],
         ids: &HostTensor,
@@ -180,6 +246,7 @@ impl PipelineEngine {
 
         // ---- forward ----
         let embed_fwd = runtime.executable("embed_fwd")?;
+        embed_fwd.meter_host_call(plane, 0);
         let h0 = embed_fwd
             .run_literals(&[e, &ids_lit])?
             .pop()
@@ -193,6 +260,7 @@ impl PipelineEngine {
             let h_out = {
                 let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
                 args.push(&h_lit);
+                body_fwd.meter_host_call(plane, s);
                 body_fwd
                     .run_literals(&args)?
                     .pop()
@@ -204,6 +272,7 @@ impl PipelineEngine {
         // ---- head: loss + gradients wrt (h, deembed, final_norm) ----
         let head_bwd = runtime.executable("head_bwd")?;
         let h_last = hs.last().expect("nonempty").to_literal()?;
+        head_bwd.meter_host_call(plane, 0);
         let mut outs = head_bwd.run_literals(&[d, nw, &h_last, &ids_lit])?;
         if outs.len() != 4 {
             return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
@@ -222,6 +291,7 @@ impl PipelineEngine {
                 let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
                 args.push(&h_lit);
                 args.push(&gh_lit);
+                body_bwd.meter_host_call(plane, s);
                 body_bwd.run_literals(&args)?
             };
             // (gh, gparams…)
@@ -233,6 +303,7 @@ impl PipelineEngine {
         // ---- embedding backward ----
         let embed_bwd = runtime.executable("embed_bwd")?;
         let gh_lit = gh.to_literal()?;
+        embed_bwd.meter_host_call(plane, 0);
         let ge = embed_bwd
             .run_literals(&[e, &ids_lit, &gh_lit])?
             .pop()
@@ -250,7 +321,6 @@ impl PipelineEngine {
         // data stream is independent of the scheduling backend.
         let batches: Vec<HostTensor> =
             (0..self.microbatches).map(|_| self.data.next_batch()).collect();
-        self.refresh_cache()?;
         self.activations.reset();
 
         let sched = match self.exec_mode {
@@ -258,8 +328,14 @@ impl PipelineEngine {
             ExecMode::Pipelined => Some(PipelineSchedule::FillDrain),
             ExecMode::Pipelined1F1B => Some(PipelineSchedule::OneFOneB),
         };
+        let staging = self.staging;
         let losses: Vec<f32> = match sched {
             Some(kind) if self.stages.len() >= 2 => {
+                let plane = self.runtime.device_plane(&self.ledger);
+                match staging {
+                    Staging::Device => self.refresh_cache_device(&plane)?,
+                    Staging::Host => self.refresh_cache()?,
+                }
                 if self.worker_pool.is_none() {
                     // Embed + one worker per body slot; the head runs on
                     // this thread. Spawned once, reused every iteration.
@@ -270,16 +346,20 @@ impl PipelineEngine {
                 executor::run_iteration(
                     pool,
                     &self.runtime,
+                    &plane,
                     &cache,
                     &batches,
                     self.stages.len() - 1,
                     self.use_swaps,
                     kind,
+                    staging,
                     &self.activations,
                     &mut self.grad_bufs,
                 )?
             }
             _ => {
+                self.refresh_cache()?;
+                let plane = self.runtime.device_plane(&self.ledger);
                 let cache = self.lit_cache.borrow();
                 let body_stages = self.stages.len() - 1;
                 let mut ls = Vec::with_capacity(batches.len());
@@ -287,6 +367,7 @@ impl PipelineEngine {
                     let route = schedule::route(body_stages, mb, self.use_swaps);
                     ls.push(Self::microbatch_pass(
                         &self.runtime,
+                        &plane,
                         &cache,
                         &mut self.grad_bufs,
                         ids,
@@ -327,13 +408,55 @@ impl PipelineEngine {
 
     /// Forward-only loss of one batch (standard route), served from the
     /// literal cache — repeated validation stops re-marshalling
-    /// parameters.
+    /// parameters. On the device plane the whole forward chain stays
+    /// resident and the **only** host sync is the loss scalar (the
+    /// validation boundary).
     pub fn eval_loss(&self, ids: &HostTensor) -> Result<f32> {
+        match self.staging {
+            Staging::Device => self.eval_loss_device(ids),
+            Staging::Host => self.eval_loss_host(ids),
+        }
+    }
+
+    fn eval_loss_device(&self, ids: &HostTensor) -> Result<f32> {
+        let plane = self.runtime.device_plane(&self.ledger);
+        self.refresh_cache_device(&plane)?;
+        let cache = self.lit_cache.borrow();
+        let ids_buf = plane.upload(0, ids)?;
+        let st0 = cache.stage_buffers(0);
+        let embed_fwd = self.runtime.executable("embed_fwd")?;
+        let mut h = embed_fwd
+            .execute_buffers(&plane, 0, &[&st0[0], &ids_buf])?
+            .pop()
+            .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+        let body_fwd = self.runtime.executable("body_fwd")?;
+        for s in 1..self.stages.len() {
+            h = {
+                let mut args: Vec<&DeviceBuffer> = cache.stage_buffers(s).iter().collect();
+                args.push(&h);
+                body_fwd
+                    .execute_buffers(&plane, s, &args)?
+                    .pop()
+                    .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+            };
+        }
+        let head_fwd = self.runtime.executable("head_fwd")?;
+        head_fwd
+            .execute_buffers(&plane, 0, &[&st0[1], &st0[2], &h, &ids_buf])?
+            .pop()
+            .ok_or_else(|| anyhow!("head_fwd returned nothing"))?
+            .to_host(&plane, 0)? // the validation-boundary sync
+            .scalar_f32()
+    }
+
+    fn eval_loss_host(&self, ids: &HostTensor) -> Result<f32> {
         self.refresh_cache()?;
+        let plane = self.runtime.device_plane(&self.ledger);
         let cache = self.lit_cache.borrow();
         let ids_lit = ids.to_literal()?;
         let st0 = cache.stage(0);
         let embed_fwd = self.runtime.executable("embed_fwd")?;
+        embed_fwd.meter_host_call(&plane, 0);
         let mut h = embed_fwd
             .run_literals(&[&st0[0], &ids_lit])?
             .pop()
@@ -344,6 +467,7 @@ impl PipelineEngine {
             h = {
                 let mut args: Vec<&xla::Literal> = cache.stage(s).iter().collect();
                 args.push(&h_lit);
+                body_fwd.meter_host_call(&plane, s);
                 body_fwd
                     .run_literals(&args)?
                     .pop()
@@ -352,6 +476,7 @@ impl PipelineEngine {
         }
         let head_fwd = self.runtime.executable("head_fwd")?;
         let h_lit = h.to_literal()?;
+        head_fwd.meter_host_call(&plane, 0);
         head_fwd.run_literals(&[&st0[1], &st0[2], &h_lit, &ids_lit])?[0].scalar_f32()
     }
 
@@ -382,11 +507,12 @@ mod tests {
     use super::*;
     use crate::config::Strategy;
 
-    fn engine_with_mode(
+    fn engine_with_staging(
         strategy: Strategy,
         seed: u64,
         microbatches: usize,
         exec_mode: ExecMode,
+        host_staging: bool,
     ) -> PipelineEngine {
         let cfg = TrainConfig {
             model: "tiny".into(),
@@ -394,9 +520,19 @@ mod tests {
             microbatches_per_iter: microbatches,
             seed,
             exec_mode,
+            host_staging,
             ..TrainConfig::default()
         };
         PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn engine_with_mode(
+        strategy: Strategy,
+        seed: u64,
+        microbatches: usize,
+        exec_mode: ExecMode,
+    ) -> PipelineEngine {
+        engine_with_staging(strategy, seed, microbatches, exec_mode, false)
     }
 
     fn engine(strategy: Strategy, seed: u64) -> PipelineEngine {
@@ -537,11 +673,140 @@ mod tests {
     }
 
     #[test]
+    fn device_plane_syncs_only_at_loss_and_grad_boundaries() {
+        // The device-residency acceptance gate, pinned exactly: one
+        // steady-state pipelined iteration syncs to host only
+        //   per microbatch: the loss scalar (1) + the head's stage-0
+        //   gradient pieces gd/gnw (2) + ∂L/∂embed (1) + each slot's P
+        //   parameter gradients (L·P)
+        // — no per-stage-boundary activation syncs at all. Uploads are
+        // the per-version param refresh (apply_grads bumped every stage
+        // last iteration) plus one ids upload per microbatch.
+        let m = 4u64;
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            let mut e = engine_with_mode(Strategy::None, 41, m as usize, mode);
+            e.train_iteration().unwrap(); // warm: first param upload
+            let before = e.transfer_ledger().snapshot();
+            e.train_iteration().unwrap();
+            let delta = e.transfer_ledger().snapshot().since(&before);
+
+            assert_eq!(
+                delta.forced_tuple_roundtrips, 0,
+                "{mode:?}: PJRT binding returned tupled outputs — device plane degraded \
+                 (see runtime module docs; --host-staging is the escape hatch)"
+            );
+            let l = e.body_stages() as u64;
+            let p = e.stages[1].params.len() as u64;
+            assert_eq!(
+                delta.host_syncs,
+                m * (4 + l * p),
+                "{mode:?}: host syncs off the loss/grad boundary count"
+            );
+            let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
+            assert_eq!(
+                delta.uploads,
+                param_tensors + m,
+                "{mode:?}: uploads must be params-per-version + ids-per-microbatch"
+            );
+        }
+    }
+
+    #[test]
+    fn device_plane_validate_syncs_once_per_batch() {
+        let mut e = engine_with_mode(Strategy::None, 43, 2, ExecMode::Pipelined1F1B);
+        // Warm both the executor path and the eval path (the first
+        // device execute of head_fwd pays its one-time layout probe).
+        e.train_iteration().unwrap();
+        e.validate().unwrap();
+        e.train_iteration().unwrap();
+        let v = e.validation_batches() as u64;
+        let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
+
+        // First validate after an optimizer step: params stale → one
+        // device refresh, then exactly one loss sync + one ids upload
+        // per batch.
+        let before = e.transfer_ledger().snapshot();
+        e.validate().unwrap();
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.host_syncs, v, "validation boundary: one loss sync per batch");
+        assert_eq!(delta.uploads, param_tensors + v);
+
+        // Second validate: cache-served params, ids only.
+        let before = e.transfer_ledger().snapshot();
+        e.validate().unwrap();
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.host_syncs, v);
+        assert_eq!(delta.uploads, v, "no param re-upload without a version bump");
+    }
+
+    #[test]
+    fn host_staging_is_bitwise_identical_to_device_plane() {
+        // Staging moves bytes, never changes them: the escape hatch must
+        // reproduce the device plane bit for bit, swaps included.
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+                let mut dev = engine_with_staging(strategy, 47, 4, mode, false);
+                let mut host = engine_with_staging(strategy, 47, 4, mode, true);
+                assert_eq!(dev.staging(), crate::config::Staging::Device);
+                assert_eq!(host.staging(), crate::config::Staging::Host);
+                for it in 0..3 {
+                    let a = dev.train_iteration().unwrap();
+                    let b = host.train_iteration().unwrap();
+                    assert_eq!(
+                        a.loss.to_bits(),
+                        b.loss.to_bits(),
+                        "loss diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                    assert_eq!(a.omegas, b.omegas);
+                }
+                for (s, p) in dev.stages.iter().zip(&host.stages) {
+                    assert_eq!(s.params, p.params, "stage {} diverged", s.index);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn host_staging_pays_strictly_more_syncs() {
+        // The BENCH_hot_path.json device_residency gate, as a test:
+        // device-resident 1F1B must beat the host-staging path on
+        // host-sync count (it re-fetches every stage output).
+        let mut dev = engine_with_staging(Strategy::None, 53, 4, ExecMode::Pipelined1F1B, false);
+        let mut host = engine_with_staging(Strategy::None, 53, 4, ExecMode::Pipelined1F1B, true);
+        dev.train_iteration().unwrap();
+        host.train_iteration().unwrap();
+        let d0 = dev.transfer_ledger().snapshot();
+        let h0 = host.transfer_ledger().snapshot();
+        dev.train_iteration().unwrap();
+        host.train_iteration().unwrap();
+        let d = dev.transfer_ledger().snapshot().since(&d0);
+        let h = host.transfer_ledger().snapshot().since(&h0);
+        assert!(
+            d.host_syncs < h.host_syncs,
+            "device plane must sync strictly less: {} vs {}",
+            d.host_syncs,
+            h.host_syncs
+        );
+        assert!(d.bytes_up < h.bytes_up, "device plane re-uploads params once per version");
+    }
+
+    #[test]
     fn sequential_reports_zero_watermark() {
         let mut e = engine_with_mode(Strategy::None, 37, 4, ExecMode::Sequential);
         let stats = e.train_iteration().unwrap();
         assert_eq!(stats.peak_resident_activations, 0);
         assert_eq!(e.peak_resident_activations(), 0);
+    }
+
+    #[test]
+    fn sequential_always_host_stages() {
+        // The sequential reference ignores the staging knob: its train
+        // AND eval paths are host-staged, per the documented contract.
+        let e = engine_with_staging(Strategy::None, 37, 2, ExecMode::Sequential, false);
+        assert_eq!(e.staging(), crate::config::Staging::Host);
+        e.validate().unwrap();
+        let (_, dev_misses) = e.literal_cache_device_stats();
+        assert_eq!(dev_misses, 0, "sequential eval must not touch the device cache");
     }
 
     #[test]

@@ -25,13 +25,29 @@
 //!   [`schedule::PipelineSchedule::OneFOneB`] each position alternates
 //!   one backward with one forward once its warmup is done, releasing a
 //!   microbatch's stashed activation as soon as its backward completes;
-//! * forward links are bounded channels; backward links are unbounded by
-//!   design (the backlog is capped at `microbatches` messages and in the
-//!   fill/drain schedule a bound there would deadlock);
+//! * forward links are bounded channels sized for backpressure;
+//!   backward links (and the head→embed aux link) are bounded at `m`
+//!   messages — the schedule sends at most one per microbatch per link
+//!   per iteration, so the cap never blocks, it just makes the O(m)
+//!   backlog contract explicit (a bound *below* `m` would deadlock
+//!   fill/drain: the head emits backwards while early slots still
+//!   forward);
 //! * each slot worker stashes the marshalled activation INTO it during
-//!   the forward pass and reuses the literal for the backward pass —
-//!   one host↔literal round-trip less per slot per microbatch than the
-//!   sequential path.
+//!   the forward pass and reuses it for the backward pass.
+//!
+//! **Activation plane:** channels carry [`Activation`]s. Under
+//! [`Staging::Device`] (the default) every payload is a
+//! [`crate::runtime::DeviceBuffer`]: stage outputs chain into the next
+//! stage's `execute_buffers` call without ever visiting host memory, and
+//! the only device→host syncs of an iteration are the **loss** (head),
+//! the **parameter gradients** (each slot's backward + the embed join),
+//! i.e. the host-side optimizer/recovery boundary. Under
+//! [`Staging::Host`] (`--host-staging`) payloads are `HostTensor`s and
+//! every stage boundary round-trips through host exactly as before the
+//! device plane existed — kept as the A/B baseline and escape hatch.
+//! Either way every crossing is billed to the plane's
+//! [`crate::metrics::TransferLedger`], which is how
+//! `BENCH_hot_path.json`'s `device_residency` gate measures the win.
 //!
 //! **Memory contract:** every stash/release is counted by the shared
 //! [`ActivationWatermark`]. Fill/drain keeps every slot's stashed
@@ -61,10 +77,13 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 
+use crate::config::Staging;
 use crate::coordinator::schedule::{self, PipelineSchedule, Step};
 use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
-use crate::runtime::{HostTensor, LiteralCache, Runtime, SharedLiterals};
+use crate::runtime::{
+    Activation, DeviceBuffer, DevicePlane, HostTensor, LiteralCache, Runtime, SharedLiterals,
+};
 use crate::{anyhow, Result};
 
 /// In-flight forward activations allowed per inter-stage link under the
@@ -84,21 +103,55 @@ fn link_closed(link: &str) -> anyhow::Error {
 
 struct FwdMsg {
     mb: usize,
-    h: HostTensor,
+    h: Activation,
 }
 
 struct BwdMsg {
     mb: usize,
-    gh: HostTensor,
+    gh: Activation,
 }
 
 /// Stage-0 gradient pieces the head computes (`∂L/∂deembed`,
 /// `∂L/∂final_norm`), routed straight to the embed worker which joins
-/// them with `∂L/∂embed` per microbatch.
+/// them with `∂L/∂embed` per microbatch. Always host tensors: parameter
+/// gradients feed the host-side optimizer, so the head syncs them at
+/// the gradient boundary in either staging mode.
 struct HeadGrads {
     mb: usize,
     gd: HostTensor,
     gnw: HostTensor,
+}
+
+/// The per-iteration microbatch token ids, marshalled once into the
+/// active staging plane's currency and read-shared by the embed and
+/// head workers (embed fwd + bwd and the head each reuse the same
+/// entry — no per-use re-marshal/re-upload).
+enum IdPool {
+    Host(SharedLiterals),
+    Device(Vec<DeviceBuffer>),
+}
+
+impl IdPool {
+    fn lit(&self, mb: usize) -> &xla::Literal {
+        match self {
+            IdPool::Host(pool) => &pool[mb],
+            IdPool::Device(_) => panic!("host ids requested from a device id pool"),
+        }
+    }
+
+    fn buf(&self, mb: usize) -> &DeviceBuffer {
+        match self {
+            IdPool::Device(pool) => &pool[mb],
+            IdPool::Host(_) => panic!("device ids requested from a host id pool"),
+        }
+    }
+}
+
+/// A slot's stashed forward input, in whichever marshalled form the
+/// active staging plane's backward pass will reuse.
+enum Stashed {
+    Lit(xla::Literal),
+    Buf(DeviceBuffer),
 }
 
 // ---------------------------------------------------------------------------
@@ -292,20 +345,26 @@ impl<'a> OrderedSink<'a> {
 /// accumulated into `grad_bufs` (index 0 = embed stage) in microbatch
 /// order. Returns the per-microbatch losses, index = microbatch.
 ///
-/// `sched` selects the step tables (fill/drain or 1F1B); `watermark` is
-/// reset by the engine and counts every slot stash/release. The caller
-/// refreshes `lits` for every stage beforehand; this function only reads
-/// it. `pool` must hold at least `body_stages + 1` workers (embed + one
-/// per slot; the head runs on the calling thread).
+/// `sched` selects the step tables (fill/drain or 1F1B); `staging`
+/// selects the activation plane (device-resident or host-staged);
+/// `watermark` is reset by the engine and counts every slot
+/// stash/release. The caller refreshes `lits` for every stage
+/// beforehand — including the device mirror when `staging` is
+/// [`Staging::Device`] — so this function only reads it. `pool` must
+/// hold at least `body_stages + 1` workers (embed + one per slot; the
+/// head runs on the calling thread). Every host↔device crossing is
+/// billed to `plane`'s ledger.
 #[allow(clippy::too_many_arguments)]
 pub fn run_iteration(
     pool: &mut WorkerPool,
     runtime: &Runtime,
+    plane: &DevicePlane,
     lits: &LiteralCache,
     batches: &[HostTensor],
     body_stages: usize,
     use_swaps: bool,
     sched: PipelineSchedule,
+    staging: Staging,
     watermark: &ActivationWatermark,
     grad_bufs: &mut [GradBuffer],
 ) -> Result<Vec<f32>> {
@@ -325,9 +384,15 @@ pub fn run_iteration(
         l + 1
     );
 
-    // Marshal every microbatch's token ids once; embed (fwd+bwd) and
-    // head workers index this shared pool instead of re-converting.
-    let ids = SharedLiterals::build(batches)?;
+    // Marshal every microbatch's token ids once, in the active plane's
+    // currency; embed (fwd+bwd) and head workers index this shared pool
+    // instead of re-converting/re-uploading (ids traffic bills stage 0).
+    let ids = match staging {
+        Staging::Host => IdPool::Host(SharedLiterals::build(batches)?),
+        Staging::Device => {
+            IdPool::Device(batches.iter().map(|b| plane.upload(0, b)).collect::<Result<_>>()?)
+        }
+    };
 
     let sinks: Vec<Mutex<OrderedSink>> =
         grad_bufs.iter_mut().map(|gb| Mutex::new(OrderedSink::new(gb))).collect();
@@ -345,18 +410,21 @@ pub fn run_iteration(
     // Forward link p: position p → p+1 (0 = embed, 1..=l = slots, head last).
     let mut ftx: Vec<Option<SyncSender<FwdMsg>>> = Vec::with_capacity(l + 1);
     let mut frx: Vec<Option<Receiver<FwdMsg>>> = Vec::with_capacity(l + 1);
-    // Backward link p: position p+1 → p (unbounded; see module docs).
-    let mut btx: Vec<Option<Sender<BwdMsg>>> = Vec::with_capacity(l + 1);
+    // Backward link p: position p+1 → p, bounded at m like the aux link
+    // below (see module docs: the schedule sends at most one message per
+    // microbatch per link per iteration, so the cap never blocks; below
+    // m would deadlock fill/drain).
+    let mut btx: Vec<Option<SyncSender<BwdMsg>>> = Vec::with_capacity(l + 1);
     let mut brx: Vec<Option<Receiver<BwdMsg>>> = Vec::with_capacity(l + 1);
     for _ in 0..=l {
         let (t, r) = sync_channel(fwd_cap);
         ftx.push(Some(t));
         frx.push(Some(r));
-        let (t, r) = channel();
+        let (t, r) = sync_channel(m);
         btx.push(Some(t));
         brx.push(Some(r));
     }
-    let (aux_tx, aux_rx) = channel::<HeadGrads>();
+    let (aux_tx, aux_rx) = sync_channel::<HeadGrads>(m);
 
     let mut jobs: Vec<ScopedJob> = Vec::with_capacity(l + 1);
 
@@ -367,7 +435,7 @@ pub fn run_iteration(
         let (ids, sinks) = (&ids, &sinks);
         let table = schedule::step_table(sched, l, 0, m);
         jobs.push(Box::new(move || {
-            embed_worker(runtime, lits, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
+            embed_worker(runtime, plane, lits, staging, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
         }));
     }
 
@@ -381,8 +449,8 @@ pub fn run_iteration(
         let table = schedule::step_table(sched, l, p, m);
         jobs.push(Box::new(move || {
             slot_worker(
-                runtime, lits, l, use_swaps, p - 1, m, &table, watermark, fwd_rx, fwd_tx, bwd_rx,
-                bwd_tx, sinks,
+                runtime, plane, lits, staging, l, use_swaps, p - 1, m, &table, watermark, fwd_rx,
+                fwd_tx, bwd_rx, bwd_tx, sinks,
             )
         }));
     }
@@ -391,8 +459,9 @@ pub fn run_iteration(
     let fwd_rx = frx[l].take().expect("head fwd in");
     let bwd_tx = btx[l].take().expect("head bwd out");
     let ids_ref = &ids;
-    let (head_res, job_results) =
-        pool.scope(jobs, move || head_worker(runtime, lits, ids_ref, m, fwd_rx, bwd_tx, aux_tx));
+    let (head_res, job_results) = pool.scope(jobs, move || {
+        head_worker(runtime, plane, lits, staging, ids_ref, m, fwd_rx, bwd_tx, aux_tx)
+    });
 
     let mut errs: Vec<anyhow::Error> = job_results.into_iter().filter_map(|r| r.err()).collect();
     let losses = match head_res {
@@ -428,12 +497,16 @@ fn pick_root_cause(mut errs: Vec<anyhow::Error>) -> anyhow::Error {
 
 /// Position 0: `embed_fwd` / `embed_bwd` in step-table order. A backward
 /// step joins the returning `∂L/∂h0` with the head's stage-0 pieces
-/// (which arrive on their own link, buffered until needed).
+/// (which arrive on their own link, buffered until needed). On the
+/// device plane the only host sync here is `∂L/∂embed` itself — the
+/// stage-0 slice of the gradient boundary.
 #[allow(clippy::too_many_arguments)]
 fn embed_worker(
     runtime: &Runtime,
+    plane: &DevicePlane,
     lits: &LiteralCache,
-    ids: &SharedLiterals,
+    staging: Staging,
+    ids: &IdPool,
     table: &[Step],
     fwd_tx: SyncSender<FwdMsg>,
     bwd_rx: Receiver<BwdMsg>,
@@ -442,15 +515,31 @@ fn embed_worker(
 ) -> Result<()> {
     let embed_fwd = runtime.executable("embed_fwd")?;
     let embed_bwd = runtime.executable("embed_bwd")?;
-    let e = &lits.stage(0)[0];
     let mut aux: BTreeMap<usize, (HostTensor, HostTensor)> = BTreeMap::new();
     for step in table {
         match *step {
             Step::Forward(mb) => {
-                let h0 = embed_fwd
-                    .run_literals(&[e, &ids[mb]])?
-                    .pop()
-                    .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
+                let h0 = match staging {
+                    Staging::Device => {
+                        let e = &lits.stage_buffers(0)[0];
+                        Activation::Device(
+                            embed_fwd
+                                .execute_buffers(plane, 0, &[e, ids.buf(mb)])?
+                                .pop()
+                                .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?,
+                        )
+                    }
+                    Staging::Host => {
+                        let e = &lits.stage(0)[0];
+                        embed_fwd.meter_host_call(plane, 0);
+                        Activation::Host(
+                            embed_fwd
+                                .run_literals(&[e, ids.lit(mb)])?
+                                .pop()
+                                .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?,
+                        )
+                    }
+                };
                 fwd_tx.send(FwdMsg { mb, h: h0 }).map_err(|_| link_closed("embed→S1"))?;
             }
             Step::Backward(_) => {
@@ -460,11 +549,26 @@ fn embed_worker(
                     aux.insert(g.mb, (g.gd, g.gnw));
                 }
                 let (gd, gnw) = aux.remove(&mb).expect("aux joined above");
-                let gh_lit = gh.to_literal()?;
-                let ge = embed_bwd
-                    .run_literals(&[e, &ids[mb], &gh_lit])?
-                    .pop()
-                    .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?;
+                let ge = match staging {
+                    Staging::Device => {
+                        let e = &lits.stage_buffers(0)[0];
+                        let gh_buf = gh.into_device(plane, 0)?;
+                        embed_bwd
+                            .execute_buffers(plane, 0, &[e, ids.buf(mb), &gh_buf])?
+                            .pop()
+                            .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?
+                            .to_host(plane, 0)? // gradient boundary sync
+                    }
+                    Staging::Host => {
+                        let e = &lits.stage(0)[0];
+                        let gh_lit = gh.into_host(plane, 0)?.to_literal()?;
+                        embed_bwd.meter_host_call(plane, 0);
+                        embed_bwd
+                            .run_literals(&[e, ids.lit(mb), &gh_lit])?
+                            .pop()
+                            .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?
+                    }
+                };
                 sinks[0].lock().expect("grad sink lock").deposit(mb, &[ge, gd, gnw]);
             }
         }
@@ -475,13 +579,18 @@ fn embed_worker(
 /// Positions 1..=L: forward/backward microbatches through this slot's
 /// stage (which stage depends on the microbatch's route under CheckFree+
 /// swaps) in step-table order. Forward steps stash the marshalled input
-/// activation; backward steps consume and release it — under 1F1B that
+/// activation (a device buffer on the device plane, a literal on the
+/// host plane); backward steps consume and release it — under 1F1B that
 /// keeps at most `warmup_forwards` stashes resident, under fill/drain
-/// all of them. Every stash/release is counted by `watermark`.
+/// all of them. Every stash/release is counted by `watermark`. On the
+/// device plane the only host syncs here are the stage's parameter
+/// gradients at each backward — the gradient boundary.
 #[allow(clippy::too_many_arguments)]
 fn slot_worker(
     runtime: &Runtime,
+    plane: &DevicePlane,
     lits: &LiteralCache,
+    staging: Staging,
     body_stages: usize,
     use_swaps: bool,
     slot: usize,
@@ -491,15 +600,15 @@ fn slot_worker(
     fwd_rx: Receiver<FwdMsg>,
     fwd_tx: SyncSender<FwdMsg>,
     bwd_rx: Receiver<BwdMsg>,
-    bwd_tx: Sender<BwdMsg>,
+    bwd_tx: SyncSender<BwdMsg>,
     sinks: &[Mutex<OrderedSink>],
 ) -> Result<()> {
     let body_fwd = runtime.executable("body_fwd")?;
     let body_bwd = runtime.executable("body_bwd")?;
-    // Activation INTO this slot, per microbatch, kept as the already-
-    // marshalled literal: the backward pass reuses it (the distributed
-    // equivalent of the seed's `hs` stash).
-    let mut stash: Vec<Option<xla::Literal>> = (0..m).map(|_| None).collect();
+    // Activation INTO this slot, per microbatch, kept in marshalled form:
+    // the backward pass reuses it (the distributed equivalent of the
+    // seed's `hs` stash).
+    let mut stash: Vec<Option<Stashed>> = (0..m).map(|_| None).collect();
     // `scratch` reuses the gradient read buffers across microbatches
     // (no per-call allocation after the first backward).
     let mut scratch: Vec<HostTensor> = Vec::new();
@@ -510,16 +619,35 @@ fn slot_worker(
                     fwd_rx.recv().map_err(|_| link_closed("fwd into slot"))?;
                 debug_assert_eq!(mb, want, "upstream emits forwards in table order");
                 let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
-                let h_lit = h.to_literal()?;
-                let h_out = {
-                    let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
-                    args.push(&h_lit);
-                    body_fwd
-                        .run_literals(&args)?
-                        .pop()
-                        .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+                let (stashed, h_out) = match staging {
+                    Staging::Device => {
+                        let h_buf = h.into_device(plane, s)?;
+                        let h_out = {
+                            let mut args: Vec<&DeviceBuffer> =
+                                lits.stage_buffers(s).iter().collect();
+                            args.push(&h_buf);
+                            body_fwd
+                                .execute_buffers(plane, s, &args)?
+                                .pop()
+                                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+                        };
+                        (Stashed::Buf(h_buf), Activation::Device(h_out))
+                    }
+                    Staging::Host => {
+                        let h_lit = h.into_host(plane, s)?.to_literal()?;
+                        let h_out = {
+                            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+                            args.push(&h_lit);
+                            body_fwd.meter_host_call(plane, s);
+                            body_fwd
+                                .run_literals(&args)?
+                                .pop()
+                                .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
+                        };
+                        (Stashed::Lit(h_lit), Activation::Host(h_out))
+                    }
                 };
-                stash[mb] = Some(h_lit);
+                stash[mb] = Some(stashed);
                 watermark.acquire();
                 fwd_tx
                     .send(FwdMsg { mb, h: h_out })
@@ -529,25 +657,63 @@ fn slot_worker(
                 let BwdMsg { mb, gh } =
                     bwd_rx.recv().map_err(|_| link_closed("bwd into slot"))?;
                 let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
-                let h_lit = stash[mb]
+                let stashed = stash[mb]
                     .take()
                     .ok_or_else(|| anyhow!("no stashed activation for microbatch {mb}"))?;
-                let gh_lit = gh.to_literal()?;
-                {
-                    let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
-                    args.push(&h_lit);
-                    args.push(&gh_lit);
-                    body_bwd.run_literals_into(&args, &mut scratch)?;
-                }
-                drop(h_lit);
-                watermark.release();
-                if scratch.len() < 2 {
-                    return Err(anyhow!("body_bwd returned {} outputs", scratch.len()));
-                }
-                // scratch = [gh_out, gparams…]; gh_out moves downstream,
-                // the parameter gradients accumulate here.
-                let gh_out = std::mem::take(&mut scratch[0]);
-                sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch[1..]);
+                let gh_out = match (staging, stashed) {
+                    (Staging::Device, Stashed::Buf(h_buf)) => {
+                        let gh_buf = gh.into_device(plane, s)?;
+                        let mut outs = {
+                            let mut args: Vec<&DeviceBuffer> =
+                                lits.stage_buffers(s).iter().collect();
+                            args.push(&h_buf);
+                            args.push(&gh_buf);
+                            body_bwd.execute_buffers(plane, s, &args)?
+                        };
+                        drop(h_buf);
+                        watermark.release();
+                        if outs.len() < 2 {
+                            return Err(anyhow!("body_bwd returned {} outputs", outs.len()));
+                        }
+                        // outs = [gh_out, gparams…]; gh_out stays on
+                        // device and moves downstream, the parameter
+                        // gradients sync to host for accumulation.
+                        let gparams = outs.split_off(1);
+                        let gh_out = outs.pop().expect("len checked");
+                        scratch.resize_with(gparams.len(), HostTensor::default);
+                        for (g, out) in gparams.iter().zip(scratch.iter_mut()) {
+                            g.read_into(plane, s, out)?;
+                        }
+                        sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch);
+                        Activation::Device(gh_out)
+                    }
+                    (Staging::Host, Stashed::Lit(h_lit)) => {
+                        let gh_lit = gh.into_host(plane, s)?.to_literal()?;
+                        {
+                            let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
+                            args.push(&h_lit);
+                            args.push(&gh_lit);
+                            body_bwd.meter_host_call(plane, s);
+                            body_bwd.run_literals_into(&args, &mut scratch)?;
+                        }
+                        drop(h_lit);
+                        watermark.release();
+                        if scratch.len() < 2 {
+                            return Err(anyhow!("body_bwd returned {} outputs", scratch.len()));
+                        }
+                        // scratch = [gh_out, gparams…]; gh_out moves
+                        // downstream, the parameter gradients accumulate
+                        // here.
+                        let gh_out = std::mem::take(&mut scratch[0]);
+                        sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch[1..]);
+                        Activation::Host(gh_out)
+                    }
+                    _ => {
+                        return Err(anyhow!(
+                            "slot stash currency does not match the staging mode"
+                        ))
+                    }
+                };
                 bwd_tx
                     .send(BwdMsg { mb, gh: gh_out })
                     .map_err(|_| link_closed("bwd out of slot"))?;
@@ -561,31 +727,60 @@ fn slot_worker(
 /// loss + `∂L/∂h` (sent back down the pipe) + stage-0 pieces (sent to
 /// the embed worker). The head stashes nothing, so its "step table" is
 /// simply one fused forward+backward per arriving microbatch in both
-/// schedules.
+/// schedules. On the device plane this is the **loss/gradient
+/// boundary**: the loss scalar and the stage-0 parameter gradients
+/// (`∂L/∂deembed`, `∂L/∂final_norm`) sync to host; `∂L/∂h` stays on
+/// device and travels back down the pipe.
+#[allow(clippy::too_many_arguments)]
 fn head_worker(
     runtime: &Runtime,
+    plane: &DevicePlane,
     lits: &LiteralCache,
-    ids: &SharedLiterals,
+    staging: Staging,
+    ids: &IdPool,
     m: usize,
     fwd_rx: Receiver<FwdMsg>,
-    bwd_tx: Sender<BwdMsg>,
-    aux_tx: Sender<HeadGrads>,
+    bwd_tx: SyncSender<BwdMsg>,
+    aux_tx: SyncSender<HeadGrads>,
 ) -> Result<Vec<f32>> {
     let head_bwd = runtime.executable("head_bwd")?;
-    let st0 = lits.stage(0);
-    let (d, nw) = (&st0[1], &st0[2]);
     let mut losses = vec![0.0f32; m];
     for _ in 0..m {
         let FwdMsg { mb, h } = fwd_rx.recv().map_err(|_| link_closed("SL→head"))?;
-        let h_lit = h.to_literal()?;
-        let mut outs = head_bwd.run_literals(&[d, nw, &h_lit, &ids[mb]])?;
-        if outs.len() != 4 {
-            return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
-        }
-        let gnw = outs.pop().expect("len checked");
-        let gd = outs.pop().expect("len checked");
-        let gh = outs.pop().expect("len checked");
-        losses[mb] = outs.pop().expect("len checked").scalar_f32()?;
+        let (loss, gh, gd, gnw) = match staging {
+            Staging::Device => {
+                let st0 = lits.stage_buffers(0);
+                let (d, nw) = (&st0[1], &st0[2]);
+                let h_buf = h.into_device(plane, 0)?;
+                let mut outs =
+                    head_bwd.execute_buffers(plane, 0, &[d, nw, &h_buf, ids.buf(mb)])?;
+                if outs.len() != 4 {
+                    return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
+                }
+                let gnw = outs.pop().expect("len checked").to_host(plane, 0)?;
+                let gd = outs.pop().expect("len checked").to_host(plane, 0)?;
+                let gh = Activation::Device(outs.pop().expect("len checked"));
+                let loss =
+                    outs.pop().expect("len checked").to_host(plane, 0)?.scalar_f32()?;
+                (loss, gh, gd, gnw)
+            }
+            Staging::Host => {
+                let st0 = lits.stage(0);
+                let (d, nw) = (&st0[1], &st0[2]);
+                let h_lit = h.into_host(plane, 0)?.to_literal()?;
+                head_bwd.meter_host_call(plane, 0);
+                let mut outs = head_bwd.run_literals(&[d, nw, &h_lit, ids.lit(mb)])?;
+                if outs.len() != 4 {
+                    return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
+                }
+                let gnw = outs.pop().expect("len checked");
+                let gd = outs.pop().expect("len checked");
+                let gh = Activation::Host(outs.pop().expect("len checked"));
+                let loss = outs.pop().expect("len checked").scalar_f32()?;
+                (loss, gh, gd, gnw)
+            }
+        };
+        losses[mb] = loss;
         aux_tx.send(HeadGrads { mb, gd, gnw }).map_err(|_| link_closed("head→embed"))?;
         bwd_tx.send(BwdMsg { mb, gh }).map_err(|_| link_closed("head→SL"))?;
     }

@@ -14,7 +14,7 @@
 //! |---|---|
 //! | [`config`] | run configuration: model presets, failure/recovery/schedule knobs |
 //! | [`manifest`] | the artifact manifest contract with the AOT pipeline |
-//! | [`runtime`] | PJRT client + executable registry (HLO text → compiled) |
+//! | [`runtime`] | PJRT client + executable registry (HLO text → compiled), device-resident activation plane (`DeviceBuffer`/`Activation`), versioned param caches |
 //! | [`model`] | stage parameter store, deterministic init, Adam, grad norms |
 //! | [`data`] | synthetic corpus generator + tokenizer + domains (Table 3) |
 //! | [`coordinator`] | pipeline engine, microbatch schedules (incl. CheckFree+ swaps), trainer |
@@ -22,7 +22,7 @@
 //! | [`failures`] | seeded stage-failure injector (paper §3 failure pattern) |
 //! | [`netsim`] | 5-region geo-distributed network model (paper §5 setup) |
 //! | [`sim`] | event-driven throughput simulator (Table 2 wall-clock) |
-//! | [`metrics`] | loss/throughput recorders, CSV emitters for every figure |
+//! | [`metrics`] | loss/throughput recorders, activation watermark, device↔host transfer ledger, CSV emitters for every figure |
 
 pub mod config;
 pub mod coordinator;

@@ -5,6 +5,7 @@
 //!                    [--failure-rate R] [--microbatches K] [--seed X]
 //!                    [--checkpoint-every C] [--reinit KIND]
 //!                    [--exec-mode sequential|pipelined|pipelined-1f1b]
+//!                    [--host-staging true|false]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -137,6 +138,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(m) = args.parse_opt::<checkfree::config::ExecMode>("exec-mode")? {
         cfg.exec_mode = m;
+    }
+    if let Some(h) = args.parse_opt::<bool>("host-staging")? {
+        cfg.host_staging = h;
     }
     cfg.validate()?;
 

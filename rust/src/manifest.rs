@@ -133,6 +133,13 @@ impl IoSpec {
         self.shape.iter().product()
     }
 
+    /// Size on the wire/device — both supported dtypes (f32, i32) are
+    /// 4 bytes per element. The transfer ledger bills crossings in these
+    /// units.
+    pub fn bytes(&self) -> u64 {
+        self.elements() as u64 * 4
+    }
+
     fn from_json(v: &Json) -> Result<Self> {
         Ok(Self {
             shape: v.get("shape")?.as_usize_vec()?,

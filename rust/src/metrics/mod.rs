@@ -1,16 +1,20 @@
 //! Run metrics: loss curves, events, throughput accounting, the
-//! activation high-watermark, CSV emission.
+//! activation high-watermark, the device↔host transfer ledger, CSV
+//! emission.
 //!
 //! Every experiment harness (`examples/fig*`, `examples/table*`) records
 //! through this module and writes `results/<id>.csv`, so the paper's
 //! figures can be regenerated from flat files. The concurrent executor
 //! additionally reports its peak resident activations through
 //! [`ActivationWatermark`] — the number that distinguishes the fill/drain
-//! schedule's O(microbatches) memory from 1F1B's O(pipeline depth).
+//! schedule's O(microbatches) memory from 1F1B's O(pipeline depth) — and
+//! every device↔host tensor movement through [`TransferLedger`], the
+//! metric behind the device-resident activation plane's acceptance gate
+//! (`device_residency` in `BENCH_hot_path.json`, see docs/BENCHMARKS.md).
 
 use std::fmt::Write as _;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::{Context, Result};
 
@@ -66,6 +70,150 @@ impl ActivationWatermark {
     /// Peak simultaneous residency since the last [`reset`](Self::reset).
     pub fn peak(&self) -> usize {
         self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-stage transfer counters of one [`TransferLedger`] (all atomics —
+/// pipeline workers on different threads record concurrently).
+#[derive(Debug, Default)]
+struct StageCounters {
+    host_syncs: AtomicU64,
+    uploads: AtomicU64,
+    bytes_down: AtomicU64,
+    bytes_up: AtomicU64,
+    forced_tuple_roundtrips: AtomicU64,
+}
+
+/// Cumulative device↔host transfer accounting, per pipeline stage.
+///
+/// The device-resident activation plane ([`crate::runtime`]) records
+/// every explicit boundary crossing here:
+///
+/// * **host sync** — a device buffer was read back to host memory
+///   (`DeviceBuffer::to_host`/`read_into`, or an output fetch on the
+///   host-staging path);
+/// * **upload** — host data was copied onto the device
+///   (`DevicePlane::upload*`, or an argument copy implied by executing
+///   with host literals on the host-staging path);
+/// * **forced tuple roundtrip** — the PJRT binding returned a single
+///   tuple buffer instead of untupled leaves, so `execute_buffers` had
+///   to sync + decompose + re-upload to keep chaining (see
+///   `Executable::execute_buffers`); the steady-state device path
+///   expects this to be **zero** and the engine test asserts it.
+///
+/// Counters are cumulative (like `Runtime::exec_stats`); callers diff
+/// [`snapshot`](Self::snapshot)s to get per-iteration numbers. `stage`
+/// indices follow the engine convention: 0 = embed stage (which also
+/// hosts the head's loss/ids traffic), `1..=L` = body stages.
+#[derive(Debug)]
+pub struct TransferLedger {
+    stages: Vec<StageCounters>,
+}
+
+/// Plain-data copy of one ledger (or one stage) at a point in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TransferSnapshot {
+    pub host_syncs: u64,
+    pub uploads: u64,
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+    pub forced_tuple_roundtrips: u64,
+}
+
+impl TransferSnapshot {
+    /// Component-wise `self - earlier` (per-iteration deltas from a
+    /// cumulative ledger). Saturating, so a diff straddling a
+    /// [`TransferLedger::reset`] floors at zero instead of panicking.
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            host_syncs: self.host_syncs.saturating_sub(earlier.host_syncs),
+            uploads: self.uploads.saturating_sub(earlier.uploads),
+            bytes_down: self.bytes_down.saturating_sub(earlier.bytes_down),
+            bytes_up: self.bytes_up.saturating_sub(earlier.bytes_up),
+            forced_tuple_roundtrips: self
+                .forced_tuple_roundtrips
+                .saturating_sub(earlier.forced_tuple_roundtrips),
+        }
+    }
+}
+
+impl TransferLedger {
+    /// One counter set per pipeline stage (index 0 = embed).
+    pub fn new(stages: usize) -> Self {
+        Self { stages: (0..stages).map(|_| StageCounters::default()).collect() }
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn slot(&self, stage: usize) -> &StageCounters {
+        debug_assert!(stage < self.stages.len(), "transfer ledger: stage {stage} out of range");
+        // Release builds clamp instead of panicking: mis-attributed
+        // accounting beats a dead pipeline worker.
+        &self.stages[stage.min(self.stages.len().saturating_sub(1))]
+    }
+
+    /// A device buffer (or fetched output) of `bytes` came back to host.
+    pub fn record_sync(&self, stage: usize, bytes: u64) {
+        let s = self.slot(stage);
+        s.host_syncs.fetch_add(1, Ordering::Relaxed);
+        s.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// `bytes` of host data moved onto the device.
+    pub fn record_upload(&self, stage: usize, bytes: u64) {
+        let s = self.slot(stage);
+        s.uploads.fetch_add(1, Ordering::Relaxed);
+        s.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// `execute_buffers` hit the legacy tupled output layout and had to
+    /// round-trip through the host (see [`TransferLedger`] docs).
+    pub fn record_forced_tuple_roundtrip(&self, stage: usize) {
+        self.slot(stage).forced_tuple_roundtrips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counters of one stage.
+    pub fn stage_snapshot(&self, stage: usize) -> TransferSnapshot {
+        let s = &self.stages[stage];
+        TransferSnapshot {
+            host_syncs: s.host_syncs.load(Ordering::Relaxed),
+            uploads: s.uploads.load(Ordering::Relaxed),
+            bytes_down: s.bytes_down.load(Ordering::Relaxed),
+            bytes_up: s.bytes_up.load(Ordering::Relaxed),
+            forced_tuple_roundtrips: s.forced_tuple_roundtrips.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whole-pipeline totals (sum over stages).
+    pub fn snapshot(&self) -> TransferSnapshot {
+        let mut total = TransferSnapshot::default();
+        for i in 0..self.stages.len() {
+            let s = self.stage_snapshot(i);
+            total.host_syncs += s.host_syncs;
+            total.uploads += s.uploads;
+            total.bytes_down += s.bytes_down;
+            total.bytes_up += s.bytes_up;
+            total.forced_tuple_roundtrips += s.forced_tuple_roundtrips;
+        }
+        total
+    }
+
+    /// Total device→host sync count (the headline gate number).
+    pub fn host_sync_count(&self) -> u64 {
+        self.snapshot().host_syncs
+    }
+
+    /// Zero every counter (only meaningful while no worker is running).
+    pub fn reset(&self) {
+        for s in &self.stages {
+            s.host_syncs.store(0, Ordering::Relaxed);
+            s.uploads.store(0, Ordering::Relaxed);
+            s.bytes_down.store(0, Ordering::Relaxed);
+            s.bytes_up.store(0, Ordering::Relaxed);
+            s.forced_tuple_roundtrips.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -265,6 +413,78 @@ mod tests {
         });
         assert_eq!(w.peak(), n);
         assert_eq!(w.current(), 0);
+    }
+
+    #[test]
+    fn ledger_attributes_transfers_per_stage() {
+        let l = TransferLedger::new(3);
+        l.record_upload(0, 16);
+        l.record_sync(1, 8);
+        l.record_sync(1, 8);
+        l.record_upload(2, 4);
+        l.record_forced_tuple_roundtrip(1);
+        assert_eq!(
+            l.stage_snapshot(1),
+            TransferSnapshot {
+                host_syncs: 2,
+                uploads: 0,
+                bytes_down: 16,
+                bytes_up: 0,
+                forced_tuple_roundtrips: 1
+            }
+        );
+        let total = l.snapshot();
+        assert_eq!(total.host_syncs, 2);
+        assert_eq!(total.uploads, 2);
+        assert_eq!(total.bytes_up, 20);
+        assert_eq!(total.bytes_down, 16);
+        assert_eq!(l.host_sync_count(), 2);
+    }
+
+    #[test]
+    fn ledger_snapshot_diffs_give_per_iteration_deltas() {
+        let l = TransferLedger::new(2);
+        l.record_sync(0, 4);
+        let before = l.snapshot();
+        l.record_sync(1, 4);
+        l.record_upload(0, 8);
+        let delta = l.snapshot().since(&before);
+        assert_eq!(delta.host_syncs, 1);
+        assert_eq!(delta.uploads, 1);
+        assert_eq!(delta.bytes_down, 4);
+        assert_eq!(delta.bytes_up, 8);
+    }
+
+    #[test]
+    fn ledger_reset_zeroes_everything() {
+        let l = TransferLedger::new(2);
+        l.record_sync(0, 4);
+        l.record_upload(1, 4);
+        l.record_forced_tuple_roundtrip(0);
+        l.reset();
+        assert_eq!(l.snapshot(), TransferSnapshot::default());
+    }
+
+    #[test]
+    fn ledger_is_exact_under_contention() {
+        let l = TransferLedger::new(2);
+        let per_thread = 100u64;
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let l = &l;
+                s.spawn(move || {
+                    for _ in 0..per_thread {
+                        l.record_sync(t % 2, 4);
+                        l.record_upload(t % 2, 8);
+                    }
+                });
+            }
+        });
+        let total = l.snapshot();
+        assert_eq!(total.host_syncs, 4 * per_thread);
+        assert_eq!(total.uploads, 4 * per_thread);
+        assert_eq!(total.bytes_down, 4 * per_thread * 4);
+        assert_eq!(total.bytes_up, 4 * per_thread * 8);
     }
 
     fn record() -> RunRecord {

@@ -1,0 +1,282 @@
+//! The device-resident activation plane: typed wrappers that keep
+//! tensors on the PJRT device between stage executes, with **explicit,
+//! metered** host↔device crossings.
+//!
+//! The seed runtime round-tripped every activation through host memory:
+//! `execute` → `to_literal_sync` → channel → `to_literal` → `execute`,
+//! twice per slot per microbatch. This module gives the runtime a second
+//! currency:
+//!
+//! * [`DeviceBuffer`] — an `xla::PjRtBuffer` plus the host-visible
+//!   [`IoSpec`] it was created under. The buffer never implicitly comes
+//!   back to host; [`DeviceBuffer::to_host`]/[`DeviceBuffer::read_into`]
+//!   are the only exits and both bill the [`TransferLedger`].
+//! * [`DevicePlane`] — the upload half: a borrowed PJRT client + ledger.
+//!   All host→device copies go through [`DevicePlane::upload`] /
+//!   [`DevicePlane::upload_literal`] so they are billed too.
+//! * [`Activation`] — what pipeline channels carry: either a host tensor
+//!   (the `--host-staging` escape hatch and the recovery paths) or a
+//!   device buffer (the steady-state path). Conversions are explicit;
+//!   there is no `Deref` convenience that could hide a transfer.
+//!
+//! **Why recovery stays host-side:** CheckFree's weighted averaging,
+//! Adam, and every recovery write operate on `HostTensor`s and bump
+//! `Stage::params_version`; the versioned caches (host literals *and*
+//! device buffers, see [`crate::runtime::litcache`]) re-marshal from the
+//! host copy on the next refresh. Host memory stays the source of truth;
+//! the device is a cache of it. That is the same lazy-sync shape
+//! FFTrainer uses for its almost-free failover (PAPERS.md).
+
+use crate::manifest::IoSpec;
+use crate::metrics::TransferLedger;
+use crate::runtime::HostTensor;
+use crate::{Context, Result};
+
+/// A tensor resident on the PJRT device, tagged with the host-visible
+/// spec it was created under (shape/dtype validation without a device
+/// round-trip).
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    spec: IoSpec,
+}
+
+// SAFETY: same basis as `Executable`/`LiteralCache` in this module tree.
+// A `PjRtBuffer` is immutable after creation (nothing here uses buffer
+// donation), the PJRT C API synchronizes buffer reads internally, and
+// the only operations we perform — passing it as an execute argument and
+// `to_literal_sync` — are reads. The `xla` crate lacks the auto traits
+// only because it stores raw pointers.
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
+
+impl std::fmt::Debug for DeviceBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceBuffer({:?} {})", self.spec.shape, self.spec.dtype)
+    }
+}
+
+impl DeviceBuffer {
+    /// Wrap a raw buffer the runtime just received from PJRT (an execute
+    /// output) under the manifest spec that describes it.
+    pub(crate) fn from_raw(buf: xla::PjRtBuffer, spec: IoSpec) -> Self {
+        Self { buf, spec }
+    }
+
+    pub(crate) fn raw(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    pub fn spec(&self) -> &IoSpec {
+        &self.spec
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.spec.shape
+    }
+
+    pub fn dtype(&self) -> &str {
+        &self.spec.dtype
+    }
+
+    /// Device bytes this buffer occupies (what a sync would move).
+    pub fn bytes(&self) -> u64 {
+        self.spec.bytes()
+    }
+
+    /// **Metered** device→host sync: fetch the buffer into a fresh host
+    /// tensor, billed to `stage` on the plane's ledger.
+    pub fn to_host(&self, plane: &DevicePlane, stage: usize) -> Result<HostTensor> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .with_context(|| format!("syncing device buffer {:?} to host", self.spec.shape))?;
+        plane.ledger.record_sync(stage, self.bytes());
+        HostTensor::from_literal(&lit, &self.spec)
+    }
+
+    /// **Metered** device→host sync into caller-owned scratch, reusing
+    /// its allocation when shape/dtype already match (they do from the
+    /// second call on — the executor's per-microbatch gradient reads).
+    pub fn read_into(&self, plane: &DevicePlane, stage: usize, out: &mut HostTensor) -> Result<()> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .with_context(|| format!("syncing device buffer {:?} to host", self.spec.shape))?;
+        plane.ledger.record_sync(stage, self.bytes());
+        out.copy_from_literal(&lit, &self.spec)
+    }
+}
+
+/// The upload half of the device plane: a borrowed PJRT client plus the
+/// [`TransferLedger`] every crossing is billed to. Built per call site
+/// by [`crate::runtime::Runtime::device_plane`]; cheap to construct
+/// (two references).
+pub struct DevicePlane<'a> {
+    client: &'a xla::PjRtClient,
+    pub ledger: &'a TransferLedger,
+}
+
+// SAFETY: the wrapped references are shared across the executor's worker
+// threads. `TransferLedger` is all atomics. The only client operation
+// the plane performs is `buffer_from_host_literal`, which the PJRT C API
+// allows concurrently with executes (the CPU plugin synchronizes
+// internally) — the same contract `Runtime`'s `unsafe impl Sync` already
+// relies on for sharing the compiled executables.
+unsafe impl Send for DevicePlane<'_> {}
+unsafe impl Sync for DevicePlane<'_> {}
+
+impl<'a> DevicePlane<'a> {
+    pub(crate) fn new(client: &'a xla::PjRtClient, ledger: &'a TransferLedger) -> Self {
+        Self { client, ledger }
+    }
+
+    /// **Metered** host→device upload of an already-marshalled literal
+    /// (the litcache's device refresh: literal built once per version,
+    /// uploaded once per version).
+    pub fn upload_literal(
+        &self,
+        stage: usize,
+        lit: &xla::Literal,
+        spec: &IoSpec,
+    ) -> Result<DeviceBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .with_context(|| format!("uploading {:?} {} to device", spec.shape, spec.dtype))?;
+        self.ledger.record_upload(stage, spec.bytes());
+        Ok(DeviceBuffer { buf, spec: spec.clone() })
+    }
+
+    /// **Metered** host→device upload of a host tensor (marshal + copy).
+    pub fn upload(&self, stage: usize, t: &HostTensor) -> Result<DeviceBuffer> {
+        self.upload_literal(stage, &t.to_literal()?, &t.io_spec())
+    }
+}
+
+/// A pipeline activation: host-staged or device-resident. This is what
+/// the executor's channels carry; which variant flows is decided once
+/// per iteration by [`crate::config::Staging`], so the steady-state
+/// device path never pattern-matches into a hidden transfer.
+#[derive(Debug)]
+pub enum Activation {
+    Host(HostTensor),
+    Device(DeviceBuffer),
+}
+
+impl Activation {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Activation::Host(t) => t.shape(),
+            Activation::Device(d) => d.shape(),
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, Activation::Device(_))
+    }
+
+    /// Resolve to a host tensor. `Host` is free; `Device` is a metered
+    /// sync billed to `stage`.
+    pub fn into_host(self, plane: &DevicePlane, stage: usize) -> Result<HostTensor> {
+        match self {
+            Activation::Host(t) => Ok(t),
+            Activation::Device(d) => d.to_host(plane, stage),
+        }
+    }
+
+    /// Resolve to a device buffer. `Device` is free; `Host` is a metered
+    /// upload billed to `stage`.
+    pub fn into_device(self, plane: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+        match self {
+            Activation::Host(t) => plane.upload(stage, &t),
+            Activation::Device(d) => Ok(d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+    use crate::runtime::Runtime;
+
+    fn runtime() -> Runtime {
+        Runtime::load_config(default_artifacts_root(), "tiny").expect("run `make artifacts`")
+    }
+
+    #[test]
+    fn upload_download_roundtrip_is_bitwise() {
+        let rt = runtime();
+        let ledger = TransferLedger::new(2);
+        let plane = rt.device_plane(&ledger);
+        let t = HostTensor::from_f32(vec![2, 3], &[1.5, -2.0, 0.0, 3.25, -0.5, 42.0]);
+        let d = plane.upload(1, &t).unwrap();
+        assert_eq!(d.shape(), t.shape());
+        assert_eq!(d.dtype(), "f32");
+        assert_eq!(d.bytes(), t.bytes());
+        let back = d.to_host(&plane, 1).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn crossings_are_billed_to_the_right_stage() {
+        let rt = runtime();
+        let ledger = TransferLedger::new(3);
+        let plane = rt.device_plane(&ledger);
+        let t = HostTensor::from_i32(vec![4], &[1, 2, 3, 4]);
+        let d = plane.upload(2, &t).unwrap();
+        d.to_host(&plane, 1).unwrap();
+        let s1 = ledger.stage_snapshot(1);
+        let s2 = ledger.stage_snapshot(2);
+        assert_eq!((s2.uploads, s2.bytes_up), (1, 16));
+        assert_eq!((s2.host_syncs, s2.bytes_down), (0, 0));
+        assert_eq!((s1.host_syncs, s1.bytes_down), (1, 16));
+        assert_eq!(ledger.stage_snapshot(0), Default::default());
+    }
+
+    #[test]
+    fn read_into_reuses_scratch_allocation() {
+        let rt = runtime();
+        let ledger = TransferLedger::new(1);
+        let plane = rt.device_plane(&ledger);
+        let t = HostTensor::from_f32(vec![3], &[7.0, 8.0, 9.0]);
+        let d = plane.upload(0, &t).unwrap();
+        let mut scratch = HostTensor::zeros_f32(vec![3]);
+        let ptr = scratch.as_f32().as_ptr();
+        d.read_into(&plane, 0, &mut scratch).unwrap();
+        assert_eq!(scratch, t);
+        d.read_into(&plane, 0, &mut scratch).unwrap();
+        assert_eq!(scratch, t);
+        assert_eq!(scratch.as_f32().as_ptr(), ptr, "scratch was reallocated");
+        assert_eq!(ledger.snapshot().host_syncs, 2, "both read_into calls billed");
+    }
+
+    #[test]
+    fn activation_conversions_are_explicit_and_metered() {
+        let rt = runtime();
+        let ledger = TransferLedger::new(1);
+        let plane = rt.device_plane(&ledger);
+        let t = HostTensor::from_f32(vec![2], &[1.0, 2.0]);
+
+        // Host → host: free.
+        let a = Activation::Host(t.clone());
+        assert!(!a.is_device());
+        let back = a.into_host(&plane, 0).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(ledger.snapshot(), Default::default());
+
+        // Host → device: one upload; device → device: free.
+        let d = Activation::Host(t.clone()).into_device(&plane, 0).unwrap();
+        assert_eq!(ledger.snapshot().uploads, 1);
+        let a = Activation::Device(d);
+        assert!(a.is_device());
+        assert_eq!(a.shape(), t.shape());
+        let d = a.into_device(&plane, 0).unwrap();
+        assert_eq!(ledger.snapshot().uploads, 1, "device→device must not re-upload");
+
+        // Device → host: one sync.
+        let back = Activation::Device(d).into_host(&plane, 0).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(ledger.snapshot().host_syncs, 1);
+    }
+}

@@ -1,6 +1,7 @@
-//! Per-stage parameter-literal cache: marshal each stage's parameters
-//! into `xla::Literal`s once, and re-marshal only when the stage's
-//! version counter says the parameters actually changed.
+//! Per-stage parameter cache: marshal each stage's parameters into
+//! `xla::Literal`s — and, for the device-resident activation plane,
+//! upload them as `PjRtBuffer`s — once, re-doing either only when the
+//! stage's version counter says the parameters actually changed.
 //!
 //! The seed engine rebuilt every stage's literals at the top of every
 //! `train_iteration` *and* re-marshalled raw tensors on every
@@ -11,11 +12,21 @@
 //! any work. Validation and eval between optimizer steps therefore hit
 //! the cache, as does every microbatch of an iteration.
 //!
+//! The **device side** ([`LiteralCache::refresh_device`] /
+//! [`LiteralCache::stage_buffers`]) follows the *same* `params_version`
+//! invalidation protocol with its own version cursor: every recovery
+//! write path (wipe, restore, CheckFree weighted averaging, partner /
+//! replica copies) bumps the stage version, so the next device refresh
+//! re-uploads exactly the rewritten stage. Host memory stays the source
+//! of truth — device buffers are a cache of the host literals, which are
+//! themselves a cache of the stage tensors.
+//!
 //! The cache is read-shared across the pipeline executor's keep-warm
 //! worker threads: all refreshes happen on the coordinator thread
 //! before an iteration's jobs are dispatched to the pool, so workers
 //! only ever read it (`&LiteralCache` across the scope, no locking).
 
+use crate::runtime::buffer::{DeviceBuffer, DevicePlane};
 use crate::runtime::HostTensor;
 use crate::Result;
 
@@ -24,22 +35,32 @@ struct StageEntry {
     /// sentinel `u64::MAX` marks a slot that has never been filled.
     version: u64,
     lits: Vec<xla::Literal>,
+    /// Version of the device-resident mirror (`u64::MAX` = never
+    /// uploaded). Tracked separately: host-only paths (sequential mode,
+    /// recovery math) refresh literals without paying device uploads.
+    dev_version: u64,
+    bufs: Vec<DeviceBuffer>,
 }
 
-/// Versioned per-stage literal store. Index 0 = embed stage, matching
-/// `PipelineEngine::stages`.
+/// Versioned per-stage literal + device-buffer store. Index 0 = embed
+/// stage, matching `PipelineEngine::stages`.
 #[derive(Default)]
 pub struct LiteralCache {
     stages: Vec<StageEntry>,
     hits: u64,
     misses: u64,
+    dev_hits: u64,
+    dev_misses: u64,
 }
 
 // SAFETY: `xla::Literal` is an immutable host-side buffer once built (the
 // cache hands out `&Literal` only for PJRT execute arguments, which read
-// it); the `xla` crate lacks the auto traits only because it stores raw
-// pointers. All mutation (`refresh`) takes `&mut self`, so the usual
-// borrow rules already serialize writers against the executor's readers.
+// it), and `DeviceBuffer` is likewise immutable after upload (no buffer
+// donation anywhere; execute arguments are reads — see its own Send/Sync
+// rationale); the `xla` crate lacks the auto traits only because it
+// stores raw pointers. All mutation (`refresh`/`refresh_device`) takes
+// `&mut self`, so the usual borrow rules already serialize writers
+// against the executor's readers.
 unsafe impl Send for LiteralCache {}
 unsafe impl Sync for LiteralCache {}
 
@@ -52,7 +73,12 @@ impl LiteralCache {
     /// rebuilding only on version change (or first touch).
     pub fn refresh(&mut self, idx: usize, version: u64, params: &[HostTensor]) -> Result<()> {
         while self.stages.len() <= idx {
-            self.stages.push(StageEntry { version: u64::MAX, lits: Vec::new() });
+            self.stages.push(StageEntry {
+                version: u64::MAX,
+                lits: Vec::new(),
+                dev_version: u64::MAX,
+                bufs: Vec::new(),
+            });
         }
         let entry = &mut self.stages[idx];
         if entry.version == version && entry.lits.len() == params.len() {
@@ -65,12 +91,55 @@ impl LiteralCache {
         Ok(())
     }
 
+    /// Ensure stage `idx` additionally holds **device-resident**
+    /// parameter buffers at `version`, re-uploading only on version
+    /// change (or first touch). The host literals are refreshed first —
+    /// they are the upload source — so a device miss costs one marshal
+    /// (if stale) plus one upload per tensor, billed to `plane.ledger`.
+    pub fn refresh_device(
+        &mut self,
+        plane: &DevicePlane,
+        idx: usize,
+        version: u64,
+        params: &[HostTensor],
+    ) -> Result<()> {
+        self.refresh(idx, version, params)?;
+        let entry = &mut self.stages[idx];
+        if entry.dev_version == version && entry.bufs.len() == params.len() {
+            self.dev_hits += 1;
+            return Ok(());
+        }
+        let bufs: Result<Vec<DeviceBuffer>> = entry
+            .lits
+            .iter()
+            .zip(params)
+            .map(|(lit, p)| plane.upload_literal(idx, lit, &p.io_spec()))
+            .collect();
+        entry.bufs = bufs?;
+        entry.dev_version = version;
+        self.dev_misses += 1;
+        Ok(())
+    }
+
     /// The cached literals of stage `idx` (panics if never refreshed —
     /// the engine refreshes all stages before any executor/eval use).
     pub fn stage(&self, idx: usize) -> &[xla::Literal] {
         let entry = &self.stages[idx];
         assert_ne!(entry.version, u64::MAX, "literal cache: stage {idx} never refreshed");
         &entry.lits
+    }
+
+    /// The cached device-resident parameter buffers of stage `idx`
+    /// (panics if [`Self::refresh_device`] never ran for it — the engine
+    /// refreshes all stages before dispatching device-path work).
+    pub fn stage_buffers(&self, idx: usize) -> &[DeviceBuffer] {
+        let entry = &self.stages[idx];
+        assert_ne!(
+            entry.dev_version,
+            u64::MAX,
+            "literal cache: stage {idx} never device-refreshed"
+        );
+        &entry.bufs
     }
 
     /// Is stage `idx` cached at exactly `version`?
@@ -81,10 +150,23 @@ impl LiteralCache {
             .unwrap_or(false)
     }
 
+    /// Is stage `idx`'s **device mirror** cached at exactly `version`?
+    pub fn is_fresh_device(&self, idx: usize, version: u64) -> bool {
+        self.stages
+            .get(idx)
+            .map(|e| e.dev_version == version && version != u64::MAX)
+            .unwrap_or(false)
+    }
+
     /// `(hits, misses)` since construction — the invalidation tests and
     /// the perf report read this.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// `(hits, misses)` of the device-buffer side.
+    pub fn device_stats(&self) -> (u64, u64) {
+        (self.dev_hits, self.dev_misses)
     }
 }
 
@@ -170,5 +252,114 @@ mod tests {
         let ts = params(3.0);
         let pool = SharedLiterals::build(&ts).unwrap();
         assert_eq!(pool.len(), 2);
+    }
+
+    mod device {
+        use super::*;
+        use crate::config::default_artifacts_root;
+        use crate::metrics::TransferLedger;
+        use crate::model::Stage;
+        use crate::recovery::checkfree::weighted_average_into;
+        use crate::rng::Rng;
+        use crate::runtime::Runtime;
+
+        fn runtime() -> Runtime {
+            Runtime::load_config(default_artifacts_root(), "tiny").expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn device_refresh_misses_once_then_hits() {
+            let rt = runtime();
+            let ledger = TransferLedger::new(1);
+            let plane = rt.device_plane(&ledger);
+            let mut c = LiteralCache::new();
+            let p = params(1.0);
+            c.refresh_device(&plane, 0, 0, &p).unwrap();
+            assert_eq!(c.device_stats(), (0, 1));
+            assert_eq!(c.stats(), (0, 1), "host literals refresh as the upload source");
+            assert_eq!(ledger.snapshot().uploads, 2, "one upload per tensor");
+            c.refresh_device(&plane, 0, 0, &p).unwrap();
+            assert_eq!(c.device_stats(), (1, 1));
+            assert_eq!(ledger.snapshot().uploads, 2, "hit must not re-upload");
+            assert_eq!(c.stage_buffers(0).len(), 2);
+            assert!(c.is_fresh_device(0, 0));
+            assert!(!c.is_fresh_device(0, 1));
+        }
+
+        #[test]
+        fn host_refresh_leaves_device_mirror_stale() {
+            // Sequential/eval paths refresh host literals only; the
+            // device mirror must not silently serve the old version.
+            let rt = runtime();
+            let ledger = TransferLedger::new(1);
+            let plane = rt.device_plane(&ledger);
+            let mut c = LiteralCache::new();
+            c.refresh_device(&plane, 0, 0, &params(1.0)).unwrap();
+            c.refresh(0, 1, &params(2.0)).unwrap();
+            assert!(c.is_fresh(0, 1));
+            assert!(!c.is_fresh_device(0, 1), "device mirror still at version 0");
+            c.refresh_device(&plane, 0, 1, &params(2.0)).unwrap();
+            assert!(c.is_fresh_device(0, 1));
+        }
+
+        #[test]
+        #[should_panic(expected = "never device-refreshed")]
+        fn reading_host_only_stage_buffers_panics() {
+            let mut c = LiteralCache::new();
+            c.refresh(0, 0, &params(1.0)).unwrap();
+            c.stage_buffers(0);
+        }
+
+        #[test]
+        fn every_recovery_write_path_invalidates_device_buffers() {
+            // The satellite test: wipe, restore, CheckFree weighted
+            // averaging, and redundant/partner copies all bump
+            // params_version, so the device mirror re-uploads after each.
+            let rt = runtime();
+            let ledger = TransferLedger::new(4);
+            let plane = rt.device_plane(&ledger);
+            let mut cache = LiteralCache::new();
+            let m = &rt.manifest;
+            let mut stage = Stage::new_body(m, 1, 1e-3, &mut Rng::new(11));
+            let left = Stage::new_body(m, 1, 1e-3, &mut Rng::new(12));
+            let right = Stage::new_body(m, 1, 1e-3, &mut Rng::new(13));
+
+            let mut refresh = |cache: &mut LiteralCache, s: &Stage| {
+                cache.refresh_device(&plane, 1, s.params_version(), &s.params).unwrap()
+            };
+            refresh(&mut cache, &stage);
+            let (_, misses0) = cache.device_stats();
+
+            let mut expect_invalidated = |cache: &mut LiteralCache, s: &Stage, what: &str| {
+                assert!(
+                    !cache.is_fresh_device(1, s.params_version()),
+                    "{what} did not invalidate the device mirror"
+                );
+                refresh(cache, s);
+                assert!(cache.is_fresh_device(1, s.params_version()), "{what}: refresh failed");
+            };
+
+            // wipe (stage loss, paper §3)
+            stage.wipe();
+            expect_invalidated(&mut cache, &stage, "wipe");
+
+            // restore (checkpoint rollback)
+            let snap = left.snapshot();
+            stage.restore(&snap);
+            expect_invalidated(&mut cache, &stage, "restore");
+
+            // CheckFree weighted averaging (recovery Algorithm 1)
+            stage.with_params_mut(|p| {
+                weighted_average_into(p, &left.params, &right.params, 1.0, 2.0)
+            });
+            expect_invalidated(&mut cache, &stage, "checkfree-average");
+
+            // redundant-computation / swap-partner copy
+            stage.copy_params_from(&right.params);
+            expect_invalidated(&mut cache, &stage, "redundant-copy");
+
+            let (_, misses) = cache.device_stats();
+            assert_eq!(misses - misses0, 4, "each write path re-uploaded exactly once");
+        }
     }
 }

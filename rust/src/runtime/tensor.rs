@@ -98,6 +98,18 @@ impl HostTensor {
         Ok(self.as_f32()[0])
     }
 
+    /// Bytes this tensor occupies, delegating to [`IoSpec::bytes`] so
+    /// the bytes-per-element billing rule lives in exactly one place.
+    pub fn bytes(&self) -> u64 {
+        self.io_spec().bytes()
+    }
+
+    /// The [`IoSpec`] describing this tensor — the shape/dtype metadata a
+    /// [`crate::runtime::DeviceBuffer`] keeps host-visible after upload.
+    pub fn io_spec(&self) -> IoSpec {
+        IoSpec { shape: self.shape.clone(), dtype: self.dtype().to_string() }
+    }
+
     /// Validate against a manifest IoSpec.
     pub fn check_spec(&self, spec: &IoSpec) -> Result<()> {
         if self.shape != spec.shape {
@@ -265,6 +277,16 @@ mod tests {
     fn copy_from_rejects_shape_mismatch() {
         let src = HostTensor::from_f32(vec![2], &[5., 6.]);
         HostTensor::zeros_f32(vec![3]).copy_from(&src);
+    }
+
+    #[test]
+    fn bytes_and_io_spec_describe_the_tensor() {
+        let t = HostTensor::from_i32(vec![2, 3], &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.bytes(), 24);
+        let spec = t.io_spec();
+        assert_eq!(spec.shape, vec![2, 3]);
+        assert_eq!(spec.dtype, "i32");
+        assert!(t.check_spec(&spec).is_ok());
     }
 
     #[test]

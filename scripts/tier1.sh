@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): release build + test suite +
-# clippy + docs/format gate + a smoke train_iteration timing check that
-# also refreshes BENCH_hot_path.json.
+# clippy gate + docs/format gate + a smoke train_iteration timing check.
 #
-# Usage: scripts/tier1.sh [--no-smoke] [--docs]
-#   --no-smoke  skip the timing smoke run
-#   --docs      run ONLY the documentation/format gate (fast local check)
+# Usage: scripts/tier1.sh [--no-smoke] [--docs] [--clippy] [--bench-smoke]
+#   --no-smoke     skip the timing smoke run
+#   --docs         run ONLY the documentation/format gate (fast local check)
+#   --clippy       run ONLY the clippy lint gate
+#   --bench-smoke  run ONLY the hot-path bench at toy size (tiny model,
+#                  short budgets) — catches bench bit-rot without waiting
+#                  for the full measurement run; writes the gitignored
+#                  BENCH_hot_path.smoke.json, never the committed file
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -29,11 +33,39 @@ docs_gate() {
     fi
 }
 
-if [[ "${1:-}" == "--docs" ]]; then
+clippy_gate() {
+    echo "== cargo clippy --all-targets (deny warnings) =="
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "clippy unavailable; skipping lint gate" >&2
+    fi
+}
+
+bench_smoke() {
+    echo "== smoke hot-path bench (tiny, short budgets: timings + watermark + device-residency sections) =="
+    cargo bench --bench hot_path -- --smoke
+    echo "Smoke results in BENCH_hot_path.smoke.json (gitignored); run the full"
+    echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
+}
+
+case "${1:-}" in
+--docs)
     docs_gate
     echo "docs gate OK"
     exit 0
-fi
+    ;;
+--clippy)
+    clippy_gate
+    echo "clippy gate OK"
+    exit 0
+    ;;
+--bench-smoke)
+    bench_smoke
+    echo "bench smoke OK"
+    exit 0
+    ;;
+esac
 
 echo "== cargo build --release =="
 cargo build --release
@@ -41,20 +73,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== cargo clippy (deny warnings) =="
-if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
-else
-    echo "clippy unavailable; skipping lint gate" >&2
-fi
+clippy_gate
 
 docs_gate
 
 if [[ "${1:-}" != "--no-smoke" ]]; then
-    echo "== smoke train_iteration timing (tiny, 4 microbatches, seq vs pipelined vs 1F1B) =="
-    cargo bench --bench hot_path -- --smoke
-    echo "Smoke results in BENCH_hot_path.smoke.json (gitignored); run the full"
-    echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
+    bench_smoke
 fi
 
 echo "tier-1 OK"
