@@ -145,6 +145,70 @@ impl Staging {
     }
 }
 
+/// How many PJRT clients back the device plane (orthogonal to both
+/// [`ExecMode`] and [`Staging`]).
+///
+/// CheckFree's premise is stages living on *distinct* failure-prone
+/// nodes; `PerStage` gives every pipeline stage its own PJRT client (its
+/// own "node"), with explicit, metered link copies at the stage
+/// boundaries ([`crate::runtime::DeviceBuffer::copy_to_plane`];
+/// `link_copies`/`link_bytes` on the transfer ledger). Bitwise-identical
+/// results either way — a link copy moves bytes, never changes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaneMode {
+    /// Every stage multiplexes one CPU PJRT client — the pre-multi-client
+    /// behaviour and the default (until CI measures per-stage parity; see
+    /// `.github/workflows/tier1.yml`, which matrixes the test job over
+    /// both modes).
+    Shared,
+    /// One PJRT client (and one `DevicePlane`) per pipeline stage; the
+    /// head executes on the **last** stage's plane — the paper's §4.3
+    /// deembedding-replication shape — so an `L`-stage pipeline has
+    /// exactly `L−1` inter-client links, each crossed once forward and
+    /// once backward per microbatch.
+    PerStage,
+}
+
+impl PlaneMode {
+    pub const ALL: [PlaneMode; 2] = [PlaneMode::Shared, PlaneMode::PerStage];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlaneMode::Shared => "shared",
+            PlaneMode::PerStage => "per-stage",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_PLANE_MODE` if set (the CI
+    /// matrix's lever — it flips the whole test suite to per-stage
+    /// planes without touching any test), else [`PlaneMode::Shared`].
+    /// An unparsable value falls back to `Shared` rather than poisoning
+    /// every `TrainConfig::default()` call site — but **loudly**: a
+    /// typoed matrix leg silently running shared would report a
+    /// vacuously green parity measurement.
+    pub fn from_env() -> PlaneMode {
+        match std::env::var("CHECKFREE_PLANE_MODE") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_PLANE_MODE: {e}; using 'shared'");
+                PlaneMode::Shared
+            }),
+            Err(_) => PlaneMode::Shared,
+        }
+    }
+}
+
+impl FromStr for PlaneMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "shared" => Ok(PlaneMode::Shared),
+            "per-stage" | "per_stage" | "perstage" => Ok(PlaneMode::PerStage),
+            other => Err(anyhow!("unknown plane mode '{other}' (shared|per-stage)")),
+        }
+    }
+}
+
 /// Reinitialization rule for a lost intermediate stage (paper Fig 2
 /// ablation: random / copy / weighted averaging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -264,6 +328,9 @@ pub struct TrainConfig {
     /// Escape hatch: stage activations through host tensors instead of
     /// keeping them device-resident (see [`Staging`]).
     pub host_staging: bool,
+    /// One PJRT client for all stages, or one per stage (see
+    /// [`PlaneMode`]). Defaults to [`PlaneMode::from_env`].
+    pub plane_mode: PlaneMode,
 }
 
 impl Default for TrainConfig {
@@ -284,6 +351,7 @@ impl Default for TrainConfig {
             eval_every: 10,
             exec_mode: ExecMode::Pipelined1F1B,
             host_staging: false,
+            plane_mode: PlaneMode::from_env(),
         }
     }
 }
@@ -320,6 +388,7 @@ impl TrainConfig {
             ("eval_every", Json::num(self.eval_every as f64)),
             ("exec_mode", Json::str(self.exec_mode.label())),
             ("host_staging", Json::Bool(self.host_staging)),
+            ("plane_mode", Json::str(self.plane_mode.label())),
         ])
     }
 
@@ -397,6 +466,10 @@ impl TrainConfig {
             host_staging: match v.opt("host_staging") {
                 Some(x) => x.as_bool()?,
                 None => d.host_staging,
+            },
+            plane_mode: match v.opt("plane_mode") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.plane_mode,
             },
         })
     }
@@ -564,6 +637,36 @@ mod tests {
                 .unwrap();
         assert!(!back.host_staging);
         assert_ne!(Staging::Device.label(), Staging::Host.label());
+    }
+
+    #[test]
+    fn plane_mode_parse_all_labels() {
+        for m in PlaneMode::ALL {
+            assert_eq!(m.label().parse::<PlaneMode>().unwrap(), m);
+        }
+        assert_eq!("per_stage".parse::<PlaneMode>().unwrap(), PlaneMode::PerStage);
+        assert_eq!("perstage".parse::<PlaneMode>().unwrap(), PlaneMode::PerStage);
+        assert!("bogus".parse::<PlaneMode>().is_err());
+    }
+
+    #[test]
+    fn plane_mode_roundtrips_and_defaults_from_env() {
+        // The in-process default follows CHECKFREE_PLANE_MODE (the CI
+        // matrix leg sets it); explicit values always roundtrip.
+        assert_eq!(TrainConfig::default().plane_mode, PlaneMode::from_env());
+        for mode in PlaneMode::ALL {
+            let cfg = TrainConfig { plane_mode: mode, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.plane_mode, mode);
+        }
+        // absent key → env default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.plane_mode, PlaneMode::from_env());
     }
 
     #[test]

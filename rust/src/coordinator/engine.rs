@@ -38,10 +38,16 @@
 //! CheckFree's recovery math genuinely need the numbers. Recovery stays
 //! host-side by design (weighted averaging reads host params, unchanged
 //! numerically); its writes bump `params_version`, which invalidates
-//! host literals *and* device mirrors alike. `--host-staging` flips the
-//! pipelined modes back to host tensors at every boundary; the
-//! sequential reference path always stages through host. Every crossing
-//! is billed to the engine's [`crate::metrics::TransferLedger`].
+//! host literals *and* every per-plane device mirror alike. Under
+//! `--plane-mode per-stage` each stage's parameters are mirrored onto
+//! its **own** PJRT client (plus stage 0's deembed half onto the tail
+//! plane the head executes on), so a recovered stage's replacement
+//! lands on the correct client at the next refresh with no extra
+//! bookkeeping. `--host-staging` flips the pipelined modes back to host
+//! tensors at every boundary; the sequential reference path always
+//! stages through host. Every crossing — including per-stage mode's
+//! cross-client link copies — is billed to the engine's
+//! [`crate::metrics::TransferLedger`].
 //!
 //! All modes read parameters through the versioned
 //! [`crate::runtime::LiteralCache`] (marshalled/uploaded once per
@@ -59,14 +65,14 @@
 
 use std::cell::RefCell;
 
-use crate::config::{ExecMode, Staging, TrainConfig};
+use crate::config::{ExecMode, PlaneMode, Staging, TrainConfig};
 use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
 use crate::metrics::{ActivationWatermark, TransferLedger};
 use crate::model::{GradBuffer, Stage};
 use crate::rng::Rng;
-use crate::runtime::{DeviceBuffer, DevicePlane, HostTensor, LiteralCache, Runtime};
+use crate::runtime::{DeviceBuffer, DevicePlane, HostTensor, LiteralCache, PlaneSet, Runtime};
 use crate::{anyhow, Context, Result};
 
 /// Result of one training iteration.
@@ -100,6 +106,9 @@ pub struct PipelineEngine {
     /// Which activation plane the pipelined modes run
     /// (`--host-staging` escape hatch; sequential always host-stages).
     staging: Staging,
+    /// One PJRT client for all stages, or one per stage (mirrors the
+    /// runtime's layout; see [`crate::config::PlaneMode`]).
+    plane_mode: PlaneMode,
     /// Keep-warm pipeline workers, spawned on the first pipelined
     /// iteration and reused by every later one (no per-iteration thread
     /// spawning on the hot path).
@@ -116,12 +125,19 @@ pub struct PipelineEngine {
 impl PipelineEngine {
     pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
         cfg.validate()?;
-        let runtime = Runtime::load_config(&cfg.artifacts_root, &cfg.model)
+        let runtime = Runtime::load_config_with(&cfg.artifacts_root, &cfg.model, cfg.plane_mode)
             .with_context(|| format!("loading model config '{}'", cfg.model))?;
         Self::new(runtime, cfg)
     }
 
     pub fn new(runtime: Runtime, cfg: &TrainConfig) -> Result<Self> {
+        if runtime.plane_mode() != cfg.plane_mode {
+            return Err(anyhow!(
+                "runtime was loaded with plane mode '{}' but the config wants '{}'",
+                runtime.plane_mode().label(),
+                cfg.plane_mode.label()
+            ));
+        }
         let mc = runtime.manifest.config.clone();
         let lr = cfg.lr.unwrap_or(mc.learning_rate);
         let mut rng = Rng::new(cfg.seed);
@@ -153,6 +169,7 @@ impl PipelineEngine {
             microbatches: cfg.microbatches_per_iter,
             exec_mode: cfg.exec_mode,
             staging: cfg.staging(),
+            plane_mode: cfg.plane_mode,
             worker_pool: None,
             activations: ActivationWatermark::new(),
             ledger,
@@ -186,11 +203,18 @@ impl PipelineEngine {
 
     /// Like [`Self::refresh_cache`], but also brings every stage's
     /// **device-resident** parameter buffers up to date (same version
-    /// protocol; uploads exactly the stages that were rewritten).
-    fn refresh_cache_device(&self, plane: &DevicePlane) -> Result<()> {
+    /// protocol; uploads exactly the stages that were rewritten) — each
+    /// stage on its owning plane, plus stage 0 on the head's plane when
+    /// they differ (per-stage mode: the tail node holds the deembedding
+    /// replica the head executes with, paper §4.3).
+    fn refresh_cache_device(&self, planes: &PlaneSet) -> Result<()> {
         let mut cache = self.lit_cache.borrow_mut();
         for (i, s) in self.stages.iter().enumerate() {
-            cache.refresh_device(plane, i, s.params_version(), &s.params)?;
+            cache.refresh_device(planes.plane(i), i, s.params_version(), &s.params)?;
+        }
+        if planes.head().idx() != planes.plane(0).idx() {
+            let s0 = &self.stages[0];
+            cache.refresh_device(planes.head(), 0, s0.params_version(), &s0.params)?;
         }
         Ok(())
     }
@@ -218,6 +242,11 @@ impl PipelineEngine {
     /// The activation plane the pipelined modes run on.
     pub fn staging(&self) -> Staging {
         self.staging
+    }
+
+    /// One PJRT client for all stages, or one per stage.
+    pub fn plane_mode(&self) -> PlaneMode {
+        self.plane_mode
     }
 
     /// Batches in the held-out validation set ([`Self::validate`] runs
@@ -331,9 +360,9 @@ impl PipelineEngine {
         let staging = self.staging;
         let losses: Vec<f32> = match sched {
             Some(kind) if self.stages.len() >= 2 => {
-                let plane = self.runtime.device_plane(&self.ledger);
+                let planes = self.runtime.plane_set(&self.ledger);
                 match staging {
-                    Staging::Device => self.refresh_cache_device(&plane)?,
+                    Staging::Device => self.refresh_cache_device(&planes)?,
                     Staging::Host => self.refresh_cache()?,
                 }
                 if self.worker_pool.is_none() {
@@ -346,7 +375,7 @@ impl PipelineEngine {
                 executor::run_iteration(
                     pool,
                     &self.runtime,
-                    &plane,
+                    &planes,
                     &cache,
                     &batches,
                     self.stages.len() - 1,
@@ -419,33 +448,49 @@ impl PipelineEngine {
     }
 
     fn eval_loss_device(&self, ids: &HostTensor) -> Result<f32> {
-        let plane = self.runtime.device_plane(&self.ledger);
-        self.refresh_cache_device(&plane)?;
+        let planes = self.runtime.plane_set(&self.ledger);
+        self.refresh_cache_device(&planes)?;
         let cache = self.lit_cache.borrow();
-        let ids_buf = plane.upload(0, ids)?;
-        let st0 = cache.stage_buffers(0);
-        let embed_fwd = self.runtime.executable("embed_fwd")?;
+        let p0 = planes.plane(0);
+        let ids_buf = p0.upload(0, ids)?;
+        let embed_fwd = self.runtime.executable_on(p0.idx(), "embed_fwd")?;
         let mut h = embed_fwd
-            .execute_buffers(&plane, 0, &[&st0[0], &ids_buf])?
+            .execute_buffers(p0, 0, &[&cache.stage_buffers_on(0, p0.idx())[0], &ids_buf])?
             .pop()
             .ok_or_else(|| anyhow!("embed_fwd returned nothing"))?;
-        let body_fwd = self.runtime.executable("body_fwd")?;
         for s in 1..self.stages.len() {
+            // Per-stage planes: the chain hops clients at every stage
+            // boundary, exactly like the executor's forward links.
+            let plane = planes.plane(s);
+            let h_in = h.copy_to_plane(plane, s)?;
+            let body_fwd = self.runtime.executable_on(plane.idx(), "body_fwd")?;
             h = {
-                let mut args: Vec<&DeviceBuffer> = cache.stage_buffers(s).iter().collect();
-                args.push(&h);
+                let mut args: Vec<&DeviceBuffer> =
+                    cache.stage_buffers_on(s, plane.idx()).iter().collect();
+                args.push(&h_in);
                 body_fwd
-                    .execute_buffers(&plane, s, &args)?
+                    .execute_buffers(plane, s, &args)?
                     .pop()
                     .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
             };
         }
-        let head_fwd = self.runtime.executable("head_fwd")?;
+        // The head rides the last stage's plane, so the chain arrives
+        // resident; only the ids may need a second copy there.
+        let ph = planes.head();
+        let head_fwd = self.runtime.executable_on(ph.idx(), "head_fwd")?;
+        let st0 = cache.stage_buffers_on(0, ph.idx());
+        let ids_head;
+        let ids_ref = if ph.idx() == p0.idx() {
+            &ids_buf
+        } else {
+            ids_head = ph.upload(0, ids)?;
+            &ids_head
+        };
         head_fwd
-            .execute_buffers(&plane, 0, &[&st0[1], &st0[2], &h, &ids_buf])?
+            .execute_buffers(ph, 0, &[&st0[1], &st0[2], &h, ids_ref])?
             .pop()
             .ok_or_else(|| anyhow!("head_fwd returned nothing"))?
-            .to_host(&plane, 0)? // the validation-boundary sync
+            .to_host(ph, 0)? // the validation-boundary sync
             .scalar_f32()
     }
 
@@ -507,12 +552,13 @@ mod tests {
     use super::*;
     use crate::config::Strategy;
 
-    fn engine_with_staging(
+    fn engine_with_planes(
         strategy: Strategy,
         seed: u64,
         microbatches: usize,
         exec_mode: ExecMode,
         host_staging: bool,
+        plane_mode: PlaneMode,
     ) -> PipelineEngine {
         let cfg = TrainConfig {
             model: "tiny".into(),
@@ -521,9 +567,29 @@ mod tests {
             seed,
             exec_mode,
             host_staging,
+            plane_mode,
             ..TrainConfig::default()
         };
         PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn engine_with_staging(
+        strategy: Strategy,
+        seed: u64,
+        microbatches: usize,
+        exec_mode: ExecMode,
+        host_staging: bool,
+    ) -> PipelineEngine {
+        // Plane mode follows CHECKFREE_PLANE_MODE (the CI matrix leg):
+        // every test built through this helper runs in both layouts.
+        engine_with_planes(
+            strategy,
+            seed,
+            microbatches,
+            exec_mode,
+            host_staging,
+            PlaneMode::from_env(),
+        )
     }
 
     fn engine_with_mode(
@@ -679,64 +745,180 @@ mod tests {
         //   per microbatch: the loss scalar (1) + the head's stage-0
         //   gradient pieces gd/gnw (2) + ∂L/∂embed (1) + each slot's P
         //   parameter gradients (L·P)
-        // — no per-stage-boundary activation syncs at all. Uploads are
-        // the per-version param refresh (apply_grads bumped every stage
-        // last iteration) plus one ids upload per microbatch.
+        // — no per-stage-boundary activation syncs at all, in EITHER
+        // plane mode: per-stage link copies are their own column and
+        // must not disturb the boundary contract. Uploads are the
+        // per-version param refresh (apply_grads bumped every stage last
+        // iteration) plus the ids uploads — per-stage mode additionally
+        // mirrors stage 0 onto the head's plane and uploads ids for both
+        // consumer planes.
         let m = 4u64;
-        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
-            let mut e = engine_with_mode(Strategy::None, 41, m as usize, mode);
-            e.train_iteration().unwrap(); // warm: first param upload
-            let before = e.transfer_ledger().snapshot();
-            e.train_iteration().unwrap();
-            let delta = e.transfer_ledger().snapshot().since(&before);
+        for plane_mode in PlaneMode::ALL {
+            for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+                let mut e =
+                    engine_with_planes(Strategy::None, 41, m as usize, mode, false, plane_mode);
+                e.train_iteration().unwrap(); // warm: first param upload
+                let before = e.transfer_ledger().snapshot();
+                e.train_iteration().unwrap();
+                let delta = e.transfer_ledger().snapshot().since(&before);
 
-            assert_eq!(
-                delta.forced_tuple_roundtrips, 0,
-                "{mode:?}: PJRT binding returned tupled outputs — device plane degraded \
-                 (see runtime module docs; --host-staging is the escape hatch)"
-            );
-            let l = e.body_stages() as u64;
-            let p = e.stages[1].params.len() as u64;
-            assert_eq!(
-                delta.host_syncs,
-                m * (4 + l * p),
-                "{mode:?}: host syncs off the loss/grad boundary count"
-            );
-            let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
-            assert_eq!(
-                delta.uploads,
-                param_tensors + m,
-                "{mode:?}: uploads must be params-per-version + ids-per-microbatch"
-            );
+                assert_eq!(
+                    delta.forced_tuple_roundtrips, 0,
+                    "{mode:?}/{plane_mode:?}: PJRT binding returned tupled outputs — device \
+                     plane degraded (see runtime module docs; --host-staging is the escape \
+                     hatch)"
+                );
+                let l = e.body_stages() as u64;
+                let p = e.stages[1].params.len() as u64;
+                assert_eq!(
+                    delta.host_syncs,
+                    m * (4 + l * p),
+                    "{mode:?}/{plane_mode:?}: host syncs off the loss/grad boundary count"
+                );
+                let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
+                let (want_uploads, want_links) = match plane_mode {
+                    PlaneMode::Shared => (param_tensors + m, 0),
+                    PlaneMode::PerStage => {
+                        let s0 = e.stages[0].params.len() as u64; // head-plane mirror
+                        let links = e.stages.len() as u64 - 1; // inter-stage links
+                        (param_tensors + s0 + 2 * m, 2 * links * m)
+                    }
+                };
+                assert_eq!(
+                    delta.uploads, want_uploads,
+                    "{mode:?}/{plane_mode:?}: uploads must be params-per-version + ids"
+                );
+                assert_eq!(
+                    delta.link_copies, want_links,
+                    "{mode:?}/{plane_mode:?}: one link copy per inter-stage link per \
+                     direction per microbatch"
+                );
+                if plane_mode == PlaneMode::PerStage {
+                    assert!(delta.link_bytes > 0, "link copies must carry bytes");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_stage_link_copies_bill_the_receiving_stage() {
+        // Attribution detail behind the 2·(L−1)·m total: on the standard
+        // route the embed receives m backward hops, every interior stage
+        // m forward + m backward, and the last stage m forward hops (its
+        // head link is plane-local, paper §4.3 shape).
+        let m = 4u64;
+        let mut e = engine_with_planes(
+            Strategy::None,
+            59,
+            m as usize,
+            ExecMode::Pipelined1F1B,
+            false,
+            PlaneMode::PerStage,
+        );
+        e.train_iteration().unwrap(); // warm
+        let per_stage_before: Vec<_> =
+            (0..e.stages.len()).map(|s| e.transfer_ledger().stage_snapshot(s)).collect();
+        e.train_iteration().unwrap();
+        let last = e.stages.len() - 1;
+        for s in 0..=last {
+            let delta = e.transfer_ledger().stage_snapshot(s).since(&per_stage_before[s]);
+            let want = if s == 0 || s == last { m } else { 2 * m };
+            assert_eq!(delta.link_copies, want, "stage {s} link-copy attribution");
         }
     }
 
     #[test]
     fn device_plane_validate_syncs_once_per_batch() {
-        let mut e = engine_with_mode(Strategy::None, 43, 2, ExecMode::Pipelined1F1B);
-        // Warm both the executor path and the eval path (the first
-        // device execute of head_fwd pays its one-time layout probe).
-        e.train_iteration().unwrap();
-        e.validate().unwrap();
-        e.train_iteration().unwrap();
-        let v = e.validation_batches() as u64;
-        let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
+        for plane_mode in PlaneMode::ALL {
+            let mut e =
+                engine_with_planes(Strategy::None, 43, 2, ExecMode::Pipelined1F1B, false, plane_mode);
+            // Warm both the executor path and the eval path (the first
+            // device execute of head_fwd pays its one-time layout probe).
+            e.train_iteration().unwrap();
+            e.validate().unwrap();
+            e.train_iteration().unwrap();
+            let v = e.validation_batches() as u64;
+            let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
+            // Per-stage: stage 0 additionally mirrors onto the head's
+            // plane, and each eval batch uploads ids to both consumer
+            // planes and hops the body chain once per link.
+            let (refresh_uploads, ids_per_batch, links_per_batch) = match plane_mode {
+                PlaneMode::Shared => (param_tensors, 1, 0),
+                PlaneMode::PerStage => (
+                    param_tensors + e.stages[0].params.len() as u64,
+                    2,
+                    e.stages.len() as u64 - 1,
+                ),
+            };
 
-        // First validate after an optimizer step: params stale → one
-        // device refresh, then exactly one loss sync + one ids upload
-        // per batch.
-        let before = e.transfer_ledger().snapshot();
-        e.validate().unwrap();
-        let delta = e.transfer_ledger().snapshot().since(&before);
-        assert_eq!(delta.host_syncs, v, "validation boundary: one loss sync per batch");
-        assert_eq!(delta.uploads, param_tensors + v);
+            // First validate after an optimizer step: params stale → one
+            // device refresh, then exactly one loss sync per batch.
+            let before = e.transfer_ledger().snapshot();
+            e.validate().unwrap();
+            let delta = e.transfer_ledger().snapshot().since(&before);
+            assert_eq!(
+                delta.host_syncs, v,
+                "{plane_mode:?}: validation boundary: one loss sync per batch"
+            );
+            assert_eq!(delta.uploads, refresh_uploads + ids_per_batch * v);
+            assert_eq!(delta.link_copies, links_per_batch * v);
 
-        // Second validate: cache-served params, ids only.
-        let before = e.transfer_ledger().snapshot();
-        e.validate().unwrap();
-        let delta = e.transfer_ledger().snapshot().since(&before);
-        assert_eq!(delta.host_syncs, v);
-        assert_eq!(delta.uploads, v, "no param re-upload without a version bump");
+            // Second validate: cache-served params, ids only.
+            let before = e.transfer_ledger().snapshot();
+            e.validate().unwrap();
+            let delta = e.transfer_ledger().snapshot().since(&before);
+            assert_eq!(delta.host_syncs, v);
+            assert_eq!(
+                delta.uploads,
+                ids_per_batch * v,
+                "{plane_mode:?}: no param re-upload without a version bump"
+            );
+        }
+    }
+
+    #[test]
+    fn per_stage_planes_match_shared_bitwise() {
+        // The tentpole acceptance test: giving every stage its own PJRT
+        // client (with link copies at every stage boundary) must be
+        // bitwise-invisible in results across ALL exec modes and under
+        // the CheckFree+ swap schedule — a link copy moves bytes, never
+        // changes them.
+        for mode in [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+                let mut shared =
+                    engine_with_planes(strategy, 61, 4, mode, false, PlaneMode::Shared);
+                let mut per_stage =
+                    engine_with_planes(strategy, 61, 4, mode, false, PlaneMode::PerStage);
+                assert_eq!(per_stage.plane_mode(), PlaneMode::PerStage);
+                for it in 0..3 {
+                    let a = shared.train_iteration().unwrap();
+                    let b = per_stage.train_iteration().unwrap();
+                    assert_eq!(
+                        a.loss.to_bits(),
+                        b.loss.to_bits(),
+                        "loss diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                    assert_eq!(
+                        a.omegas, b.omegas,
+                        "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                }
+                for (s, p) in shared.stages.iter().zip(&per_stage.stages) {
+                    assert_eq!(
+                        s.params, p.params,
+                        "stage {} weights diverged ({strategy:?}, {mode:?})",
+                        s.index
+                    );
+                }
+                let va = shared.validate().unwrap();
+                let vb = per_stage.validate().unwrap();
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "validation diverged ({strategy:?}, {mode:?})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -45,9 +45,26 @@
 //! [`Staging::Host`] (`--host-staging`) payloads are `HostTensor`s and
 //! every stage boundary round-trips through host exactly as before the
 //! device plane existed — kept as the A/B baseline and escape hatch.
-//! Either way every crossing is billed to the plane's
+//! Either way every crossing is billed to the planes'
 //! [`crate::metrics::TransferLedger`], which is how
 //! `BENCH_hot_path.json`'s `device_residency` gate measures the win.
+//!
+//! **Plane routing (`--plane-mode`):** every worker resolves incoming
+//! activations onto **the plane owning the stage it is about to
+//! execute** (`Activation::into_device(planes.plane(s), s)`) and runs
+//! that plane's compiled executable
+//! ([`Runtime::executable_on`]). Under the shared plane that resolve is
+//! always free; under per-stage planes each stage owns its PJRT client,
+//! so a payload arriving from the neighbouring stage takes the metered
+//! [`crate::runtime::DeviceBuffer::copy_to_plane`] **link copy** — the
+//! simulated network hop between CheckFree's failure-prone nodes. The
+//! head executes on the **last** stage's plane (the pipe tail holds the
+//! deembedding replica, paper §4.3), so an `L`-stage pipeline has
+//! exactly `L−1` links and a steady-state iteration records exactly
+//! `2·(L−1)·m` link copies (each link crossed once forward, once
+//! backward, per microbatch) — pinned by an engine test. With
+//! CheckFree+ swaps a microbatch's route visits planes in swapped
+//! order, so its hop count can differ; bitwise results never do.
 //!
 //! **Memory contract:** every stash/release is counted by the shared
 //! [`ActivationWatermark`]. Fill/drain keeps every slot's stashed
@@ -82,7 +99,8 @@ use crate::coordinator::schedule::{self, PipelineSchedule, Step};
 use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
 use crate::runtime::{
-    Activation, DeviceBuffer, DevicePlane, HostTensor, LiteralCache, Runtime, SharedLiterals,
+    Activation, DeviceBuffer, Executable, HostTensor, LiteralCache, PlaneSet, Runtime,
+    SharedLiterals,
 };
 use crate::{anyhow, Result};
 
@@ -125,23 +143,39 @@ struct HeadGrads {
 /// The per-iteration microbatch token ids, marshalled once into the
 /// active staging plane's currency and read-shared by the embed and
 /// head workers (embed fwd + bwd and the head each reuse the same
-/// entry — no per-use re-marshal/re-upload).
+/// entry — no per-use re-marshal/re-upload). Under per-stage planes the
+/// embed (plane 0) and the head (the tail plane) execute on different
+/// clients, so the pool holds one upload per consumer plane — still
+/// once per iteration, never per use.
 enum IdPool {
     Host(SharedLiterals),
-    Device(Vec<DeviceBuffer>),
+    Device {
+        /// Ids on the embed's plane (plane 0).
+        embed: Vec<DeviceBuffer>,
+        /// Ids on the head's plane — `None` when the head shares the
+        /// embed's plane (shared mode).
+        head: Option<Vec<DeviceBuffer>>,
+    },
 }
 
 impl IdPool {
     fn lit(&self, mb: usize) -> &xla::Literal {
         match self {
             IdPool::Host(pool) => &pool[mb],
-            IdPool::Device(_) => panic!("host ids requested from a device id pool"),
+            IdPool::Device { .. } => panic!("host ids requested from a device id pool"),
         }
     }
 
     fn buf(&self, mb: usize) -> &DeviceBuffer {
         match self {
-            IdPool::Device(pool) => &pool[mb],
+            IdPool::Device { embed, .. } => &embed[mb],
+            IdPool::Host(_) => panic!("device ids requested from a host id pool"),
+        }
+    }
+
+    fn head_buf(&self, mb: usize) -> &DeviceBuffer {
+        match self {
+            IdPool::Device { embed, head } => head.as_ref().map_or(&embed[mb], |h| &h[mb]),
             IdPool::Host(_) => panic!("device ids requested from a host id pool"),
         }
     }
@@ -349,16 +383,17 @@ impl<'a> OrderedSink<'a> {
 /// selects the activation plane (device-resident or host-staged);
 /// `watermark` is reset by the engine and counts every slot
 /// stash/release. The caller refreshes `lits` for every stage
-/// beforehand — including the device mirror when `staging` is
-/// [`Staging::Device`] — so this function only reads it. `pool` must
+/// beforehand — including, when `staging` is [`Staging::Device`], the
+/// device mirror **on each stage's owning plane** plus stage 0's mirror
+/// on the head's plane — so this function only reads it. `pool` must
 /// hold at least `body_stages + 1` workers (embed + one per slot; the
-/// head runs on the calling thread). Every host↔device crossing is
-/// billed to `plane`'s ledger.
+/// head runs on the calling thread). Every host↔device crossing and
+/// every cross-plane link copy is billed to `planes`' shared ledger.
 #[allow(clippy::too_many_arguments)]
 pub fn run_iteration(
     pool: &mut WorkerPool,
     runtime: &Runtime,
-    plane: &DevicePlane,
+    planes: &PlaneSet,
     lits: &LiteralCache,
     batches: &[HostTensor],
     body_stages: usize,
@@ -387,10 +422,24 @@ pub fn run_iteration(
     // Marshal every microbatch's token ids once, in the active plane's
     // currency; embed (fwd+bwd) and head workers index this shared pool
     // instead of re-converting/re-uploading (ids traffic bills stage 0).
+    // Per-stage planes upload a second copy for the head's client.
     let ids = match staging {
         Staging::Host => IdPool::Host(SharedLiterals::build(batches)?),
         Staging::Device => {
-            IdPool::Device(batches.iter().map(|b| plane.upload(0, b)).collect::<Result<_>>()?)
+            let p0 = planes.plane(0);
+            let embed: Vec<_> =
+                batches.iter().map(|b| p0.upload(0, b)).collect::<Result<_>>()?;
+            let head = if planes.head().idx() != p0.idx() {
+                Some(
+                    batches
+                        .iter()
+                        .map(|b| planes.head().upload(0, b))
+                        .collect::<Result<_>>()?,
+                )
+            } else {
+                None
+            };
+            IdPool::Device { embed, head }
         }
     };
 
@@ -435,7 +484,7 @@ pub fn run_iteration(
         let (ids, sinks) = (&ids, &sinks);
         let table = schedule::step_table(sched, l, 0, m);
         jobs.push(Box::new(move || {
-            embed_worker(runtime, plane, lits, staging, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
+            embed_worker(runtime, planes, lits, staging, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
         }));
     }
 
@@ -449,7 +498,7 @@ pub fn run_iteration(
         let table = schedule::step_table(sched, l, p, m);
         jobs.push(Box::new(move || {
             slot_worker(
-                runtime, plane, lits, staging, l, use_swaps, p - 1, m, &table, watermark, fwd_rx,
+                runtime, planes, lits, staging, l, use_swaps, p - 1, m, &table, watermark, fwd_rx,
                 fwd_tx, bwd_rx, bwd_tx, sinks,
             )
         }));
@@ -460,7 +509,7 @@ pub fn run_iteration(
     let bwd_tx = btx[l].take().expect("head bwd out");
     let ids_ref = &ids;
     let (head_res, job_results) = pool.scope(jobs, move || {
-        head_worker(runtime, plane, lits, staging, ids_ref, m, fwd_rx, bwd_tx, aux_tx)
+        head_worker(runtime, planes, lits, staging, ids_ref, m, fwd_rx, bwd_tx, aux_tx)
     });
 
     let mut errs: Vec<anyhow::Error> = job_results.into_iter().filter_map(|r| r.err()).collect();
@@ -495,15 +544,16 @@ fn pick_root_cause(mut errs: Vec<anyhow::Error>) -> anyhow::Error {
     errs.swap_remove(i)
 }
 
-/// Position 0: `embed_fwd` / `embed_bwd` in step-table order. A backward
-/// step joins the returning `∂L/∂h0` with the head's stage-0 pieces
-/// (which arrive on their own link, buffered until needed). On the
-/// device plane the only host sync here is `∂L/∂embed` itself — the
-/// stage-0 slice of the gradient boundary.
+/// Position 0: `embed_fwd` / `embed_bwd` in step-table order, on stage
+/// 0's plane. A backward step joins the returning `∂L/∂h0` with the
+/// head's stage-0 pieces (which arrive on their own link, buffered until
+/// needed) — under per-stage planes that returning `∂L/∂h0` is the
+/// S1→embed link copy. On the device plane the only host sync here is
+/// `∂L/∂embed` itself — the stage-0 slice of the gradient boundary.
 #[allow(clippy::too_many_arguments)]
 fn embed_worker(
     runtime: &Runtime,
-    plane: &DevicePlane,
+    planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
     ids: &IdPool,
@@ -513,15 +563,16 @@ fn embed_worker(
     aux_rx: Receiver<HeadGrads>,
     sinks: &[Mutex<OrderedSink>],
 ) -> Result<()> {
-    let embed_fwd = runtime.executable("embed_fwd")?;
-    let embed_bwd = runtime.executable("embed_bwd")?;
+    let plane = planes.plane(0);
+    let embed_fwd = runtime.executable_on(plane.idx(), "embed_fwd")?;
+    let embed_bwd = runtime.executable_on(plane.idx(), "embed_bwd")?;
     let mut aux: BTreeMap<usize, (HostTensor, HostTensor)> = BTreeMap::new();
     for step in table {
         match *step {
             Step::Forward(mb) => {
                 let h0 = match staging {
                     Staging::Device => {
-                        let e = &lits.stage_buffers(0)[0];
+                        let e = &lits.stage_buffers_on(0, plane.idx())[0];
                         Activation::Device(
                             embed_fwd
                                 .execute_buffers(plane, 0, &[e, ids.buf(mb)])?
@@ -551,7 +602,7 @@ fn embed_worker(
                 let (gd, gnw) = aux.remove(&mb).expect("aux joined above");
                 let ge = match staging {
                     Staging::Device => {
-                        let e = &lits.stage_buffers(0)[0];
+                        let e = &lits.stage_buffers_on(0, plane.idx())[0];
                         let gh_buf = gh.into_device(plane, 0)?;
                         embed_bwd
                             .execute_buffers(plane, 0, &[e, ids.buf(mb), &gh_buf])?
@@ -578,17 +629,21 @@ fn embed_worker(
 
 /// Positions 1..=L: forward/backward microbatches through this slot's
 /// stage (which stage depends on the microbatch's route under CheckFree+
-/// swaps) in step-table order. Forward steps stash the marshalled input
-/// activation (a device buffer on the device plane, a literal on the
-/// host plane); backward steps consume and release it — under 1F1B that
-/// keeps at most `warmup_forwards` stashes resident, under fill/drain
-/// all of them. Every stash/release is counted by `watermark`. On the
-/// device plane the only host syncs here are the stage's parameter
-/// gradients at each backward — the gradient boundary.
+/// swaps) in step-table order, **on that stage's plane** — under
+/// per-stage planes an arriving activation first takes the link copy
+/// onto the executing stage's client, and under swaps the slot hops
+/// planes per microbatch exactly as the route hops stages. Forward steps
+/// stash the marshalled input activation (a device buffer on the stage's
+/// plane, a literal on the host plane); backward steps consume and
+/// release it — under 1F1B that keeps at most `warmup_forwards` stashes
+/// resident, under fill/drain all of them. Every stash/release is
+/// counted by `watermark`. On the device plane the only host syncs here
+/// are the stage's parameter gradients at each backward — the gradient
+/// boundary.
 #[allow(clippy::too_many_arguments)]
 fn slot_worker(
     runtime: &Runtime,
-    plane: &DevicePlane,
+    planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
     body_stages: usize,
@@ -603,8 +658,25 @@ fn slot_worker(
     bwd_tx: SyncSender<BwdMsg>,
     sinks: &[Mutex<OrderedSink>],
 ) -> Result<()> {
-    let body_fwd = runtime.executable("body_fwd")?;
-    let body_bwd = runtime.executable("body_bwd")?;
+    // Host-staging executes host literals, which run correctly on any
+    // client — use the plane-0 reference registry for those.
+    let host_body_fwd = runtime.executable("body_fwd")?;
+    let host_body_bwd = runtime.executable("body_bwd")?;
+    // Device path: per-stage executable handles hoisted out of the hot
+    // step loop (index = stage − 1; under swaps the slot hops stages per
+    // microbatch, so it needs every body stage's pair at hand).
+    let body_exes: Vec<(&Executable, &Executable)> = match staging {
+        Staging::Device => (1..=body_stages)
+            .map(|s| {
+                let idx = planes.plane(s).idx();
+                Ok((
+                    runtime.executable_on(idx, "body_fwd")?,
+                    runtime.executable_on(idx, "body_bwd")?,
+                ))
+            })
+            .collect::<Result<_>>()?,
+        Staging::Host => Vec::new(),
+    };
     // Activation INTO this slot, per microbatch, kept in marshalled form:
     // the backward pass reuses it (the distributed equivalent of the
     // seed's `hs` stash).
@@ -619,12 +691,14 @@ fn slot_worker(
                     fwd_rx.recv().map_err(|_| link_closed("fwd into slot"))?;
                 debug_assert_eq!(mb, want, "upstream emits forwards in table order");
                 let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+                let plane = planes.plane(s);
                 let (stashed, h_out) = match staging {
                     Staging::Device => {
-                        let h_buf = h.into_device(plane, s)?;
+                        let (body_fwd, _) = body_exes[s - 1];
+                        let h_buf = h.into_device(plane, s)?; // link copy across planes
                         let h_out = {
                             let mut args: Vec<&DeviceBuffer> =
-                                lits.stage_buffers(s).iter().collect();
+                                lits.stage_buffers_on(s, plane.idx()).iter().collect();
                             args.push(&h_buf);
                             body_fwd
                                 .execute_buffers(plane, s, &args)?
@@ -638,8 +712,8 @@ fn slot_worker(
                         let h_out = {
                             let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
                             args.push(&h_lit);
-                            body_fwd.meter_host_call(plane, s);
-                            body_fwd
+                            host_body_fwd.meter_host_call(plane, s);
+                            host_body_fwd
                                 .run_literals(&args)?
                                 .pop()
                                 .ok_or_else(|| anyhow!("body_fwd returned nothing"))?
@@ -657,15 +731,17 @@ fn slot_worker(
                 let BwdMsg { mb, gh } =
                     bwd_rx.recv().map_err(|_| link_closed("bwd into slot"))?;
                 let s = schedule::slot_stage(body_stages, mb, slot, use_swaps);
+                let plane = planes.plane(s);
                 let stashed = stash[mb]
                     .take()
                     .ok_or_else(|| anyhow!("no stashed activation for microbatch {mb}"))?;
                 let gh_out = match (staging, stashed) {
                     (Staging::Device, Stashed::Buf(h_buf)) => {
-                        let gh_buf = gh.into_device(plane, s)?;
+                        let (_, body_bwd) = body_exes[s - 1];
+                        let gh_buf = gh.into_device(plane, s)?; // link copy across planes
                         let mut outs = {
                             let mut args: Vec<&DeviceBuffer> =
-                                lits.stage_buffers(s).iter().collect();
+                                lits.stage_buffers_on(s, plane.idx()).iter().collect();
                             args.push(&h_buf);
                             args.push(&gh_buf);
                             body_bwd.execute_buffers(plane, s, &args)?
@@ -693,8 +769,8 @@ fn slot_worker(
                             let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
                             args.push(&h_lit);
                             args.push(&gh_lit);
-                            body_bwd.meter_host_call(plane, s);
-                            body_bwd.run_literals_into(&args, &mut scratch)?;
+                            host_body_bwd.meter_host_call(plane, s);
+                            host_body_bwd.run_literals_into(&args, &mut scratch)?;
                         }
                         drop(h_lit);
                         watermark.release();
@@ -727,14 +803,18 @@ fn slot_worker(
 /// loss + `∂L/∂h` (sent back down the pipe) + stage-0 pieces (sent to
 /// the embed worker). The head stashes nothing, so its "step table" is
 /// simply one fused forward+backward per arriving microbatch in both
-/// schedules. On the device plane this is the **loss/gradient
-/// boundary**: the loss scalar and the stage-0 parameter gradients
-/// (`∂L/∂deembed`, `∂L/∂final_norm`) sync to host; `∂L/∂h` stays on
-/// device and travels back down the pipe.
+/// schedules. The head executes on the **last** stage's plane (the pipe
+/// tail holds the deembedding replica, paper §4.3): on the standard
+/// route the last slot's output is already resident there, so SL→head
+/// costs no link copy; swapped microbatches arrive from whichever plane
+/// their route ended on. On the device plane this is the
+/// **loss/gradient boundary**: the loss scalar and the stage-0
+/// parameter gradients (`∂L/∂deembed`, `∂L/∂final_norm`) sync to host;
+/// `∂L/∂h` stays on device and travels back down the pipe.
 #[allow(clippy::too_many_arguments)]
 fn head_worker(
     runtime: &Runtime,
-    plane: &DevicePlane,
+    planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
     ids: &IdPool,
@@ -743,17 +823,18 @@ fn head_worker(
     bwd_tx: SyncSender<BwdMsg>,
     aux_tx: SyncSender<HeadGrads>,
 ) -> Result<Vec<f32>> {
-    let head_bwd = runtime.executable("head_bwd")?;
+    let plane = planes.head();
+    let head_bwd = runtime.executable_on(plane.idx(), "head_bwd")?;
     let mut losses = vec![0.0f32; m];
     for _ in 0..m {
         let FwdMsg { mb, h } = fwd_rx.recv().map_err(|_| link_closed("SL→head"))?;
         let (loss, gh, gd, gnw) = match staging {
             Staging::Device => {
-                let st0 = lits.stage_buffers(0);
+                let st0 = lits.stage_buffers_on(0, plane.idx());
                 let (d, nw) = (&st0[1], &st0[2]);
                 let h_buf = h.into_device(plane, 0)?;
                 let mut outs =
-                    head_bwd.execute_buffers(plane, 0, &[d, nw, &h_buf, ids.buf(mb)])?;
+                    head_bwd.execute_buffers(plane, 0, &[d, nw, &h_buf, ids.head_buf(mb)])?;
                 if outs.len() != 4 {
                     return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
                 }

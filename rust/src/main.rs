@@ -6,6 +6,7 @@
 //!                    [--checkpoint-every C] [--reinit KIND]
 //!                    [--exec-mode sequential|pipelined|pipelined-1f1b]
 //!                    [--host-staging true|false]
+//!                    [--plane-mode shared|per-stage]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -141,6 +142,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(h) = args.parse_opt::<bool>("host-staging")? {
         cfg.host_staging = h;
+    }
+    if let Some(p) = args.parse_opt::<checkfree::config::PlaneMode>("plane-mode")? {
+        cfg.plane_mode = p;
     }
     cfg.validate()?;
 

@@ -82,6 +82,8 @@ struct StageCounters {
     bytes_down: AtomicU64,
     bytes_up: AtomicU64,
     forced_tuple_roundtrips: AtomicU64,
+    link_copies: AtomicU64,
+    link_bytes: AtomicU64,
 }
 
 /// Cumulative device↔host transfer accounting, per pipeline stage.
@@ -100,6 +102,16 @@ struct StageCounters {
 ///   to sync + decompose + re-upload to keep chaining (see
 ///   `Executable::execute_buffers`); the steady-state device path
 ///   expects this to be **zero** and the engine test asserts it.
+/// * **link copy** — a device buffer crossed from one stage's plane to
+///   another's ([`crate::runtime::DeviceBuffer::copy_to_plane`], the
+///   `--plane-mode per-stage` inter-client hop; device→host→device
+///   today). Link copies are staging traffic *between* devices, not
+///   data delivered to the host program, so they are counted in their
+///   own `link_copies`/`link_bytes` column and never inflate
+///   `host_syncs`/`uploads` — the loss/gradient-boundary contract stays
+///   comparable across plane modes. Shared mode records zero by
+///   construction; per-stage records exactly `2·(L−1)·m` per pipelined
+///   iteration (one hop per inter-stage link, forward and backward).
 ///
 /// Counters are cumulative (like `Runtime::exec_stats`); callers diff
 /// [`snapshot`](Self::snapshot)s to get per-iteration numbers. `stage`
@@ -118,6 +130,8 @@ pub struct TransferSnapshot {
     pub bytes_down: u64,
     pub bytes_up: u64,
     pub forced_tuple_roundtrips: u64,
+    pub link_copies: u64,
+    pub link_bytes: u64,
 }
 
 impl TransferSnapshot {
@@ -133,6 +147,8 @@ impl TransferSnapshot {
             forced_tuple_roundtrips: self
                 .forced_tuple_roundtrips
                 .saturating_sub(earlier.forced_tuple_roundtrips),
+            link_copies: self.link_copies.saturating_sub(earlier.link_copies),
+            link_bytes: self.link_bytes.saturating_sub(earlier.link_bytes),
         }
     }
 }
@@ -174,6 +190,16 @@ impl TransferLedger {
         self.slot(stage).forced_tuple_roundtrips.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A device buffer of `bytes` hopped from one stage's plane to
+    /// another's (`--plane-mode per-stage` inter-client link copy),
+    /// billed to the **destination** stage — the receiver pulls the
+    /// activation onto its own client.
+    pub fn record_link_copy(&self, stage: usize, bytes: u64) {
+        let s = self.slot(stage);
+        s.link_copies.fetch_add(1, Ordering::Relaxed);
+        s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Counters of one stage.
     pub fn stage_snapshot(&self, stage: usize) -> TransferSnapshot {
         let s = &self.stages[stage];
@@ -183,6 +209,8 @@ impl TransferLedger {
             bytes_down: s.bytes_down.load(Ordering::Relaxed),
             bytes_up: s.bytes_up.load(Ordering::Relaxed),
             forced_tuple_roundtrips: s.forced_tuple_roundtrips.load(Ordering::Relaxed),
+            link_copies: s.link_copies.load(Ordering::Relaxed),
+            link_bytes: s.link_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -196,6 +224,8 @@ impl TransferLedger {
             total.bytes_down += s.bytes_down;
             total.bytes_up += s.bytes_up;
             total.forced_tuple_roundtrips += s.forced_tuple_roundtrips;
+            total.link_copies += s.link_copies;
+            total.link_bytes += s.link_bytes;
         }
         total
     }
@@ -213,6 +243,8 @@ impl TransferLedger {
             s.bytes_down.store(0, Ordering::Relaxed);
             s.bytes_up.store(0, Ordering::Relaxed);
             s.forced_tuple_roundtrips.store(0, Ordering::Relaxed);
+            s.link_copies.store(0, Ordering::Relaxed);
+            s.link_bytes.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -423,6 +455,7 @@ mod tests {
         l.record_sync(1, 8);
         l.record_upload(2, 4);
         l.record_forced_tuple_roundtrip(1);
+        l.record_link_copy(1, 32);
         assert_eq!(
             l.stage_snapshot(1),
             TransferSnapshot {
@@ -430,7 +463,9 @@ mod tests {
                 uploads: 0,
                 bytes_down: 16,
                 bytes_up: 0,
-                forced_tuple_roundtrips: 1
+                forced_tuple_roundtrips: 1,
+                link_copies: 1,
+                link_bytes: 32,
             }
         );
         let total = l.snapshot();
@@ -438,21 +473,40 @@ mod tests {
         assert_eq!(total.uploads, 2);
         assert_eq!(total.bytes_up, 20);
         assert_eq!(total.bytes_down, 16);
+        assert_eq!(total.link_copies, 1);
+        assert_eq!(total.link_bytes, 32);
         assert_eq!(l.host_sync_count(), 2);
+    }
+
+    #[test]
+    fn link_copies_never_inflate_host_syncs_or_uploads() {
+        // The plane-mode comparability contract: a link copy moves bytes
+        // between devices, so it must not look like host traffic.
+        let l = TransferLedger::new(2);
+        l.record_link_copy(0, 64);
+        l.record_link_copy(1, 64);
+        let total = l.snapshot();
+        assert_eq!((total.link_copies, total.link_bytes), (2, 128));
+        assert_eq!((total.host_syncs, total.uploads), (0, 0));
+        assert_eq!((total.bytes_down, total.bytes_up), (0, 0));
     }
 
     #[test]
     fn ledger_snapshot_diffs_give_per_iteration_deltas() {
         let l = TransferLedger::new(2);
         l.record_sync(0, 4);
+        l.record_link_copy(0, 2);
         let before = l.snapshot();
         l.record_sync(1, 4);
         l.record_upload(0, 8);
+        l.record_link_copy(1, 16);
         let delta = l.snapshot().since(&before);
         assert_eq!(delta.host_syncs, 1);
         assert_eq!(delta.uploads, 1);
         assert_eq!(delta.bytes_down, 4);
         assert_eq!(delta.bytes_up, 8);
+        assert_eq!(delta.link_copies, 1);
+        assert_eq!(delta.link_bytes, 16);
     }
 
     #[test]
@@ -461,6 +515,7 @@ mod tests {
         l.record_sync(0, 4);
         l.record_upload(1, 4);
         l.record_forced_tuple_roundtrip(0);
+        l.record_link_copy(1, 8);
         l.reset();
         assert_eq!(l.snapshot(), TransferSnapshot::default());
     }

@@ -8,16 +8,37 @@
 //! currency:
 //!
 //! * [`DeviceBuffer`] — an `xla::PjRtBuffer` plus the host-visible
-//!   [`IoSpec`] it was created under. The buffer never implicitly comes
-//!   back to host; [`DeviceBuffer::to_host`]/[`DeviceBuffer::read_into`]
-//!   are the only exits and both bill the [`TransferLedger`].
-//! * [`DevicePlane`] — the upload half: a borrowed PJRT client + ledger.
-//!   All host→device copies go through [`DevicePlane::upload`] /
-//!   [`DevicePlane::upload_literal`] so they are billed too.
+//!   [`IoSpec`] it was created under and the index of the plane it lives
+//!   on. The buffer never implicitly comes back to host;
+//!   [`DeviceBuffer::to_host`]/[`DeviceBuffer::read_into`] are the only
+//!   exits and both bill the [`TransferLedger`], and
+//!   [`DeviceBuffer::copy_to_plane`] is the only way it changes client.
+//! * [`DevicePlane`] — the upload half: a borrowed PJRT client + ledger
+//!   + the plane's index. All host→device copies go through
+//!   [`DevicePlane::upload`] / [`DevicePlane::upload_literal`] so they
+//!   are billed too.
+//! * [`PlaneSet`] — the stage→plane map the executor routes through:
+//!   one plane total under `--plane-mode shared`, one **per stage**
+//!   under `per-stage` (each stage owning its own PJRT client, i.e. its
+//!   own simulated failure-prone node — the CheckFree deployment shape).
+//!   The head executes on the last stage's plane (the paper's §4.3
+//!   deembedding replication), so an `L`-stage pipeline has exactly
+//!   `L−1` inter-client links.
 //! * [`Activation`] — what pipeline channels carry: either a host tensor
 //!   (the `--host-staging` escape hatch and the recovery paths) or a
 //!   device buffer (the steady-state path). Conversions are explicit;
 //!   there is no `Deref` convenience that could hide a transfer.
+//!
+//! **Link copies.** Under per-stage planes, a buffer produced on stage
+//! `i`'s client cannot feed stage `i+1`'s executable (PJRT buffers are
+//! client-bound), so every stage-to-stage send resolves through
+//! [`DeviceBuffer::copy_to_plane`]: a no-op on the owning plane, and a
+//! **device→host→device** staged hop across planes today — metered as
+//! `link_copies`/`link_bytes` on the ledger, never as
+//! `host_syncs`/`uploads` (it is inter-device staging, not data
+//! delivered to the host program). Keeping the hop behind this one
+//! function is the point: a same-process fast path or a real DMA/RDMA
+//! transport slots in here without touching the executor.
 //!
 //! **Why recovery stays host-side:** CheckFree's weighted averaging,
 //! Adam, and every recovery write operate on `HostTensor`s and bump
@@ -32,12 +53,17 @@ use crate::metrics::TransferLedger;
 use crate::runtime::HostTensor;
 use crate::{Context, Result};
 
-/// A tensor resident on the PJRT device, tagged with the host-visible
+/// A tensor resident on a PJRT device, tagged with the host-visible
 /// spec it was created under (shape/dtype validation without a device
-/// round-trip).
+/// round-trip) and the index of the [`DevicePlane`] it lives on (so a
+/// mis-chained cross-client execute fails loudly instead of inside the
+/// plugin).
 pub struct DeviceBuffer {
     buf: xla::PjRtBuffer,
     spec: IoSpec,
+    /// Index of the plane (client) this buffer was created on; always 0
+    /// in shared mode.
+    plane: usize,
 }
 
 // SAFETY: same basis as `Executable`/`LiteralCache` in this module tree.
@@ -51,15 +77,20 @@ unsafe impl Sync for DeviceBuffer {}
 
 impl std::fmt::Debug for DeviceBuffer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "DeviceBuffer({:?} {})", self.spec.shape, self.spec.dtype)
+        write!(
+            f,
+            "DeviceBuffer({:?} {} @plane{})",
+            self.spec.shape, self.spec.dtype, self.plane
+        )
     }
 }
 
 impl DeviceBuffer {
     /// Wrap a raw buffer the runtime just received from PJRT (an execute
-    /// output) under the manifest spec that describes it.
-    pub(crate) fn from_raw(buf: xla::PjRtBuffer, spec: IoSpec) -> Self {
-        Self { buf, spec }
+    /// output) under the manifest spec that describes it, on the plane
+    /// that executed.
+    pub(crate) fn from_raw(buf: xla::PjRtBuffer, spec: IoSpec, plane: usize) -> Self {
+        Self { buf, spec, plane }
     }
 
     pub(crate) fn raw(&self) -> &xla::PjRtBuffer {
@@ -68,6 +99,11 @@ impl DeviceBuffer {
 
     pub fn spec(&self) -> &IoSpec {
         &self.spec
+    }
+
+    /// Index of the [`DevicePlane`] (PJRT client) this buffer lives on.
+    pub fn plane(&self) -> usize {
+        self.plane
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -105,15 +141,51 @@ impl DeviceBuffer {
         plane.ledger.record_sync(stage, self.bytes());
         out.copy_from_literal(&lit, &self.spec)
     }
+
+    /// The **link copy**: move this buffer onto `dst`'s plane so it can
+    /// feed an executable compiled on `dst`'s client, billed to `stage`
+    /// (the receiving stage) as one `link_copies`/`link_bytes` entry on
+    /// the ledger. Free when the buffer already lives on `dst` — which
+    /// is every call in shared mode, so the shared plane records zero
+    /// link copies by construction.
+    ///
+    /// This is deliberately the ONLY function that moves a buffer
+    /// between clients. Today the hop is staged device→host→device (the
+    /// PJRT C API has no cross-client device copy); a same-process fast
+    /// path or a DMA/RDMA transport replaces this body without touching
+    /// the executor or the metering.
+    pub fn copy_to_plane(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+        if self.plane == dst.idx {
+            return Ok(self);
+        }
+        let lit = self.buf.to_literal_sync().with_context(|| {
+            format!(
+                "link copy {:?} {}: staging plane {} → {} through host",
+                self.spec.shape, self.spec.dtype, self.plane, dst.idx
+            )
+        })?;
+        let buf = dst.client.buffer_from_host_literal(None, &lit).with_context(|| {
+            format!(
+                "link copy {:?} {}: re-upload onto plane {}",
+                self.spec.shape, self.spec.dtype, dst.idx
+            )
+        })?;
+        dst.ledger.record_link_copy(stage, self.spec.bytes());
+        Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
+    }
 }
 
-/// The upload half of the device plane: a borrowed PJRT client plus the
-/// [`TransferLedger`] every crossing is billed to. Built per call site
-/// by [`crate::runtime::Runtime::device_plane`]; cheap to construct
-/// (two references).
+/// The upload half of one device plane: a borrowed PJRT client plus the
+/// [`TransferLedger`] every crossing is billed to, plus this plane's
+/// index within its [`PlaneSet`] (0 for the shared plane). Built per
+/// call site by [`crate::runtime::Runtime::device_plane`] /
+/// [`crate::runtime::Runtime::plane_set`]; cheap to construct.
 pub struct DevicePlane<'a> {
     client: &'a xla::PjRtClient,
     pub ledger: &'a TransferLedger,
+    /// Position of this plane in the runtime's client list — the value
+    /// stamped into every [`DeviceBuffer`] it mints.
+    idx: usize,
 }
 
 // SAFETY: the wrapped references are shared across the executor's worker
@@ -126,8 +198,14 @@ unsafe impl Send for DevicePlane<'_> {}
 unsafe impl Sync for DevicePlane<'_> {}
 
 impl<'a> DevicePlane<'a> {
-    pub(crate) fn new(client: &'a xla::PjRtClient, ledger: &'a TransferLedger) -> Self {
-        Self { client, ledger }
+    pub(crate) fn new(client: &'a xla::PjRtClient, ledger: &'a TransferLedger, idx: usize) -> Self {
+        Self { client, ledger, idx }
+    }
+
+    /// This plane's index within its [`PlaneSet`] (0 = the shared plane
+    /// / the embed stage's plane).
+    pub fn idx(&self) -> usize {
+        self.idx
     }
 
     /// **Metered** host→device upload of an already-marshalled literal
@@ -139,17 +217,67 @@ impl<'a> DevicePlane<'a> {
         lit: &xla::Literal,
         spec: &IoSpec,
     ) -> Result<DeviceBuffer> {
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, lit)
-            .with_context(|| format!("uploading {:?} {} to device", spec.shape, spec.dtype))?;
+        let buf = self.client.buffer_from_host_literal(None, lit).with_context(|| {
+            format!(
+                "uploading {:?} {} to device (plane {})",
+                spec.shape, spec.dtype, self.idx
+            )
+        })?;
         self.ledger.record_upload(stage, spec.bytes());
-        Ok(DeviceBuffer { buf, spec: spec.clone() })
+        Ok(DeviceBuffer { buf, spec: spec.clone(), plane: self.idx })
     }
 
     /// **Metered** host→device upload of a host tensor (marshal + copy).
     pub fn upload(&self, stage: usize, t: &HostTensor) -> Result<DeviceBuffer> {
         self.upload_literal(stage, &t.to_literal()?, &t.io_spec())
+    }
+}
+
+/// The stage→plane map of one engine: every plane shares one ledger but
+/// owns its client. Built per call site by
+/// [`crate::runtime::Runtime::plane_set`]; one entry in shared mode,
+/// one per stage in per-stage mode.
+pub struct PlaneSet<'a> {
+    planes: Vec<DevicePlane<'a>>,
+}
+
+impl<'a> PlaneSet<'a> {
+    pub(crate) fn new(planes: Vec<DevicePlane<'a>>) -> Self {
+        assert!(!planes.is_empty(), "a plane set needs at least one plane");
+        Self { planes }
+    }
+
+    /// Does every stage own its own client?
+    pub fn per_stage(&self) -> bool {
+        self.planes.len() > 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planes.is_empty()
+    }
+
+    /// The plane owning `stage` (the single shared plane when not
+    /// per-stage). Out-of-range stages clamp like the ledger does:
+    /// mis-attributed accounting beats a dead worker in release builds.
+    pub fn plane(&self, stage: usize) -> &DevicePlane<'a> {
+        debug_assert!(
+            self.planes.len() == 1 || stage < self.planes.len(),
+            "plane set: stage {stage} out of range"
+        );
+        &self.planes[stage.min(self.planes.len() - 1)]
+    }
+
+    /// The plane the pipeline head (deembed + loss) executes on: the
+    /// **last** stage's plane. Co-locating the head with the pipe tail
+    /// is the paper's §4.3 shape — the tail node holds the deembedding
+    /// replica — and what makes an `L`-stage pipeline have exactly
+    /// `L−1` links.
+    pub fn head(&self) -> &DevicePlane<'a> {
+        self.planes.last().expect("non-empty by construction")
     }
 }
 
@@ -184,12 +312,15 @@ impl Activation {
         }
     }
 
-    /// Resolve to a device buffer. `Device` is free; `Host` is a metered
-    /// upload billed to `stage`.
+    /// Resolve to a device buffer **on `plane`**. `Host` is a metered
+    /// upload billed to `stage`; `Device` is free on the owning plane
+    /// and a metered [`DeviceBuffer::copy_to_plane`] link copy when it
+    /// arrives from another stage's client (per-stage mode's inter-node
+    /// hop).
     pub fn into_device(self, plane: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
         match self {
             Activation::Host(t) => plane.upload(stage, &t),
-            Activation::Device(d) => Ok(d),
+            Activation::Device(d) => d.copy_to_plane(plane, stage),
         }
     }
 }
@@ -278,5 +409,91 @@ mod tests {
         let back = Activation::Device(d).into_host(&plane, 0).unwrap();
         assert_eq!(back, t);
         assert_eq!(ledger.snapshot().host_syncs, 1);
+    }
+
+    #[test]
+    fn same_plane_link_copy_is_free() {
+        let rt = runtime();
+        let ledger = TransferLedger::new(1);
+        let plane = rt.device_plane(&ledger);
+        let t = HostTensor::from_f32(vec![2], &[4.0, 5.0]);
+        let d = plane.upload(0, &t).unwrap();
+        assert_eq!(d.plane(), 0);
+        let d = d.copy_to_plane(&plane, 0).unwrap();
+        let snap = ledger.snapshot();
+        assert_eq!((snap.link_copies, snap.link_bytes), (0, 0), "owning plane: no hop");
+        assert_eq!(d.to_host(&plane, 0).unwrap(), t);
+    }
+
+    mod per_stage {
+        use super::*;
+        use crate::config::PlaneMode;
+
+        fn runtime() -> Runtime {
+            Runtime::load_config_with(default_artifacts_root(), "tiny", PlaneMode::PerStage)
+                .expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn plane_set_maps_stages_and_head() {
+            let rt = runtime();
+            let stages = rt.manifest.config.body_stages + 1;
+            let ledger = TransferLedger::new(stages);
+            let planes = rt.plane_set(&ledger);
+            assert!(planes.per_stage());
+            assert_eq!(planes.len(), stages);
+            for s in 0..stages {
+                assert_eq!(planes.plane(s).idx(), s, "stage {s} owns plane {s}");
+            }
+            assert_eq!(planes.head().idx(), stages - 1, "head rides the last plane");
+
+            // Shared runtime: one plane, every stage maps to it.
+            let shared = super::runtime();
+            let planes = shared.plane_set(&ledger);
+            assert!(!planes.per_stage());
+            assert_eq!(planes.len(), 1);
+            assert_eq!(planes.plane(0).idx(), 0);
+            assert_eq!(planes.plane(stages - 1).idx(), 0);
+            assert_eq!(planes.head().idx(), 0);
+        }
+
+        #[test]
+        fn cross_plane_link_copy_is_metered_and_bitwise() {
+            let rt = runtime();
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.25, 0.0]);
+            let d0 = planes.plane(0).upload(0, &t).unwrap();
+            assert_eq!(d0.plane(), 0);
+
+            let before = ledger.snapshot();
+            let d1 = d0.copy_to_plane(planes.plane(1), 1).unwrap();
+            let delta = ledger.snapshot().since(&before);
+            assert_eq!(d1.plane(), 1);
+            assert_eq!((delta.link_copies, delta.link_bytes), (1, 16));
+            // The hop is staging traffic, never host-program traffic.
+            assert_eq!((delta.host_syncs, delta.uploads), (0, 0));
+            assert_eq!(ledger.stage_snapshot(1).link_copies, 1, "billed to the receiver");
+            assert_eq!(ledger.stage_snapshot(0).link_copies, 0);
+
+            // Bytes move, bits do not.
+            assert_eq!(d1.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn into_device_link_copies_only_across_planes() {
+            let rt = runtime();
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![3], &[7.0, 8.0, 9.0]);
+            let d = planes.plane(2).upload(2, &t).unwrap();
+            // Device → same plane: free.
+            let d = Activation::Device(d).into_device(planes.plane(2), 2).unwrap();
+            assert_eq!(ledger.snapshot().link_copies, 0);
+            // Device → other plane: exactly one link copy.
+            let d = Activation::Device(d).into_device(planes.plane(1), 1).unwrap();
+            assert_eq!(d.plane(), 1);
+            assert_eq!(ledger.snapshot().link_copies, 1);
+        }
     }
 }

@@ -13,13 +13,19 @@
 //! the cache, as does every microbatch of an iteration.
 //!
 //! The **device side** ([`LiteralCache::refresh_device`] /
-//! [`LiteralCache::stage_buffers`]) follows the *same* `params_version`
-//! invalidation protocol with its own version cursor: every recovery
-//! write path (wipe, restore, CheckFree weighted averaging, partner /
-//! replica copies) bumps the stage version, so the next device refresh
-//! re-uploads exactly the rewritten stage. Host memory stays the source
-//! of truth — device buffers are a cache of the host literals, which are
-//! themselves a cache of the stage tensors.
+//! [`LiteralCache::stage_buffers_on`]) follows the *same*
+//! `params_version` invalidation protocol with its own version cursor
+//! **per (stage, plane)**: under `--plane-mode per-stage` a stage's
+//! parameters are mirrored onto its own client, and stage 0's deembed
+//! half is *additionally* mirrored onto the tail plane the head executes
+//! on — each mirror refreshed independently against the one stage
+//! version. Every recovery write path (wipe, restore, CheckFree weighted
+//! averaging, partner / replica copies) bumps the stage version, so the
+//! next device refresh re-uploads exactly the rewritten stage **onto the
+//! plane that owns it** — a crashed stage's host-side replacement lands
+//! on the correct client with no extra bookkeeping. Host memory stays
+//! the source of truth — device buffers are a cache of the host
+//! literals, which are themselves a cache of the stage tensors.
 //!
 //! The cache is read-shared across the pipeline executor's keep-warm
 //! worker threads: all refreshes happen on the coordinator thread
@@ -30,16 +36,24 @@ use crate::runtime::buffer::{DeviceBuffer, DevicePlane};
 use crate::runtime::HostTensor;
 use crate::Result;
 
+/// One device-resident copy of a stage's parameters on one plane.
+struct Mirror {
+    /// Version of this plane's mirror (`u64::MAX` = never uploaded).
+    /// Tracked separately from the host literals: host-only paths
+    /// (sequential mode, recovery math) refresh literals without paying
+    /// device uploads, and each plane refreshes independently.
+    version: u64,
+    bufs: Vec<DeviceBuffer>,
+}
+
 struct StageEntry {
     /// Last [`crate::model::Stage::params_version`] marshalled; the
     /// sentinel `u64::MAX` marks a slot that has never been filled.
     version: u64,
     lits: Vec<xla::Literal>,
-    /// Version of the device-resident mirror (`u64::MAX` = never
-    /// uploaded). Tracked separately: host-only paths (sequential mode,
-    /// recovery math) refresh literals without paying device uploads.
-    dev_version: u64,
-    bufs: Vec<DeviceBuffer>,
+    /// Device mirrors, indexed by plane (one entry in shared mode;
+    /// sparse slots carry the `u64::MAX` sentinel).
+    mirrors: Vec<Mirror>,
 }
 
 /// Versioned per-stage literal + device-buffer store. Index 0 = embed
@@ -76,8 +90,7 @@ impl LiteralCache {
             self.stages.push(StageEntry {
                 version: u64::MAX,
                 lits: Vec::new(),
-                dev_version: u64::MAX,
-                bufs: Vec::new(),
+                mirrors: Vec::new(),
             });
         }
         let entry = &mut self.stages[idx];
@@ -92,10 +105,12 @@ impl LiteralCache {
     }
 
     /// Ensure stage `idx` additionally holds **device-resident**
-    /// parameter buffers at `version`, re-uploading only on version
-    /// change (or first touch). The host literals are refreshed first —
-    /// they are the upload source — so a device miss costs one marshal
-    /// (if stale) plus one upload per tensor, billed to `plane.ledger`.
+    /// parameter buffers at `version` **on `plane`**, re-uploading only
+    /// on version change (or first touch of that plane's mirror). The
+    /// host literals are refreshed first — they are the upload source —
+    /// so a device miss costs one marshal (if stale) plus one upload per
+    /// tensor, billed to `plane.ledger`. Mirrors on other planes are
+    /// untouched: each plane pays for exactly the stages it executes.
     pub fn refresh_device(
         &mut self,
         plane: &DevicePlane,
@@ -105,7 +120,11 @@ impl LiteralCache {
     ) -> Result<()> {
         self.refresh(idx, version, params)?;
         let entry = &mut self.stages[idx];
-        if entry.dev_version == version && entry.bufs.len() == params.len() {
+        while entry.mirrors.len() <= plane.idx() {
+            entry.mirrors.push(Mirror { version: u64::MAX, bufs: Vec::new() });
+        }
+        let mirror = &mut entry.mirrors[plane.idx()];
+        if mirror.version == version && mirror.bufs.len() == params.len() {
             self.dev_hits += 1;
             return Ok(());
         }
@@ -115,8 +134,8 @@ impl LiteralCache {
             .zip(params)
             .map(|(lit, p)| plane.upload_literal(idx, lit, &p.io_spec()))
             .collect();
-        entry.bufs = bufs?;
-        entry.dev_version = version;
+        mirror.bufs = bufs?;
+        mirror.version = version;
         self.dev_misses += 1;
         Ok(())
     }
@@ -129,17 +148,24 @@ impl LiteralCache {
         &entry.lits
     }
 
-    /// The cached device-resident parameter buffers of stage `idx`
-    /// (panics if [`Self::refresh_device`] never ran for it — the engine
-    /// refreshes all stages before dispatching device-path work).
+    /// The cached device-resident parameter buffers of stage `idx` on
+    /// plane 0 — the shared-mode accessor (see [`Self::stage_buffers_on`]).
     pub fn stage_buffers(&self, idx: usize) -> &[DeviceBuffer] {
+        self.stage_buffers_on(idx, 0)
+    }
+
+    /// The cached device-resident parameter buffers of stage `idx` on
+    /// plane `plane` (panics if [`Self::refresh_device`] never ran for
+    /// that mirror — the engine refreshes every mirror the schedule will
+    /// read before dispatching device-path work).
+    pub fn stage_buffers_on(&self, idx: usize, plane: usize) -> &[DeviceBuffer] {
         let entry = &self.stages[idx];
-        assert_ne!(
-            entry.dev_version,
-            u64::MAX,
-            "literal cache: stage {idx} never device-refreshed"
+        let mirror = entry.mirrors.get(plane);
+        assert!(
+            mirror.is_some_and(|m| m.version != u64::MAX),
+            "literal cache: stage {idx} never device-refreshed on plane {plane}"
         );
-        &entry.bufs
+        &mirror.expect("asserted above").bufs
     }
 
     /// Is stage `idx` cached at exactly `version`?
@@ -150,11 +176,19 @@ impl LiteralCache {
             .unwrap_or(false)
     }
 
-    /// Is stage `idx`'s **device mirror** cached at exactly `version`?
+    /// Is stage `idx`'s **device mirror on plane 0** cached at exactly
+    /// `version`? (Shared-mode convenience over [`Self::is_fresh_device_on`].)
     pub fn is_fresh_device(&self, idx: usize, version: u64) -> bool {
+        self.is_fresh_device_on(idx, 0, version)
+    }
+
+    /// Is stage `idx`'s device mirror **on plane `plane`** cached at
+    /// exactly `version`?
+    pub fn is_fresh_device_on(&self, idx: usize, plane: usize, version: u64) -> bool {
         self.stages
             .get(idx)
-            .map(|e| e.dev_version == version && version != u64::MAX)
+            .and_then(|e| e.mirrors.get(plane))
+            .map(|m| m.version == version && version != u64::MAX)
             .unwrap_or(false)
     }
 
@@ -355,6 +389,109 @@ mod tests {
             expect_invalidated(&mut cache, &stage, "checkfree-average");
 
             // redundant-computation / swap-partner copy
+            stage.copy_params_from(&right.params);
+            expect_invalidated(&mut cache, &stage, "redundant-copy");
+
+            let (_, misses) = cache.device_stats();
+            assert_eq!(misses - misses0, 4, "each write path re-uploaded exactly once");
+        }
+
+        #[test]
+        fn mirrors_on_different_planes_refresh_independently() {
+            let rt = Runtime::load_config_with(
+                default_artifacts_root(),
+                "tiny",
+                crate::config::PlaneMode::PerStage,
+            )
+            .expect("run `make artifacts`");
+            let stages = rt.plane_count();
+            let ledger = TransferLedger::new(stages);
+            let planes = rt.plane_set(&ledger);
+            let mut c = LiteralCache::new();
+            let p = params(1.0);
+
+            // Stage 0 mirrored on its own plane AND the head's plane
+            // (the deembedding-replication shape): two uploads, one per
+            // plane, under one stage version.
+            c.refresh_device(planes.plane(0), 0, 0, &p).unwrap();
+            c.refresh_device(planes.head(), 0, 0, &p).unwrap();
+            assert_eq!(c.device_stats(), (0, 2), "one miss per plane mirror");
+            assert!(c.is_fresh_device_on(0, 0, 0));
+            assert!(c.is_fresh_device_on(0, planes.len() - 1, 0));
+            assert!(!c.is_fresh_device_on(0, 1, 0), "unrefreshed plane must not report fresh");
+            assert_eq!(c.stage_buffers_on(0, 0).len(), 2);
+            assert_eq!(c.stage_buffers_on(0, planes.len() - 1).len(), 2);
+            assert_eq!(
+                c.stage_buffers_on(0, planes.len() - 1)[0].plane(),
+                planes.len() - 1,
+                "mirror buffers live on their own plane"
+            );
+
+            // A version bump staled BOTH mirrors; each re-uploads only
+            // when its own plane refreshes.
+            c.refresh_device(planes.plane(0), 0, 1, &params(2.0)).unwrap();
+            assert!(c.is_fresh_device_on(0, 0, 1));
+            assert!(!c.is_fresh_device_on(0, planes.len() - 1, 1), "head mirror still stale");
+            c.refresh_device(planes.head(), 0, 1, &params(2.0)).unwrap();
+            assert!(c.is_fresh_device_on(0, planes.len() - 1, 1));
+        }
+
+        #[test]
+        fn recovery_writes_invalidate_the_failed_stages_own_plane() {
+            // The per-stage recovery contract: every recovery write path
+            // bumps the stage version, and the next refresh re-uploads
+            // the rebuilt parameters onto the failed stage's OWN client
+            // — the replacement lands on the correct plane.
+            let rt = Runtime::load_config_with(
+                default_artifacts_root(),
+                "tiny",
+                crate::config::PlaneMode::PerStage,
+            )
+            .expect("run `make artifacts`");
+            let stages = rt.plane_count();
+            let ledger = TransferLedger::new(stages);
+            let planes = rt.plane_set(&ledger);
+            let mut cache = LiteralCache::new();
+            let m = &rt.manifest;
+            let mut stage = Stage::new_body(m, 1, 1e-3, &mut Rng::new(21));
+            let left = Stage::new_body(m, 1, 1e-3, &mut Rng::new(22));
+            let right = Stage::new_body(m, 1, 1e-3, &mut Rng::new(23));
+
+            let mut refresh = |cache: &mut LiteralCache, s: &Stage| {
+                cache
+                    .refresh_device(planes.plane(1), 1, s.params_version(), &s.params)
+                    .unwrap()
+            };
+            refresh(&mut cache, &stage);
+            let (_, misses0) = cache.device_stats();
+
+            let mut expect_invalidated = |cache: &mut LiteralCache, s: &Stage, what: &str| {
+                assert!(
+                    !cache.is_fresh_device_on(1, 1, s.params_version()),
+                    "{what} did not invalidate the plane-1 mirror"
+                );
+                refresh(cache, s);
+                assert!(
+                    cache.is_fresh_device_on(1, 1, s.params_version()),
+                    "{what}: refresh failed"
+                );
+                assert_eq!(
+                    cache.stage_buffers_on(1, 1)[0].plane(),
+                    1,
+                    "{what}: replacement must land on stage 1's own client"
+                );
+            };
+
+            // The same four write paths as the shared-plane test above.
+            stage.wipe();
+            expect_invalidated(&mut cache, &stage, "wipe");
+            let snap = left.snapshot();
+            stage.restore(&snap);
+            expect_invalidated(&mut cache, &stage, "restore");
+            stage.with_params_mut(|p| {
+                weighted_average_into(p, &left.params, &right.params, 1.0, 2.0)
+            });
+            expect_invalidated(&mut cache, &stage, "checkfree-average");
             stage.copy_params_from(&right.params);
             expect_invalidated(&mut cache, &stage, "redundant-copy");
 

@@ -28,6 +28,18 @@
 //! `exec_time_ns`/`exec_count`, so per-executable perf stats never drift
 //! between the shim and the native path.
 //!
+//! ## Plane modes (one client, or one per stage)
+//!
+//! [`Runtime`] owns one PJRT client under `--plane-mode shared` and one
+//! **per pipeline stage** under `per-stage` (see [`Runtime`]'s type docs
+//! for the role-based registry layout). PJRT buffers are client-bound,
+//! so per-stage execution routes every stage-to-stage activation through
+//! [`DeviceBuffer::copy_to_plane`] — the explicit, metered **link copy**
+//! (`link_copies`/`link_bytes` on the [`TransferLedger`]) that stands in
+//! for the network hop between CheckFree's failure-prone nodes. Results
+//! are bitwise-identical across plane modes: a link copy moves bytes,
+//! never changes them.
+//!
 //! ## Output layout contract
 //!
 //! The AOT artifacts lower with `return_tuple=True`. The PJRT C API has
@@ -54,11 +66,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::config::PlaneMode;
 use crate::manifest::{Artifact, IoSpec, Manifest};
 use crate::metrics::TransferLedger;
 use crate::{anyhow, Context, Result};
 
-pub use buffer::{Activation, DeviceBuffer, DevicePlane};
+pub use buffer::{Activation, DeviceBuffer, DevicePlane, PlaneSet};
 pub use litcache::{LiteralCache, SharedLiterals};
 pub use tensor::HostTensor;
 
@@ -68,10 +81,14 @@ const OUT_LAYOUT_UNKNOWN: u8 = 0;
 const OUT_LAYOUT_LEAF: u8 = 1;
 const OUT_LAYOUT_TUPLED: u8 = 2;
 
-/// A loaded + compiled stage computation.
+/// A loaded + compiled stage computation, bound to the plane (client)
+/// it was compiled on.
 pub struct Executable {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
+    /// Index of the plane whose client compiled this executable; device
+    /// arguments must live on the same plane (`execute_buffers` checks).
+    plane: usize,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
     /// Cumulative execute() wall time in nanoseconds (perf accounting;
@@ -197,7 +214,24 @@ impl Executable {
                 args.len()
             ));
         }
+        if plane.idx() != self.plane {
+            return Err(anyhow!(
+                "{}: compiled on plane {} but executed through plane {}",
+                self.name,
+                self.plane,
+                plane.idx()
+            ));
+        }
         for (i, (arg, spec)) in args.iter().zip(&self.inputs).enumerate() {
+            if arg.plane() != self.plane {
+                return Err(anyhow!(
+                    "{}: input {i} lives on plane {} but the executable is compiled on plane {} \
+                     — route it through DeviceBuffer::copy_to_plane (a link copy) first",
+                    self.name,
+                    arg.plane(),
+                    self.plane
+                ));
+            }
             if arg.spec() != spec {
                 return Err(anyhow!(
                     "{}: input {i} spec mismatch: device buffer is {:?} {}, manifest wants {:?} {}",
@@ -320,7 +354,7 @@ impl Executable {
             return Ok(raw
                 .into_iter()
                 .zip(&self.outputs)
-                .map(|(b, spec)| DeviceBuffer::from_raw(b, spec.clone()))
+                .map(|(b, spec)| DeviceBuffer::from_raw(b, spec.clone(), self.plane))
                 .collect());
         }
         if raw.len() == 1 && self.outputs.len() == 1 {
@@ -333,7 +367,7 @@ impl Executable {
             // in its deltas).
             if self.out_layout.load(Ordering::Relaxed) == OUT_LAYOUT_LEAF {
                 let b = raw.pop().expect("len checked");
-                return Ok(vec![DeviceBuffer::from_raw(b, self.outputs[0].clone())]);
+                return Ok(vec![DeviceBuffer::from_raw(b, self.outputs[0].clone(), self.plane)]);
             }
             let lit = raw[0]
                 .to_literal_sync()
@@ -341,7 +375,7 @@ impl Executable {
             plane.ledger.record_sync(stage, self.outputs[0].bytes());
             if self.single_output_is_leaf(&lit) {
                 let b = raw.pop().expect("len checked");
-                return Ok(vec![DeviceBuffer::from_raw(b, self.outputs[0].clone())]);
+                return Ok(vec![DeviceBuffer::from_raw(b, self.outputs[0].clone(), self.plane)]);
             }
             // Legacy 1-tuple: fall through to the forced-roundtrip path
             // below with the literal we already fetched.
@@ -403,39 +437,99 @@ impl Executable {
     }
 }
 
-/// PJRT client plus the full executable registry for one model config.
+/// PJRT client(s) plus the compiled executable registry for one model
+/// config.
+///
+/// Under [`PlaneMode::Shared`] there is exactly one client holding the
+/// full registry — the pre-multi-client behaviour. Under
+/// [`PlaneMode::PerStage`] every pipeline stage owns a client (its own
+/// simulated failure-prone node), and each client compiles only the
+/// artifacts its stage executes:
+///
+/// * plane 0 (embed stage) — the **full** registry: it is also the
+///   coordinator/reference client serving the sequential path, the
+///   `--host-staging` escape hatch, and recovery's host-side math,
+///   all of which execute host literals and don't care which client
+///   runs them;
+/// * planes `1..` (body stages) — `body_fwd` / `body_bwd`;
+/// * the **last** plane additionally — `head_fwd` / `head_bwd`: the
+///   head (deembed + loss) executes on the pipe tail's node, the
+///   paper's §4.3 deembedding-replication shape.
 pub struct Runtime {
-    /// Owns the PJRT plugin lifetime and mints device buffers for the
-    /// activation plane (see [`Self::device_plane`]).
-    client: xla::PjRtClient,
+    /// Own the PJRT plugin lifetimes and mint device buffers for the
+    /// activation planes (see [`Self::plane_set`]); index = plane.
+    clients: Vec<xla::PjRtClient>,
+    /// Per-plane executable registry, parallel to `clients`.
+    exes: Vec<BTreeMap<String, Executable>>,
+    plane_mode: PlaneMode,
     pub manifest: Manifest,
-    exes: BTreeMap<String, Executable>,
 }
 
-// SAFETY: after `load` the runtime is read-only (the client is kept only
-// to own the PJRT plugin lifetime; all mutation is the executables'
-// atomic counters). See the `Executable` impls above for the concurrent
-// execute contract; the pipeline executor borrows `&Runtime` from its
-// stage worker threads.
+// SAFETY: after `load` the runtime is read-only (the clients are kept
+// only to own the PJRT plugin lifetimes; all mutation is the
+// executables' atomic counters). See the `Executable` impls above for
+// the concurrent execute contract; the pipeline executor borrows
+// `&Runtime` from its stage worker threads.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
-    /// Load every artifact in the manifest and compile it on the CPU client.
+    /// Load every artifact in the manifest and compile it on one shared
+    /// CPU client (the [`PlaneMode::Shared`] layout).
     pub fn load(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = BTreeMap::new();
-        for (name, art) in &manifest.artifacts {
-            let exe = Self::compile_artifact(&client, &manifest, name, art)
-                .with_context(|| format!("compiling artifact '{name}'"))?;
-            exes.insert(name.clone(), exe);
-        }
-        Ok(Self { client, manifest, exes })
+        Self::load_with(manifest, PlaneMode::Shared)
     }
 
-    /// Convenience: load by artifacts root + config name.
+    /// Load with an explicit plane layout: one client (shared) or one
+    /// per pipeline stage (`manifest.config.body_stages + 1` clients,
+    /// role-based registries — see the type docs).
+    pub fn load_with(manifest: Manifest, plane_mode: PlaneMode) -> Result<Self> {
+        let planes = match plane_mode {
+            PlaneMode::Shared => 1,
+            PlaneMode::PerStage => manifest.config.body_stages + 1,
+        };
+        let mut clients = Vec::with_capacity(planes);
+        let mut exes = Vec::with_capacity(planes);
+        for plane in 0..planes {
+            let client = xla::PjRtClient::cpu()
+                .with_context(|| format!("creating PJRT CPU client for plane {plane}"))?;
+            let mut registry = BTreeMap::new();
+            for (name, art) in &manifest.artifacts {
+                if !Self::plane_compiles(plane, planes, name) {
+                    continue;
+                }
+                let exe = Self::compile_artifact(&client, &manifest, name, art, plane)
+                    .with_context(|| format!("compiling artifact '{name}' on plane {plane}"))?;
+                registry.insert(name.clone(), exe);
+            }
+            clients.push(client);
+            exes.push(registry);
+        }
+        Ok(Self { clients, exes, plane_mode, manifest })
+    }
+
+    /// Convenience: load by artifacts root + config name (shared plane).
     pub fn load_config(artifacts_root: impl AsRef<std::path::Path>, config: &str) -> Result<Self> {
         Self::load(Manifest::load_config(artifacts_root, config)?)
+    }
+
+    /// Convenience: load by artifacts root + config name with an
+    /// explicit plane layout.
+    pub fn load_config_with(
+        artifacts_root: impl AsRef<std::path::Path>,
+        config: &str,
+        plane_mode: PlaneMode,
+    ) -> Result<Self> {
+        Self::load_with(Manifest::load_config(artifacts_root, config)?, plane_mode)
+    }
+
+    /// Does `plane` (of `planes` total) execute artifact `name`? See the
+    /// type docs for the role-based registry layout.
+    fn plane_compiles(plane: usize, planes: usize, name: &str) -> bool {
+        if plane == 0 {
+            return true; // coordinator/reference client: full registry
+        }
+        name.starts_with("body_") || (plane == planes - 1 && name.starts_with("head_"))
     }
 
     fn compile_artifact(
@@ -443,6 +537,7 @@ impl Runtime {
         manifest: &Manifest,
         name: &str,
         art: &Artifact,
+        plane: usize,
     ) -> Result<Executable> {
         let path = manifest.dir.join(&art.file);
         let proto = xla::HloModuleProto::from_text_file(
@@ -454,6 +549,7 @@ impl Runtime {
         Ok(Executable {
             name: name.to_string(),
             exe,
+            plane,
             inputs: art.inputs.clone(),
             outputs: art.outputs.clone(),
             exec_time_ns: AtomicU64::new(0),
@@ -462,28 +558,70 @@ impl Runtime {
         })
     }
 
-    /// Build a [`DevicePlane`] over this runtime's PJRT client; every
-    /// host↔device crossing made through it is billed to `ledger`. Cheap
-    /// (two references) — engine and benches build one per call site.
+    /// The plane layout this runtime was loaded with.
+    pub fn plane_mode(&self) -> PlaneMode {
+        self.plane_mode
+    }
+
+    /// Number of PJRT clients (1 shared, or one per stage).
+    pub fn plane_count(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Build a [`DevicePlane`] over plane 0 (the shared plane / the
+    /// embed stage's client); every host↔device crossing made through it
+    /// is billed to `ledger`. Cheap — engine and benches build one per
+    /// call site.
     pub fn device_plane<'a>(&'a self, ledger: &'a TransferLedger) -> DevicePlane<'a> {
-        DevicePlane::new(&self.client, ledger)
+        DevicePlane::new(&self.clients[0], ledger, 0)
     }
 
+    /// Build the full stage→plane map (one [`DevicePlane`] per client,
+    /// all billing `ledger`) — what the executor and the device eval
+    /// path route through.
+    pub fn plane_set<'a>(&'a self, ledger: &'a TransferLedger) -> PlaneSet<'a> {
+        PlaneSet::new(
+            self.clients
+                .iter()
+                .enumerate()
+                .map(|(idx, c)| DevicePlane::new(c, ledger, idx))
+                .collect(),
+        )
+    }
+
+    /// The executable compiled on plane 0 — the shared-mode registry and
+    /// the host paths' entry point (host-literal executes run correctly
+    /// on any client).
     pub fn executable(&self, name: &str) -> Result<&Executable> {
-        self.exes
-            .get(name)
-            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))
+        self.executable_on(0, name)
     }
 
-    /// Per-executable (name, total execute time, calls) — perf report.
-    pub fn exec_stats(&self) -> Vec<(String, Duration, u64)> {
+    /// The executable compiled on `plane`'s client. Errs when the
+    /// artifact isn't part of that plane's role (a mis-routed call, not
+    /// a missing artifact).
+    pub fn executable_on(&self, plane: usize, name: &str) -> Result<&Executable> {
         self.exes
-            .iter()
-            .map(|(n, e)| {
-                let (t, c) = e.stats();
-                (n.clone(), t, c)
+            .get(plane)
+            .ok_or_else(|| anyhow!("plane {plane} out of range ({} planes)", self.exes.len()))?
+            .get(name)
+            .ok_or_else(|| {
+                anyhow!("executable '{name}' not compiled on plane {plane} (mis-routed call?)")
             })
-            .collect()
+    }
+
+    /// Per-executable (name, total execute time, calls), summed across
+    /// planes — perf report.
+    pub fn exec_stats(&self) -> Vec<(String, Duration, u64)> {
+        let mut merged: BTreeMap<&str, (Duration, u64)> = BTreeMap::new();
+        for registry in &self.exes {
+            for (n, e) in registry {
+                let (t, c) = e.stats();
+                let entry = merged.entry(n.as_str()).or_default();
+                entry.0 += t;
+                entry.1 += c;
+            }
+        }
+        merged.into_iter().map(|(n, (t, c))| (n.to_string(), t, c)).collect()
     }
 }
 
@@ -748,5 +886,129 @@ mod tests {
         let (t, n) = exe.stats();
         assert_eq!(n, 2);
         assert!(t > Duration::ZERO);
+    }
+
+    mod per_stage {
+        use super::*;
+        use crate::config::PlaneMode;
+
+        fn runtime() -> Runtime {
+            Runtime::load_config_with(default_artifacts_root(), "tiny", PlaneMode::PerStage)
+                .expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn shared_load_keeps_one_full_registry() {
+            let rt = super::runtime();
+            assert_eq!(rt.plane_mode(), PlaneMode::Shared);
+            assert_eq!(rt.plane_count(), 1);
+            for name in ["embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd", "head_bwd"]
+            {
+                assert!(rt.executable_on(0, name).is_ok(), "{name}");
+            }
+        }
+
+        #[test]
+        fn per_stage_load_compiles_role_registries() {
+            let rt = runtime();
+            let planes = rt.manifest.config.body_stages + 1;
+            assert_eq!(rt.plane_mode(), PlaneMode::PerStage);
+            assert_eq!(rt.plane_count(), planes);
+            // Plane 0: the full coordinator/reference registry.
+            for name in ["embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd", "head_bwd"]
+            {
+                assert!(rt.executable_on(0, name).is_ok(), "plane 0 lacks {name}");
+            }
+            // Body planes: body_* only; the last one additionally head_*.
+            for p in 1..planes {
+                assert!(rt.executable_on(p, "body_fwd").is_ok());
+                assert!(rt.executable_on(p, "body_bwd").is_ok());
+                assert!(rt.executable_on(p, "embed_fwd").is_err(), "plane {p} must not embed");
+                let has_head = rt.executable_on(p, "head_bwd").is_ok();
+                assert_eq!(has_head, p == planes - 1, "head_* belongs to the tail plane only");
+            }
+            assert!(rt.executable_on(planes, "body_fwd").is_err(), "plane out of range");
+        }
+
+        #[test]
+        fn cross_plane_execute_fails_loudly() {
+            // A buffer uploaded to plane 0 must not silently feed a
+            // plane-1 executable — that is exactly the bug class the
+            // plane tag exists to catch.
+            let rt = runtime();
+            let c = &rt.manifest.config;
+            let stages = rt.plane_count();
+            let ledger = TransferLedger::new(stages);
+            let planes = rt.plane_set(&ledger);
+            let body_fwd = rt.executable_on(1, "body_fwd").unwrap();
+
+            let body_params: Vec<HostTensor> = rt
+                .manifest
+                .param_layout
+                .body_stage
+                .iter()
+                .map(|t| HostTensor::zeros_f32(t.shape.clone()))
+                .collect();
+            let h = HostTensor::zeros_f32(vec![c.microbatch, c.context, c.dim]);
+
+            // All args on plane 0: rejected (wrong plane for the exe).
+            let p0 = planes.plane(0);
+            let wrong: Vec<DeviceBuffer> = body_params
+                .iter()
+                .chain(std::iter::once(&h))
+                .map(|t| p0.upload(0, t).unwrap())
+                .collect();
+            let wrong_refs: Vec<&DeviceBuffer> = wrong.iter().collect();
+            let err = body_fwd.execute_buffers(planes.plane(1), 1, &wrong_refs).unwrap_err();
+            assert!(err.to_string().contains("plane"), "unexpected error: {err:#}");
+            let err = body_fwd.execute_buffers(p0, 1, &wrong_refs).unwrap_err();
+            assert!(err.to_string().contains("compiled on plane"), "unexpected error: {err:#}");
+
+            // Same args link-copied onto plane 1: accepted, and matches
+            // the plane-0 host reference bitwise.
+            let p1 = planes.plane(1);
+            let right: Vec<DeviceBuffer> = wrong
+                .into_iter()
+                .map(|b| b.copy_to_plane(p1, 1).unwrap())
+                .collect();
+            let right_refs: Vec<&DeviceBuffer> = right.iter().collect();
+            let out = body_fwd
+                .execute_buffers(p1, 1, &right_refs)
+                .unwrap()
+                .pop()
+                .unwrap()
+                .to_host(p1, 1)
+                .unwrap();
+            let host_args: Vec<&HostTensor> = body_params
+                .iter()
+                .chain(std::iter::once(&h))
+                .collect();
+            let want = rt.executable("body_fwd").unwrap().run(&host_args).unwrap().pop().unwrap();
+            assert_eq!(out, want, "plane-1 execute diverged from the plane-0 reference");
+        }
+
+        #[test]
+        fn exec_stats_merge_across_planes() {
+            let rt = runtime();
+            let c = &rt.manifest.config;
+            let embed = HostTensor::zeros_f32(vec![c.vocab, c.dim]);
+            let ids = HostTensor::from_i32(
+                vec![c.microbatch, c.context],
+                &vec![0i32; c.microbatch * c.context],
+            );
+            rt.executable_on(0, "embed_fwd").unwrap().run(&[&embed, &ids]).unwrap();
+            let stats = rt.exec_stats();
+            let embed_calls: u64 = stats
+                .iter()
+                .filter(|(n, _, _)| n == "embed_fwd")
+                .map(|&(_, _, c)| c)
+                .sum();
+            assert_eq!(embed_calls, 1);
+            assert_eq!(
+                stats.iter().filter(|(n, _, _)| n == "embed_fwd").count(),
+                1,
+                "one merged row per executable name"
+            );
+        }
     }
 }

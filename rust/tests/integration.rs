@@ -3,7 +3,7 @@
 //! exercised end-to-end. These are the Rust-side counterpart of the
 //! paper's evaluation protocol, shrunk to the `tiny` preset.
 
-use checkfree::config::{FailureSpec, ReinitKind, Strategy, TrainConfig};
+use checkfree::config::{FailureSpec, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::Trainer;
 use checkfree::data::Domain;
 use checkfree::experiments;
@@ -104,6 +104,28 @@ fn checkpoint_rollback_loses_progress_checkfree_does_not() {
     // engine ends at an earlier effective iteration
     assert!(ck.engine.iteration < cf.engine.iteration);
     assert!(ck.record.events.iter().any(|e| e.kind == EventKind::Rollback));
+}
+
+#[test]
+fn per_stage_planes_survive_churn_identically_to_shared() {
+    // End-to-end plane-mode parity under real failures: the same churny
+    // CheckFree+ run on one shared client and on one client per stage
+    // must produce the same loss curve bit for bit — recovery rewrites
+    // land on the failed stage's own client via the per-plane mirror
+    // refresh, and link copies move bytes without changing them.
+    let mut curves = Vec::new();
+    for plane_mode in [PlaneMode::Shared, PlaneMode::PerStage] {
+        let mut c = cfg(Strategy::CheckFreePlus, 12, 0.0, 31);
+        c.plane_mode = plane_mode;
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(4, 1); // swap-partner copy path
+        t.force_failure(8, 2); // boundary / weighted path
+        t.run().unwrap();
+        assert_eq!(t.record.failures(), 2);
+        let curve: Vec<u32> = t.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+        curves.push(curve);
+    }
+    assert_eq!(curves[0], curves[1], "plane modes diverged under churn");
 }
 
 #[test]

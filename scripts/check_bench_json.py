@@ -1,0 +1,202 @@
+#!/usr/bin/env python3
+"""Validate committed BENCH_*.json files against docs/BENCHMARKS.md.
+
+Stdlib-only on purpose: this runs in CI containers that have no cargo
+(and no pip), so bench bit-rot is caught even where the benches cannot
+be executed. Checked invariants:
+
+* every file parses and declares ``bench``/``schema``/``status``;
+* ``status`` is ``measured`` or ``pending-toolchain`` (placeholders must
+  carry a ``note`` naming the gate the first toolchain run confirms);
+* a file claiming ``status: "measured"`` must actually contain its gate
+  sections — non-empty speedups, per-model watermark and residency
+  entries with every documented field (including, at schema >= 2, the
+  ``link_copies``/``link_bytes`` transfer columns and the per-stage
+  plane-mode entry) — and every ``gate_*`` boolean must be true;
+* ``BENCH_recovery.json`` analogously for its latency table.
+
+Exit status: 0 = all files valid, 1 = any violation (listed on stderr).
+
+Usage: check_bench_json.py [FILE...]    (default: BENCH_*.json at the
+repo root, including the gitignored smoke sidecar when present)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+TRANSFER_FIELDS_V1 = (
+    "host_syncs",
+    "uploads",
+    "bytes_down",
+    "bytes_up",
+    "forced_tuple_roundtrips",
+)
+TRANSFER_FIELDS_V2 = TRANSFER_FIELDS_V1 + ("link_copies", "link_bytes")
+
+WATERMARK_FIELDS = (
+    "fill_drain",
+    "one_f_one_b",
+    "depth_bound",
+    "gate_1f1b_below_fill_drain",
+)
+
+RESIDENCY_MODES_V1 = (
+    "sequential",
+    "pipelined",
+    "pipelined-1f1b",
+    "pipelined-1f1b-host-staging",
+)
+RESIDENCY_MODES_V2 = RESIDENCY_MODES_V1 + ("pipelined-1f1b-per-stage",)
+
+LATENCY_FIELDS = (
+    "scale",
+    "stage_bytes",
+    "model_bytes",
+    "checkfree_worst_s",
+    "ckpt_download_s",
+    "ckpt_upload_s",
+)
+
+
+class Checker:
+    def __init__(self, path: Path) -> None:
+        self.path = path
+        self.errors: list[str] = []
+
+    def error(self, msg: str) -> None:
+        self.errors.append(f"{self.path}: {msg}")
+
+    def require(self, obj: dict, key: str, kinds, where: str = "top level"):
+        """Presence + type check; returns the value (None when absent)."""
+        if key not in obj:
+            self.error(f"missing '{key}' at {where}")
+            return None
+        value = obj[key]
+        if not isinstance(value, kinds):
+            self.error(f"'{key}' at {where} has type {type(value).__name__}")
+            return None
+        return value
+
+    def check_gates_true(self, obj: dict, where: str) -> None:
+        for key, value in obj.items():
+            if key.startswith("gate_") and value is not True:
+                self.error(f"{where}.{key} is {value!r} — a committed measured "
+                           "run must pass its gates (see docs/BENCHMARKS.md)")
+
+    def check(self) -> None:
+        try:
+            doc = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            self.error(f"unreadable or invalid JSON: {exc}")
+            return
+        if not isinstance(doc, dict):
+            self.error("top level is not an object")
+            return
+
+        bench = self.require(doc, "bench", str)
+        schema = self.require(doc, "schema", (int, float))
+        status = self.require(doc, "status", str)
+        if status not in (None, "measured", "pending-toolchain"):
+            self.error(f"unknown status {status!r}")
+        if status == "pending-toolchain" and not doc.get("note"):
+            self.error("pending-toolchain placeholder must carry a 'note' "
+                       "naming the gate the first toolchain run confirms")
+
+        if bench == "hot_path":
+            self.check_hot_path(doc, status, schema or 0)
+        elif bench == "recovery":
+            self.check_recovery(doc, status)
+        elif bench is not None:
+            self.error(f"unknown bench {bench!r}")
+
+    def check_hot_path(self, doc: dict, status, schema) -> None:
+        for key in ("pipelined_speedup", "pipelined_1f1b_speedup",
+                    "activation_watermark", "device_residency"):
+            self.require(doc, key, dict)
+        self.require(doc, "results", list)
+        if status != "measured":
+            return
+
+        transfer_fields = TRANSFER_FIELDS_V2 if schema >= 2 else TRANSFER_FIELDS_V1
+        residency_modes = RESIDENCY_MODES_V2 if schema >= 2 else RESIDENCY_MODES_V1
+
+        for key in ("pipelined_speedup", "pipelined_1f1b_speedup"):
+            speedups = doc.get(key)
+            if isinstance(speedups, dict) and not speedups:
+                self.error(f"measured run with empty '{key}' — the gate "
+                           "section is missing its per-model numbers")
+
+        watermark = doc.get("activation_watermark")
+        if isinstance(watermark, dict):
+            models = {k: v for k, v in watermark.items() if isinstance(v, dict)}
+            if not models:
+                self.error("measured run with no per-model "
+                           "'activation_watermark' entries")
+            for model, entry in models.items():
+                where = f"activation_watermark.{model}"
+                for field in WATERMARK_FIELDS:
+                    self.require(entry, field, (int, float, bool), where)
+                self.check_gates_true(entry, where)
+
+        residency = doc.get("device_residency")
+        if isinstance(residency, dict):
+            models = {k: v for k, v in residency.items() if isinstance(v, dict)}
+            if not models:
+                self.error("measured run with no per-model "
+                           "'device_residency' entries")
+            for model, entry in models.items():
+                where = f"device_residency.{model}"
+                for mode in residency_modes:
+                    transfers = self.require(entry, mode, dict, where)
+                    if transfers is None:
+                        continue
+                    for field in transfer_fields:
+                        self.require(transfers, field, (int, float),
+                                     f"{where}.{mode}")
+                self.check_gates_true(entry, where)
+
+    def check_recovery(self, doc: dict, status) -> None:
+        latencies = self.require(doc, "simulated_latencies", list)
+        self.require(doc, "microbench", list)
+        if status != "measured":
+            return
+        if not latencies:
+            self.error("measured run with empty 'simulated_latencies'")
+            return
+        for i, entry in enumerate(latencies):
+            where = f"simulated_latencies[{i}]"
+            if not isinstance(entry, dict):
+                self.error(f"{where} is not an object")
+                continue
+            for field in LATENCY_FIELDS:
+                self.require(entry, field, (str, int, float), where)
+
+
+def main(argv: list[str]) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    paths = [Path(p) for p in argv] or sorted(repo_root.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench_json: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        checker = Checker(path)
+        checker.check()
+        if checker.errors:
+            failures += 1
+            for err in checker.errors:
+                print(f"FAIL {err}", file=sys.stderr)
+        else:
+            print(f"ok   {path}")
+    if failures:
+        print(f"check_bench_json: {failures}/{len(paths)} file(s) invalid",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

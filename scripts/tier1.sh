@@ -1,42 +1,116 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): release build + test suite +
-# clippy gate + docs/format gate + a smoke train_iteration timing check.
+# clippy gate + docs/format/bench-schema gate + a smoke train_iteration
+# timing check.
 #
-# Usage: scripts/tier1.sh [--no-smoke] [--docs] [--clippy] [--bench-smoke]
+# Usage: scripts/tier1.sh [--ci] [--no-smoke] [--docs] [--clippy] [--bench-smoke]
+#   --ci           CI mode: `set -x` tracing, plus one machine-readable
+#                  `tier1-gate <name>=pass|fail` line per gate (and a
+#                  markdown row in $GITHUB_STEP_SUMMARY when set) for the
+#                  workflow's step summary. Local output is unchanged
+#                  without the flag.
 #   --no-smoke     skip the timing smoke run
-#   --docs         run ONLY the documentation/format gate (fast local check)
+#   --docs         run ONLY the documentation/format/bench-schema gate
 #   --clippy       run ONLY the clippy lint gate
 #   --bench-smoke  run ONLY the hot-path bench at toy size (tiny model,
 #                  short budgets) — catches bench bit-rot without waiting
 #                  for the full measurement run; writes the gitignored
 #                  BENCH_hot_path.smoke.json, never the committed file
+#
+# Plane-mode matrix: the test suite honours CHECKFREE_PLANE_MODE
+# (shared|per-stage) — TrainConfig::default() reads it — which is how
+# .github/workflows/tier1.yml runs tier-1 under both PJRT plane layouts.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
-cd "$repo_root/rust"
 
-if ! command -v cargo >/dev/null 2>&1; then
-    echo "error: cargo not found on PATH — this container lacks the Rust toolchain." >&2
-    echo "       Run tier-1 in the rust_pallas toolchain image (needs cargo + vendored" >&2
-    echo "       'anyhow' and 'xla' crates + PJRT CPU plugin; see rust/Cargo.toml)." >&2
-    exit 1
+ci=0
+only=""
+no_smoke=0
+for arg in "$@"; do
+    case "$arg" in
+    --ci) ci=1 ;;
+    --docs) only=docs ;;
+    --clippy) only=clippy ;;
+    --bench-smoke) only=bench-smoke ;;
+    --no-smoke) no_smoke=1 ;;
+    *)
+        echo "unknown flag '$arg' (see scripts/tier1.sh header)" >&2
+        exit 2
+        ;;
+    esac
+done
+
+# Emit the machine-readable per-gate verdict (CI mode only). Quieted
+# around `set -x` so the summary lines stay greppable in the trace.
+report_gate() { # <name> <pass|fail>
+    if [[ $ci -eq 1 ]]; then
+        { set +x; } 2>/dev/null
+        echo "tier1-gate $1=$2"
+        if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
+            local icon="✅"
+            [[ "$2" == fail ]] && icon="❌"
+            echo "| $1 | $icon $2 |" >>"$GITHUB_STEP_SUMMARY"
+        fi
+        set -x
+    fi
+}
+
+# Run one named gate; on failure report it before exiting (set -e).
+gate() { # <name> <command...>
+    local name="$1"
+    shift
+    if "$@"; then
+        report_gate "$name" pass
+    else
+        local rc=$?
+        report_gate "$name" fail
+        exit "$rc"
+    fi
+}
+
+if [[ $ci -eq 1 ]]; then
+    if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
+        {
+            echo "### tier-1 gates"
+            echo "| gate | result |"
+            echo "|---|---|"
+        } >>"$GITHUB_STEP_SUMMARY"
+    fi
+    set -x
 fi
+
+# NOTE: gate functions run inside `gate`'s `if` condition, where bash
+# ignores errexit — every step chains `|| return 1` explicitly so a
+# failing early step cannot be masked by a passing later one.
+
+# The bench-schema check is pure python stdlib — it must work (and is
+# exercised by CI) even in a cargo-less container.
+schema_gate() {
+    echo "== bench JSON schema check =="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 "$repo_root/scripts/check_bench_json.py" || return 1
+    else
+        echo "python3 unavailable; skipping bench-schema gate" >&2
+    fi
+}
 
 docs_gate() {
     echo "== cargo doc --no-deps (deny rustdoc warnings) =="
-    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps || return 1
     echo "== cargo fmt --check =="
     if cargo fmt --version >/dev/null 2>&1; then
-        cargo fmt --all -- --check
+        cargo fmt --all -- --check || return 1
     else
         echo "rustfmt unavailable; skipping format gate" >&2
     fi
+    schema_gate || return 1
 }
 
 clippy_gate() {
     echo "== cargo clippy --all-targets (deny warnings) =="
     if cargo clippy --version >/dev/null 2>&1; then
-        cargo clippy --all-targets -- -D warnings
+        cargo clippy --all-targets -- -D warnings || return 1
     else
         echo "clippy unavailable; skipping lint gate" >&2
     fi
@@ -44,41 +118,51 @@ clippy_gate() {
 
 bench_smoke() {
     echo "== smoke hot-path bench (tiny, short budgets: timings + watermark + device-residency sections) =="
-    cargo bench --bench hot_path -- --smoke
+    cargo bench --bench hot_path -- --smoke || return 1
     echo "Smoke results in BENCH_hot_path.smoke.json (gitignored); run the full"
     echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
 }
 
-case "${1:-}" in
---docs)
-    docs_gate
+cd "$repo_root/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — this container lacks the Rust toolchain." >&2
+    echo "       Run tier-1 in the rust_pallas toolchain image (needs cargo + vendored" >&2
+    echo "       'anyhow' and 'xla' crates + PJRT CPU plugin; see rust/Cargo.toml)." >&2
+    report_gate toolchain fail
+    exit 1
+fi
+
+case "$only" in
+docs)
+    gate docs docs_gate
     echo "docs gate OK"
     exit 0
     ;;
---clippy)
-    clippy_gate
+clippy)
+    gate clippy clippy_gate
     echo "clippy gate OK"
     exit 0
     ;;
---bench-smoke)
-    bench_smoke
+bench-smoke)
+    gate bench-smoke bench_smoke
     echo "bench smoke OK"
     exit 0
     ;;
 esac
 
 echo "== cargo build --release =="
-cargo build --release
+gate build cargo build --release
 
 echo "== cargo test -q =="
-cargo test -q
+gate test cargo test -q
 
-clippy_gate
+gate clippy clippy_gate
 
-docs_gate
+gate docs docs_gate
 
-if [[ "${1:-}" != "--no-smoke" ]]; then
-    bench_smoke
+if [[ $no_smoke -eq 0 ]]; then
+    gate bench-smoke bench_smoke
 fi
 
 echo "tier-1 OK"
