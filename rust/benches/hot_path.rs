@@ -16,20 +16,26 @@
 //! device-resident host syncs strictly below the host-staging path's
 //! (see docs/BENCHMARKS.md). Since schema 2 the section also carries a
 //! `pipelined-1f1b-per-stage` row (`--plane-mode per-stage`: one PJRT
-//! client per stage) with the new `link_copies`/`link_bytes` columns and
-//! a parity gate — per-stage planes must keep host syncs identical to
+//! client per stage) with the `link_copies`/`link_bytes` columns and a
+//! parity gate — per-stage planes must keep host syncs identical to
 //! the shared client (link copies are inter-device staging, not host
-//! traffic) — plus a `plane_mode` timing section recording the
-//! link-copy wall-clock overhead. Results are written to
-//! `BENCH_hot_path.json` at the repo root so future PRs can diff the
-//! perf trajectory.
+//! traffic). Schema 3 splits every link copy by path
+//! (`link_direct`/`link_staged`) and counts `donated_buffers`, adding
+//! two gates: same-process per-stage runs must record `link_staged ==
+//! 0` (the direct fast path engages, no host round-trip per link), and
+//! device-path donations must match the schedule (`m·(L+1)` dead
+//! buffers handed to the runtime per iteration). The `plane_mode`
+//! timing section records per-stage wall-clock under BOTH link paths,
+//! so deployment policy can pick with the costs visible. Results are
+//! written to `BENCH_hot_path.json` at the repo root so future PRs can
+//! diff the perf trajectory.
 //!
 //! Pass `--smoke` for a quick tiny-model-only run (used by
 //! `scripts/tier1.sh` as the train_iteration timing check); smoke
 //! results go to the gitignored `BENCH_hot_path.smoke.json` so they
 //! never clobber the committed full-run trajectory.
 
-use checkfree::config::{ExecMode, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{ExecMode, LinkPath, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::PipelineEngine;
 use checkfree::model::GradBuffer;
 use checkfree::recovery::checkfree::weighted_average;
@@ -200,12 +206,16 @@ fn main() {
         // steady-state iteration (the 2nd — the 1st pays the first param
         // upload) for each mode, plus the host-staging baseline and the
         // per-stage-plane layout. Gates: device-resident 1F1B host syncs
-        // strictly below host-staging's, and per-stage host syncs EQUAL
-        // to the shared client's (link copies are their own column).
+        // strictly below host-staging's; per-stage host syncs EQUAL to
+        // the shared client's (link copies are their own column); zero
+        // STAGED link copies in the same-process per-stage run (the
+        // direct fast path engages — pinned via an explicit Auto
+        // policy, so an ambient CHECKFREE_LINK_PATH cannot skew the
+        // committed gate); and donations matching the schedule.
         let transfers_of = |mode: ExecMode,
                             host_staging: bool,
                             plane_mode: PlaneMode|
-         -> Option<checkfree::metrics::TransferSnapshot> {
+         -> Option<(checkfree::metrics::TransferSnapshot, u64)> {
             let cfg = TrainConfig {
                 model: model.into(),
                 strategy: Strategy::CheckFree,
@@ -213,6 +223,7 @@ fn main() {
                 exec_mode: mode,
                 host_staging,
                 plane_mode,
+                link_path: LinkPath::Auto,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -231,7 +242,7 @@ fn main() {
                 eprintln!("residency run failed ({model}, {}): {err:#}", mode.label());
                 return None;
             }
-            Some(e.transfer_ledger().snapshot().since(&before))
+            Some((e.transfer_ledger().snapshot().since(&before), e.stages.len() as u64))
         };
         let transfers_json = |d: &checkfree::metrics::TransferSnapshot| {
             Json::obj(vec![
@@ -242,6 +253,9 @@ fn main() {
                 ("forced_tuple_roundtrips", Json::num(d.forced_tuple_roundtrips as f64)),
                 ("link_copies", Json::num(d.link_copies as f64)),
                 ("link_bytes", Json::num(d.link_bytes as f64)),
+                ("link_direct", Json::num(d.link_direct as f64)),
+                ("link_staged", Json::num(d.link_staged as f64)),
+                ("donated_buffers", Json::num(d.donated_buffers as f64)),
             ])
         };
         let seq = transfers_of(ExecMode::Sequential, false, PlaneMode::Shared);
@@ -252,10 +266,17 @@ fn main() {
         if let (Some(seq), Some(fd), Some(ob), Some(ob_host), Some(ob_ps)) =
             (seq, fd, ob, ob_host, ob_ps)
         {
+            let (seq, _) = seq;
+            let (fd, _) = fd;
+            let (ob, stages) = ob;
+            let (ob_host, _) = ob_host;
+            let (ob_ps, _) = ob_ps;
+            let want_donations = MICROBATCHES as u64 * stages;
             println!(
                 "  {model}: host syncs/iter @ {MICROBATCHES} mb — sequential {}, \
                  fill/drain {}, 1F1B {}, 1F1B host-staging {} (gate: {} < {}); \
-                 per-stage planes {} syncs + {} link copies (gate: {} == {})\n",
+                 per-stage planes {} syncs + {} link copies ({} direct / {} staged; \
+                 gates: {} == {}, staged == 0); donations {} (want {})\n",
                 seq.host_syncs,
                 fd.host_syncs,
                 ob.host_syncs,
@@ -264,8 +285,12 @@ fn main() {
                 ob_host.host_syncs,
                 ob_ps.host_syncs,
                 ob_ps.link_copies,
+                ob_ps.link_direct,
+                ob_ps.link_staged,
                 ob_ps.host_syncs,
                 ob.host_syncs,
+                ob.donated_buffers,
+                want_donations,
             );
             residency.push((
                 model.to_string(),
@@ -283,34 +308,56 @@ fn main() {
                         "gate_per_stage_syncs_equal_shared",
                         Json::Bool(ob_ps.host_syncs == ob.host_syncs),
                     ),
+                    (
+                        "gate_per_stage_staged_links_zero",
+                        Json::Bool(
+                            ob_ps.link_staged == 0
+                                && ob_ps.link_direct == ob_ps.link_copies,
+                        ),
+                    ),
+                    (
+                        "gate_donations_match_schedule",
+                        Json::Bool(
+                            ob.donated_buffers == want_donations
+                                && ob_ps.donated_buffers == want_donations
+                                && ob_host.donated_buffers == 0,
+                        ),
+                    ),
                 ]),
             ));
         }
 
         // Plane-mode wall-clock: what the per-stage link copies cost per
-        // iteration today (device→host→device staged hops). Informative,
-        // not gated — the parity gates above are the acceptance story.
+        // iteration under EACH link path — the direct plugin transfer
+        // (the default fast path) and the staged device→host→device
+        // baseline — so deployment policy can pick with the costs
+        // visible (the Chameleon argument). Informative, not gated —
+        // the parity + staged==0 gates above are the acceptance story.
         // The shared baseline reuses the 1F1B timing measured above
         // (same model, same microbatches, shared-pinned) instead of
         // paying a second multi-second run.
-        let mut timed_per_stage = || -> Option<f64> {
+        let mut timed_per_stage = |link: LinkPath| -> Option<f64> {
             let cfg = TrainConfig {
                 model: model.into(),
                 strategy: Strategy::CheckFree,
                 microbatches_per_iter: MICROBATCHES,
                 exec_mode: ExecMode::Pipelined1F1B,
                 plane_mode: PlaneMode::PerStage,
+                link_path: link,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
                 Ok(e) => e,
                 Err(err) => {
-                    eprintln!("plane-mode run skipped ({model}, per-stage): {err:#}");
+                    eprintln!(
+                        "plane-mode run skipped ({model}, per-stage, {}): {err:#}",
+                        link.label()
+                    );
                     return None;
                 }
             };
             let stats = bench_with(
-                &format!("train_iteration ({model}, 1f1b, per-stage planes)"),
+                &format!("train_iteration ({model}, 1f1b, per-stage, {} links)", link.label()),
                 Duration::from_secs(if smoke { 1 } else { 3 }),
                 5,
                 200,
@@ -322,17 +369,31 @@ fn main() {
             results.push(stats.to_json());
             Some(stats.mean.as_secs_f64())
         };
-        if let (Some(shared_s), Some(per_stage_s)) =
-            (mean_of(ExecMode::Pipelined1F1B), timed_per_stage())
-        {
-            let overhead = per_stage_s / shared_s;
-            println!("  {model}: per-stage plane overhead over shared = {overhead:.2}×\n");
+        let shared_s = mean_of(ExecMode::Pipelined1F1B);
+        let direct_s = timed_per_stage(LinkPath::Direct);
+        // The staged run is only a comparison point for the direct one:
+        // skip its multi-second budget when the direct leg already
+        // failed (e.g. a plugin without cross-client transfer).
+        let staged_s = if direct_s.is_some() {
+            timed_per_stage(LinkPath::Staged)
+        } else {
+            None
+        };
+        if let (Some(shared_s), Some(direct_s), Some(staged_s)) = (shared_s, direct_s, staged_s) {
+            let overhead = direct_s / shared_s;
+            let direct_vs_staged = direct_s / staged_s;
+            println!(
+                "  {model}: per-stage (direct links) over shared = {overhead:.2}×; \
+                 direct over staged = {direct_vs_staged:.2}×\n"
+            );
             plane_overheads.push((
                 model.to_string(),
                 Json::obj(vec![
                     ("shared_mean_s", Json::num(shared_s)),
-                    ("per_stage_mean_s", Json::num(per_stage_s)),
+                    ("per_stage_mean_s", Json::num(direct_s)),
+                    ("per_stage_staged_mean_s", Json::num(staged_s)),
                     ("per_stage_over_shared", Json::num(overhead)),
+                    ("direct_over_staged", Json::num(direct_vs_staged)),
                 ]),
             ));
         }
@@ -369,7 +430,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("hot_path")),
-        ("schema", Json::num(2.0)),
+        ("schema", Json::num(3.0)),
         ("status", Json::str("measured")),
         ("generated_by", Json::str("cargo bench --bench hot_path [-- --smoke]")),
         ("smoke", Json::Bool(smoke)),

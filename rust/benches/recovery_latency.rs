@@ -6,12 +6,23 @@
 //! Emits `BENCH_recovery.json` at the repo root (simulated latencies +
 //! netsim micro-bench stats) so the perf trajectory is diffable across
 //! PRs.
+//!
+//! Pass `--smoke` for the CI recovery-smoke lane: short micro-bench
+//! budgets, results written to the **gitignored**
+//! `BENCH_recovery.smoke.json` sidecar (uploaded as a workflow
+//! artifact) so quick runs never clobber the committed trajectory. The
+//! simulated latencies are closed-form either way — only the
+//! micro-bench sampling budget differs.
+
+use std::time::Duration;
 
 use checkfree::netsim::{Network, Region};
-use checkfree::util::bench::bench;
+use checkfree::util::bench::bench_with;
 use checkfree::util::json::Json;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let micro_budget = Duration::from_secs(if smoke { 1 } else { 3 });
     let mut latencies: Vec<Json> = Vec::new();
     let mut micro: Vec<Json> = Vec::new();
 
@@ -44,18 +55,24 @@ fn main() {
 
     println!("\n--- netsim micro-benchmarks ---");
     let net = Network::round_robin(7);
-    let stats = bench("transfer_seconds (single edge)", || {
+    let stats = bench_with("transfer_seconds (single edge)", micro_budget, 5, 500, || {
         std::hint::black_box(net.transfer_seconds(333_000_000, 2, 3).unwrap());
     });
     println!("{}", stats.report());
     micro.push(stats.to_json());
-    let stats = bench("checkfree_recovery_seconds (both neighbours)", || {
-        std::hint::black_box(net.checkfree_recovery_seconds(333_000_000, 3).unwrap());
-    });
+    let stats = bench_with(
+        "checkfree_recovery_seconds (both neighbours)",
+        micro_budget,
+        5,
+        500,
+        || {
+            std::hint::black_box(net.checkfree_recovery_seconds(333_000_000, 3).unwrap());
+        },
+    );
     println!("{}", stats.report());
     micro.push(stats.to_json());
     let single = Network::single_region(7, Region::UsCentral);
-    let stats = bench("recovery in single-region cluster", || {
+    let stats = bench_with("recovery in single-region cluster", micro_budget, 5, 500, || {
         std::hint::black_box(single.checkfree_recovery_seconds(333_000_000, 3).unwrap());
     });
     println!("{}", stats.report());
@@ -65,11 +82,18 @@ fn main() {
         ("bench", Json::str("recovery")),
         ("schema", Json::num(1.0)),
         ("status", Json::str("measured")),
-        ("generated_by", Json::str("cargo bench --bench recovery_latency")),
+        ("generated_by", Json::str("cargo bench --bench recovery_latency [-- --smoke]")),
+        ("smoke", Json::Bool(smoke)),
         ("simulated_latencies", Json::Arr(latencies)),
         ("microbench", Json::Arr(micro)),
     ]);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json");
+    // Smoke runs (short budgets) go to the gitignored sidecar so CI's
+    // recovery-smoke lane never clobbers the committed trajectory.
+    let path = if smoke {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.smoke.json")
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json")
+    };
     match std::fs::write(path, format!("{out}\n")) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

@@ -157,12 +157,17 @@ impl Staging {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlaneMode {
     /// Every stage multiplexes one CPU PJRT client — the pre-multi-client
-    /// behaviour and the default (until CI measures per-stage parity; see
-    /// `.github/workflows/tier1.yml`, which matrixes the test job over
-    /// both modes).
+    /// behaviour, kept as the A/B baseline now that per-stage is the
+    /// default (still a first-class mode: `--plane-mode shared`, and the
+    /// CI matrix in `.github/workflows/tier1.yml` runs the whole suite
+    /// under both layouts).
     Shared,
-    /// One PJRT client (and one `DevicePlane`) per pipeline stage; the
-    /// head executes on the **last** stage's plane — the paper's §4.3
+    /// One PJRT client (and one `DevicePlane`) per pipeline stage — the
+    /// **default**: CheckFree's premise is stages on distinct
+    /// failure-prone nodes, and with the direct cross-plane link path
+    /// (see [`LinkPath`]) the per-stage layout no longer pays a host
+    /// round-trip per inter-stage send. The head executes on the
+    /// **last** stage's plane — the paper's §4.3
     /// deembedding-replication shape — so an `L`-stage pipeline has
     /// exactly `L−1` inter-client links, each crossed once forward and
     /// once backward per microbatch.
@@ -180,19 +185,21 @@ impl PlaneMode {
     }
 
     /// The process-wide default: `CHECKFREE_PLANE_MODE` if set (the CI
-    /// matrix's lever — it flips the whole test suite to per-stage
-    /// planes without touching any test), else [`PlaneMode::Shared`].
-    /// An unparsable value falls back to `Shared` rather than poisoning
-    /// every `TrainConfig::default()` call site — but **loudly**: a
-    /// typoed matrix leg silently running shared would report a
-    /// vacuously green parity measurement.
+    /// matrix's lever — it flips the whole test suite to either plane
+    /// layout without touching any test), else [`PlaneMode::PerStage`] —
+    /// the compiled-in default since CI measured shared↔per-stage parity
+    /// and the direct link path removed the per-send host round-trip.
+    /// An unparsable value falls back to the compiled-in default rather
+    /// than poisoning every `TrainConfig::default()` call site — but
+    /// **loudly**: a typoed matrix leg silently running the wrong layout
+    /// would report a vacuously green parity measurement.
     pub fn from_env() -> PlaneMode {
         match std::env::var("CHECKFREE_PLANE_MODE") {
             Ok(v) => v.parse().unwrap_or_else(|e| {
-                eprintln!("warning: ignoring CHECKFREE_PLANE_MODE: {e}; using 'shared'");
-                PlaneMode::Shared
+                eprintln!("warning: ignoring CHECKFREE_PLANE_MODE: {e}; using 'per-stage'");
+                PlaneMode::PerStage
             }),
-            Err(_) => PlaneMode::Shared,
+            Err(_) => PlaneMode::PerStage,
         }
     }
 }
@@ -205,6 +212,72 @@ impl FromStr for PlaneMode {
             "shared" => Ok(PlaneMode::Shared),
             "per-stage" | "per_stage" | "perstage" => Ok(PlaneMode::PerStage),
             other => Err(anyhow!("unknown plane mode '{other}' (shared|per-stage)")),
+        }
+    }
+}
+
+/// How a cross-plane link copy moves bytes between two stages' PJRT
+/// clients (`--plane-mode per-stage`; irrelevant under `shared`, whose
+/// sends are all plane-local).
+///
+/// Both paths are bitwise-identical — a link copy moves bytes, never
+/// changes them — and both are metered in their own ledger columns
+/// (`link_direct`/`link_staged`), so policy can pick per deployment
+/// with the costs visible (the Chameleon argument, PAPERS.md). Only
+/// wall-clock differs: the direct path hands the transfer to the PJRT
+/// plugin in one call, the staged path round-trips through a host
+/// literal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkPath {
+    /// Probe the plugin once for direct cross-client transfer support;
+    /// use it when available, fall back to the staged hop (loudly)
+    /// when not. The default.
+    Auto,
+    /// Require the direct path; a link copy **fails** if the plugin
+    /// cannot transfer across clients (CI uses this to prove the fast
+    /// path actually engages rather than silently degrading).
+    Direct,
+    /// Always stage device→host→device — the pre-fast-path behaviour,
+    /// kept as the A/B baseline and as the escape hatch for plugins
+    /// whose cross-client transfer misbehaves.
+    Staged,
+}
+
+impl LinkPath {
+    pub const ALL: [LinkPath; 3] = [LinkPath::Auto, LinkPath::Direct, LinkPath::Staged];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinkPath::Auto => "auto",
+            LinkPath::Direct => "direct",
+            LinkPath::Staged => "staged",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_LINK_PATH` if set (the CI
+    /// lever for the staged↔direct A/B legs), else [`LinkPath::Auto`].
+    /// Unparsable values fall back to `Auto` — loudly, like
+    /// [`PlaneMode::from_env`].
+    pub fn from_env() -> LinkPath {
+        match std::env::var("CHECKFREE_LINK_PATH") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_LINK_PATH: {e}; using 'auto'");
+                LinkPath::Auto
+            }),
+            Err(_) => LinkPath::Auto,
+        }
+    }
+}
+
+impl FromStr for LinkPath {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(LinkPath::Auto),
+            "direct" => Ok(LinkPath::Direct),
+            "staged" => Ok(LinkPath::Staged),
+            other => Err(anyhow!("unknown link path '{other}' (auto|direct|staged)")),
         }
     }
 }
@@ -331,6 +404,9 @@ pub struct TrainConfig {
     /// One PJRT client for all stages, or one per stage (see
     /// [`PlaneMode`]). Defaults to [`PlaneMode::from_env`].
     pub plane_mode: PlaneMode,
+    /// How cross-plane link copies move bytes under per-stage planes
+    /// (see [`LinkPath`]). Defaults to [`LinkPath::from_env`].
+    pub link_path: LinkPath,
 }
 
 impl Default for TrainConfig {
@@ -352,6 +428,7 @@ impl Default for TrainConfig {
             exec_mode: ExecMode::Pipelined1F1B,
             host_staging: false,
             plane_mode: PlaneMode::from_env(),
+            link_path: LinkPath::from_env(),
         }
     }
 }
@@ -389,6 +466,7 @@ impl TrainConfig {
             ("exec_mode", Json::str(self.exec_mode.label())),
             ("host_staging", Json::Bool(self.host_staging)),
             ("plane_mode", Json::str(self.plane_mode.label())),
+            ("link_path", Json::str(self.link_path.label())),
         ])
     }
 
@@ -470,6 +548,10 @@ impl TrainConfig {
             plane_mode: match v.opt("plane_mode") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.plane_mode,
+            },
+            link_path: match v.opt("link_path") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.link_path,
             },
         })
     }
@@ -667,6 +749,47 @@ mod tests {
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
         assert_eq!(back.plane_mode, PlaneMode::from_env());
+    }
+
+    #[test]
+    fn default_plane_mode_is_per_stage_without_env() {
+        // The compiled-in default flipped to per-stage once CI measured
+        // shared↔per-stage parity (gate 4) and the direct link path
+        // landed. When the CI matrix env is present it wins, so only
+        // assert the compiled-in fallback when the env is unset.
+        if std::env::var("CHECKFREE_PLANE_MODE").is_err() {
+            assert_eq!(PlaneMode::from_env(), PlaneMode::PerStage);
+            assert_eq!(TrainConfig::default().plane_mode, PlaneMode::PerStage);
+        }
+    }
+
+    #[test]
+    fn link_path_parse_all_labels() {
+        for l in LinkPath::ALL {
+            assert_eq!(l.label().parse::<LinkPath>().unwrap(), l);
+        }
+        assert!("bogus".parse::<LinkPath>().is_err());
+    }
+
+    #[test]
+    fn link_path_roundtrips_and_defaults_from_env() {
+        assert_eq!(TrainConfig::default().link_path, LinkPath::from_env());
+        if std::env::var("CHECKFREE_LINK_PATH").is_err() {
+            assert_eq!(LinkPath::from_env(), LinkPath::Auto);
+        }
+        for path in LinkPath::ALL {
+            let cfg = TrainConfig { link_path: path, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.link_path, path);
+        }
+        // absent key → env default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.link_path, LinkPath::from_env());
     }
 
     #[test]

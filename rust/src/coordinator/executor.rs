@@ -41,7 +41,14 @@
 //! stage's `execute_buffers` call without ever visiting host memory, and
 //! the only device→host syncs of an iteration are the **loss** (head),
 //! the **parameter gradients** (each slot's backward + the embed join),
-//! i.e. the host-side optimizer/recovery boundary. Under
+//! i.e. the host-side optimizer/recovery boundary. Every backward pass
+//! **donates** its dead inputs (the stashed forward activation and the
+//! incoming gradient) to
+//! [`crate::runtime::Executable::execute_buffers_donating`], which
+//! releases them at execute completion — `m·(L+1)` metered donations
+//! per iteration (one aliased stash per body backward, one per head
+//! backward), pinned by an engine test. Parameters always travel as
+//! borrows from the litcache and are never donated. Under
 //! [`Staging::Host`] (`--host-staging`) payloads are `HostTensor`s and
 //! every stage boundary round-trips through host exactly as before the
 //! device plane existed — kept as the A/B baseline and escape hatch.
@@ -99,7 +106,7 @@ use crate::coordinator::schedule::{self, PipelineSchedule, Step};
 use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
 use crate::runtime::{
-    Activation, DeviceBuffer, Executable, HostTensor, LiteralCache, PlaneSet, Runtime,
+    Activation, DeviceBuffer, ExecArg, Executable, HostTensor, LiteralCache, PlaneSet, Runtime,
     SharedLiterals,
 };
 use crate::{anyhow, Result};
@@ -603,9 +610,20 @@ fn embed_worker(
                 let ge = match staging {
                     Staging::Device => {
                         let e = &lits.stage_buffers_on(0, plane.idx())[0];
+                        // The returning ∂L/∂h0 is dead after this call:
+                        // donate it (released at execute completion; no
+                        // aliasable output here, so it is not metered).
                         let gh_buf = gh.into_device(plane, 0)?;
                         embed_bwd
-                            .execute_buffers(plane, 0, &[e, ids.buf(mb), &gh_buf])?
+                            .execute_buffers_donating(
+                                plane,
+                                0,
+                                vec![
+                                    ExecArg::Keep(e),
+                                    ExecArg::Keep(ids.buf(mb)),
+                                    ExecArg::Donate(gh_buf),
+                                ],
+                            )?
                             .pop()
                             .ok_or_else(|| anyhow!("embed_bwd returned nothing"))?
                             .to_host(plane, 0)? // gradient boundary sync
@@ -739,14 +757,20 @@ fn slot_worker(
                     (Staging::Device, Stashed::Buf(h_buf)) => {
                         let (_, body_bwd) = body_exes[s - 1];
                         let gh_buf = gh.into_device(plane, s)?; // link copy across planes
+                        // Both non-parameter inputs die at this backward:
+                        // the stashed forward activation (aliases the
+                        // ∂L/∂h output — the metered donation) and the
+                        // incoming gradient (released early, unmetered).
                         let mut outs = {
-                            let mut args: Vec<&DeviceBuffer> =
-                                lits.stage_buffers_on(s, plane.idx()).iter().collect();
-                            args.push(&h_buf);
-                            args.push(&gh_buf);
-                            body_bwd.execute_buffers(plane, s, &args)?
+                            let mut args: Vec<ExecArg> = lits
+                                .stage_buffers_on(s, plane.idx())
+                                .iter()
+                                .map(ExecArg::Keep)
+                                .collect();
+                            args.push(ExecArg::Donate(h_buf));
+                            args.push(ExecArg::Donate(gh_buf));
+                            body_bwd.execute_buffers_donating(plane, s, args)?
                         };
-                        drop(h_buf);
                         watermark.release();
                         if outs.len() < 2 {
                             return Err(anyhow!("body_bwd returned {} outputs", outs.len()));
@@ -832,9 +856,19 @@ fn head_worker(
             Staging::Device => {
                 let st0 = lits.stage_buffers_on(0, plane.idx());
                 let (d, nw) = (&st0[1], &st0[2]);
+                // The incoming activation dies at the head's fused
+                // fwd+bwd (it aliases the ∂L/∂h output): donate it.
                 let h_buf = h.into_device(plane, 0)?;
-                let mut outs =
-                    head_bwd.execute_buffers(plane, 0, &[d, nw, &h_buf, ids.head_buf(mb)])?;
+                let mut outs = head_bwd.execute_buffers_donating(
+                    plane,
+                    0,
+                    vec![
+                        ExecArg::Keep(d),
+                        ExecArg::Keep(nw),
+                        ExecArg::Donate(h_buf),
+                        ExecArg::Keep(ids.head_buf(mb)),
+                    ],
+                )?;
                 if outs.len() != 4 {
                     return Err(anyhow!("head_bwd returned {} outputs", outs.len()));
                 }

@@ -14,7 +14,7 @@
 //! |---|---|
 //! | [`config`] | run configuration: model presets, failure/recovery/schedule knobs |
 //! | [`manifest`] | the artifact manifest contract with the AOT pipeline |
-//! | [`runtime`] | PJRT client(s) + executable registries (HLO text → compiled; one client per stage under `--plane-mode per-stage`), device-resident activation plane (`DeviceBuffer`/`Activation`/`PlaneSet`, metered cross-client link copies), versioned per-plane param caches |
+//! | [`runtime`] | PJRT client(s) + executable registries (HLO text → compiled; one client per stage under `--plane-mode per-stage`, the default), device-resident activation plane (`DeviceBuffer`/`Activation`/`PlaneSet`, metered cross-client link copies with a direct fast path + staged fallback, buffer donation), versioned per-plane param caches |
 //! | [`model`] | stage parameter store, deterministic init, Adam, grad norms |
 //! | [`data`] | synthetic corpus generator + tokenizer + domains (Table 3) |
 //! | [`coordinator`] | pipeline engine, microbatch schedules (incl. CheckFree+ swaps), trainer |

@@ -7,6 +7,7 @@
 //!                    [--exec-mode sequential|pipelined|pipelined-1f1b]
 //!                    [--host-staging true|false]
 //!                    [--plane-mode shared|per-stage]
+//!                    [--link-path auto|direct|staged]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -145,6 +146,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.parse_opt::<checkfree::config::PlaneMode>("plane-mode")? {
         cfg.plane_mode = p;
+    }
+    if let Some(l) = args.parse_opt::<checkfree::config::LinkPath>("link-path")? {
+        cfg.link_path = l;
     }
     cfg.validate()?;
 

@@ -84,6 +84,9 @@ struct StageCounters {
     forced_tuple_roundtrips: AtomicU64,
     link_copies: AtomicU64,
     link_bytes: AtomicU64,
+    link_direct: AtomicU64,
+    link_staged: AtomicU64,
+    donated_buffers: AtomicU64,
 }
 
 /// Cumulative device↔host transfer accounting, per pipeline stage.
@@ -104,14 +107,27 @@ struct StageCounters {
 ///   expects this to be **zero** and the engine test asserts it.
 /// * **link copy** — a device buffer crossed from one stage's plane to
 ///   another's ([`crate::runtime::DeviceBuffer::copy_to_plane`], the
-///   `--plane-mode per-stage` inter-client hop; device→host→device
-///   today). Link copies are staging traffic *between* devices, not
-///   data delivered to the host program, so they are counted in their
-///   own `link_copies`/`link_bytes` column and never inflate
+///   `--plane-mode per-stage` inter-client hop). Link copies are
+///   staging traffic *between* devices, not data delivered to the host
+///   program, so they are counted in their own
+///   `link_copies`/`link_bytes` column and never inflate
 ///   `host_syncs`/`uploads` — the loss/gradient-boundary contract stays
 ///   comparable across plane modes. Shared mode records zero by
 ///   construction; per-stage records exactly `2·(L−1)·m` per pipelined
 ///   iteration (one hop per inter-stage link, forward and backward).
+///   Every link copy is additionally classified by **which path moved
+///   it** — `link_direct` (the plugin's same-process cross-client
+///   transfer, `PjRtBuffer::copy_to_device`) or `link_staged` (the
+///   device→host→device fallback hop) — with
+///   `link_copies == link_direct + link_staged` by construction; the
+///   per-stage bench gate pins `link_staged == 0` on containers whose
+///   plugin supports direct transfer (see [`crate::config::LinkPath`]).
+/// * **donated buffer** — `Executable::execute_buffers_donating`
+///   received ownership of a dead input buffer whose spec aliases an
+///   execute output (the binding's donation-eligibility rule) and
+///   released it at the earliest legal point instead of the caller's
+///   scope end. Counted per aliased input; ownership handoffs with no
+///   aliasable output are released early too but not counted.
 ///
 /// Counters are cumulative (like `Runtime::exec_stats`); callers diff
 /// [`snapshot`](Self::snapshot)s to get per-iteration numbers. `stage`
@@ -132,6 +148,14 @@ pub struct TransferSnapshot {
     pub forced_tuple_roundtrips: u64,
     pub link_copies: u64,
     pub link_bytes: u64,
+    /// Link copies serviced by the plugin's direct cross-client
+    /// transfer (`link_direct + link_staged == link_copies`).
+    pub link_direct: u64,
+    /// Link copies that fell back to the staged device→host→device hop.
+    pub link_staged: u64,
+    /// Dead input buffers donated to an execute (spec-aliased to an
+    /// output and released at execute completion).
+    pub donated_buffers: u64,
 }
 
 impl TransferSnapshot {
@@ -149,6 +173,9 @@ impl TransferSnapshot {
                 .saturating_sub(earlier.forced_tuple_roundtrips),
             link_copies: self.link_copies.saturating_sub(earlier.link_copies),
             link_bytes: self.link_bytes.saturating_sub(earlier.link_bytes),
+            link_direct: self.link_direct.saturating_sub(earlier.link_direct),
+            link_staged: self.link_staged.saturating_sub(earlier.link_staged),
+            donated_buffers: self.donated_buffers.saturating_sub(earlier.donated_buffers),
         }
     }
 }
@@ -191,13 +218,31 @@ impl TransferLedger {
     }
 
     /// A device buffer of `bytes` hopped from one stage's plane to
-    /// another's (`--plane-mode per-stage` inter-client link copy),
-    /// billed to the **destination** stage — the receiver pulls the
-    /// activation onto its own client.
-    pub fn record_link_copy(&self, stage: usize, bytes: u64) {
+    /// another's via the plugin's **direct** cross-client transfer
+    /// (`--plane-mode per-stage` inter-client link copy), billed to the
+    /// **destination** stage — the receiver pulls the activation onto
+    /// its own client.
+    pub fn record_link_copy_direct(&self, stage: usize, bytes: u64) {
         let s = self.slot(stage);
         s.link_copies.fetch_add(1, Ordering::Relaxed);
         s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+        s.link_direct.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Like [`Self::record_link_copy_direct`], but the hop took the
+    /// **staged** device→host→device fallback path.
+    pub fn record_link_copy_staged(&self, stage: usize, bytes: u64) {
+        let s = self.slot(stage);
+        s.link_copies.fetch_add(1, Ordering::Relaxed);
+        s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+        s.link_staged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An execute received ownership of a dead input buffer whose spec
+    /// aliases one of its outputs and released it at execute completion
+    /// (`Executable::execute_buffers_donating`).
+    pub fn record_donation(&self, stage: usize) {
+        self.slot(stage).donated_buffers.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Counters of one stage.
@@ -211,6 +256,9 @@ impl TransferLedger {
             forced_tuple_roundtrips: s.forced_tuple_roundtrips.load(Ordering::Relaxed),
             link_copies: s.link_copies.load(Ordering::Relaxed),
             link_bytes: s.link_bytes.load(Ordering::Relaxed),
+            link_direct: s.link_direct.load(Ordering::Relaxed),
+            link_staged: s.link_staged.load(Ordering::Relaxed),
+            donated_buffers: s.donated_buffers.load(Ordering::Relaxed),
         }
     }
 
@@ -226,6 +274,9 @@ impl TransferLedger {
             total.forced_tuple_roundtrips += s.forced_tuple_roundtrips;
             total.link_copies += s.link_copies;
             total.link_bytes += s.link_bytes;
+            total.link_direct += s.link_direct;
+            total.link_staged += s.link_staged;
+            total.donated_buffers += s.donated_buffers;
         }
         total
     }
@@ -245,6 +296,9 @@ impl TransferLedger {
             s.forced_tuple_roundtrips.store(0, Ordering::Relaxed);
             s.link_copies.store(0, Ordering::Relaxed);
             s.link_bytes.store(0, Ordering::Relaxed);
+            s.link_direct.store(0, Ordering::Relaxed);
+            s.link_staged.store(0, Ordering::Relaxed);
+            s.donated_buffers.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -455,7 +509,8 @@ mod tests {
         l.record_sync(1, 8);
         l.record_upload(2, 4);
         l.record_forced_tuple_roundtrip(1);
-        l.record_link_copy(1, 32);
+        l.record_link_copy_staged(1, 32);
+        l.record_donation(1);
         assert_eq!(
             l.stage_snapshot(1),
             TransferSnapshot {
@@ -466,6 +521,9 @@ mod tests {
                 forced_tuple_roundtrips: 1,
                 link_copies: 1,
                 link_bytes: 32,
+                link_direct: 0,
+                link_staged: 1,
+                donated_buffers: 1,
             }
         );
         let total = l.snapshot();
@@ -475,31 +533,46 @@ mod tests {
         assert_eq!(total.bytes_down, 16);
         assert_eq!(total.link_copies, 1);
         assert_eq!(total.link_bytes, 32);
+        assert_eq!(total.donated_buffers, 1);
         assert_eq!(l.host_sync_count(), 2);
     }
 
     #[test]
     fn link_copies_never_inflate_host_syncs_or_uploads() {
         // The plane-mode comparability contract: a link copy moves bytes
-        // between devices, so it must not look like host traffic.
+        // between devices, so it must not look like host traffic —
+        // whichever path (direct or staged) moved it.
         let l = TransferLedger::new(2);
-        l.record_link_copy(0, 64);
-        l.record_link_copy(1, 64);
+        l.record_link_copy_direct(0, 64);
+        l.record_link_copy_staged(1, 64);
         let total = l.snapshot();
         assert_eq!((total.link_copies, total.link_bytes), (2, 128));
+        assert_eq!((total.link_direct, total.link_staged), (1, 1));
         assert_eq!((total.host_syncs, total.uploads), (0, 0));
         assert_eq!((total.bytes_down, total.bytes_up), (0, 0));
+    }
+
+    #[test]
+    fn link_path_split_always_sums_to_link_copies() {
+        let l = TransferLedger::new(1);
+        l.record_link_copy_direct(0, 8);
+        l.record_link_copy_direct(0, 8);
+        l.record_link_copy_staged(0, 8);
+        let total = l.snapshot();
+        assert_eq!(total.link_copies, total.link_direct + total.link_staged);
+        assert_eq!((total.link_direct, total.link_staged), (2, 1));
     }
 
     #[test]
     fn ledger_snapshot_diffs_give_per_iteration_deltas() {
         let l = TransferLedger::new(2);
         l.record_sync(0, 4);
-        l.record_link_copy(0, 2);
+        l.record_link_copy_staged(0, 2);
         let before = l.snapshot();
         l.record_sync(1, 4);
         l.record_upload(0, 8);
-        l.record_link_copy(1, 16);
+        l.record_link_copy_direct(1, 16);
+        l.record_donation(1);
         let delta = l.snapshot().since(&before);
         assert_eq!(delta.host_syncs, 1);
         assert_eq!(delta.uploads, 1);
@@ -507,6 +580,8 @@ mod tests {
         assert_eq!(delta.bytes_up, 8);
         assert_eq!(delta.link_copies, 1);
         assert_eq!(delta.link_bytes, 16);
+        assert_eq!((delta.link_direct, delta.link_staged), (1, 0));
+        assert_eq!(delta.donated_buffers, 1);
     }
 
     #[test]
@@ -515,7 +590,9 @@ mod tests {
         l.record_sync(0, 4);
         l.record_upload(1, 4);
         l.record_forced_tuple_roundtrip(0);
-        l.record_link_copy(1, 8);
+        l.record_link_copy_direct(1, 8);
+        l.record_link_copy_staged(1, 8);
+        l.record_donation(0);
         l.reset();
         assert_eq!(l.snapshot(), TransferSnapshot::default());
     }

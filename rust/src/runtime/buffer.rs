@@ -32,13 +32,27 @@
 //! **Link copies.** Under per-stage planes, a buffer produced on stage
 //! `i`'s client cannot feed stage `i+1`'s executable (PJRT buffers are
 //! client-bound), so every stage-to-stage send resolves through
-//! [`DeviceBuffer::copy_to_plane`]: a no-op on the owning plane, and a
-//! **device→host→device** staged hop across planes today — metered as
-//! `link_copies`/`link_bytes` on the ledger, never as
-//! `host_syncs`/`uploads` (it is inter-device staging, not data
-//! delivered to the host program). Keeping the hop behind this one
-//! function is the point: a same-process fast path or a real DMA/RDMA
-//! transport slots in here without touching the executor.
+//! [`DeviceBuffer::copy_to_plane`]: a no-op on the owning plane, and
+//! across planes one of two paths selected by
+//! [`crate::config::LinkPath`] (the plane's policy, stamped in by the
+//! runtime):
+//!
+//! * **direct** — one `PjRtBuffer::copy_to_device` call onto the
+//!   destination client's device: the plugin moves the bytes itself,
+//!   same-process, with no Rust-side literal marshal. Availability is
+//!   probed on the first cross-plane hop (a plugin property, cached
+//!   process-wide like the executable output-layout probe);
+//! * **staged** — the device→host→device fallback: sync to a host
+//!   literal, re-upload on the destination client. Always available;
+//!   what every hop paid before the fast path existed.
+//!
+//! Both are metered as `link_copies`/`link_bytes` with the path split
+//! out in `link_direct`/`link_staged` — never as `host_syncs`/`uploads`
+//! (either way it is inter-device staging, not data delivered to the
+//! host program). Keeping the hop behind this one function is the
+//! point: a real DMA/RDMA transport slots in here without touching the
+//! executor, and the per-stage bench gate (`link_staged == 0`) proves
+//! the fast path engages instead of silently degrading.
 //!
 //! **Why recovery stays host-side:** CheckFree's weighted averaging,
 //! Adam, and every recovery write operate on `HostTensor`s and bump
@@ -48,10 +62,22 @@
 //! the device is a cache of it. That is the same lazy-sync shape
 //! FFTrainer uses for its almost-free failover (PAPERS.md).
 
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::config::LinkPath;
 use crate::manifest::IoSpec;
 use crate::metrics::TransferLedger;
 use crate::runtime::HostTensor;
-use crate::{Context, Result};
+use crate::{anyhow, Context, Result};
+
+/// Process-wide verdict on whether the PJRT plugin can service a
+/// **cross-client** `PjRtBuffer::copy_to_device` (the direct link
+/// path). A plugin property, so one probe settles it for the process
+/// lifetime — the same idiom as `Executable::out_layout`.
+const DIRECT_UNKNOWN: u8 = 0;
+const DIRECT_OK: u8 = 1;
+const DIRECT_UNAVAILABLE: u8 = 2;
+static DIRECT_LINKS: AtomicU8 = AtomicU8::new(DIRECT_UNKNOWN);
 
 /// A tensor resident on a PJRT device, tagged with the host-visible
 /// spec it was created under (shape/dtype validation without a device
@@ -67,11 +93,13 @@ pub struct DeviceBuffer {
 }
 
 // SAFETY: same basis as `Executable`/`LiteralCache` in this module tree.
-// A `PjRtBuffer` is immutable after creation (nothing here uses buffer
-// donation), the PJRT C API synchronizes buffer reads internally, and
-// the only operations we perform — passing it as an execute argument and
-// `to_literal_sync` — are reads. The `xla` crate lacks the auto traits
-// only because it stores raw pointers.
+// A `PjRtBuffer` is immutable after creation — "donation" in this
+// runtime (`Executable::execute_buffers_donating`) is an ownership
+// handoff that *drops* a dead buffer early, never an in-place aliasing
+// write — the PJRT C API synchronizes buffer reads internally, and the
+// operations we perform (passing it as an execute argument,
+// `to_literal_sync`, `copy_to_device`) are reads. The `xla` crate lacks
+// the auto traits only because it stores raw pointers.
 unsafe impl Send for DeviceBuffer {}
 unsafe impl Sync for DeviceBuffer {}
 
@@ -145,19 +173,110 @@ impl DeviceBuffer {
     /// The **link copy**: move this buffer onto `dst`'s plane so it can
     /// feed an executable compiled on `dst`'s client, billed to `stage`
     /// (the receiving stage) as one `link_copies`/`link_bytes` entry on
-    /// the ledger. Free when the buffer already lives on `dst` — which
-    /// is every call in shared mode, so the shared plane records zero
-    /// link copies by construction.
+    /// the ledger — split into `link_direct`/`link_staged` by the path
+    /// that moved it. Free when the buffer already lives on `dst` —
+    /// which is every call in shared mode, so the shared plane records
+    /// zero link copies by construction.
     ///
-    /// This is deliberately the ONLY function that moves a buffer
-    /// between clients. Today the hop is staged device→host→device (the
-    /// PJRT C API has no cross-client device copy); a same-process fast
-    /// path or a DMA/RDMA transport replaces this body without touching
-    /// the executor or the metering.
+    /// Which path runs is `dst`'s [`LinkPath`] policy: `Auto` (default)
+    /// probes the plugin's direct cross-client transfer on the **first**
+    /// hop only — rejection there degrades the process to staged hops,
+    /// loudly, once; but once the capability is established, a later
+    /// direct-copy failure is a *real* runtime error (OOM, dead device)
+    /// and propagates instead of silently restaging. `Direct` makes
+    /// even the probe rejection a hard error (the CI mode that proves
+    /// the fast path engages); `Staged` forces the fallback (the A/B
+    /// baseline). This is deliberately the ONLY
+    /// function that moves a buffer between clients, so a DMA/RDMA
+    /// transport slots in here without touching the executor or the
+    /// metering.
     pub fn copy_to_plane(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
         if self.plane == dst.idx {
             return Ok(self);
         }
+        match dst.link {
+            LinkPath::Staged => self.copy_staged(dst, stage),
+            LinkPath::Direct => {
+                let buf = self.copy_direct(dst)?;
+                DIRECT_LINKS.store(DIRECT_OK, Ordering::Relaxed);
+                dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
+            }
+            LinkPath::Auto => match DIRECT_LINKS.load(Ordering::Relaxed) {
+                DIRECT_UNAVAILABLE => self.copy_staged(dst, stage),
+                DIRECT_OK => {
+                    // Capability already established: a failure now is
+                    // a real runtime problem (OOM, dead device), not a
+                    // missing feature — surface it instead of silently
+                    // degrading a mid-run measurement to staged hops.
+                    let buf = self.copy_direct(dst)?;
+                    dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                    Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
+                }
+                _ => match self.copy_direct(dst) {
+                    // The one probe. compare_exchange so concurrent
+                    // first hops cannot overwrite each other's verdict.
+                    Ok(buf) => {
+                        let _ = DIRECT_LINKS.compare_exchange(
+                            DIRECT_UNKNOWN,
+                            DIRECT_OK,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                        dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                        Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
+                    }
+                    Err(e) => {
+                        // Probe verdict: this plugin cannot transfer
+                        // across clients. Degrade to the staged hop for
+                        // the process lifetime — loudly, exactly once,
+                        // so a CI leg silently running staged cannot
+                        // masquerade as a direct-path measurement (the
+                        // ledger's link_staged column records it too).
+                        if DIRECT_LINKS
+                            .compare_exchange(
+                                DIRECT_UNKNOWN,
+                                DIRECT_UNAVAILABLE,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            )
+                            .is_ok()
+                        {
+                            eprintln!(
+                                "warning: direct cross-plane transfer unavailable \
+                                 ({e:#}); all link copies will take the staged \
+                                 device→host→device path"
+                            );
+                        }
+                        // Whatever the race outcome, THIS buffer still
+                        // needs to move: take the always-available hop.
+                        self.copy_staged(dst, stage)
+                    }
+                },
+            },
+        }
+    }
+
+    /// The direct path: hand the transfer to the plugin
+    /// (`PjRtBuffer::copy_to_device` onto `dst`'s first device). No
+    /// Rust-side literal marshal; the plugin moves the bytes
+    /// same-process.
+    fn copy_direct(&self, dst: &DevicePlane) -> Result<xla::PjRtBuffer> {
+        let devices = dst.client.devices();
+        let device = devices.into_iter().next().ok_or_else(|| {
+            anyhow!("link copy: destination plane {} exposes no devices", dst.idx)
+        })?;
+        self.buf.copy_to_device(device).with_context(|| {
+            format!(
+                "link copy {:?} {}: direct transfer plane {} → {}",
+                self.spec.shape, self.spec.dtype, self.plane, dst.idx
+            )
+        })
+    }
+
+    /// The staged fallback: device→host literal→device, exactly the hop
+    /// every cross-plane send paid before the direct path existed.
+    fn copy_staged(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
         let lit = self.buf.to_literal_sync().with_context(|| {
             format!(
                 "link copy {:?} {}: staging plane {} → {} through host",
@@ -170,7 +289,7 @@ impl DeviceBuffer {
                 self.spec.shape, self.spec.dtype, dst.idx
             )
         })?;
-        dst.ledger.record_link_copy(stage, self.spec.bytes());
+        dst.ledger.record_link_copy_staged(stage, self.spec.bytes());
         Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
     }
 }
@@ -186,6 +305,9 @@ pub struct DevicePlane<'a> {
     /// Position of this plane in the runtime's client list — the value
     /// stamped into every [`DeviceBuffer`] it mints.
     idx: usize,
+    /// How link copies **arriving** at this plane move their bytes
+    /// (see [`LinkPath`]); stamped in from the runtime's configuration.
+    link: LinkPath,
 }
 
 // SAFETY: the wrapped references are shared across the executor's worker
@@ -198,14 +320,24 @@ unsafe impl Send for DevicePlane<'_> {}
 unsafe impl Sync for DevicePlane<'_> {}
 
 impl<'a> DevicePlane<'a> {
-    pub(crate) fn new(client: &'a xla::PjRtClient, ledger: &'a TransferLedger, idx: usize) -> Self {
-        Self { client, ledger, idx }
+    pub(crate) fn new(
+        client: &'a xla::PjRtClient,
+        ledger: &'a TransferLedger,
+        idx: usize,
+        link: LinkPath,
+    ) -> Self {
+        Self { client, ledger, idx, link }
     }
 
     /// This plane's index within its [`PlaneSet`] (0 = the shared plane
     /// / the embed stage's plane).
     pub fn idx(&self) -> usize {
         self.idx
+    }
+
+    /// The link-copy policy of hops arriving at this plane.
+    pub fn link_path(&self) -> LinkPath {
+        self.link
     }
 
     /// **Metered** host→device upload of an already-marshalled literal
@@ -471,6 +603,8 @@ mod tests {
             let delta = ledger.snapshot().since(&before);
             assert_eq!(d1.plane(), 1);
             assert_eq!((delta.link_copies, delta.link_bytes), (1, 16));
+            // Whichever path moved it, the split always accounts for it.
+            assert_eq!(delta.link_direct + delta.link_staged, 1);
             // The hop is staging traffic, never host-program traffic.
             assert_eq!((delta.host_syncs, delta.uploads), (0, 0));
             assert_eq!(ledger.stage_snapshot(1).link_copies, 1, "billed to the receiver");
@@ -478,6 +612,76 @@ mod tests {
 
             // Bytes move, bits do not.
             assert_eq!(d1.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        fn runtime_with_links(link: crate::config::LinkPath) -> Runtime {
+            Runtime::load_config_opts(
+                default_artifacts_root(),
+                "tiny",
+                PlaneMode::PerStage,
+                link,
+            )
+            .expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn staged_link_path_is_forced_and_metered_as_staged() {
+            // --link-path staged: the A/B baseline must never take the
+            // fast path, and the split column must say so.
+            let rt = runtime_with_links(crate::config::LinkPath::Staged);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            assert_eq!(planes.plane(1).link_path(), crate::config::LinkPath::Staged);
+            let t = HostTensor::from_f32(vec![2, 2], &[0.5, -1.5, 2.0, -4.25]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+            let d = d.copy_to_plane(planes.plane(1), 1).unwrap();
+            let snap = ledger.snapshot();
+            assert_eq!((snap.link_direct, snap.link_staged), (0, 1));
+            assert_eq!(snap.link_copies, 1);
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn direct_link_path_is_bitwise_identical_to_staged() {
+            // The tentpole unit contract: the plugin's direct transfer
+            // and the staged hop must deliver identical bits, and the
+            // direct hop must be metered in its own column. Forced
+            // `Direct` fails loudly if the plugin cannot transfer
+            // across clients — on this container it must be able to.
+            let staged_rt = runtime_with_links(crate::config::LinkPath::Staged);
+            let direct_rt = runtime_with_links(crate::config::LinkPath::Direct);
+            let t = HostTensor::from_f32(vec![3], &[1.0e-8, -3.5, 7.25]);
+
+            let ledger_s = TransferLedger::new(3);
+            let planes_s = staged_rt.plane_set(&ledger_s);
+            let via_staged = planes_s
+                .plane(0)
+                .upload(0, &t)
+                .unwrap()
+                .copy_to_plane(planes_s.plane(1), 1)
+                .unwrap()
+                .to_host(planes_s.plane(1), 1)
+                .unwrap();
+
+            let ledger_d = TransferLedger::new(3);
+            let planes_d = direct_rt.plane_set(&ledger_d);
+            let via_direct = planes_d
+                .plane(0)
+                .upload(0, &t)
+                .unwrap()
+                .copy_to_plane(planes_d.plane(1), 1)
+                .unwrap()
+                .to_host(planes_d.plane(1), 1)
+                .unwrap();
+
+            assert_eq!(via_staged, via_direct, "link path changed the bits");
+            assert_eq!(via_direct, t);
+            assert_eq!(ledger_s.snapshot().link_staged, 1);
+            assert_eq!(
+                (ledger_d.snapshot().link_direct, ledger_d.snapshot().link_staged),
+                (1, 0),
+                "forced direct must never fall back"
+            );
         }
 
         #[test]

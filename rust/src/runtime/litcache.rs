@@ -31,6 +31,15 @@
 //! worker threads: all refreshes happen on the coordinator thread
 //! before an iteration's jobs are dispatched to the pool, so workers
 //! only ever read it (`&LiteralCache` across the scope, no locking).
+//!
+//! **Donation safety.** The executor donates dead *activation* buffers
+//! to `Executable::execute_buffers_donating` (which drops them at
+//! execute completion); parameter mirrors served from this cache are
+//! reused across microbatches and iterations and must never be donated.
+//! That is enforced by ownership, not discipline: donation requires an
+//! owned [`DeviceBuffer`], and this cache only ever lends
+//! `&DeviceBuffer` ([`LiteralCache::stage_buffers_on`]), so a cached
+//! mirror can only travel as `ExecArg::Keep`.
 
 use crate::runtime::buffer::{DeviceBuffer, DevicePlane};
 use crate::runtime::HostTensor;
@@ -69,12 +78,15 @@ pub struct LiteralCache {
 
 // SAFETY: `xla::Literal` is an immutable host-side buffer once built (the
 // cache hands out `&Literal` only for PJRT execute arguments, which read
-// it), and `DeviceBuffer` is likewise immutable after upload (no buffer
-// donation anywhere; execute arguments are reads — see its own Send/Sync
-// rationale); the `xla` crate lacks the auto traits only because it
-// stores raw pointers. All mutation (`refresh`/`refresh_device`) takes
-// `&mut self`, so the usual borrow rules already serialize writers
-// against the executor's readers.
+// it), and `DeviceBuffer` is likewise immutable after upload (execute
+// arguments are reads — see its own Send/Sync rationale). Buffer
+// donation (`Executable::execute_buffers_donating`) cannot touch cache
+// entries: it requires *ownership* of the donated buffer, and this cache
+// only ever hands out `&DeviceBuffer` borrows — the type system makes
+// donating a cached parameter mirror unrepresentable. The `xla` crate
+// lacks the auto traits only because it stores raw pointers. All
+// mutation (`refresh`/`refresh_device`) takes `&mut self`, so the usual
+// borrow rules already serialize writers against the executor's readers.
 unsafe impl Send for LiteralCache {}
 unsafe impl Sync for LiteralCache {}
 

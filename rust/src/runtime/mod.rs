@@ -22,7 +22,13 @@
 //!   host boundary unless a caller explicitly syncs (see
 //!   [`buffer::DeviceBuffer::to_host`]). The pipeline executor chains
 //!   stage outputs into the next stage's inputs this way, which is what
-//!   kills the per-stage host round-trip the seed paid.
+//!   kills the per-stage host round-trip the seed paid. Callers holding
+//!   inputs that are dead after the call hand them over as
+//!   [`ExecArg::Donate`] through
+//!   [`Executable::execute_buffers_donating`]: the runtime releases
+//!   them at execute completion (metered as `donated_buffers` where the
+//!   input spec aliases an output — the binding's donation rule), so
+//!   device memory tracks live activations, not borrow scopes.
 //!
 //! Both currencies share one accounting path (`record_exec`) for
 //! `exec_time_ns`/`exec_count`, so per-executable perf stats never drift
@@ -31,14 +37,19 @@
 //! ## Plane modes (one client, or one per stage)
 //!
 //! [`Runtime`] owns one PJRT client under `--plane-mode shared` and one
-//! **per pipeline stage** under `per-stage` (see [`Runtime`]'s type docs
-//! for the role-based registry layout). PJRT buffers are client-bound,
-//! so per-stage execution routes every stage-to-stage activation through
-//! [`DeviceBuffer::copy_to_plane`] — the explicit, metered **link copy**
-//! (`link_copies`/`link_bytes` on the [`TransferLedger`]) that stands in
-//! for the network hop between CheckFree's failure-prone nodes. Results
-//! are bitwise-identical across plane modes: a link copy moves bytes,
-//! never changes them.
+//! **per pipeline stage** under `per-stage` — the default (see
+//! [`Runtime`]'s type docs for the role-based registry layout). PJRT
+//! buffers are client-bound, so per-stage execution routes every
+//! stage-to-stage activation through [`DeviceBuffer::copy_to_plane`] —
+//! the explicit, metered **link copy** (`link_copies`/`link_bytes` on
+//! the [`TransferLedger`], split `link_direct`/`link_staged` by path)
+//! that stands in for the network hop between CheckFree's failure-prone
+//! nodes. Same-process deployments take the plugin's direct
+//! cross-client transfer; the staged device→host→device hop remains as
+//! the probed fallback and the `--link-path staged` baseline (see
+//! [`crate::config::LinkPath`]). Results are bitwise-identical across
+//! plane modes and link paths: a link copy moves bytes, never changes
+//! them.
 //!
 //! ## Output layout contract
 //!
@@ -66,7 +77,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::time::{Duration, Instant};
 
-use crate::config::PlaneMode;
+use crate::config::{LinkPath, PlaneMode};
 use crate::manifest::{Artifact, IoSpec, Manifest};
 use crate::metrics::TransferLedger;
 use crate::{anyhow, Context, Result};
@@ -80,6 +91,25 @@ pub use tensor::HostTensor;
 const OUT_LAYOUT_UNKNOWN: u8 = 0;
 const OUT_LAYOUT_LEAF: u8 = 1;
 const OUT_LAYOUT_TUPLED: u8 = 2;
+
+/// One device-resident execute argument: borrowed (the caller keeps the
+/// buffer alive — parameters served from the litcache, which only ever
+/// hands out `&DeviceBuffer`, can *only* be passed this way) or donated
+/// (ownership handed to the runtime, which releases the buffer at
+/// execute completion — see [`Executable::execute_buffers_donating`]).
+pub enum ExecArg<'a> {
+    Keep(&'a DeviceBuffer),
+    Donate(DeviceBuffer),
+}
+
+impl ExecArg<'_> {
+    fn buffer(&self) -> &DeviceBuffer {
+        match self {
+            ExecArg::Keep(b) => b,
+            ExecArg::Donate(b) => b,
+        }
+    }
+}
 
 /// A loaded + compiled stage computation, bound to the plane (client)
 /// it was compiled on.
@@ -199,12 +229,44 @@ impl Executable {
     ///
     /// Argument specs are validated against the manifest before the
     /// call, so a mis-chained pipeline fails loudly here rather than
-    /// inside the plugin.
+    /// inside the plugin. All arguments are borrowed (the caller keeps
+    /// them alive); see [`Self::execute_buffers_donating`] for the
+    /// donation variant.
     pub fn execute_buffers(
         &self,
         plane: &DevicePlane,
         stage: usize,
         args: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        self.execute_buffers_donating(
+            plane,
+            stage,
+            args.iter().copied().map(ExecArg::Keep).collect(),
+        )
+    }
+
+    /// Like [`Self::execute_buffers`], but the caller may hand over
+    /// **ownership** of inputs that are dead after this call
+    /// ([`ExecArg::Donate`]): the runtime releases each donated buffer
+    /// as soon as the execute completes — the earliest legal point —
+    /// instead of letting it live to the caller's scope end, which is
+    /// what keeps a pipeline's device memory bounded by live
+    /// activations rather than by borrow scopes.
+    ///
+    /// A donated input whose spec aliases an (unclaimed) output spec is
+    /// the case the binding's donation rule allows — exactly where a
+    /// PJRT-level input/output aliasing would reuse the allocation —
+    /// and is metered as `donated_buffers` on the ledger (one count per
+    /// claimed output, arguments claiming in position order). Donated
+    /// inputs with no aliasable output are released early too, just not
+    /// counted. Donation hands over ownership and drops — it never
+    /// mutates a buffer in place — so results are bitwise-identical to
+    /// the borrowing call, which a runtime test asserts.
+    pub fn execute_buffers_donating(
+        &self,
+        plane: &DevicePlane,
+        stage: usize,
+        args: Vec<ExecArg<'_>>,
     ) -> Result<Vec<DeviceBuffer>> {
         if args.len() != self.inputs.len() {
             return Err(anyhow!(
@@ -223,6 +285,7 @@ impl Executable {
             ));
         }
         for (i, (arg, spec)) in args.iter().zip(&self.inputs).enumerate() {
+            let arg = arg.buffer();
             if arg.plane() != self.plane {
                 return Err(anyhow!(
                     "{}: input {i} lives on plane {} but the executable is compiled on plane {} \
@@ -243,18 +306,37 @@ impl Executable {
                 ));
             }
         }
-        let raw_args: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.raw()).collect();
+        let raw_args: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.buffer().raw()).collect();
         let t0 = Instant::now();
         let mut result = self
             .exe
             .execute_b::<&xla::PjRtBuffer>(&raw_args)
             .with_context(|| format!("executing {} (device buffers)", self.name))?;
+        drop(raw_args);
         if result.is_empty() {
             return Err(anyhow!("{}: execute returned no per-device results", self.name));
         }
         let raw = result.swap_remove(0);
         let outs = self.wrap_output_buffers(plane, stage, raw)?;
         self.record_exec(t0);
+
+        // Donation accounting + early release. Each donated input claims
+        // at most one output of identical spec (a 1:1 aliasing, matched
+        // in argument order); the drop below is the actual donation —
+        // the dead input's device memory is released here, not at the
+        // caller's scope end.
+        let mut claimed = vec![false; outs.len()];
+        for arg in args {
+            if let ExecArg::Donate(buf) = arg {
+                if let Some(j) =
+                    (0..outs.len()).find(|&j| !claimed[j] && outs[j].spec() == buf.spec())
+                {
+                    claimed[j] = true;
+                    plane.ledger.record_donation(stage);
+                }
+                drop(buf);
+            }
+        }
         Ok(outs)
     }
 
@@ -462,6 +544,9 @@ pub struct Runtime {
     /// Per-plane executable registry, parallel to `clients`.
     exes: Vec<BTreeMap<String, Executable>>,
     plane_mode: PlaneMode,
+    /// How cross-plane link copies move bytes (stamped into every
+    /// [`DevicePlane`] this runtime builds; see [`LinkPath`]).
+    link_path: LinkPath,
     pub manifest: Manifest,
 }
 
@@ -475,15 +560,29 @@ unsafe impl Sync for Runtime {}
 
 impl Runtime {
     /// Load every artifact in the manifest and compile it on one shared
-    /// CPU client (the [`PlaneMode::Shared`] layout).
+    /// CPU client — the explicit [`PlaneMode::Shared`] layout (the
+    /// process default is per-stage; this loader is the single-client
+    /// baseline the unit tests and host-only paths use).
     pub fn load(manifest: Manifest) -> Result<Self> {
         Self::load_with(manifest, PlaneMode::Shared)
     }
 
     /// Load with an explicit plane layout: one client (shared) or one
     /// per pipeline stage (`manifest.config.body_stages + 1` clients,
-    /// role-based registries — see the type docs).
+    /// role-based registries — see the type docs). Link copies follow
+    /// the [`LinkPath::from_env`] default; see [`Self::load_opts`].
     pub fn load_with(manifest: Manifest, plane_mode: PlaneMode) -> Result<Self> {
+        Self::load_opts(manifest, plane_mode, LinkPath::from_env())
+    }
+
+    /// Load with an explicit plane layout **and** link-copy policy (the
+    /// engine passes `TrainConfig::{plane_mode, link_path}` through
+    /// here).
+    pub fn load_opts(
+        manifest: Manifest,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+    ) -> Result<Self> {
         let planes = match plane_mode {
             PlaneMode::Shared => 1,
             PlaneMode::PerStage => manifest.config.body_stages + 1,
@@ -505,7 +604,7 @@ impl Runtime {
             clients.push(client);
             exes.push(registry);
         }
-        Ok(Self { clients, exes, plane_mode, manifest })
+        Ok(Self { clients, exes, plane_mode, link_path, manifest })
     }
 
     /// Convenience: load by artifacts root + config name (shared plane).
@@ -521,6 +620,17 @@ impl Runtime {
         plane_mode: PlaneMode,
     ) -> Result<Self> {
         Self::load_with(Manifest::load_config(artifacts_root, config)?, plane_mode)
+    }
+
+    /// Convenience: load by artifacts root + config name with an
+    /// explicit plane layout and link-copy policy.
+    pub fn load_config_opts(
+        artifacts_root: impl AsRef<std::path::Path>,
+        config: &str,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+    ) -> Result<Self> {
+        Self::load_opts(Manifest::load_config(artifacts_root, config)?, plane_mode, link_path)
     }
 
     /// Does `plane` (of `planes` total) execute artifact `name`? See the
@@ -563,6 +673,11 @@ impl Runtime {
         self.plane_mode
     }
 
+    /// The link-copy policy this runtime was loaded with.
+    pub fn link_path(&self) -> LinkPath {
+        self.link_path
+    }
+
     /// Number of PJRT clients (1 shared, or one per stage).
     pub fn plane_count(&self) -> usize {
         self.clients.len()
@@ -573,7 +688,7 @@ impl Runtime {
     /// is billed to `ledger`. Cheap — engine and benches build one per
     /// call site.
     pub fn device_plane<'a>(&'a self, ledger: &'a TransferLedger) -> DevicePlane<'a> {
-        DevicePlane::new(&self.clients[0], ledger, 0)
+        DevicePlane::new(&self.clients[0], ledger, 0, self.link_path)
     }
 
     /// Build the full stage→plane map (one [`DevicePlane`] per client,
@@ -584,7 +699,7 @@ impl Runtime {
             self.clients
                 .iter()
                 .enumerate()
-                .map(|(idx, c)| DevicePlane::new(c, ledger, idx))
+                .map(|(idx, c)| DevicePlane::new(c, ledger, idx, self.link_path))
                 .collect(),
         )
     }
@@ -846,6 +961,100 @@ mod tests {
             .upload(0, &HostTensor::zeros_f32(vec![c.microbatch, c.context]))
             .unwrap();
         assert!(exe.execute_buffers(&plane, 0, &[&embed, &bad_ids]).is_err());
+    }
+
+    #[test]
+    fn donated_execute_matches_borrowed_bitwise() {
+        // The donation-path parity contract: handing a dead input's
+        // ownership to the runtime (early release + donation metering)
+        // must not change a single bit of the outputs — donation drops,
+        // it never mutates.
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let ledger = TransferLedger::new(2);
+        let plane = rt.device_plane(&ledger);
+        let body_fwd = rt.executable("body_fwd").unwrap();
+
+        let mut rng = crate::rng::Rng::new(17);
+        let body_params: Vec<HostTensor> = rt
+            .manifest
+            .param_layout
+            .body_stage
+            .iter()
+            .map(|t| {
+                let mut p = HostTensor::zeros_f32(t.shape.clone());
+                rng.fill_normal(p.as_f32_mut(), 0.05);
+                p
+            })
+            .collect();
+        let mut h = HostTensor::zeros_f32(vec![c.microbatch, c.context, c.dim]);
+        rng.fill_normal(h.as_f32_mut(), 1.0);
+
+        let p_bufs: Vec<DeviceBuffer> =
+            body_params.iter().map(|p| plane.upload(1, p).unwrap()).collect();
+
+        // Borrowed call (warms the one-time output-layout probe too).
+        let h_buf = plane.upload(1, &h).unwrap();
+        let mut args: Vec<&DeviceBuffer> = p_bufs.iter().collect();
+        args.push(&h_buf);
+        let borrowed = body_fwd
+            .execute_buffers(&plane, 1, &args)
+            .unwrap()
+            .pop()
+            .unwrap()
+            .to_host(&plane, 1)
+            .unwrap();
+        assert_eq!(ledger.snapshot().donated_buffers, 0, "borrowing must not donate");
+
+        // Donating call: the h input aliases the h' output spec, so it
+        // is donation-eligible and metered exactly once.
+        let h_buf = plane.upload(1, &h).unwrap();
+        let mut args: Vec<ExecArg> = p_bufs.iter().map(ExecArg::Keep).collect();
+        args.push(ExecArg::Donate(h_buf));
+        let donated = body_fwd
+            .execute_buffers_donating(&plane, 1, args)
+            .unwrap()
+            .pop()
+            .unwrap()
+            .to_host(&plane, 1)
+            .unwrap();
+        assert_eq!(ledger.snapshot().donated_buffers, 1, "one aliased input donated");
+        assert_eq!(ledger.stage_snapshot(1).donated_buffers, 1, "billed to the executing stage");
+        assert_eq!(donated, borrowed, "donation changed the output bits");
+    }
+
+    #[test]
+    fn donation_without_aliasable_output_is_released_but_not_counted() {
+        // embed_fwd's ids input (i32) aliases none of its outputs:
+        // ownership handoff still releases the buffer early, but the
+        // donation counter must not move — it counts only the aliasing
+        // case a PJRT-level donation would reuse.
+        let rt = runtime();
+        let c = &rt.manifest.config;
+        let ledger = TransferLedger::new(1);
+        let plane = rt.device_plane(&ledger);
+        let exe = rt.executable("embed_fwd").unwrap();
+        let embed = HostTensor::zeros_f32(vec![c.vocab, c.dim]);
+        let ids = HostTensor::from_i32(
+            vec![c.microbatch, c.context],
+            &vec![3i32; c.microbatch * c.context],
+        );
+        let want = exe.run(&[&embed, &ids]).unwrap().pop().unwrap();
+        let e_buf = plane.upload(0, &embed).unwrap();
+        let ids_buf = plane.upload(0, &ids).unwrap();
+        let got = exe
+            .execute_buffers_donating(
+                &plane,
+                0,
+                vec![ExecArg::Keep(&e_buf), ExecArg::Donate(ids_buf)],
+            )
+            .unwrap()
+            .pop()
+            .unwrap()
+            .to_host(&plane, 0)
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(ledger.snapshot().donated_buffers, 0, "no aliasable output — no donation");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! exercised end-to-end. These are the Rust-side counterpart of the
 //! paper's evaluation protocol, shrunk to the `tiny` preset.
 
-use checkfree::config::{FailureSpec, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{FailureSpec, LinkPath, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::Trainer;
 use checkfree::data::Domain;
 use checkfree::experiments;
@@ -126,6 +126,32 @@ fn per_stage_planes_survive_churn_identically_to_shared() {
         curves.push(curve);
     }
     assert_eq!(curves[0], curves[1], "plane modes diverged under churn");
+}
+
+#[test]
+fn direct_and_staged_links_survive_churn_identically() {
+    // End-to-end link-path parity under real failures: the same churny
+    // CheckFree+ run on per-stage planes must produce the same loss
+    // curve bit for bit whether link copies take the plugin's direct
+    // cross-client transfer or the staged device→host→device fallback
+    // — which path moves the bytes cannot matter to recovery either.
+    // Forced `Direct` (not `Auto`) so a plugin that silently lacks
+    // cross-client transfer fails this test instead of vacuously
+    // passing via the staged fallback.
+    let mut curves = Vec::new();
+    for link_path in [LinkPath::Staged, LinkPath::Direct] {
+        let mut c = cfg(Strategy::CheckFreePlus, 12, 0.0, 53);
+        c.plane_mode = PlaneMode::PerStage;
+        c.link_path = link_path;
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(4, 1);
+        t.force_failure(8, 2);
+        t.run().unwrap();
+        assert_eq!(t.record.failures(), 2);
+        let curve: Vec<u32> = t.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+        curves.push(curve);
+    }
+    assert_eq!(curves[0], curves[1], "link paths diverged under churn");
 }
 
 #[test]

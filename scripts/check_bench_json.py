@@ -10,15 +10,20 @@ be executed. Checked invariants:
   carry a ``note`` naming the gate the first toolchain run confirms);
 * a file claiming ``status: "measured"`` must actually contain its gate
   sections — non-empty speedups, per-model watermark and residency
-  entries with every documented field (including, at schema >= 2, the
-  ``link_copies``/``link_bytes`` transfer columns and the per-stage
-  plane-mode entry) — and every ``gate_*`` boolean must be true;
-* ``BENCH_recovery.json`` analogously for its latency table.
+  entries with every documented field (``link_copies``/``link_bytes``
+  since schema 2; ``link_direct``/``link_staged``/``donated_buffers``
+  since schema 3) — and every ``gate_*`` boolean must be true;
+* at schema >= 3, a measured ``pipelined-1f1b-per-stage`` residency row
+  with a nonzero ``link_staged`` column fails outright: per-stage mode
+  on this testbed must take the direct link path, and a silently
+  degraded run must not be committable as measured;
+* ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
+  sidecar, when present) analogously for its latency table.
 
 Exit status: 0 = all files valid, 1 = any violation (listed on stderr).
 
 Usage: check_bench_json.py [FILE...]    (default: BENCH_*.json at the
-repo root, including the gitignored smoke sidecar when present)
+repo root, including the gitignored smoke sidecars when present)
 """
 
 from __future__ import annotations
@@ -35,6 +40,11 @@ TRANSFER_FIELDS_V1 = (
     "forced_tuple_roundtrips",
 )
 TRANSFER_FIELDS_V2 = TRANSFER_FIELDS_V1 + ("link_copies", "link_bytes")
+TRANSFER_FIELDS_V3 = TRANSFER_FIELDS_V2 + (
+    "link_direct",
+    "link_staged",
+    "donated_buffers",
+)
 
 WATERMARK_FIELDS = (
     "fill_drain",
@@ -120,7 +130,12 @@ class Checker:
         if status != "measured":
             return
 
-        transfer_fields = TRANSFER_FIELDS_V2 if schema >= 2 else TRANSFER_FIELDS_V1
+        if schema >= 3:
+            transfer_fields = TRANSFER_FIELDS_V3
+        elif schema >= 2:
+            transfer_fields = TRANSFER_FIELDS_V2
+        else:
+            transfer_fields = TRANSFER_FIELDS_V1
         residency_modes = RESIDENCY_MODES_V2 if schema >= 2 else RESIDENCY_MODES_V1
 
         for key in ("pipelined_speedup", "pipelined_1f1b_speedup"):
@@ -156,6 +171,15 @@ class Checker:
                     for field in transfer_fields:
                         self.require(transfers, field, (int, float),
                                      f"{where}.{mode}")
+                    if (schema >= 3 and mode == "pipelined-1f1b-per-stage"
+                            and transfers.get("link_staged", 0) != 0):
+                        self.error(
+                            f"{where}.{mode}.link_staged is "
+                            f"{transfers.get('link_staged')!r} — a measured "
+                            "per-stage run on this testbed must take the "
+                            "direct link path (staged hops mean the fast "
+                            "path silently degraded; see docs/BENCHMARKS.md "
+                            "gate 5)")
                 self.check_gates_true(entry, where)
 
     def check_recovery(self, doc: dict, status) -> None:

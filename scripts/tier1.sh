@@ -3,12 +3,14 @@
 # clippy gate + docs/format/bench-schema gate + a smoke train_iteration
 # timing check.
 #
-# Usage: scripts/tier1.sh [--ci] [--no-smoke] [--docs] [--clippy] [--bench-smoke]
+# Usage: scripts/tier1.sh [--ci] [--no-smoke] [--docs] [--clippy]
+#                         [--bench-smoke] [--recovery-smoke]
 #   --ci           CI mode: `set -x` tracing, plus one machine-readable
 #                  `tier1-gate <name>=pass|fail` line per gate (and a
-#                  markdown row in $GITHUB_STEP_SUMMARY when set) for the
-#                  workflow's step summary. Local output is unchanged
-#                  without the flag.
+#                  markdown row in the GitHub step summary when
+#                  $GITHUB_STEP_SUMMARY is set — summary emission is a
+#                  strict no-op otherwise, so --ci works locally). Local
+#                  output is unchanged without the flag.
 #   --no-smoke     skip the timing smoke run
 #   --docs         run ONLY the documentation/format/bench-schema gate
 #   --clippy       run ONLY the clippy lint gate
@@ -16,6 +18,9 @@
 #                  short budgets) — catches bench bit-rot without waiting
 #                  for the full measurement run; writes the gitignored
 #                  BENCH_hot_path.smoke.json, never the committed file
+#   --recovery-smoke  run ONLY the recovery-latency bench at toy budget;
+#                  writes the gitignored BENCH_recovery.smoke.json (the
+#                  CI recovery-smoke lane uploads it as an artifact)
 #
 # Plane-mode matrix: the test suite honours CHECKFREE_PLANE_MODE
 # (shared|per-stage) — TrainConfig::default() reads it — which is how
@@ -33,6 +38,7 @@ for arg in "$@"; do
     --docs) only=docs ;;
     --clippy) only=clippy ;;
     --bench-smoke) only=bench-smoke ;;
+    --recovery-smoke) only=recovery-smoke ;;
     --no-smoke) no_smoke=1 ;;
     *)
         echo "unknown flag '$arg' (see scripts/tier1.sh header)" >&2
@@ -41,17 +47,28 @@ for arg in "$@"; do
     esac
 done
 
+# THE one place step-summary markdown leaves this script. A strict no-op
+# when $GITHUB_STEP_SUMMARY is unset or empty (running `--ci` locally),
+# and tolerant of an unwritable path (a stale value exported into a
+# local shell must not abort the gates under `set -e`).
+step_summary() { # <markdown line...>
+    if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
+        # Group redirection inside braces so a failed open (stale path
+        # exported into a local shell) is silenced too, not just the
+        # command's own stderr.
+        { printf '%s\n' "$@" >>"$GITHUB_STEP_SUMMARY"; } 2>/dev/null || true
+    fi
+}
+
 # Emit the machine-readable per-gate verdict (CI mode only). Quieted
 # around `set -x` so the summary lines stay greppable in the trace.
 report_gate() { # <name> <pass|fail>
     if [[ $ci -eq 1 ]]; then
         { set +x; } 2>/dev/null
         echo "tier1-gate $1=$2"
-        if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
-            local icon="✅"
-            [[ "$2" == fail ]] && icon="❌"
-            echo "| $1 | $icon $2 |" >>"$GITHUB_STEP_SUMMARY"
-        fi
+        local icon="✅"
+        [[ "$2" == fail ]] && icon="❌"
+        step_summary "| $1 | $icon $2 |"
         set -x
     fi
 }
@@ -70,13 +87,7 @@ gate() { # <name> <command...>
 }
 
 if [[ $ci -eq 1 ]]; then
-    if [[ -n "${GITHUB_STEP_SUMMARY:-}" ]]; then
-        {
-            echo "### tier-1 gates"
-            echo "| gate | result |"
-            echo "|---|---|"
-        } >>"$GITHUB_STEP_SUMMARY"
-    fi
+    step_summary "### tier-1 gates" "| gate | result |" "|---|---|"
     set -x
 fi
 
@@ -123,6 +134,13 @@ bench_smoke() {
     echo "'cargo bench --bench hot_path' to refresh the committed BENCH_hot_path.json."
 }
 
+recovery_smoke() {
+    echo "== smoke recovery-latency bench (short budgets: simulated latencies + netsim micro-benches) =="
+    cargo bench --bench recovery_latency -- --smoke || return 1
+    echo "Smoke results in BENCH_recovery.smoke.json (gitignored); run the full"
+    echo "'cargo bench --bench recovery_latency' to refresh the committed BENCH_recovery.json."
+}
+
 cd "$repo_root/rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -147,6 +165,11 @@ clippy)
 bench-smoke)
     gate bench-smoke bench_smoke
     echo "bench smoke OK"
+    exit 0
+    ;;
+recovery-smoke)
+    gate recovery-smoke recovery_smoke
+    echo "recovery smoke OK"
     exit 0
     ;;
 esac
