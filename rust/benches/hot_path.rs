@@ -26,16 +26,24 @@
 //! device-path donations must match the schedule (`m·(L+1)` dead
 //! buffers handed to the runtime per iteration). The `plane_mode`
 //! timing section records per-stage wall-clock under BOTH link paths,
-//! so deployment policy can pick with the costs visible. Results are
-//! written to `BENCH_hot_path.json` at the repo root so future PRs can
-//! diff the perf trajectory.
+//! so deployment policy can pick with the costs visible. Schema 4
+//! splits every link copy by *when* it ran (`link_overlapped` — issued
+//! ahead of the consumer by the sending worker — vs `link_blocking` —
+//! performed in the consumer's call path) and meters `link_wait_ns`,
+//! the consumer stall billed to the receiving stage; the `plane_mode`
+//! section gains per-stage `link_wait_ns_overlap_on` /
+//! `link_wait_ns_overlap_off` arrays and the
+//! `gate_overlap_wait_below_off` gate — with prefetch on, every stage
+//! that waits on links at all must wait strictly less than it does
+//! with prefetch off. Results are written to `BENCH_hot_path.json` at
+//! the repo root so future PRs can diff the perf trajectory.
 //!
 //! Pass `--smoke` for a quick tiny-model-only run (used by
 //! `scripts/tier1.sh` as the train_iteration timing check); smoke
 //! results go to the gitignored `BENCH_hot_path.smoke.json` so they
 //! never clobber the committed full-run trajectory.
 
-use checkfree::config::{ExecMode, LinkPath, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{ExecMode, LinkPath, Overlap, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::PipelineEngine;
 use checkfree::model::GradBuffer;
 use checkfree::recovery::checkfree::weighted_average;
@@ -256,6 +264,9 @@ fn main() {
                 ("link_direct", Json::num(d.link_direct as f64)),
                 ("link_staged", Json::num(d.link_staged as f64)),
                 ("donated_buffers", Json::num(d.donated_buffers as f64)),
+                ("link_overlapped", Json::num(d.link_overlapped as f64)),
+                ("link_blocking", Json::num(d.link_blocking as f64)),
+                ("link_wait_ns", Json::num(d.link_wait_ns as f64)),
             ])
         };
         let seq = transfers_of(ExecMode::Sequential, false, PlaneMode::Shared);
@@ -379,23 +390,82 @@ fn main() {
         } else {
             None
         };
+        // Per-stage consumer link wait with prefetch on vs off: the
+        // schema-4 overlap gate. Same steady-state-iteration protocol
+        // as the residency ledger (2nd iteration delta), per-stage so
+        // the wait lands where it is billed — the receiving stage.
+        let stage_link_waits = |overlap: Overlap| -> Option<Vec<u64>> {
+            let cfg = TrainConfig {
+                model: model.into(),
+                strategy: Strategy::CheckFree,
+                microbatches_per_iter: MICROBATCHES,
+                exec_mode: ExecMode::Pipelined1F1B,
+                plane_mode: PlaneMode::PerStage,
+                link_path: LinkPath::Auto,
+                overlap,
+                ..TrainConfig::default()
+            };
+            let mut e = match PipelineEngine::from_config(&cfg) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("overlap run skipped ({model}, {}): {err:#}", overlap.label());
+                    return None;
+                }
+            };
+            if let Err(err) = e.train_iteration() {
+                eprintln!("overlap warmup failed ({model}, {}): {err:#}", overlap.label());
+                return None;
+            }
+            let before: Vec<_> = {
+                let ledger = e.transfer_ledger();
+                (0..ledger.stage_count()).map(|i| ledger.stage_snapshot(i)).collect()
+            };
+            if let Err(err) = e.train_iteration() {
+                eprintln!("overlap run failed ({model}, {}): {err:#}", overlap.label());
+                return None;
+            }
+            let ledger = e.transfer_ledger();
+            Some(
+                (0..ledger.stage_count())
+                    .map(|i| ledger.stage_snapshot(i).since(&before[i]).link_wait_ns)
+                    .collect(),
+            )
+        };
+        let wait_on = stage_link_waits(Overlap::On);
+        let wait_off = stage_link_waits(Overlap::Off);
+
         if let (Some(shared_s), Some(direct_s), Some(staged_s)) = (shared_s, direct_s, staged_s) {
             let overhead = direct_s / shared_s;
             let direct_vs_staged = direct_s / staged_s;
             println!(
                 "  {model}: per-stage (direct links) over shared = {overhead:.2}×; \
-                 direct over staged = {direct_vs_staged:.2}×\n"
+                 direct over staged = {direct_vs_staged:.2}×"
             );
-            plane_overheads.push((
-                model.to_string(),
-                Json::obj(vec![
-                    ("shared_mean_s", Json::num(shared_s)),
-                    ("per_stage_mean_s", Json::num(direct_s)),
-                    ("per_stage_staged_mean_s", Json::num(staged_s)),
-                    ("per_stage_over_shared", Json::num(overhead)),
-                    ("direct_over_staged", Json::num(direct_vs_staged)),
-                ]),
-            ));
+            let mut fields = vec![
+                ("shared_mean_s", Json::num(shared_s)),
+                ("per_stage_mean_s", Json::num(direct_s)),
+                ("per_stage_staged_mean_s", Json::num(staged_s)),
+                ("per_stage_over_shared", Json::num(overhead)),
+                ("direct_over_staged", Json::num(direct_vs_staged)),
+            ];
+            if let (Some(on), Some(off)) = (&wait_on, &wait_off) {
+                // Gate: every stage that waits on links at all (off > 0)
+                // must wait strictly less with prefetch on; vacuous
+                // (all-zero) runs fail the gate rather than pass it.
+                let gate = off.iter().any(|&w| w > 0)
+                    && on.iter().zip(off.iter()).all(|(&a, &b)| b == 0 || a < b);
+                println!(
+                    "  {model}: per-stage link wait ns — overlap on {on:?} vs off {off:?} \
+                     (gate on < off per stage: {gate})\n"
+                );
+                let arr = |v: &[u64]| Json::Arr(v.iter().map(|&w| Json::num(w as f64)).collect());
+                fields.push(("link_wait_ns_overlap_on", arr(on)));
+                fields.push(("link_wait_ns_overlap_off", arr(off)));
+                fields.push(("gate_overlap_wait_below_off", Json::Bool(gate)));
+            } else {
+                println!();
+            }
+            plane_overheads.push((model.to_string(), Json::obj(fields)));
         }
     }
 
@@ -430,7 +500,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("hot_path")),
-        ("schema", Json::num(3.0)),
+        ("schema", Json::num(4.0)),
         ("status", Json::str("measured")),
         ("generated_by", Json::str("cargo bench --bench hot_path [-- --smoke]")),
         ("smoke", Json::Bool(smoke)),

@@ -282,6 +282,67 @@ impl FromStr for LinkPath {
     }
 }
 
+/// Whether cross-plane link copies are **overlapped** with compute
+/// (`--plane-mode per-stage`; irrelevant under `shared` or host
+/// staging, which have no links).
+///
+/// With overlap `On` (the default for device paths) the *sending*
+/// worker issues the next microbatch's `copy_to_plane` while the
+/// receiving stage is still computing the previous one — double
+/// buffering that takes link time off the receiver's critical path
+/// (`crate::runtime::LinkSlot` / `crate::runtime::InFlightLink`).
+/// `Off` keeps the synchronous receive-side copy as the A/B baseline.
+/// Bitwise-identical results either way — overlap moves *when* bytes
+/// move, never what they are; only wall-clock and the ledger's
+/// `link_overlapped`/`link_blocking`/`link_wait_ns` columns differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overlap {
+    /// Prefetch link copies on the sending side (direct path only; the
+    /// staged fallback still completes on the receiver — see the
+    /// `runtime::buffer` module docs). The default.
+    On,
+    /// Complete every link copy synchronously on the receiving side —
+    /// the pre-overlap behaviour, kept as the A/B baseline.
+    Off,
+}
+
+impl Overlap {
+    pub const ALL: [Overlap; 2] = [Overlap::On, Overlap::Off];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Overlap::On => "on",
+            Overlap::Off => "off",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_OVERLAP` if set (the CI
+    /// lever for the overlap A/B legs), else [`Overlap::On`] — device
+    /// paths prefetch by default. Unparsable values fall back to `On` —
+    /// loudly, like [`PlaneMode::from_env`].
+    pub fn from_env() -> Overlap {
+        match std::env::var("CHECKFREE_OVERLAP") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_OVERLAP: {e}; using 'on'");
+                Overlap::On
+            }),
+            Err(_) => Overlap::On,
+        }
+    }
+}
+
+impl FromStr for Overlap {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => Ok(Overlap::On),
+            "off" | "false" | "0" => Ok(Overlap::Off),
+            other => Err(anyhow!("unknown overlap policy '{other}' (on|off)")),
+        }
+    }
+}
+
 /// Reinitialization rule for a lost intermediate stage (paper Fig 2
 /// ablation: random / copy / weighted averaging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -407,6 +468,9 @@ pub struct TrainConfig {
     /// How cross-plane link copies move bytes under per-stage planes
     /// (see [`LinkPath`]). Defaults to [`LinkPath::from_env`].
     pub link_path: LinkPath,
+    /// Whether cross-plane link copies are prefetched on the sending
+    /// side (see [`Overlap`]). Defaults to [`Overlap::from_env`].
+    pub overlap: Overlap,
 }
 
 impl Default for TrainConfig {
@@ -429,6 +493,7 @@ impl Default for TrainConfig {
             host_staging: false,
             plane_mode: PlaneMode::from_env(),
             link_path: LinkPath::from_env(),
+            overlap: Overlap::from_env(),
         }
     }
 }
@@ -467,6 +532,7 @@ impl TrainConfig {
             ("host_staging", Json::Bool(self.host_staging)),
             ("plane_mode", Json::str(self.plane_mode.label())),
             ("link_path", Json::str(self.link_path.label())),
+            ("overlap", Json::str(self.overlap.label())),
         ])
     }
 
@@ -552,6 +618,10 @@ impl TrainConfig {
             link_path: match v.opt("link_path") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.link_path,
+            },
+            overlap: match v.opt("overlap") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.overlap,
             },
         })
     }
@@ -790,6 +860,38 @@ mod tests {
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
         assert_eq!(back.link_path, LinkPath::from_env());
+    }
+
+    #[test]
+    fn overlap_parse_all_labels() {
+        for o in Overlap::ALL {
+            assert_eq!(o.label().parse::<Overlap>().unwrap(), o);
+        }
+        assert_eq!("true".parse::<Overlap>().unwrap(), Overlap::On);
+        assert_eq!("0".parse::<Overlap>().unwrap(), Overlap::Off);
+        assert!("bogus".parse::<Overlap>().is_err());
+    }
+
+    #[test]
+    fn overlap_roundtrips_and_defaults_from_env() {
+        assert_eq!(TrainConfig::default().overlap, Overlap::from_env());
+        if std::env::var("CHECKFREE_OVERLAP").is_err() {
+            // Device paths prefetch by default; `off` is the A/B leg.
+            assert_eq!(Overlap::from_env(), Overlap::On);
+        }
+        for overlap in Overlap::ALL {
+            let cfg = TrainConfig { overlap, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.overlap, overlap);
+        }
+        // absent key → env default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.overlap, Overlap::from_env());
     }
 
     #[test]

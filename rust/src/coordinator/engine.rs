@@ -72,7 +72,7 @@
 
 use std::cell::RefCell;
 
-use crate::config::{ExecMode, LinkPath, PlaneMode, Staging, TrainConfig};
+use crate::config::{ExecMode, LinkPath, Overlap, PlaneMode, Staging, TrainConfig};
 use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
@@ -113,6 +113,9 @@ pub struct PipelineEngine {
     /// Which activation plane the pipelined modes run
     /// (`--host-staging` escape hatch; sequential always host-stages).
     staging: Staging,
+    /// Whether cross-plane link copies are prefetched on the sending
+    /// worker (`--overlap`; off = the synchronous A/B baseline).
+    overlap: Overlap,
     /// One PJRT client for all stages, or one per stage (mirrors the
     /// runtime's layout; see [`crate::config::PlaneMode`]).
     plane_mode: PlaneMode,
@@ -188,6 +191,7 @@ impl PipelineEngine {
             microbatches: cfg.microbatches_per_iter,
             exec_mode: cfg.exec_mode,
             staging: cfg.staging(),
+            overlap: cfg.overlap,
             plane_mode: cfg.plane_mode,
             worker_pool: None,
             activations: ActivationWatermark::new(),
@@ -271,6 +275,11 @@ impl PipelineEngine {
     /// How cross-plane link copies move bytes (per-stage planes).
     pub fn link_path(&self) -> LinkPath {
         self.runtime.link_path()
+    }
+
+    /// Whether link copies are prefetched on the sender (`--overlap`).
+    pub fn overlap(&self) -> Overlap {
+        self.overlap
     }
 
     /// Batches in the held-out validation set ([`Self::validate`] runs
@@ -406,6 +415,7 @@ impl PipelineEngine {
                     self.use_swaps,
                     kind,
                     staging,
+                    self.overlap,
                     &self.activations,
                     &mut self.grad_bufs,
                 )?
@@ -612,6 +622,30 @@ mod tests {
             exec_mode,
             plane_mode: PlaneMode::PerStage,
             link_path,
+            ..TrainConfig::default()
+        };
+        PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn engine_with_overlap(
+        strategy: Strategy,
+        seed: u64,
+        microbatches: usize,
+        exec_mode: ExecMode,
+        overlap: Overlap,
+    ) -> PipelineEngine {
+        // Explicit PerStage + Auto links (not from_env) so the overlap
+        // assertions cannot be vacuously satisfied by a CI leg forcing
+        // shared planes or staged hops.
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy,
+            microbatches_per_iter: microbatches,
+            seed,
+            exec_mode,
+            plane_mode: PlaneMode::PerStage,
+            link_path: LinkPath::Auto,
+            overlap,
             ..TrainConfig::default()
         };
         PipelineEngine::from_config(&cfg).unwrap()
@@ -971,6 +1005,120 @@ mod tests {
                 assert!(direct.transfer_ledger().snapshot().link_direct > 0);
                 assert_eq!(direct.transfer_ledger().snapshot().link_staged, 0);
             }
+        }
+    }
+
+    #[test]
+    fn overlap_on_and_off_match_bitwise_across_exec_modes() {
+        // The overlap determinism contract: prefetching a link copy on
+        // the sender moves WHEN the bytes travel, never what they are —
+        // losses, weights, ω, and validation must match bit for bit in
+        // every exec mode, swaps included. (Sequential records no links
+        // and rides along as the degenerate case.)
+        for mode in [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+                let mut on = engine_with_overlap(strategy, 97, 4, mode, Overlap::On);
+                let mut off = engine_with_overlap(strategy, 97, 4, mode, Overlap::Off);
+                assert_eq!(on.overlap(), Overlap::On);
+                assert_eq!(off.overlap(), Overlap::Off);
+                for it in 0..3 {
+                    let a = on.train_iteration().unwrap();
+                    let b = off.train_iteration().unwrap();
+                    assert_eq!(
+                        a.loss.to_bits(),
+                        b.loss.to_bits(),
+                        "loss diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                    assert_eq!(
+                        a.omegas, b.omegas,
+                        "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
+                    );
+                }
+                for (s, p) in on.stages.iter().zip(&off.stages) {
+                    assert_eq!(
+                        s.params, p.params,
+                        "stage {} weights diverged ({strategy:?}, {mode:?})",
+                        s.index
+                    );
+                }
+                let va = on.validate().unwrap();
+                let vb = off.validate().unwrap();
+                assert_eq!(va.to_bits(), vb.to_bits(), "validation diverged ({strategy:?}, {mode:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_split_and_wait_are_pinned_per_iteration() {
+        // The ledger contract behind the schema-4 bench gate, pinned
+        // structurally (never by relative timing): with overlap on every
+        // one of the 2·(L−1)·m steady-state link copies is prefetched —
+        // zero blocking hops, zero consumer wait; with overlap off every
+        // copy blocks the receiver and bills a nonzero stall. Either
+        // way the split sums to the total.
+        let m = 4u64;
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            let mut on = engine_with_overlap(Strategy::None, 101, m as usize, mode, Overlap::On);
+            on.train_iteration().unwrap(); // warm
+            let before = on.transfer_ledger().snapshot();
+            on.train_iteration().unwrap();
+            let delta = on.transfer_ledger().snapshot().since(&before);
+            let links = 2 * (on.stages.len() as u64 - 1) * m;
+            assert_eq!(delta.link_copies, links, "{mode:?}: total unchanged by overlap");
+            assert_eq!(
+                (delta.link_overlapped, delta.link_blocking),
+                (links, 0),
+                "{mode:?}: overlap on must prefetch every hop"
+            );
+            assert_eq!(delta.link_wait_ns, 0, "{mode:?}: prefetched hops cost no wait");
+
+            let mut off = engine_with_overlap(Strategy::None, 101, m as usize, mode, Overlap::Off);
+            off.train_iteration().unwrap(); // warm
+            let before = off.transfer_ledger().snapshot();
+            let per_stage_before: Vec<_> =
+                (0..off.stages.len()).map(|s| off.transfer_ledger().stage_snapshot(s)).collect();
+            off.train_iteration().unwrap();
+            let delta = off.transfer_ledger().snapshot().since(&before);
+            assert_eq!(delta.link_copies, links);
+            assert_eq!(
+                (delta.link_overlapped, delta.link_blocking),
+                (0, links),
+                "{mode:?}: overlap off must block on every hop"
+            );
+            assert!(delta.link_wait_ns > 0, "{mode:?}: blocking hops must bill their stall");
+            assert_eq!(delta.link_overlapped + delta.link_blocking, delta.link_copies);
+            // And the stall is attributed per receiving stage: exactly
+            // the stages that received link copies waited.
+            for s in 0..off.stages.len() {
+                let d = off.transfer_ledger().stage_snapshot(s).since(&per_stage_before[s]);
+                assert_eq!(
+                    d.link_wait_ns > 0,
+                    d.link_copies > 0,
+                    "{mode:?}: stage {s} wait/copies attribution mismatch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_runs_at_minimal_link_capacities_with_overlap_on() {
+        // Channel-capacity audit regression: 1F1B's forward links now
+        // sit at their minimal schedule-derived capacities
+        // (`executor::fwd_link_capacity` = peak_in_flight +
+        // OVERLAP_DEPTH, not a blanket m). A deep microbatch queue with
+        // overlap on must neither deadlock nor change bits vs the
+        // sequential reference.
+        let mut seq =
+            engine_with_overlap(Strategy::None, 103, 8, ExecMode::Sequential, Overlap::On);
+        let mut pipe =
+            engine_with_overlap(Strategy::None, 103, 8, ExecMode::Pipelined1F1B, Overlap::On);
+        for it in 0..2 {
+            let a = seq.train_iteration().unwrap();
+            let b = pipe.train_iteration().unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at iteration {it}");
+        }
+        for (s, p) in seq.stages.iter().zip(&pipe.stages) {
+            assert_eq!(s.params, p.params, "stage {} weights diverged", s.index);
         }
     }
 

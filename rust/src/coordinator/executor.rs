@@ -25,7 +25,11 @@
 //!   [`schedule::PipelineSchedule::OneFOneB`] each position alternates
 //!   one backward with one forward once its warmup is done, releasing a
 //!   microbatch's stashed activation as soon as its backward completes;
-//! * forward links are bounded channels sized for backpressure;
+//! * forward links are bounded channels whose capacity is **derived
+//!   from the schedule** (`fwd_link_capacity`): under fill/drain a
+//!   small backpressure constant, under 1F1B the producer position's
+//!   [`schedule::peak_in_flight`] — each plus [`OVERLAP_DEPTH`] so one
+//!   prefetched link buffer is always admitted without deadlock;
 //!   backward links (and the head→embed aux link) are bounded at `m`
 //!   messages — the schedule sends at most one per microbatch per link
 //!   per iteration, so the cap never blocks, it just makes the O(m)
@@ -58,8 +62,7 @@
 //!
 //! **Plane routing (`--plane-mode`):** every worker resolves incoming
 //! activations onto **the plane owning the stage it is about to
-//! execute** (`Activation::into_device(planes.plane(s), s)`) and runs
-//! that plane's compiled executable
+//! execute** and runs that plane's compiled executable
 //! ([`Runtime::executable_on`]). Under the shared plane that resolve is
 //! always free; under per-stage planes each stage owns its PJRT client,
 //! so a payload arriving from the neighbouring stage takes the metered
@@ -72,6 +75,22 @@
 //! backward, per microbatch) — pinned by an engine test. With
 //! CheckFree+ swaps a microbatch's route visits planes in swapped
 //! order, so its hop count can differ; bitwise results never do.
+//!
+//! **Overlapped links (`--overlap`):** the hop is issued on the
+//! **sending** worker through [`crate::runtime::LinkSlot`] *before* the
+//! message enters the channel — the sender computes the receiver's
+//! plane/stage from the same deterministic route
+//! ([`schedule::slot_stage`]) the receiver will use, so billing is
+//! identical either way — and the channels carry
+//! [`crate::runtime::InFlightLink`]s. With overlap **on** (the
+//! default) a direct-capable hop runs while the receiver is still
+//! computing the previous microbatch (metered `link_overlapped`;
+//! `InFlightLink::complete` is then free). With overlap **off**, or
+//! when only the staged fallback can move the bytes, the hop defers to
+//! the receiver's `complete`, which blocks exactly as PR 5 did
+//! (metered `link_blocking` + `link_wait_ns`). Same copies, same bits,
+//! same attribution — only *when* the copy runs changes, which is what
+//! the schema-4 bench gate measures.
 //!
 //! **Memory contract:** every stash/release is counted by the shared
 //! [`ActivationWatermark`]. Fill/drain keeps every slot's stashed
@@ -101,22 +120,70 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 
-use crate::config::Staging;
+use crate::config::{Overlap, Staging};
 use crate::coordinator::schedule::{self, PipelineSchedule, Step};
 use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
 use crate::runtime::{
-    Activation, DeviceBuffer, ExecArg, Executable, HostTensor, LiteralCache, PlaneSet, Runtime,
-    SharedLiterals,
+    Activation, DeviceBuffer, ExecArg, Executable, HostTensor, InFlightLink, LinkSlot,
+    LiteralCache, PlaneSet, Runtime, SharedLiterals,
 };
 use crate::{anyhow, Result};
 
 /// In-flight forward activations allowed per inter-stage link under the
-/// fill/drain schedule. Two keeps every worker busy without ballooning
-/// resident activations. (Under 1F1B the step tables themselves bound
-/// the in-flight count, so the links are sized to never block instead —
-/// see `run_iteration`.)
+/// fill/drain schedule (before the overlap allowance). Two keeps every
+/// worker busy without ballooning resident activations. (Under 1F1B the
+/// step tables themselves bound the in-flight count, so the links are
+/// sized from [`schedule::peak_in_flight`] instead — see
+/// [`fwd_link_capacity`].)
 pub const FWD_CHANNEL_CAP: usize = 2;
+
+/// Extra forward-link capacity admitting a prefetched link buffer: with
+/// overlapped links the sender issues microbatch `m+1`'s cross-plane
+/// copy and parks the resulting [`InFlightLink`] in the channel while
+/// the receiver still computes on microbatch `m`, so every link needs
+/// room for one message beyond the schedule's own in-flight bound.
+/// Deliberately **not** conditional on [`Overlap`]: channel capacity
+/// can never change results (the executor is bitwise-deterministic
+/// either way), and keeping one capacity per schedule keeps the
+/// deadlock audit a single argument instead of a matrix.
+pub const OVERLAP_DEPTH: usize = 1;
+
+/// Capacity of the bounded forward link out of `producer_pos`
+/// (0 = embed, `1..=l` = slots), derived from the schedule.
+///
+/// * **Fill/drain** forwards everything as fast as upstream allows, so
+///   the link itself provides the backpressure: the small
+///   [`FWD_CHANNEL_CAP`] constant. Deadlock-free because the consumer
+///   side of every forward link drains unconditionally (the head
+///   consumes all `m`, and each slot's table forwards everything it
+///   receives), so a blocked send always eventually proceeds.
+/// * **1F1B** bounds in flight by construction: a producer at `p` runs
+///   at most `peak_in_flight(step_table(p))` forwards ahead of its own
+///   backwards, and each of its backwards is gated (via the returning
+///   gradient) on the consumer having *received* that microbatch's
+///   forward — so the channel can never hold more messages than the
+///   producer's own warmup depth, and that capacity makes sends
+///   wait-free (the PR 5 "sized to never block" contract at minimal,
+///   schedule-derived size instead of a blanket `m`).
+///
+/// Both get [`OVERLAP_DEPTH`] on top so a prefetched link buffer is
+/// always admitted; a regression test runs 1F1B at exactly these
+/// minimal capacities with overlap on.
+pub fn fwd_link_capacity(
+    sched: PipelineSchedule,
+    body_stages: usize,
+    producer_pos: usize,
+    m: usize,
+) -> usize {
+    let base = match sched {
+        PipelineSchedule::FillDrain => FWD_CHANNEL_CAP,
+        PipelineSchedule::OneFOneB => {
+            schedule::peak_in_flight(&schedule::step_table(sched, body_stages, producer_pos, m))
+        }
+    };
+    base + OVERLAP_DEPTH
+}
 
 /// Marker for "a neighbour hung up" errors, so the real root cause (the
 /// worker that actually failed) wins error reporting.
@@ -126,14 +193,20 @@ fn link_closed(link: &str) -> anyhow::Error {
     anyhow!("{LINK_CLOSED} ({link})")
 }
 
+/// A forward activation in flight to the next position. The payload is
+/// an [`InFlightLink`]: with overlap on, the cross-plane copy already
+/// ran on the sender by the time this message enters the channel.
 struct FwdMsg {
     mb: usize,
-    h: Activation,
+    h: InFlightLink,
 }
 
+/// A backward gradient (`∂L/∂h`) in flight to the previous position,
+/// carried the same prefetchable way as forwards — both directions of
+/// every link overlap.
 struct BwdMsg {
     mb: usize,
-    gh: Activation,
+    gh: InFlightLink,
 }
 
 /// Stage-0 gradient pieces the head computes (`∂L/∂deembed`,
@@ -388,6 +461,8 @@ impl<'a> OrderedSink<'a> {
 ///
 /// `sched` selects the step tables (fill/drain or 1F1B); `staging`
 /// selects the activation plane (device-resident or host-staged);
+/// `overlap` selects whether cross-plane link copies are prefetched on
+/// the sender or block the receiver (bitwise-identical either way);
 /// `watermark` is reset by the engine and counts every slot
 /// stash/release. The caller refreshes `lits` for every stage
 /// beforehand — including, when `staging` is [`Staging::Device`], the
@@ -396,6 +471,13 @@ impl<'a> OrderedSink<'a> {
 /// hold at least `body_stages + 1` workers (embed + one per slot; the
 /// head runs on the calling thread). Every host↔device crossing and
 /// every cross-plane link copy is billed to `planes`' shared ledger.
+///
+/// **Link quiesce:** this function does not return (or fail) until
+/// every worker job has completed — [`WorkerPool::scope`] joins them
+/// all — so no [`InFlightLink`] can still be in flight afterwards.
+/// That is what makes it safe for the trainer to rewrite parameters
+/// (recovery) and invalidate the litcache between iterations without
+/// racing a prefetched copy.
 #[allow(clippy::too_many_arguments)]
 pub fn run_iteration(
     pool: &mut WorkerPool,
@@ -407,6 +489,7 @@ pub fn run_iteration(
     use_swaps: bool,
     sched: PipelineSchedule,
     staging: Staging,
+    overlap: Overlap,
     watermark: &ActivationWatermark,
     grad_bufs: &mut [GradBuffer],
 ) -> Result<Vec<f32>> {
@@ -453,17 +536,9 @@ pub fn run_iteration(
     let sinks: Vec<Mutex<OrderedSink>> =
         grad_bufs.iter_mut().map(|gb| Mutex::new(OrderedSink::new(gb))).collect();
 
-    // Forward-link capacity. Fill/drain needs the bound for backpressure
-    // (its tables forward everything as fast as upstream allows). 1F1B
-    // tables already cap how far any producer runs ahead (its warmup
-    // depth), so links are sized to never block — sends stay wait-free
-    // and the schedule is deadlock-free by construction.
-    let fwd_cap = match sched {
-        PipelineSchedule::FillDrain => FWD_CHANNEL_CAP,
-        PipelineSchedule::OneFOneB => m,
-    };
-
-    // Forward link p: position p → p+1 (0 = embed, 1..=l = slots, head last).
+    // Forward link p: position p → p+1 (0 = embed, 1..=l = slots, head
+    // last), at the schedule-derived capacity (see `fwd_link_capacity`
+    // for the per-schedule bound + deadlock argument).
     let mut ftx: Vec<Option<SyncSender<FwdMsg>>> = Vec::with_capacity(l + 1);
     let mut frx: Vec<Option<Receiver<FwdMsg>>> = Vec::with_capacity(l + 1);
     // Backward link p: position p+1 → p, bounded at m like the aux link
@@ -472,8 +547,8 @@ pub fn run_iteration(
     // m would deadlock fill/drain).
     let mut btx: Vec<Option<SyncSender<BwdMsg>>> = Vec::with_capacity(l + 1);
     let mut brx: Vec<Option<Receiver<BwdMsg>>> = Vec::with_capacity(l + 1);
-    for _ in 0..=l {
-        let (t, r) = sync_channel(fwd_cap);
+    for p in 0..=l {
+        let (t, r) = sync_channel(fwd_link_capacity(sched, l, p, m));
         ftx.push(Some(t));
         frx.push(Some(r));
         let (t, r) = sync_channel(m);
@@ -491,7 +566,10 @@ pub fn run_iteration(
         let (ids, sinks) = (&ids, &sinks);
         let table = schedule::step_table(sched, l, 0, m);
         jobs.push(Box::new(move || {
-            embed_worker(runtime, planes, lits, staging, ids, &table, fwd_tx, bwd_rx, aux_rx, sinks)
+            embed_worker(
+                runtime, planes, lits, staging, overlap, l, use_swaps, ids, &table, fwd_tx, bwd_rx,
+                aux_rx, sinks,
+            )
         }));
     }
 
@@ -505,8 +583,8 @@ pub fn run_iteration(
         let table = schedule::step_table(sched, l, p, m);
         jobs.push(Box::new(move || {
             slot_worker(
-                runtime, planes, lits, staging, l, use_swaps, p - 1, m, &table, watermark, fwd_rx,
-                fwd_tx, bwd_rx, bwd_tx, sinks,
+                runtime, planes, lits, staging, overlap, l, use_swaps, p - 1, m, &table, watermark,
+                fwd_rx, fwd_tx, bwd_rx, bwd_tx, sinks,
             )
         }));
     }
@@ -516,7 +594,10 @@ pub fn run_iteration(
     let bwd_tx = btx[l].take().expect("head bwd out");
     let ids_ref = &ids;
     let (head_res, job_results) = pool.scope(jobs, move || {
-        head_worker(runtime, planes, lits, staging, ids_ref, m, fwd_rx, bwd_tx, aux_tx)
+        head_worker(
+            runtime, planes, lits, staging, overlap, l, use_swaps, ids_ref, m, fwd_rx, bwd_tx,
+            aux_tx,
+        )
     });
 
     let mut errs: Vec<anyhow::Error> = job_results.into_iter().filter_map(|r| r.err()).collect();
@@ -555,14 +636,19 @@ fn pick_root_cause(mut errs: Vec<anyhow::Error>) -> anyhow::Error {
 /// 0's plane. A backward step joins the returning `∂L/∂h0` with the
 /// head's stage-0 pieces (which arrive on their own link, buffered until
 /// needed) — under per-stage planes that returning `∂L/∂h0` is the
-/// S1→embed link copy. On the device plane the only host sync here is
-/// `∂L/∂embed` itself — the stage-0 slice of the gradient boundary.
+/// S1→embed link copy (prefetched by the sending slot when overlap is
+/// on). Each forward send is issued toward the first slot's stage for
+/// that microbatch's route. On the device plane the only host sync here
+/// is `∂L/∂embed` itself — the stage-0 slice of the gradient boundary.
 #[allow(clippy::too_many_arguments)]
 fn embed_worker(
     runtime: &Runtime,
     planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
+    overlap: Overlap,
+    body_stages: usize,
+    use_swaps: bool,
     ids: &IdPool,
     table: &[Step],
     fwd_tx: SyncSender<FwdMsg>,
@@ -598,6 +684,11 @@ fn embed_worker(
                         )
                     }
                 };
+                // Issue the hop toward the stage the first slot will
+                // execute this microbatch on (its route decides) —
+                // with overlap on, S1 finds the copy already done.
+                let s1 = schedule::slot_stage(body_stages, mb, 0, use_swaps);
+                let h0 = LinkSlot::new(planes.plane(s1), s1, overlap).issue(h0)?;
                 fwd_tx.send(FwdMsg { mb, h: h0 }).map_err(|_| link_closed("embed→S1"))?;
             }
             Step::Backward(_) => {
@@ -613,7 +704,7 @@ fn embed_worker(
                         // The returning ∂L/∂h0 is dead after this call:
                         // donate it (released at execute completion; no
                         // aliasable output here, so it is not metered).
-                        let gh_buf = gh.into_device(plane, 0)?;
+                        let gh_buf = gh.complete(plane, 0)?;
                         embed_bwd
                             .execute_buffers_donating(
                                 plane,
@@ -630,7 +721,7 @@ fn embed_worker(
                     }
                     Staging::Host => {
                         let e = &lits.stage(0)[0];
-                        let gh_lit = gh.into_host(plane, 0)?.to_literal()?;
+                        let gh_lit = gh.complete_host(plane, 0)?.to_literal()?;
                         embed_bwd.meter_host_call(plane, 0);
                         embed_bwd
                             .run_literals(&[e, ids.lit(mb), &gh_lit])?
@@ -648,9 +739,10 @@ fn embed_worker(
 /// Positions 1..=L: forward/backward microbatches through this slot's
 /// stage (which stage depends on the microbatch's route under CheckFree+
 /// swaps) in step-table order, **on that stage's plane** — under
-/// per-stage planes an arriving activation first takes the link copy
-/// onto the executing stage's client, and under swaps the slot hops
-/// planes per microbatch exactly as the route hops stages. Forward steps
+/// per-stage planes an arriving activation first resolves the link copy
+/// onto the executing stage's client (already done by the sender when
+/// the link was prefetched), and under swaps the slot hops planes per
+/// microbatch exactly as the route hops stages. Forward steps
 /// stash the marshalled input activation (a device buffer on the stage's
 /// plane, a literal on the host plane); backward steps consume and
 /// release it — under 1F1B that keeps at most `warmup_forwards` stashes
@@ -664,6 +756,7 @@ fn slot_worker(
     planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
+    overlap: Overlap,
     body_stages: usize,
     use_swaps: bool,
     slot: usize,
@@ -713,7 +806,7 @@ fn slot_worker(
                 let (stashed, h_out) = match staging {
                     Staging::Device => {
                         let (body_fwd, _) = body_exes[s - 1];
-                        let h_buf = h.into_device(plane, s)?; // link copy across planes
+                        let h_buf = h.complete(plane, s)?; // free if prefetched
                         let h_out = {
                             let mut args: Vec<&DeviceBuffer> =
                                 lits.stage_buffers_on(s, plane.idx()).iter().collect();
@@ -726,7 +819,7 @@ fn slot_worker(
                         (Stashed::Buf(h_buf), Activation::Device(h_out))
                     }
                     Staging::Host => {
-                        let h_lit = h.into_host(plane, s)?.to_literal()?;
+                        let h_lit = h.complete_host(plane, s)?.to_literal()?;
                         let h_out = {
                             let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
                             args.push(&h_lit);
@@ -741,6 +834,16 @@ fn slot_worker(
                 };
                 stash[mb] = Some(stashed);
                 watermark.acquire();
+                // Issue toward the next position: the following slot's
+                // stage on this microbatch's route, or the head (billed
+                // stage 0, the head's ledger contract) after the last
+                // slot.
+                let h_out = if slot + 1 < body_stages {
+                    let sn = schedule::slot_stage(body_stages, mb, slot + 1, use_swaps);
+                    LinkSlot::new(planes.plane(sn), sn, overlap).issue(h_out)?
+                } else {
+                    LinkSlot::new(planes.head(), 0, overlap).issue(h_out)?
+                };
                 fwd_tx
                     .send(FwdMsg { mb, h: h_out })
                     .map_err(|_| link_closed("fwd out of slot"))?;
@@ -756,7 +859,7 @@ fn slot_worker(
                 let gh_out = match (staging, stashed) {
                     (Staging::Device, Stashed::Buf(h_buf)) => {
                         let (_, body_bwd) = body_exes[s - 1];
-                        let gh_buf = gh.into_device(plane, s)?; // link copy across planes
+                        let gh_buf = gh.complete(plane, s)?; // free if prefetched
                         // Both non-parameter inputs die at this backward:
                         // the stashed forward activation (aliases the
                         // ∂L/∂h output — the metered donation) and the
@@ -788,7 +891,7 @@ fn slot_worker(
                         Activation::Device(gh_out)
                     }
                     (Staging::Host, Stashed::Lit(h_lit)) => {
-                        let gh_lit = gh.into_host(plane, s)?.to_literal()?;
+                        let gh_lit = gh.complete_host(plane, s)?.to_literal()?;
                         {
                             let mut args: Vec<&xla::Literal> = lits.stage(s).iter().collect();
                             args.push(&h_lit);
@@ -813,6 +916,15 @@ fn slot_worker(
                             "slot stash currency does not match the staging mode"
                         ))
                     }
+                };
+                // Issue toward the previous position: the preceding
+                // slot's stage on this route, or the embed (stage 0)
+                // from the first slot.
+                let gh_out = if slot > 0 {
+                    let sp = schedule::slot_stage(body_stages, mb, slot - 1, use_swaps);
+                    LinkSlot::new(planes.plane(sp), sp, overlap).issue(gh_out)?
+                } else {
+                    LinkSlot::new(planes.plane(0), 0, overlap).issue(gh_out)?
                 };
                 bwd_tx
                     .send(BwdMsg { mb, gh: gh_out })
@@ -841,6 +953,9 @@ fn head_worker(
     planes: &PlaneSet,
     lits: &LiteralCache,
     staging: Staging,
+    overlap: Overlap,
+    body_stages: usize,
+    use_swaps: bool,
     ids: &IdPool,
     m: usize,
     fwd_rx: Receiver<FwdMsg>,
@@ -858,7 +973,7 @@ fn head_worker(
                 let (d, nw) = (&st0[1], &st0[2]);
                 // The incoming activation dies at the head's fused
                 // fwd+bwd (it aliases the ∂L/∂h output): donate it.
-                let h_buf = h.into_device(plane, 0)?;
+                let h_buf = h.complete(plane, 0)?;
                 let mut outs = head_bwd.execute_buffers_donating(
                     plane,
                     0,
@@ -882,7 +997,7 @@ fn head_worker(
             Staging::Host => {
                 let st0 = lits.stage(0);
                 let (d, nw) = (&st0[1], &st0[2]);
-                let h_lit = h.into_host(plane, 0)?.to_literal()?;
+                let h_lit = h.complete_host(plane, 0)?.to_literal()?;
                 head_bwd.meter_host_call(plane, 0);
                 let mut outs = head_bwd.run_literals(&[d, nw, &h_lit, ids.lit(mb)])?;
                 if outs.len() != 4 {
@@ -897,6 +1012,11 @@ fn head_worker(
         };
         losses[mb] = loss;
         aux_tx.send(HeadGrads { mb, gd, gnw }).map_err(|_| link_closed("head→embed"))?;
+        // Issue ∂L/∂h toward the last slot's stage on this route. On the
+        // standard route that stage shares the head's plane (free); a
+        // swapped microbatch's gradient hops — and can prefetch.
+        let sl = schedule::slot_stage(body_stages, mb, body_stages - 1, use_swaps);
+        let gh = LinkSlot::new(planes.plane(sl), sl, overlap).issue(gh)?;
         bwd_tx.send(BwdMsg { mb, gh }).map_err(|_| link_closed("head→SL"))?;
     }
     Ok(losses)
@@ -963,6 +1083,30 @@ mod tests {
         assert_eq!(sink.next, 4);
         assert!(sink.pending.is_empty());
         assert_eq!(gb.microbatches(), 4);
+    }
+
+    #[test]
+    fn fwd_link_capacity_is_schedule_derived_and_minimal() {
+        use PipelineSchedule::{FillDrain, OneFOneB};
+        // Fill/drain: the constant backpressure bound + the prefetch
+        // allowance, at every position.
+        for pos in 0..=4 {
+            assert_eq!(fwd_link_capacity(FillDrain, 4, pos, 8), FWD_CHANNEL_CAP + OVERLAP_DEPTH);
+        }
+        // 1F1B: the producer position's warmup depth + the prefetch
+        // allowance — embed (pos 0) runs furthest ahead, the last slot
+        // (pos l, feeding the head) barely at all.
+        assert_eq!(fwd_link_capacity(OneFOneB, 4, 0, 8), 5 + OVERLAP_DEPTH);
+        assert_eq!(fwd_link_capacity(OneFOneB, 4, 2, 8), 3 + OVERLAP_DEPTH);
+        assert_eq!(fwd_link_capacity(OneFOneB, 4, 4, 8), 1 + OVERLAP_DEPTH);
+        // Fewer microbatches than the warmup depth: bounded by m.
+        assert_eq!(fwd_link_capacity(OneFOneB, 4, 0, 2), 2 + OVERLAP_DEPTH);
+        // The capacity must match what the producer's own table can
+        // actually leave in flight.
+        for pos in 0..=4 {
+            let peak = schedule::peak_in_flight(&schedule::step_table(OneFOneB, 4, pos, 8));
+            assert_eq!(fwd_link_capacity(OneFOneB, 4, pos, 8), peak + OVERLAP_DEPTH);
+        }
     }
 
     #[test]

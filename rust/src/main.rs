@@ -8,6 +8,7 @@
 //!                    [--host-staging true|false]
 //!                    [--plane-mode shared|per-stage]
 //!                    [--link-path auto|direct|staged]
+//!                    [--overlap on|off]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -149,6 +150,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(l) = args.parse_opt::<checkfree::config::LinkPath>("link-path")? {
         cfg.link_path = l;
+    }
+    if let Some(o) = args.parse_opt::<checkfree::config::Overlap>("overlap")? {
+        cfg.overlap = o;
     }
     cfg.validate()?;
 

@@ -86,6 +86,9 @@ struct StageCounters {
     link_bytes: AtomicU64,
     link_direct: AtomicU64,
     link_staged: AtomicU64,
+    link_overlapped: AtomicU64,
+    link_blocking: AtomicU64,
+    link_wait_ns: AtomicU64,
     donated_buffers: AtomicU64,
 }
 
@@ -122,6 +125,18 @@ struct StageCounters {
 ///   `link_copies == link_direct + link_staged` by construction; the
 ///   per-stage bench gate pins `link_staged == 0` on containers whose
 ///   plugin supports direct transfer (see [`crate::config::LinkPath`]).
+///   Orthogonally, every link copy is classified by **when it was
+///   performed relative to the consumer's need**: `link_overlapped`
+///   (prefetched on the sending side before the receiver asked —
+///   [`crate::runtime::LinkSlot`] issue, `--overlap on`) or
+///   `link_blocking` (performed synchronously inside the consumer's
+///   call path), with `link_overlapped + link_blocking == link_copies`
+///   by construction. `link_wait_ns` accumulates the nanoseconds the
+///   consuming side actually stalled completing links — the full copy
+///   duration for a blocking hop, the handle-unwrap time (≈0) for an
+///   overlapped one — billed, like every link column, to the
+///   **receiving** stage. The schema-4 bench gate compares per-stage
+///   `link_wait_ns` across `--overlap on|off`.
 /// * **donated buffer** — `Executable::execute_buffers_donating`
 ///   received ownership of a dead input buffer whose spec aliases an
 ///   execute output (the binding's donation-eligibility rule) and
@@ -153,6 +168,14 @@ pub struct TransferSnapshot {
     pub link_direct: u64,
     /// Link copies that fell back to the staged device→host→device hop.
     pub link_staged: u64,
+    /// Link copies prefetched on the sending side before the receiver
+    /// asked (`link_overlapped + link_blocking == link_copies`).
+    pub link_overlapped: u64,
+    /// Link copies performed synchronously in the consumer's call path.
+    pub link_blocking: u64,
+    /// Nanoseconds the consuming side stalled completing link copies
+    /// (full copy time for blocking hops, ≈0 for overlapped ones).
+    pub link_wait_ns: u64,
     /// Dead input buffers donated to an execute (spec-aliased to an
     /// output and released at execute completion).
     pub donated_buffers: u64,
@@ -175,6 +198,9 @@ impl TransferSnapshot {
             link_bytes: self.link_bytes.saturating_sub(earlier.link_bytes),
             link_direct: self.link_direct.saturating_sub(earlier.link_direct),
             link_staged: self.link_staged.saturating_sub(earlier.link_staged),
+            link_overlapped: self.link_overlapped.saturating_sub(earlier.link_overlapped),
+            link_blocking: self.link_blocking.saturating_sub(earlier.link_blocking),
+            link_wait_ns: self.link_wait_ns.saturating_sub(earlier.link_wait_ns),
             donated_buffers: self.donated_buffers.saturating_sub(earlier.donated_buffers),
         }
     }
@@ -238,6 +264,30 @@ impl TransferLedger {
         s.link_staged.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A link copy was **prefetched** on the sending side before the
+    /// receiving worker asked for it ([`crate::runtime::LinkSlot`]
+    /// issue, `--overlap on`) — billed, like every link column, to the
+    /// receiving stage. Recorded at copy time, so
+    /// `link_overlapped + link_blocking == link_copies` holds at every
+    /// instant.
+    pub fn record_link_overlapped(&self, stage: usize) {
+        self.slot(stage).link_overlapped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A link copy was performed **synchronously in the consumer's call
+    /// path** (overlap off, the staged fallback, or a direct
+    /// `copy_to_plane` outside the executor's prefetch dispatch).
+    pub fn record_link_blocking(&self, stage: usize) {
+        self.slot(stage).link_blocking.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The consuming side stalled `ns` nanoseconds completing a link
+    /// (the receiving-stage wall-clock the overlap bench gate compares
+    /// across `--overlap on|off`).
+    pub fn record_link_wait_ns(&self, stage: usize, ns: u64) {
+        self.slot(stage).link_wait_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// An execute received ownership of a dead input buffer whose spec
     /// aliases one of its outputs and released it at execute completion
     /// (`Executable::execute_buffers_donating`).
@@ -258,6 +308,9 @@ impl TransferLedger {
             link_bytes: s.link_bytes.load(Ordering::Relaxed),
             link_direct: s.link_direct.load(Ordering::Relaxed),
             link_staged: s.link_staged.load(Ordering::Relaxed),
+            link_overlapped: s.link_overlapped.load(Ordering::Relaxed),
+            link_blocking: s.link_blocking.load(Ordering::Relaxed),
+            link_wait_ns: s.link_wait_ns.load(Ordering::Relaxed),
             donated_buffers: s.donated_buffers.load(Ordering::Relaxed),
         }
     }
@@ -276,6 +329,9 @@ impl TransferLedger {
             total.link_bytes += s.link_bytes;
             total.link_direct += s.link_direct;
             total.link_staged += s.link_staged;
+            total.link_overlapped += s.link_overlapped;
+            total.link_blocking += s.link_blocking;
+            total.link_wait_ns += s.link_wait_ns;
             total.donated_buffers += s.donated_buffers;
         }
         total
@@ -298,6 +354,9 @@ impl TransferLedger {
             s.link_bytes.store(0, Ordering::Relaxed);
             s.link_direct.store(0, Ordering::Relaxed);
             s.link_staged.store(0, Ordering::Relaxed);
+            s.link_overlapped.store(0, Ordering::Relaxed);
+            s.link_blocking.store(0, Ordering::Relaxed);
+            s.link_wait_ns.store(0, Ordering::Relaxed);
             s.donated_buffers.store(0, Ordering::Relaxed);
         }
     }
@@ -510,6 +569,8 @@ mod tests {
         l.record_upload(2, 4);
         l.record_forced_tuple_roundtrip(1);
         l.record_link_copy_staged(1, 32);
+        l.record_link_blocking(1);
+        l.record_link_wait_ns(1, 700);
         l.record_donation(1);
         assert_eq!(
             l.stage_snapshot(1),
@@ -523,6 +584,9 @@ mod tests {
                 link_bytes: 32,
                 link_direct: 0,
                 link_staged: 1,
+                link_overlapped: 0,
+                link_blocking: 1,
+                link_wait_ns: 700,
                 donated_buffers: 1,
             }
         );
@@ -561,6 +625,58 @@ mod tests {
         let total = l.snapshot();
         assert_eq!(total.link_copies, total.link_direct + total.link_staged);
         assert_eq!((total.link_direct, total.link_staged), (2, 1));
+    }
+
+    #[test]
+    fn overlap_split_always_sums_to_link_copies() {
+        // The overlap classification is orthogonal to the path split:
+        // every copy is exactly one of overlapped|blocking, whichever
+        // path moved it, so both splits sum to link_copies.
+        let l = TransferLedger::new(1);
+        l.record_link_copy_direct(0, 8);
+        l.record_link_overlapped(0);
+        l.record_link_copy_direct(0, 8);
+        l.record_link_overlapped(0);
+        l.record_link_copy_staged(0, 8);
+        l.record_link_blocking(0);
+        let total = l.snapshot();
+        assert_eq!(total.link_copies, total.link_overlapped + total.link_blocking);
+        assert_eq!(total.link_copies, total.link_direct + total.link_staged);
+        assert!(total.link_overlapped <= total.link_copies);
+        assert_eq!((total.link_overlapped, total.link_blocking), (2, 1));
+    }
+
+    #[test]
+    fn link_wait_is_attributed_to_the_receiving_stage() {
+        // link_wait_ns bills the stage that stalled (the receiver), like
+        // every other link column — per-stage deltas are what the
+        // schema-4 overlap bench gate compares.
+        let l = TransferLedger::new(3);
+        l.record_link_wait_ns(1, 1_000);
+        l.record_link_wait_ns(1, 500);
+        l.record_link_wait_ns(2, 40);
+        assert_eq!(l.stage_snapshot(0).link_wait_ns, 0);
+        assert_eq!(l.stage_snapshot(1).link_wait_ns, 1_500);
+        assert_eq!(l.stage_snapshot(2).link_wait_ns, 40);
+        assert_eq!(l.snapshot().link_wait_ns, 1_540);
+    }
+
+    #[test]
+    fn overlap_columns_diff_and_reset() {
+        let l = TransferLedger::new(2);
+        l.record_link_copy_direct(1, 8);
+        l.record_link_overlapped(1);
+        l.record_link_wait_ns(1, 10);
+        let before = l.snapshot();
+        l.record_link_copy_direct(1, 8);
+        l.record_link_blocking(1);
+        l.record_link_wait_ns(1, 990);
+        let delta = l.snapshot().since(&before);
+        assert_eq!((delta.link_overlapped, delta.link_blocking), (0, 1));
+        assert_eq!(delta.link_wait_ns, 990);
+        l.reset();
+        assert_eq!(l.snapshot(), TransferSnapshot::default());
+        assert_eq!(l.stage_snapshot(1).link_wait_ns, 0);
     }
 
     #[test]

@@ -54,6 +54,21 @@
 //! executor, and the per-stage bench gate (`link_staged == 0`) proves
 //! the fast path engages instead of silently degrading.
 //!
+//! **Overlapped links.** A blocking hop puts the whole copy on the
+//! receiving stage's critical path. [`LinkSlot`] splits the hop into an
+//! *issue* on the sending worker ([`LinkSlot::issue`], which prefetches
+//! the copy when [`crate::config::Overlap`] allows and the direct path
+//! can service it) and a *complete* on the receiving worker
+//! ([`InFlightLink::complete`], free for a prefetched buffer). The
+//! ledger classifies every hop at copy time — `link_overlapped` for
+//! prefetched copies, `link_blocking` for copies performed in the
+//! consumer's call path, with the consumer's stall billed to
+//! `link_wait_ns` — so `link_overlapped + link_blocking == link_copies`
+//! holds at every instant. The staged fallback is never prefetched
+//! (its device→host sync would serialize the sending worker just the
+//! same), so `--link-path staged` and `--overlap off` are the A/B
+//! baselines the schema-4 bench gate compares against.
+//!
 //! **Why recovery stays host-side:** CheckFree's weighted averaging,
 //! Adam, and every recovery write operate on `HostTensor`s and bump
 //! `Stage::params_version`; the versioned caches (host literals *and*
@@ -64,7 +79,7 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
-use crate::config::LinkPath;
+use crate::config::{LinkPath, Overlap};
 use crate::manifest::IoSpec;
 use crate::metrics::TransferLedger;
 use crate::runtime::HostTensor;
@@ -178,6 +193,15 @@ impl DeviceBuffer {
     /// which is every call in shared mode, so the shared plane records
     /// zero link copies by construction.
     ///
+    /// This synchronous form performs the hop **in the caller's call
+    /// path**, so a cross-plane hop is additionally classified as
+    /// `link_blocking` with the stall billed to `link_wait_ns` — the
+    /// receiving-stage wall-clock the overlap bench gate compares. The
+    /// executor's prefetch dispatch avoids that stall by issuing the
+    /// copy ahead of need through [`LinkSlot::issue`] (classified
+    /// `link_overlapped` instead); either way
+    /// `link_overlapped + link_blocking == link_copies`.
+    ///
     /// Which path runs is `dst`'s [`LinkPath`] policy: `Auto` (default)
     /// probes the plugin's direct cross-client transfer on the **first**
     /// hop only — rejection there degrades the process to staged hops,
@@ -186,7 +210,7 @@ impl DeviceBuffer {
     /// and propagates instead of silently restaging. `Direct` makes
     /// even the probe rejection a hard error (the CI mode that proves
     /// the fast path engages); `Staged` forces the fallback (the A/B
-    /// baseline). This is deliberately the ONLY
+    /// baseline). This (via [`Self::copy_now`]) is deliberately the ONLY
     /// function that moves a buffer between clients, so a DMA/RDMA
     /// transport slots in here without touching the executor or the
     /// metering.
@@ -194,6 +218,22 @@ impl DeviceBuffer {
         if self.plane == dst.idx {
             return Ok(self);
         }
+        let start = std::time::Instant::now();
+        let out = self.copy_now(dst, stage)?;
+        dst.ledger.record_link_blocking(stage);
+        dst.ledger.record_link_wait_ns(stage, start.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    /// Perform the cross-plane hop *now*, recording the
+    /// `link_copies`/`link_bytes`/`link_direct`/`link_staged` columns
+    /// but **not** the overlap classification — the caller decides
+    /// whether this copy was prefetched ([`LinkSlot::issue`] →
+    /// `link_overlapped`) or consumer-blocking ([`Self::copy_to_plane`]
+    /// → `link_blocking`). Callers must have ruled out the same-plane
+    /// case.
+    fn copy_now(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+        debug_assert_ne!(self.plane, dst.idx, "copy_now called for a same-plane buffer");
         match dst.link {
             LinkPath::Staged => self.copy_staged(dst, stage),
             LinkPath::Direct => {
@@ -457,6 +497,131 @@ impl Activation {
     }
 }
 
+/// The sending side of one cross-plane link: knows the **destination**
+/// plane, the receiving stage the hop is billed to, and the
+/// [`Overlap`] policy. The executor builds one per send site (cheap —
+/// two words and a copy of the policy) and calls [`LinkSlot::issue`]
+/// *before* putting the activation on the channel, so the copy for
+/// microbatch `m+1` runs while the receiver computes on microbatch `m`.
+///
+/// The handle deliberately lives in this module, next to
+/// [`DeviceBuffer::copy_to_plane`]: issue/complete is a split of that
+/// same single choke point, not a second way to move bytes.
+pub struct LinkSlot<'p> {
+    dst: &'p DevicePlane<'p>,
+    /// The receiving stage — the ledger contract for every link column.
+    stage: usize,
+    overlap: Overlap,
+}
+
+impl<'p> LinkSlot<'p> {
+    /// A slot sending **to** `dst`, billed to receiving stage `stage`.
+    pub fn new(dst: &'p DevicePlane<'p>, stage: usize, overlap: Overlap) -> Self {
+        Self { dst, stage, overlap }
+    }
+
+    /// Can a prefetched copy be serviced without serializing the sender?
+    /// Only the direct path qualifies: the staged fallback's
+    /// `to_literal_sync` would stall the sending worker for the same
+    /// wall-clock it was supposed to hide. Under `Auto` the verdict
+    /// follows the process-wide probe state — `UNKNOWN` optimistically
+    /// prefetches (the probe itself happens inside the copy, and a
+    /// probe-failure hop still lands staged exactly once, loudly).
+    fn prefetchable(&self) -> bool {
+        match self.dst.link {
+            LinkPath::Direct => true,
+            LinkPath::Staged => false,
+            LinkPath::Auto => DIRECT_LINKS.load(Ordering::Relaxed) != DIRECT_UNAVAILABLE,
+        }
+    }
+
+    /// Issue the link for one activation on the **sending** worker.
+    ///
+    /// * `Host` activations and buffers already on `dst`'s plane need no
+    ///   hop: they pass through as [`InFlightLink::Ready`].
+    /// * With overlap **on** and a direct-capable destination, the copy
+    ///   runs *now*, on the sender, and is metered `link_overlapped`
+    ///   ([`InFlightLink::Issued`]) — the receiver's
+    ///   [`InFlightLink::complete`] is then free.
+    /// * With overlap **off**, or when only the staged fallback can move
+    ///   the bytes, the hop is deferred to the receiver
+    ///   ([`InFlightLink::Deferred`]), where
+    ///   [`DeviceBuffer::copy_to_plane`] meters it `link_blocking` and
+    ///   bills the stall to `link_wait_ns` — the A/B baseline.
+    pub fn issue(&self, act: Activation) -> Result<InFlightLink> {
+        let d = match act {
+            Activation::Host(t) => return Ok(InFlightLink::Ready(Activation::Host(t))),
+            Activation::Device(d) if d.plane() == self.dst.idx => {
+                return Ok(InFlightLink::Ready(Activation::Device(d)))
+            }
+            Activation::Device(d) => d,
+        };
+        if self.overlap == Overlap::Off || !self.prefetchable() {
+            return Ok(InFlightLink::Deferred(d));
+        }
+        let buf = d.copy_now(self.dst, self.stage)?;
+        self.dst.ledger.record_link_overlapped(self.stage);
+        Ok(InFlightLink::Issued(buf))
+    }
+}
+
+/// One activation in flight across a pipeline channel, produced by
+/// [`LinkSlot::issue`] and resolved by [`InFlightLink::complete`] on
+/// the receiving worker. The variant records where the bytes are:
+#[derive(Debug)]
+pub enum InFlightLink {
+    /// No hop needed (host-staged activation, or the buffer already
+    /// lives on the destination plane). Complete resolves it like
+    /// [`Activation::into_device`] always did.
+    Ready(Activation),
+    /// The cross-plane copy already ran on the sender (metered
+    /// `link_overlapped` at issue time); the buffer lives on the
+    /// destination plane and complete just unwraps it.
+    Issued(DeviceBuffer),
+    /// The hop was **not** prefetched (overlap off, or staged-only
+    /// destination); complete performs it in the receiver's call path
+    /// via [`DeviceBuffer::copy_to_plane`], which meters it
+    /// `link_blocking` + `link_wait_ns`.
+    Deferred(DeviceBuffer),
+}
+
+impl InFlightLink {
+    /// Did the copy already run on the sender? (The poll half of the
+    /// issue → poll/complete split; tests pin the policy with it.)
+    pub fn is_prefetched(&self) -> bool {
+        matches!(self, InFlightLink::Issued(_))
+    }
+
+    /// Resolve to a device buffer on `plane`, on the **receiving**
+    /// worker. Free for `Ready`-same-plane and `Issued`; performs (and
+    /// meters) the blocking hop or upload otherwise.
+    pub fn complete(self, plane: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+        match self {
+            InFlightLink::Ready(act) => act.into_device(plane, stage),
+            InFlightLink::Issued(buf) => {
+                debug_assert_eq!(
+                    buf.plane(),
+                    plane.idx(),
+                    "issued link completed on the wrong plane"
+                );
+                Ok(buf)
+            }
+            InFlightLink::Deferred(buf) => buf.copy_to_plane(plane, stage),
+        }
+    }
+
+    /// Resolve to a host tensor — the `--host-staging` receivers' form
+    /// of complete. On that plane every link is `Ready(Host)` and this
+    /// is free; a device-resident link resolves through the metered
+    /// [`DeviceBuffer::to_host`] sync.
+    pub fn complete_host(self, plane: &DevicePlane, stage: usize) -> Result<HostTensor> {
+        match self {
+            InFlightLink::Ready(act) => act.into_host(plane, stage),
+            InFlightLink::Issued(buf) | InFlightLink::Deferred(buf) => buf.to_host(plane, stage),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -698,6 +863,160 @@ mod tests {
             let d = Activation::Device(d).into_device(planes.plane(1), 1).unwrap();
             assert_eq!(d.plane(), 1);
             assert_eq!(ledger.snapshot().link_copies, 1);
+        }
+
+        #[test]
+        fn blocking_hop_is_classified_and_bills_the_wait() {
+            // The synchronous `copy_to_plane` (eval chains, deferred
+            // completes) is the `link_blocking` path, and the stall it
+            // imposes on the receiver lands in its `link_wait_ns`.
+            let rt = runtime();
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2], &[1.0, 2.0]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+            let d = d.copy_to_plane(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_blocking, s1.link_overlapped), (1, 1, 0));
+            assert!(s1.link_wait_ns > 0, "a blocking hop must bill its stall");
+            assert_eq!(ledger.stage_snapshot(0).link_wait_ns, 0, "billed to the receiver");
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn issued_link_is_prefetched_bitwise_and_metered_overlapped() {
+            // Overlap on + direct-capable destination: the copy runs at
+            // issue time on the sender, complete is free, and the hop is
+            // classified `link_overlapped` with zero consumer wait.
+            let rt = runtime_with_links(crate::config::LinkPath::Direct);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2, 2], &[0.25, -8.0, 3.0, 1.5]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::On);
+            let link = slot.issue(Activation::Device(d)).unwrap();
+            assert!(link.is_prefetched());
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_overlapped, s1.link_blocking), (1, 1, 0));
+            assert_eq!(s1.link_direct, 1, "prefetch rides the direct path");
+
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            assert_eq!(d.plane(), 1);
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!(s1.link_copies, 1, "complete must not re-copy");
+            assert_eq!(s1.link_wait_ns, 0, "an issued link costs the receiver nothing");
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t, "prefetch changed the bits");
+        }
+
+        #[test]
+        fn overlap_off_defers_the_hop_to_the_receiver() {
+            // The A/B baseline: issue is a pure pass-through (nothing
+            // metered), the receiver pays the blocking hop + wait.
+            let rt = runtime_with_links(crate::config::LinkPath::Direct);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2], &[6.5, -7.0]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::Off);
+            let link = slot.issue(Activation::Device(d)).unwrap();
+            assert!(!link.is_prefetched());
+            assert_eq!(ledger.stage_snapshot(1).link_copies, 0, "off: no copy at issue");
+
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_overlapped, s1.link_blocking), (1, 0, 1));
+            assert!(s1.link_wait_ns > 0);
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn staged_fallback_is_never_prefetched() {
+            // Staged's device→host sync would serialize the sender just
+            // the same, so even with overlap on the hop defers and is
+            // classified blocking — the "staged fallback still blocks"
+            // rule the ARCHITECTURE timeline documents.
+            let rt = runtime_with_links(crate::config::LinkPath::Staged);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![3], &[0.5, 1.5, 2.5]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::On);
+            let link = slot.issue(Activation::Device(d)).unwrap();
+            assert!(!link.is_prefetched(), "staged destinations must defer");
+            assert_eq!(ledger.stage_snapshot(1).link_copies, 0);
+
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_staged, s1.link_blocking, s1.link_overlapped), (1, 1, 0));
+            assert!(s1.link_wait_ns > 0);
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn host_and_same_plane_links_are_ready_and_free() {
+            let rt = runtime();
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2], &[3.0, 4.0]);
+
+            // Host staging: the link machinery is inert — complete is
+            // the same metered upload `into_device` always was.
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::On);
+            let link = slot.issue(Activation::Host(t.clone())).unwrap();
+            assert!(!link.is_prefetched());
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!(s1.uploads, 1);
+            assert_eq!((s1.link_copies, s1.link_blocking, s1.link_wait_ns), (0, 0, 0));
+
+            // Same-plane device send (shared mode's every send): free.
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::On);
+            let link = slot.issue(Activation::Device(d)).unwrap();
+            assert!(!link.is_prefetched());
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_wait_ns), (0, 0), "owning plane: no hop");
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn overlap_split_always_accounts_for_every_link_copy() {
+            // Mixed traffic — one prefetched hop, one deferred hop, one
+            // synchronous eval-style hop — and both splits still sum to
+            // the total at every step (classification happens at copy
+            // time, so no interleaving can break it).
+            let rt = runtime_with_links(crate::config::LinkPath::Direct);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2], &[9.0, -9.0]);
+
+            let check = |ledger: &TransferLedger| {
+                let s = ledger.snapshot();
+                assert_eq!(s.link_overlapped + s.link_blocking, s.link_copies);
+                assert_eq!(s.link_direct + s.link_staged, s.link_copies);
+            };
+
+            let d = planes.plane(0).upload(0, &t).unwrap();
+            let link = LinkSlot::new(planes.plane(1), 1, Overlap::On)
+                .issue(Activation::Device(d))
+                .unwrap();
+            check(&ledger);
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            check(&ledger);
+            let link = LinkSlot::new(planes.plane(2), 2, Overlap::Off)
+                .issue(Activation::Device(d))
+                .unwrap();
+            check(&ledger);
+            let d = link.complete(planes.plane(2), 2).unwrap();
+            check(&ledger);
+            let d = d.copy_to_plane(planes.plane(0), 0).unwrap();
+            check(&ledger);
+            let s = ledger.snapshot();
+            assert_eq!((s.link_copies, s.link_overlapped, s.link_blocking), (3, 1, 2));
+            assert_eq!(d.to_host(planes.plane(0), 0).unwrap(), t);
         }
     }
 }

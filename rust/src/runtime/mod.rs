@@ -82,7 +82,7 @@ use crate::manifest::{Artifact, IoSpec, Manifest};
 use crate::metrics::TransferLedger;
 use crate::{anyhow, Context, Result};
 
-pub use buffer::{Activation, DeviceBuffer, DevicePlane, PlaneSet};
+pub use buffer::{Activation, DeviceBuffer, DevicePlane, InFlightLink, LinkSlot, PlaneSet};
 pub use litcache::{LiteralCache, SharedLiterals};
 pub use tensor::HostTensor;
 

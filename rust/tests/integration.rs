@@ -3,7 +3,7 @@
 //! exercised end-to-end. These are the Rust-side counterpart of the
 //! paper's evaluation protocol, shrunk to the `tiny` preset.
 
-use checkfree::config::{FailureSpec, LinkPath, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{FailureSpec, LinkPath, Overlap, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::Trainer;
 use checkfree::data::Domain;
 use checkfree::experiments;
@@ -152,6 +152,34 @@ fn direct_and_staged_links_survive_churn_identically() {
         curves.push(curve);
     }
     assert_eq!(curves[0], curves[1], "link paths diverged under churn");
+}
+
+#[test]
+fn overlapped_links_survive_churn_identically_to_blocking() {
+    // End-to-end overlap parity under real failures: the same churny
+    // CheckFree+ run on per-stage planes must produce the same loss
+    // curve bit for bit whether link copies are prefetched at issue
+    // time (`--overlap on`) or performed in the consumer's call path
+    // (`--overlap off`). Recovery is the interesting part: the trainer
+    // only rewrites params / invalidates the litcache after
+    // `run_iteration` has joined every worker, so no prefetched link
+    // can be in flight when the rewrite lands — this test pins that
+    // quiesce rule through two forced failures on both recovery paths.
+    let mut curves = Vec::new();
+    for overlap in [Overlap::Off, Overlap::On] {
+        let mut c = cfg(Strategy::CheckFreePlus, 12, 0.0, 53);
+        c.plane_mode = PlaneMode::PerStage;
+        c.link_path = LinkPath::Auto;
+        c.overlap = overlap;
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(4, 1); // swap-partner copy path
+        t.force_failure(8, 2); // boundary / weighted path
+        t.run().unwrap();
+        assert_eq!(t.record.failures(), 2);
+        let curve: Vec<u32> = t.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+        curves.push(curve);
+    }
+    assert_eq!(curves[0], curves[1], "overlap on/off diverged under churn");
 }
 
 #[test]

@@ -12,11 +12,20 @@ be executed. Checked invariants:
   sections — non-empty speedups, per-model watermark and residency
   entries with every documented field (``link_copies``/``link_bytes``
   since schema 2; ``link_direct``/``link_staged``/``donated_buffers``
-  since schema 3) — and every ``gate_*`` boolean must be true;
+  since schema 3; ``link_overlapped``/``link_blocking``/``link_wait_ns``
+  since schema 4) — and every ``gate_*`` boolean must be true;
 * at schema >= 3, a measured ``pipelined-1f1b-per-stage`` residency row
   with a nonzero ``link_staged`` column fails outright: per-stage mode
   on this testbed must take the direct link path, and a silently
   degraded run must not be committable as measured;
+* at schema >= 4, every measured residency row must satisfy
+  ``link_overlapped + link_blocking == link_copies`` (the overlap split
+  is a partition, not a sample), and the ``plane_mode`` section must
+  carry per-stage ``link_wait_ns_overlap_on`` / ``link_wait_ns_overlap_off``
+  arrays where every stage with any link wait at all waits strictly
+  less with prefetch on — a measured per-stage row where overlap on is
+  not below overlap off fails outright (both-zero stages are skipped:
+  they moved no cross-plane bytes);
 * ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
   sidecar, when present) analogously for its latency table.
 
@@ -24,6 +33,8 @@ Exit status: 0 = all files valid, 1 = any violation (listed on stderr).
 
 Usage: check_bench_json.py [FILE...]    (default: BENCH_*.json at the
 repo root, including the gitignored smoke sidecars when present)
+       check_bench_json.py --selftest   (validate the checker itself
+against the committed good/bad fixtures in scripts/fixtures/)
 """
 
 from __future__ import annotations
@@ -44,6 +55,17 @@ TRANSFER_FIELDS_V3 = TRANSFER_FIELDS_V2 + (
     "link_direct",
     "link_staged",
     "donated_buffers",
+)
+TRANSFER_FIELDS_V4 = TRANSFER_FIELDS_V3 + (
+    "link_overlapped",
+    "link_blocking",
+    "link_wait_ns",
+)
+
+PLANE_MODE_FIELDS_V4 = (
+    "link_wait_ns_overlap_on",
+    "link_wait_ns_overlap_off",
+    "gate_overlap_wait_below_off",
 )
 
 WATERMARK_FIELDS = (
@@ -130,7 +152,9 @@ class Checker:
         if status != "measured":
             return
 
-        if schema >= 3:
+        if schema >= 4:
+            transfer_fields = TRANSFER_FIELDS_V4
+        elif schema >= 3:
             transfer_fields = TRANSFER_FIELDS_V3
         elif schema >= 2:
             transfer_fields = TRANSFER_FIELDS_V2
@@ -180,7 +204,58 @@ class Checker:
                             "direct link path (staged hops mean the fast "
                             "path silently degraded; see docs/BENCHMARKS.md "
                             "gate 5)")
+                    if schema >= 4:
+                        parts = [transfers.get(k) for k in
+                                 ("link_overlapped", "link_blocking",
+                                  "link_copies")]
+                        if (all(isinstance(v, (int, float)) for v in parts)
+                                and parts[0] + parts[1] != parts[2]):
+                            self.error(
+                                f"{where}.{mode}: link_overlapped "
+                                f"({parts[0]}) + link_blocking ({parts[1]}) "
+                                f"!= link_copies ({parts[2]}) — the overlap "
+                                "split is a partition of all link copies")
                 self.check_gates_true(entry, where)
+
+        if schema >= 4:
+            self.check_plane_mode_overlap(doc)
+
+    def check_plane_mode_overlap(self, doc: dict) -> None:
+        """Schema-4 gate 7: per-stage link wait, prefetch on vs off."""
+        plane = self.require(doc, "plane_mode", dict)
+        if not isinstance(plane, dict):
+            return
+        models = {k: v for k, v in plane.items() if isinstance(v, dict)}
+        if not models:
+            self.error("measured schema>=4 run with no per-model "
+                       "'plane_mode' entries")
+        for model, entry in models.items():
+            where = f"plane_mode.{model}"
+            on = self.require(entry, "link_wait_ns_overlap_on", list, where)
+            off = self.require(entry, "link_wait_ns_overlap_off", list, where)
+            self.require(entry, "gate_overlap_wait_below_off", bool, where)
+            if isinstance(on, list) and isinstance(off, list):
+                if len(on) != len(off):
+                    self.error(f"{where}: overlap wait arrays differ in "
+                               f"length ({len(on)} vs {len(off)}) — both are "
+                               "indexed by stage")
+                else:
+                    for i, (a, b) in enumerate(zip(on, off)):
+                        if not (isinstance(a, (int, float))
+                                and isinstance(b, (int, float))):
+                            self.error(f"{where}: overlap wait arrays must "
+                                       f"be numeric (stage {i})")
+                            continue
+                        if a == 0 and b == 0:
+                            continue  # stage moved no cross-plane bytes
+                        if not (b > 0 and a < b):
+                            self.error(
+                                f"{where}: stage {i} link wait with overlap "
+                                f"on ({a} ns) is not below overlap off "
+                                f"({b} ns) — prefetch must take link time "
+                                "off the consumer's critical path (see "
+                                "docs/BENCHMARKS.md gate 7)")
+            self.check_gates_true(entry, where)
 
     def check_recovery(self, doc: dict, status) -> None:
         latencies = self.require(doc, "simulated_latencies", list)
@@ -199,7 +274,39 @@ class Checker:
                 self.require(entry, field, (str, int, float), where)
 
 
+def selftest() -> int:
+    """Run the checker against the committed fixtures: the good one must
+    pass clean, the bad-wait one must be rejected *for the overlap gate*
+    (not for some incidental structural reason). This is the cargo-less
+    CI proof that gate 7 actually has teeth."""
+    fixtures = Path(__file__).resolve().parent / "fixtures"
+    ok = True
+
+    good = Checker(fixtures / "bench_schema4_good.json")
+    good.check()
+    if good.errors:
+        ok = False
+        print("selftest FAIL: good fixture rejected:", file=sys.stderr)
+        for err in good.errors:
+            print(f"  {err}", file=sys.stderr)
+
+    bad = Checker(fixtures / "bench_schema4_bad_wait.json")
+    bad.check()
+    if not any("is not below overlap off" in err for err in bad.errors):
+        ok = False
+        print("selftest FAIL: bad-wait fixture was not rejected for the "
+              "overlap wait gate; errors were:", file=sys.stderr)
+        for err in bad.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    print("selftest ok" if ok else "selftest FAILED",
+          file=sys.stdout if ok else sys.stderr)
+    return 0 if ok else 1
+
+
 def main(argv: list[str]) -> int:
+    if argv == ["--selftest"]:
+        return selftest()
     repo_root = Path(__file__).resolve().parent.parent
     paths = [Path(p) for p in argv] or sorted(repo_root.glob("BENCH_*.json"))
     if not paths:

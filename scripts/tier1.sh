@@ -96,10 +96,14 @@ fi
 # failing early step cannot be masked by a passing later one.
 
 # The bench-schema check is pure python stdlib — it must work (and is
-# exercised by CI) even in a cargo-less container.
+# exercised by CI) even in a cargo-less container. The --selftest pass
+# runs first: it proves the checker rejects the bad-wait fixture, so a
+# green schema gate means the overlap gate has teeth, not just that
+# the committed files happen to parse.
 schema_gate() {
     echo "== bench JSON schema check =="
     if command -v python3 >/dev/null 2>&1; then
+        python3 "$repo_root/scripts/check_bench_json.py" --selftest || return 1
         python3 "$repo_root/scripts/check_bench_json.py" || return 1
     else
         echo "python3 unavailable; skipping bench-schema gate" >&2
