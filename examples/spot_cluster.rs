@@ -6,22 +6,35 @@
 //! graphs → AOT HLO → Rust PJRT runtime → coordinator/recovery.
 //!
 //! ```bash
-//! cargo run --release --example spot_cluster [-- iterations [model]]
+//! cargo run --release --example spot_cluster \
+//!     [-- iterations [model [churn-process [trace]]]]
 //! # model: e2e (default, 8 layers), convergence (12 layers)
+//! # churn-process: bernoulli (default) | poisson | bursty | correlated
+//! # trace: record:<path> — write this run's churn tape (JSONL);
+//! #        replay:<path> — re-run an existing tape verbatim, e.g. the
+//! #        committed examples/traces/spot_burst.jsonl, so every
+//! #        strategy/config change is compared on the same churn
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use std::time::Instant;
 
-use checkfree::config::{FailureSpec, Strategy, TrainConfig};
+use checkfree::config::{FailureSpec, Strategy, TraceMode, TrainConfig};
 use checkfree::coordinator::Trainer;
+use checkfree::failures::ChurnProcessKind;
 use checkfree::metrics::write_csv;
 use checkfree::Result;
 
 fn main() -> Result<()> {
     let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
     let model = std::env::args().nth(2).unwrap_or_else(|| "e2e".into());
+    let churn: ChurnProcessKind = std::env::args()
+        .nth(3)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(ChurnProcessKind::Bernoulli);
+    let trace: Option<TraceMode> = std::env::args().nth(4).map(|s| s.parse()).transpose()?;
     let cfg = TrainConfig {
         model: model.clone(),
         strategy: Strategy::CheckFreePlus,
@@ -30,6 +43,8 @@ fn main() -> Result<()> {
         failure: FailureSpec::PerIteration { rate: 0.01 },
         eval_every: 10,
         seed: 20250710,
+        churn_process: churn,
+        churn_trace: trace.clone(),
         ..TrainConfig::default()
     };
     let mut trainer = Trainer::new(cfg)?;
@@ -45,7 +60,19 @@ fn main() -> Result<()> {
         mc.context,
         mc.vocab
     );
-    println!("strategy checkfree+ | churn 1%/stage/iter | {iters} iterations\n");
+    match &trace {
+        Some(TraceMode::Replay(path)) => {
+            println!("strategy checkfree+ | churn tape {path} (replay) | {iters} iterations\n")
+        }
+        Some(TraceMode::Record(path)) => println!(
+            "strategy checkfree+ | churn {} 1%/stage/iter → {path} | {iters} iterations\n",
+            churn.label()
+        ),
+        None => println!(
+            "strategy checkfree+ | churn {} 1%/stage/iter | {iters} iterations\n",
+            churn.label()
+        ),
+    }
 
     let wall = Instant::now();
     let mut last_report = Instant::now();

@@ -430,6 +430,41 @@ impl FailureSpec {
     }
 }
 
+/// Churn trace mode (CLI: `--churn-trace record:<path>|replay:<path>`).
+///
+/// `record` streams the run's *filtered* failure schedule to a JSONL
+/// tape as it happens; `replay` serves an existing tape verbatim (the
+/// stochastic churn knobs are ignored), so every strategy can be
+/// compared on the same churn. See `failures::trace` for the format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceMode {
+    Record(String),
+    Replay(String),
+}
+
+impl TraceMode {
+    pub fn label(&self) -> String {
+        match self {
+            TraceMode::Record(p) => format!("record:{p}"),
+            TraceMode::Replay(p) => format!("replay:{p}"),
+        }
+    }
+}
+
+impl FromStr for TraceMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.split_once(':') {
+            Some(("record", path)) if !path.is_empty() => Ok(TraceMode::Record(path.into())),
+            Some(("replay", path)) if !path.is_empty() => Ok(TraceMode::Replay(path.into())),
+            _ => Err(anyhow!(
+                "bad churn trace '{s}' (expected record:<path> or replay:<path>)"
+            )),
+        }
+    }
+}
+
 /// One training run (real compute through the PJRT executables).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -471,6 +506,16 @@ pub struct TrainConfig {
     /// Whether cross-plane link copies are prefetched on the sending
     /// side (see [`Overlap`]). Defaults to [`Overlap::from_env`].
     pub overlap: Overlap,
+    /// Which churn arrival process drives failure injection (see
+    /// `failures::process`). Bernoulli is the paper's flat model and
+    /// the default; ignored when replaying a churn trace.
+    pub churn_process: crate::failures::ChurnProcessKind,
+    /// Record the failure schedule to a tape, or replay an existing one
+    /// (`--churn-trace record:<path>|replay:<path>`).
+    pub churn_trace: Option<TraceMode>,
+    /// Lift the paper's no-two-adjacent-failures assumption (probing
+    /// mode — lets region-correlated churn co-fail neighbour stages).
+    pub allow_adjacent: bool,
 }
 
 impl Default for TrainConfig {
@@ -494,6 +539,9 @@ impl Default for TrainConfig {
             plane_mode: PlaneMode::from_env(),
             link_path: LinkPath::from_env(),
             overlap: Overlap::from_env(),
+            churn_process: crate::failures::ChurnProcessKind::Bernoulli,
+            churn_trace: None,
+            allow_adjacent: false,
         }
     }
 }
@@ -533,6 +581,15 @@ impl TrainConfig {
             ("plane_mode", Json::str(self.plane_mode.label())),
             ("link_path", Json::str(self.link_path.label())),
             ("overlap", Json::str(self.overlap.label())),
+            ("churn_process", Json::str(self.churn_process.label())),
+            (
+                "churn_trace",
+                self.churn_trace
+                    .as_ref()
+                    .map(|t| Json::str(t.label()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("allow_adjacent", Json::Bool(self.allow_adjacent)),
         ])
     }
 
@@ -622,6 +679,18 @@ impl TrainConfig {
             overlap: match v.opt("overlap") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.overlap,
+            },
+            churn_process: match v.opt("churn_process") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.churn_process,
+            },
+            churn_trace: match v.opt("churn_trace") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_str()?.parse()?),
+            },
+            allow_adjacent: match v.opt("allow_adjacent") {
+                Some(x) => x.as_bool()?,
+                None => d.allow_adjacent,
             },
         })
     }
@@ -919,5 +988,50 @@ mod tests {
         use std::collections::HashSet;
         let labels: HashSet<_> = Strategy::ALL.iter().map(|s| s.label()).collect();
         assert_eq!(labels.len(), Strategy::ALL.len());
+    }
+
+    #[test]
+    fn trace_mode_parses_and_labels_round_trip() {
+        let r: TraceMode = "record:/tmp/tape.jsonl".parse().unwrap();
+        assert_eq!(r, TraceMode::Record("/tmp/tape.jsonl".into()));
+        let p: TraceMode = "replay:examples/traces/spot_burst.jsonl".parse().unwrap();
+        assert_eq!(p, TraceMode::Replay("examples/traces/spot_burst.jsonl".into()));
+        for t in [&r, &p] {
+            assert_eq!(t.label().parse::<TraceMode>().unwrap(), *t);
+        }
+        assert!("record:".parse::<TraceMode>().is_err());
+        assert!("playback:x".parse::<TraceMode>().is_err());
+        assert!("bogus".parse::<TraceMode>().is_err());
+    }
+
+    #[test]
+    fn churn_fields_roundtrip_and_default() {
+        use crate::failures::ChurnProcessKind;
+        let d = TrainConfig::default();
+        assert_eq!(d.churn_process, ChurnProcessKind::Bernoulli);
+        assert_eq!(d.churn_trace, None);
+        assert!(!d.allow_adjacent);
+        for kind in ChurnProcessKind::ALL {
+            let cfg = TrainConfig {
+                churn_process: kind,
+                churn_trace: Some(TraceMode::Record("/tmp/t.jsonl".into())),
+                allow_adjacent: kind == ChurnProcessKind::Correlated,
+                ..TrainConfig::default()
+            };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.churn_process, kind);
+            assert_eq!(back.churn_trace, cfg.churn_trace);
+            assert_eq!(back.allow_adjacent, cfg.allow_adjacent);
+        }
+        // absent keys → defaults (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.churn_process, ChurnProcessKind::Bernoulli);
+        assert_eq!(back.churn_trace, None);
+        assert!(!back.allow_adjacent);
     }
 }

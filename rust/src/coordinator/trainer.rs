@@ -53,7 +53,8 @@ impl Trainer {
         let total = engine.stages.len();
         // S0 (E/E⁻¹) can only fail when the strategy can restore it exactly.
         let embed_can_fail = cfg.strategy == crate::config::Strategy::CheckFreePlus && false;
-        let injector = FailureInjector::new(cfg.failure, total, embed_can_fail, cfg.seed);
+        let injector = FailureInjector::from_config(&cfg, total, embed_can_fail)
+            .context("building failure injector")?;
         let mut strategy = make_strategy(&cfg)?;
         let net = Network::round_robin(total);
         let record = RunRecord::new(cfg.strategy.label());

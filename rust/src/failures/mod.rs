@@ -1,48 +1,160 @@
-//! Seeded stage-failure injector (paper §3 "Failure pattern").
+//! Seeded stage-failure injection (paper §3 "Failure pattern") — now a
+//! **scenario factory**: the injector is a thin front-end over a
+//! pluggable [`ChurnProcess`] (Bernoulli / Poisson / bursty /
+//! region-correlated) plus JSONL trace record/replay, so strategies can
+//! be compared under richer churn than the paper's flat model while
+//! every invariant stays pinned by the property tests below.
 //!
 //! Semantics follow the paper exactly:
-//! * only **whole-stage** failures are modelled (partial-node failures are
-//!   trivially recovered from same-stage replicas and are out of scope);
-//! * the embed stage `S0` never fails in the throughput/convergence tests
-//!   (§5.1: "All nodes, except for those in the first stage (holding E and
-//!   E⁻¹) can fail") — configurable for the CheckFree+ replication test;
-//! * **no two consecutive stages fail together** (assumption shared with
-//!   Bamboo's redundant computation);
+//! * only **whole-stage** failures are modelled (partial-node failures
+//!   are trivially recovered from same-stage replicas, out of scope);
+//! * the embed stage `S0` never fails in the throughput/convergence
+//!   tests (§5.1: "All nodes, except for those in the first stage
+//!   (holding E and E⁻¹) can fail") — configurable for the CheckFree+
+//!   replication test;
+//! * **no two consecutive stages fail together** (assumption shared
+//!   with Bamboo's redundant computation) — unless `allow_adjacent` is
+//!   set, which exists precisely so the correlated process can probe
+//!   what happens when the assumption breaks;
 //! * the schedule is a pure function of the seed, so different recovery
-//!   strategies are evaluated against the *same* failure pattern (§5.1).
+//!   strategies are evaluated against the *same* failure pattern
+//!   (§5.1), and a recorded trace replays bit-for-bit on any strategy.
+//!
+//! Division of labour: a [`ChurnProcess`] decides raw arrivals; this
+//! front-end applies the paper's filters (failable set, dedup,
+//! adjacency deferral), merges forced events, and optionally records
+//! the *filtered* schedule to a tape. Trace replay is verbatim — the
+//! filters already ran at record time.
 
-use crate::config::FailureSpec;
-use crate::rng::Rng;
+pub mod process;
+pub mod trace;
 
-#[derive(Debug, Clone)]
+pub use process::{make_process, ChurnProcess, ChurnProcessKind};
+pub use trace::{ChurnTrace, TraceEvent, TraceRecorder, TraceReplay};
+
+use crate::config::{FailureSpec, TraceMode, TrainConfig};
+use crate::netsim::{Network, Region};
+use crate::Result;
+
+#[derive(Debug)]
 pub struct FailureInjector {
-    rng: Rng,
-    /// Per-stage per-iteration failure probability.
-    p: f64,
+    process: Box<dyn ChurnProcess>,
     /// Stage indices that are allowed to fail.
     failable: Vec<usize>,
-    /// Extra deterministic events: (iteration, stage).
+    /// Extra deterministic events: (iteration, stage). Consumed as they
+    /// fire — each forced event fires exactly once.
     forced: Vec<(u64, usize)>,
+    /// Permit adjacent-stage co-failures (probing mode; see module doc).
+    allow_adjacent: bool,
+    /// Trace replay: serve the tape verbatim, skipping the filters.
+    verbatim: bool,
+    /// Stage → region map; annotates recorded events and scopes the
+    /// correlated process.
+    placement: Vec<Region>,
+    recorder: Option<TraceRecorder>,
 }
 
 impl FailureInjector {
-    /// `total_stages` includes the embed stage at index 0.
-    /// `embed_can_fail` adds stage 0 to the failable set (CheckFree+
-    /// replication experiments only).
+    /// The paper's flat Bernoulli model — bit-exact with the
+    /// pre-refactor injector for any seed. `total_stages` includes the
+    /// embed stage at index 0; `embed_can_fail` adds stage 0 to the
+    /// failable set (CheckFree+ replication experiments only).
     pub fn new(spec: FailureSpec, total_stages: usize, embed_can_fail: bool, seed: u64) -> Self {
+        Self::with_process(
+            ChurnProcessKind::Bernoulli,
+            spec,
+            total_stages,
+            embed_can_fail,
+            seed,
+            false,
+        )
+    }
+
+    /// Scenario-factory constructor: any churn process, optionally with
+    /// the no-two-adjacent assumption lifted.
+    pub fn with_process(
+        kind: ChurnProcessKind,
+        spec: FailureSpec,
+        total_stages: usize,
+        embed_can_fail: bool,
+        seed: u64,
+        allow_adjacent: bool,
+    ) -> Self {
         let mut failable: Vec<usize> = (1..total_stages).collect();
         if embed_can_fail {
             failable.insert(0, 0);
         }
+        // Correlated churn groups stages by region, so it gets the
+        // blocked (contiguous) placement where region co-failure means
+        // adjacent stages — the regime it exists to probe. Everything
+        // else keeps the paper's round-robin deployment.
+        let net = match kind {
+            ChurnProcessKind::Correlated => Network::blocked(total_stages.max(1)),
+            _ => Network::round_robin(total_stages.max(1)),
+        };
+        let process =
+            make_process(kind, spec.per_iteration(), failable.clone(), &net.placement, seed);
         Self {
-            rng: Rng::new(seed ^ 0xFA11),
-            p: spec.per_iteration(),
+            process,
             failable,
             forced: Vec::new(),
+            allow_adjacent,
+            verbatim: false,
+            placement: net.placement,
+            recorder: None,
         }
     }
 
-    /// Schedule a deterministic failure (tests, Fig 2 ablation).
+    /// Replay a recorded churn tape verbatim: the tape IS the schedule
+    /// (filters already applied at record time), so every strategy sees
+    /// identical failures.
+    pub fn replay(tape: ChurnTrace, total_stages: usize) -> Self {
+        let net = Network::round_robin(total_stages.max(1));
+        Self {
+            process: Box::new(TraceReplay::new(tape)),
+            failable: (0..total_stages).collect(),
+            forced: Vec::new(),
+            allow_adjacent: true,
+            verbatim: true,
+            placement: net.placement,
+            recorder: None,
+        }
+    }
+
+    /// Build from a [`TrainConfig`]: honours `churn_process`,
+    /// `allow_adjacent`, and `churn_trace` (record:<path> starts a
+    /// recorder; replay:<path> loads the tape and ignores the
+    /// stochastic knobs).
+    pub fn from_config(
+        cfg: &TrainConfig,
+        total_stages: usize,
+        embed_can_fail: bool,
+    ) -> Result<Self> {
+        if let Some(TraceMode::Replay(path)) = &cfg.churn_trace {
+            return Ok(Self::replay(ChurnTrace::read_file(path)?, total_stages));
+        }
+        let mut inj = Self::with_process(
+            cfg.churn_process,
+            cfg.failure,
+            total_stages,
+            embed_can_fail,
+            cfg.seed,
+            cfg.allow_adjacent,
+        );
+        if let Some(TraceMode::Record(path)) = &cfg.churn_trace {
+            inj.record_to(path)?;
+        }
+        Ok(inj)
+    }
+
+    /// Start recording the filtered schedule to a JSONL tape at `path`.
+    pub fn record_to(&mut self, path: &str) -> Result<()> {
+        self.recorder = Some(TraceRecorder::create(path)?);
+        Ok(())
+    }
+
+    /// Schedule a deterministic failure (tests, Fig 2 ablation). Fires
+    /// exactly once, bypassing the failable filter like it always has.
     pub fn force(&mut self, iteration: u64, stage: usize) {
         self.forced.push((iteration, stage));
     }
@@ -51,34 +163,82 @@ impl FailureInjector {
         &self.failable
     }
 
-    /// Sample failures for this iteration. Multiple stages can fail in one
-    /// iteration, but never two adjacent ones (the later one is deferred —
-    /// its node survives this round, matching the paper's assumption that
-    /// the adversary never removes two consecutive stages at once).
+    pub fn process_label(&self) -> &'static str {
+        self.process.label()
+    }
+
+    /// The earliest iteration `>= from` that can contain a failure, or
+    /// `None` for dense processes (every iteration is a candidate). The
+    /// event-driven simulator uses this to jump over quiet spans; the
+    /// trainer ignores it.
+    pub fn next_event_hint(&mut self, from: u64) -> Option<u64> {
+        let process_hint = self.process.next_event_hint(from)?;
+        let forced_hint = self
+            .forced
+            .iter()
+            .map(|&(it, _)| it)
+            .filter(|&it| it >= from)
+            .min();
+        Some(match forced_hint {
+            Some(f) => process_hint.min(f),
+            None => process_hint,
+        })
+    }
+
+    /// Sample failures for this iteration. Multiple stages can fail in
+    /// one iteration, but never two adjacent ones (the later one is
+    /// deferred — its node survives this round, matching the paper's
+    /// assumption that the adversary never removes two consecutive
+    /// stages at once) unless `allow_adjacent` / verbatim replay.
     pub fn sample(&mut self, iteration: u64) -> Vec<usize> {
         let mut failed: Vec<usize> = Vec::new();
-        for (it, stage) in self.forced.clone() {
-            if it == iteration {
-                failed.push(stage);
+        let mut forced_now: Vec<usize> = Vec::new();
+        // Consume matching forced events in place (swap_remove): no
+        // per-call clone, and each event can only ever fire once.
+        let mut i = 0;
+        while i < self.forced.len() {
+            if self.forced[i].0 == iteration {
+                let (_, stage) = self.forced.swap_remove(i);
+                forced_now.push(stage);
+            } else {
+                i += 1;
             }
         }
-        // Bernoulli per failable stage — the same draws happen in the same
-        // order regardless of which stages end up filtered, so the pattern
-        // is strategy-independent for a fixed seed.
-        for &stage in &self.failable {
-            if self.rng.chance(self.p) {
+        failed.extend_from_slice(&forced_now);
+        for stage in self.process.sample_iteration(iteration) {
+            // Verbatim replay trusts the tape; live processes are
+            // clipped to the failable set (defence in depth — the
+            // processes are built over that set already).
+            if self.verbatim || self.failable.contains(&stage) {
                 failed.push(stage);
             }
         }
         failed.sort_unstable();
         failed.dedup();
-        // enforce the non-consecutive assumption: keep the earlier stage
-        let mut kept: Vec<usize> = Vec::with_capacity(failed.len());
-        for s in failed {
-            if kept.last().is_some_and(|&k| k + 1 == s) {
-                continue;
+        let kept = if self.allow_adjacent || self.verbatim {
+            failed
+        } else {
+            // enforce the non-consecutive assumption: keep the earlier stage
+            let mut kept: Vec<usize> = Vec::with_capacity(failed.len());
+            for s in failed {
+                if kept.last().is_some_and(|&k| k + 1 == s) {
+                    continue;
+                }
+                kept.push(s);
             }
-            kept.push(s);
+            kept
+        };
+        if let Some(rec) = &mut self.recorder {
+            let label = self.process.label();
+            for &stage in &kept {
+                let kind = if forced_now.contains(&stage) { "forced" } else { label };
+                rec.append(&TraceEvent {
+                    iteration,
+                    stage,
+                    region: self.placement.get(stage).copied(),
+                    kind: kind.to_string(),
+                });
+            }
         }
         kept
     }
@@ -90,6 +250,16 @@ mod tests {
 
     fn per_iter(rate: f64) -> FailureSpec {
         FailureSpec::PerIteration { rate }
+    }
+
+    fn with(
+        kind: ChurnProcessKind,
+        rate: f64,
+        stages: usize,
+        seed: u64,
+        allow_adjacent: bool,
+    ) -> FailureInjector {
+        FailureInjector::with_process(kind, per_iter(rate), stages, false, seed, allow_adjacent)
     }
 
     #[test]
@@ -159,11 +329,253 @@ mod tests {
     }
 
     #[test]
+    fn forced_event_consumed_not_cloned() {
+        // Re-sampling the same iteration must NOT re-fire the event:
+        // the old clone-per-call implementation would have.
+        let mut inj = FailureInjector::new(per_iter(0.0), 6, false, 0);
+        inj.force(5, 2);
+        inj.force(5, 4);
+        let mut first = inj.sample(5);
+        first.sort_unstable();
+        assert_eq!(first, vec![2, 4]);
+        assert!(inj.sample(5).is_empty(), "forced events fired twice");
+        assert!(inj.forced.is_empty(), "consumed events still queued");
+    }
+
+    #[test]
     fn zero_rate_never_fails() {
         let mut inj = FailureInjector::new(per_iter(0.0), 7, true, 1);
         for it in 0..1000 {
             assert!(inj.sample(it).is_empty());
         }
+    }
+
+    #[test]
+    fn hint_covers_forced_events() {
+        // Poisson is stream-based (has hints); a forced event earlier
+        // than the next arrival must win the min.
+        let mut inj = with(ChurnProcessKind::Poisson, 1e-6, 8, 3, false);
+        inj.force(4, 2);
+        let h = inj.next_event_hint(0).unwrap();
+        assert!(h <= 4, "hint {h} skipped the forced event");
+        // consume it, and the hint moves past 4
+        for it in 0..=4 {
+            inj.sample(it);
+        }
+        assert!(inj.next_event_hint(5).unwrap() > 4);
+    }
+
+    // ---------------- scenario-factory property tests ----------------
+
+    /// same seed ⇒ identical schedule, for every process, across runs.
+    #[test]
+    fn property_same_seed_same_schedule_all_processes() {
+        for kind in ChurnProcessKind::ALL {
+            crate::util::propcheck::forall(
+                "churn-determinism",
+                20,
+                101,
+                |r, size| (2 + r.below(size.max(2)), r.next_u64(), 0.02 + r.uniform() * 0.2),
+                |&(stages, seed, rate)| {
+                    let mut a = with(kind, rate, stages, seed, false);
+                    let mut b = with(kind, rate, stages, seed, false);
+                    (0..300).all(|it| a.sample(it) == b.sample(it))
+                },
+            );
+        }
+    }
+
+    /// The schedule is independent of anything but the seed/process —
+    /// in particular of embed protection of OTHER stages: filters are
+    /// applied after the draw stream.
+    #[test]
+    fn property_schedule_survives_downstream_filtering() {
+        // Same seed, adjacency filter on vs off: the filtered schedule
+        // must be a subset of the unfiltered one, iteration by
+        // iteration (the filter defers, never adds or reorders draws).
+        for kind in ChurnProcessKind::ALL {
+            let mut open = with(kind, 0.3, 9, 42, true);
+            let mut filt = with(kind, 0.3, 9, 42, false);
+            for it in 0..500 {
+                let all = open.sample(it);
+                let kept = filt.sample(it);
+                assert!(
+                    kept.iter().all(|s| all.contains(s)),
+                    "{}: filtered {kept:?} ⊄ raw {all:?} at {it}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    /// no two adjacent stages in one round unless allow_adjacent.
+    #[test]
+    fn property_non_consecutive_all_processes() {
+        for kind in ChurnProcessKind::ALL {
+            crate::util::propcheck::forall(
+                "churn-non-consecutive",
+                25,
+                77,
+                |r, size| (r.uniform() * 0.8, 2 + r.below(size.max(2)), r.next_u64()),
+                |&(rate, stages, seed)| {
+                    let mut inj = with(kind, rate, stages, seed, false);
+                    (0..200).all(|it| inj.sample(it).windows(2).all(|w| w[1] > w[0] + 1))
+                },
+            );
+        }
+    }
+
+    /// allow_adjacent + correlated churn CAN violate the assumption —
+    /// the probing mode actually probes.
+    #[test]
+    fn correlated_with_allow_adjacent_produces_adjacent_failures() {
+        let mut inj = with(ChurnProcessKind::Correlated, 0.5, 10, 1, true);
+        let mut saw_adjacent = false;
+        for it in 0..2000 {
+            let f = inj.sample(it);
+            saw_adjacent |= f.windows(2).any(|w| w[1] == w[0] + 1);
+            if saw_adjacent {
+                break;
+            }
+        }
+        assert!(saw_adjacent, "blocked-placement region churn never co-failed neighbours");
+    }
+
+    /// embed stage never fails unless embed_can_fail, for every process.
+    #[test]
+    fn property_embed_protected_all_processes() {
+        for kind in ChurnProcessKind::ALL {
+            crate::util::propcheck::forall(
+                "churn-embed-protected",
+                20,
+                55,
+                |r, size| (r.uniform() * 0.9, 2 + r.below(size.max(2)), r.next_u64()),
+                |&(rate, stages, seed)| {
+                    let mut inj = FailureInjector::with_process(
+                        kind,
+                        per_iter(rate),
+                        stages,
+                        false,
+                        seed,
+                        true, // even with adjacency open, embed stays shut
+                    );
+                    (0..200).all(|it| !inj.sample(it).contains(&0))
+                },
+            );
+        }
+    }
+
+    /// forced events always fire, whatever the process underneath.
+    #[test]
+    fn property_forced_fire_all_processes() {
+        for kind in ChurnProcessKind::ALL {
+            crate::util::propcheck::forall(
+                "churn-forced-fire",
+                20,
+                33,
+                |r, _| (r.below(100) as u64, 1 + r.below(6), r.next_u64()),
+                |&(when, stage, seed)| {
+                    let mut inj = with(kind, 0.0, 8, seed, false);
+                    inj.force(when, stage);
+                    (0..100u64).any(|it| inj.sample(it).contains(&stage))
+                },
+            );
+        }
+    }
+
+    /// empirical rate converges to the configured rate over 10k iters.
+    ///
+    /// Tolerances are analytic, not tuned: with one failable stage at
+    /// rate r over n=10 000 draws the binomial sd is √(r(1-r)/n) ≤
+    /// 0.003 for r ≤ 0.1, so [0.5r, 1.5r] is ≥ 6σ wide for r ≥ 0.04.
+    /// Bursty clusters draws (effective sample count ~n/burst-length)
+    /// and correlated rounds gaps to iterations, so they get the same
+    /// generous band. Adjacency must be open or deferral eats events.
+    #[test]
+    fn property_empirical_rate_converges_all_processes() {
+        let n = 10_000u64;
+        for kind in ChurnProcessKind::ALL {
+            for &(rate, seed) in &[(0.04, 7u64), (0.1, 19u64)] {
+                // 2 failable stages → per-stage rate is count / (2n)
+                let mut inj = with(kind, rate, 3, seed, true);
+                let mut count = 0usize;
+                for it in 0..n {
+                    count += inj.sample(it).len();
+                }
+                let observed = count as f64 / (2.0 * n as f64);
+                assert!(
+                    observed > 0.5 * rate && observed < 1.5 * rate,
+                    "{}: observed {observed:.4} vs configured {rate}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replay_bypasses_failable_filter_and_adjacency() {
+        // A tape can contain anything the recording run produced —
+        // including embed failures and adjacent pairs from a probing
+        // run. Replay must serve it verbatim.
+        let tape = ChurnTrace::parse(
+            "{\"iteration\":2,\"stage\":0,\"kind\":\"forced\"}\n\
+             {\"iteration\":5,\"stage\":3,\"kind\":\"correlated\"}\n\
+             {\"iteration\":5,\"stage\":4,\"kind\":\"correlated\"}\n",
+        )
+        .unwrap();
+        let mut inj = FailureInjector::replay(tape, 6);
+        assert_eq!(inj.sample(2), vec![0]);
+        assert_eq!(inj.sample(5), vec![3, 4]);
+    }
+
+    #[test]
+    fn record_then_replay_is_bitwise_identical() {
+        let dir = std::env::temp_dir().join("checkfree_injector_record_test");
+        let path = dir.join("tape.jsonl");
+        let path_s = path.to_str().unwrap();
+
+        let mut live = with(ChurnProcessKind::Bursty, 0.1, 8, 23, false);
+        live.force(50, 3);
+        live.record_to(path_s).unwrap();
+        let mut schedule = Vec::new();
+        for it in 0..400u64 {
+            let f = live.sample(it);
+            if !f.is_empty() {
+                schedule.push((it, f));
+            }
+        }
+        assert!(!schedule.is_empty(), "no events to compare");
+
+        let mut replayed = FailureInjector::replay(ChurnTrace::read_file(path_s).unwrap(), 8);
+        for it in 0..400u64 {
+            let f = replayed.sample(it);
+            let expect = schedule
+                .iter()
+                .find(|(e_it, _)| *e_it == it)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            assert_eq!(f, expect, "replay diverged at {it}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recorded_kind_distinguishes_forced_from_process() {
+        let dir = std::env::temp_dir().join("checkfree_injector_kind_test");
+        let path = dir.join("tape.jsonl");
+        let path_s = path.to_str().unwrap();
+        let mut live = with(ChurnProcessKind::Bernoulli, 0.2, 6, 11, false);
+        live.force(7, 2);
+        live.record_to(path_s).unwrap();
+        for it in 0..200u64 {
+            live.sample(it);
+        }
+        let tape = ChurnTrace::read_file(path_s).unwrap();
+        assert!(tape.events.iter().any(|e| e.kind == "forced" && e.iteration == 7));
+        assert!(tape.events.iter().any(|e| e.kind == "bernoulli"));
+        // every recorded event carries its region annotation
+        assert!(tape.events.iter().all(|e| e.region.is_some()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -174,11 +586,8 @@ mod tests {
             77,
             |r, size| (r.uniform(), 2 + r.below(size.max(2)), r.next_u64()),
             |&(rate, stages, seed)| {
-                let mut inj =
-                    FailureInjector::new(per_iter(rate), stages, false, seed);
-                (0..100).all(|it| {
-                    inj.sample(it).windows(2).all(|w| w[1] > w[0] + 1)
-                })
+                let mut inj = FailureInjector::new(per_iter(rate), stages, false, seed);
+                (0..100).all(|it| inj.sample(it).windows(2).all(|w| w[1] > w[0] + 1))
             },
         );
     }

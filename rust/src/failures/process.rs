@@ -1,0 +1,591 @@
+//! Churn arrival processes — the stochastic half of the scenario factory.
+//!
+//! A [`ChurnProcess`] decides *when* stage-failure events arrive; the
+//! [`crate::failures::FailureInjector`] front-end decides what survives
+//! (embed protection, the no-two-adjacent assumption, forced events,
+//! trace recording). Keeping the two separate means every process obeys
+//! the same invariants by construction and each process's tests only
+//! have to pin its arrival statistics.
+//!
+//! Four processes ship (paper §5.1 uses only the first):
+//! * **Bernoulli** — flat per-stage per-iteration coin flip, bit-exact
+//!   with the pre-refactor injector so seeded experiment schedules are
+//!   unchanged;
+//! * **Poisson** — exponential inter-arrival times per stage (the
+//!   memoryless continuous-churn model spot fleets are usually fit to);
+//! * **Bursty** — an on/off Markov alternation of calm and burst
+//!   windows; inside a burst every stage flips a much hotter coin, so
+//!   failures cluster the way preemption waves do;
+//! * **Correlated** — region-scoped: whole [`Region`]s fail at once
+//!   under a *blocked* placement (contiguous stages share a region), so
+//!   adjacent stages can die together — the regime the paper's
+//!   no-two-adjacent assumption excludes, reachable on purpose via
+//!   `allow_adjacent` to probe where CheckFree actually breaks.
+//!
+//! Determinism contract (pinned by propcheck in `failures::tests`): a
+//! process's schedule is a pure function of its seed and the sequence of
+//! iterations it is asked about. Stream-based processes (Poisson,
+//! Correlated, and burst *windows*) pre-generate arrivals, so they
+//! produce the same schedule even when a caller skips ahead via
+//! [`ChurnProcess::next_event_hint`]; the dense coin-flip processes
+//! (Bernoulli, and Bursty inside a burst window) consume one draw per
+//! queried iteration and therefore return `None` hints for those spans.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::str::FromStr;
+
+use crate::netsim::Region;
+use crate::rng::Rng;
+use crate::{anyhow, Result};
+
+/// Which churn arrival process drives the failure injector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChurnProcessKind {
+    /// Flat per-stage per-iteration Bernoulli coin (paper §5.1).
+    Bernoulli,
+    /// Per-stage Poisson arrivals (exponential inter-arrival times).
+    Poisson,
+    /// On/off Markov bursts: calm windows with no failures, burst
+    /// windows with a proportionally hotter per-stage coin.
+    Bursty,
+    /// Region-correlated: whole regions fail together under a blocked
+    /// (contiguous) stage placement.
+    Correlated,
+}
+
+impl ChurnProcessKind {
+    pub const ALL: [ChurnProcessKind; 4] = [
+        ChurnProcessKind::Bernoulli,
+        ChurnProcessKind::Poisson,
+        ChurnProcessKind::Bursty,
+        ChurnProcessKind::Correlated,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnProcessKind::Bernoulli => "bernoulli",
+            ChurnProcessKind::Poisson => "poisson",
+            ChurnProcessKind::Bursty => "bursty",
+            ChurnProcessKind::Correlated => "correlated",
+        }
+    }
+}
+
+impl FromStr for ChurnProcessKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "bernoulli" | "flat" => Ok(ChurnProcessKind::Bernoulli),
+            "poisson" | "exponential" => Ok(ChurnProcessKind::Poisson),
+            "bursty" | "burst" | "on-off" => Ok(ChurnProcessKind::Bursty),
+            "correlated" | "region" | "regional" => Ok(ChurnProcessKind::Correlated),
+            other => Err(anyhow!(
+                "unknown churn process '{other}' (bernoulli|poisson|bursty|correlated)"
+            )),
+        }
+    }
+}
+
+/// A stochastic source of raw failure candidates.
+///
+/// The injector post-filters (failable set, adjacency, dedup) — a
+/// process only decides arrivals. `sample_iteration` must be called with
+/// strictly increasing iterations; events that land on never-queried
+/// iterations of a stream-based process are silently dropped (the
+/// caller skipped them on purpose via `next_event_hint`).
+pub trait ChurnProcess: std::fmt::Debug + Send {
+    fn label(&self) -> &'static str;
+
+    /// Raw failure candidates (stage indices, possibly duplicated /
+    /// adjacent / out of range — the injector filters) at `iteration`.
+    fn sample_iteration(&mut self, iteration: u64) -> Vec<usize>;
+
+    /// The earliest iteration `>= from` that can contain an arrival.
+    /// `None` means every iteration is a candidate and the caller must
+    /// step one by one (dense coin-flip processes). The event-driven
+    /// simulator jumps over the gap in O(1); callers that iterate every
+    /// iteration anyway (the trainer) never need the hint.
+    fn next_event_hint(&mut self, from: u64) -> Option<u64> {
+        let _ = from;
+        None
+    }
+}
+
+/// Geometric(p) number of failures before the first success, sampled in
+/// closed form: `floor(ln(1-U) / ln(1-p))`. Used for inter-arrival gaps
+/// so stream processes are O(events), not O(iterations).
+fn geometric(rng: &mut Rng, p: f64) -> u64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    let u = rng.uniform(); // in [0, 1) → 1-u in (0, 1]
+    ((1.0 - u).ln() / (1.0 - p).ln()).floor() as u64
+}
+
+/// Exponential inter-arrival time with rate `lambda` (events/iteration).
+fn exponential(rng: &mut Rng, lambda: f64) -> f64 {
+    debug_assert!(lambda > 0.0);
+    let u = rng.uniform();
+    -(1.0 - u).ln() / lambda
+}
+
+// ---------------------------------------------------------------------------
+// Bernoulli — bit-exact with the pre-refactor injector
+// ---------------------------------------------------------------------------
+
+/// The paper's flat failure model: every failable stage flips an
+/// independent coin each queried iteration.
+///
+/// The RNG seeding (`seed ^ 0xFA11`) and per-stage draw order replicate
+/// the pre-trait `FailureInjector` exactly, so every seeded experiment
+/// in the repo keeps its historical failure schedule.
+#[derive(Debug, Clone)]
+pub struct BernoulliChurn {
+    rng: Rng,
+    p: f64,
+    stages: Vec<usize>,
+}
+
+impl BernoulliChurn {
+    pub fn new(rate: f64, stages: Vec<usize>, seed: u64) -> Self {
+        Self { rng: Rng::new(seed ^ 0xFA11), p: rate, stages }
+    }
+}
+
+impl ChurnProcess for BernoulliChurn {
+    fn label(&self) -> &'static str {
+        "bernoulli"
+    }
+
+    fn sample_iteration(&mut self, _iteration: u64) -> Vec<usize> {
+        // The same draws happen in the same order regardless of which
+        // stages end up filtered downstream, so the pattern is
+        // strategy-independent for a fixed seed (paper §5.1).
+        let mut failed = Vec::new();
+        for &stage in &self.stages {
+            if self.rng.chance(self.p) {
+                failed.push(stage);
+            }
+        }
+        failed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poisson — exponential inter-arrival per stage
+// ---------------------------------------------------------------------------
+
+/// Per-stage Poisson arrivals: each failable stage owns an independent
+/// exponential clock (rate = events/iteration) forked from the master
+/// seed, and the process serves the merged arrival stream. O(events)
+/// via a min-heap, so thousand-stage fleets cost what they churn.
+#[derive(Debug, Clone)]
+pub struct PoissonChurn {
+    /// (arrival iteration, slot) min-heap; slot indexes `stages`.
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Per-slot continuous clocks and forked RNG streams.
+    clocks: Vec<f64>,
+    rngs: Vec<Rng>,
+    stages: Vec<usize>,
+    rate: f64,
+}
+
+impl PoissonChurn {
+    pub fn new(rate: f64, stages: Vec<usize>, seed: u64) -> Self {
+        let mut root = Rng::new(seed ^ 0x9015_50);
+        let mut rngs: Vec<Rng> =
+            (0..stages.len()).map(|k| root.fork(k as u64)).collect();
+        let mut heap = BinaryHeap::new();
+        let mut clocks = vec![0.0f64; stages.len()];
+        if rate > 0.0 {
+            for (k, clock) in clocks.iter_mut().enumerate() {
+                *clock += exponential(&mut rngs[k], rate);
+                heap.push(Reverse((clock.floor() as u64, k)));
+            }
+        }
+        Self { heap, clocks, rngs, stages, rate }
+    }
+
+    fn advance(&mut self, slot: usize) {
+        self.clocks[slot] += exponential(&mut self.rngs[slot], self.rate);
+        self.heap.push(Reverse((self.clocks[slot].floor() as u64, slot)));
+    }
+}
+
+impl ChurnProcess for PoissonChurn {
+    fn label(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn sample_iteration(&mut self, iteration: u64) -> Vec<usize> {
+        let mut failed = Vec::new();
+        while let Some(&Reverse((it, slot))) = self.heap.peek() {
+            if it > iteration {
+                break;
+            }
+            self.heap.pop();
+            if it == iteration {
+                failed.push(self.stages[slot]);
+            }
+            // it < iteration: the caller skipped past this arrival —
+            // drop it and keep the stream moving.
+            self.advance(slot);
+        }
+        failed
+    }
+
+    fn next_event_hint(&mut self, from: u64) -> Option<u64> {
+        self.heap.peek().map(|&Reverse((it, _))| it.max(from))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bursty — on/off Markov windows
+// ---------------------------------------------------------------------------
+
+/// Mean calm-window length in iterations (time between preemption
+/// waves). Geometric-distributed, so the on/off alternation is a
+/// two-state Markov chain.
+pub const BURST_MEAN_CALM: f64 = 60.0;
+/// Mean burst-window length in iterations (length of a wave).
+pub const BURST_MEAN_BURST: f64 = 12.0;
+
+/// On/off Markov churn: no failures during calm windows; inside a burst
+/// window every failable stage flips a coin with probability
+/// `rate × (mean_calm + mean_burst) / mean_burst` (clamped to 0.95), so
+/// the *long-run* per-stage rate converges to the configured `rate`
+/// while arrivals cluster into waves.
+#[derive(Debug, Clone)]
+pub struct BurstyChurn {
+    /// Per-stage coin inside a burst window.
+    p_burst: f64,
+    stages: Vec<usize>,
+    /// Current burst window `[start, end)`.
+    burst: (u64, u64),
+    window_rng: Rng,
+    draw_rng: Rng,
+}
+
+impl BurstyChurn {
+    pub fn new(rate: f64, stages: Vec<usize>, seed: u64) -> Self {
+        let duty = BURST_MEAN_BURST / (BURST_MEAN_CALM + BURST_MEAN_BURST);
+        let p_burst = (rate / duty).min(0.95);
+        let mut window_rng = Rng::new(seed ^ 0xB0_0575);
+        let draw_rng = window_rng.fork(0xD1CE);
+        let mut s = Self {
+            p_burst,
+            stages,
+            burst: (0, 0),
+            window_rng,
+            draw_rng,
+        };
+        s.burst = s.next_window(0);
+        s
+    }
+
+    /// Generate the next burst window starting at or after `from`: a
+    /// geometric calm gap, then a geometric burst length (both ≥ 1).
+    fn next_window(&mut self, from: u64) -> (u64, u64) {
+        let calm = 1 + geometric(&mut self.window_rng, 1.0 / BURST_MEAN_CALM);
+        let dur = 1 + geometric(&mut self.window_rng, 1.0 / BURST_MEAN_BURST);
+        (from + calm, from + calm + dur)
+    }
+
+    /// Advance the window chain until `iteration` precedes the end of
+    /// the current burst. Window generation consumes only `window_rng`,
+    /// so skipping calm spans never perturbs the in-burst draw stream.
+    fn catch_up(&mut self, iteration: u64) {
+        while iteration >= self.burst.1 {
+            let end = self.burst.1;
+            self.burst = self.next_window(end);
+        }
+    }
+
+    fn in_burst(&self, iteration: u64) -> bool {
+        iteration >= self.burst.0 && iteration < self.burst.1
+    }
+}
+
+impl ChurnProcess for BurstyChurn {
+    fn label(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn sample_iteration(&mut self, iteration: u64) -> Vec<usize> {
+        if self.p_burst <= 0.0 {
+            return Vec::new();
+        }
+        self.catch_up(iteration);
+        if !self.in_burst(iteration) {
+            return Vec::new();
+        }
+        let mut failed = Vec::new();
+        for &stage in &self.stages {
+            if self.draw_rng.chance(self.p_burst) {
+                failed.push(stage);
+            }
+        }
+        failed
+    }
+
+    fn next_event_hint(&mut self, from: u64) -> Option<u64> {
+        if self.p_burst <= 0.0 {
+            // A zero-rate burst process never fires; report a hint far
+            // beyond any simulated horizon instead of a dense `None`.
+            return Some(u64::MAX);
+        }
+        self.catch_up(from);
+        if self.in_burst(from) {
+            Some(from) // dense inside the burst: step iteration by iteration
+        } else {
+            Some(self.burst.0)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Correlated — region-scoped co-failures
+// ---------------------------------------------------------------------------
+
+/// Region-correlated churn: each [`Region`] owns a geometric arrival
+/// clock with per-iteration probability `rate`; when a region fires,
+/// **every** failable stage placed in it fails in the same round. Under
+/// the blocked placement ([`crate::netsim::Network::blocked`]) those
+/// stages are contiguous, so this is the process that (deliberately)
+/// violates the paper's no-two-adjacent assumption — the injector's
+/// `allow_adjacent` flag decides whether the violation reaches the
+/// recovery path or is deferred like the paper assumes.
+#[derive(Debug, Clone)]
+pub struct CorrelatedChurn {
+    /// (arrival iteration, region index) min-heap.
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    rngs: Vec<Rng>,
+    /// Failable stages grouped per region index.
+    members: Vec<Vec<usize>>,
+    rate: f64,
+}
+
+impl CorrelatedChurn {
+    /// `placement[stage]` is the stage→region map (usually
+    /// `Network::blocked(stages).placement`); `stages` the failable set.
+    pub fn new(rate: f64, stages: Vec<usize>, placement: &[Region], seed: u64) -> Self {
+        let nregions = crate::netsim::REGIONS.len();
+        let mut members = vec![Vec::new(); nregions];
+        for &s in &stages {
+            if let Some(r) = placement.get(s) {
+                members[r.index()].push(s);
+            }
+        }
+        let mut root = Rng::new(seed ^ 0xC0_44E1);
+        let mut rngs: Vec<Rng> = (0..nregions).map(|k| root.fork(k as u64)).collect();
+        let mut heap = BinaryHeap::new();
+        if rate > 0.0 && rate < 1.0 {
+            for (k, members_k) in members.iter().enumerate() {
+                if !members_k.is_empty() {
+                    heap.push(Reverse((geometric(&mut rngs[k], rate), k)));
+                }
+            }
+        }
+        Self { heap, rngs, members, rate }
+    }
+
+    fn advance(&mut self, region: usize, now: u64) {
+        let gap = 1 + geometric(&mut self.rngs[region], self.rate);
+        self.heap.push(Reverse((now + gap, region)));
+    }
+}
+
+impl ChurnProcess for CorrelatedChurn {
+    fn label(&self) -> &'static str {
+        "correlated"
+    }
+
+    fn sample_iteration(&mut self, iteration: u64) -> Vec<usize> {
+        let mut failed = Vec::new();
+        while let Some(&Reverse((it, region))) = self.heap.peek() {
+            if it > iteration {
+                break;
+            }
+            self.heap.pop();
+            if it == iteration {
+                failed.extend_from_slice(&self.members[region]);
+            }
+            self.advance(region, it);
+        }
+        failed
+    }
+
+    fn next_event_hint(&mut self, from: u64) -> Option<u64> {
+        self.heap.peek().map(|&Reverse((it, _))| it.max(from))
+    }
+}
+
+/// Build a churn process of `kind` over the failable `stages` at the
+/// per-stage `rate`, with `placement` supplying the stage→region map
+/// the correlated process groups by.
+pub fn make_process(
+    kind: ChurnProcessKind,
+    rate: f64,
+    stages: Vec<usize>,
+    placement: &[Region],
+    seed: u64,
+) -> Box<dyn ChurnProcess> {
+    match kind {
+        ChurnProcessKind::Bernoulli => Box::new(BernoulliChurn::new(rate, stages, seed)),
+        ChurnProcessKind::Poisson => Box::new(PoissonChurn::new(rate, stages, seed)),
+        ChurnProcessKind::Bursty => Box::new(BurstyChurn::new(rate, stages, seed)),
+        ChurnProcessKind::Correlated => {
+            Box::new(CorrelatedChurn::new(rate, stages, placement, seed))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Network;
+
+    #[test]
+    fn kind_parse_all_labels() {
+        for k in ChurnProcessKind::ALL {
+            assert_eq!(k.label().parse::<ChurnProcessKind>().unwrap(), k);
+        }
+        assert_eq!("exponential".parse::<ChurnProcessKind>().unwrap(), ChurnProcessKind::Poisson);
+        assert_eq!("region".parse::<ChurnProcessKind>().unwrap(), ChurnProcessKind::Correlated);
+        assert!("bogus".parse::<ChurnProcessKind>().is_err());
+    }
+
+    #[test]
+    fn geometric_zero_prob_of_success_every_draw() {
+        let mut rng = Rng::new(1);
+        // p close to 1 → gap almost always 0
+        for _ in 0..100 {
+            assert_eq!(geometric(&mut rng, 0.999999), 0);
+        }
+    }
+
+    #[test]
+    fn geometric_mean_matches_distribution() {
+        let mut rng = Rng::new(2);
+        let p = 0.1;
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| geometric(&mut rng, p)).sum();
+        let mean = total as f64 / n as f64;
+        // E[failures before success] = (1-p)/p = 9
+        assert!((mean - 9.0).abs() < 0.5, "geometric mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = Rng::new(3);
+        let lambda = 0.25;
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| exponential(&mut rng, lambda)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 4.0).abs() < 0.2, "exponential mean {mean}");
+    }
+
+    #[test]
+    fn poisson_hint_is_exact_next_arrival() {
+        let mut p = PoissonChurn::new(0.01, vec![1, 2, 3], 7);
+        let hint = p.next_event_hint(0).unwrap();
+        // every iteration before the hint must be empty, the hint's not
+        for it in 0..hint {
+            assert!(p.sample_iteration(it).is_empty(), "arrival before hint at {it}");
+        }
+        assert!(!p.sample_iteration(hint).is_empty(), "hint {hint} had no arrival");
+    }
+
+    #[test]
+    fn bursty_failures_cluster_into_windows() {
+        let mut b = BurstyChurn::new(0.05, vec![1, 2, 3, 4], 11);
+        let mut fail_iters = Vec::new();
+        for it in 0..5_000u64 {
+            if !b.sample_iteration(it).is_empty() {
+                fail_iters.push(it);
+            }
+        }
+        assert!(fail_iters.len() > 10, "burst process produced {} events", fail_iters.len());
+        // clustering: the median gap between consecutive failure
+        // iterations is tiny (within a burst) while the max gap is a
+        // calm window — orders of magnitude apart.
+        let mut gaps: Vec<u64> =
+            fail_iters.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        let median = gaps[gaps.len() / 2];
+        let max = *gaps.last().unwrap();
+        assert!(median <= 3, "median gap {median} — not clustered");
+        assert!(max >= 20, "max gap {max} — no calm windows");
+    }
+
+    #[test]
+    fn bursty_skipping_calm_spans_keeps_schedule() {
+        // The event-driven simulator never queries calm iterations; the
+        // in-burst draw stream must be identical either way.
+        let mut dense = BurstyChurn::new(0.08, vec![1, 2], 5);
+        let mut sparse = BurstyChurn::new(0.08, vec![1, 2], 5);
+        let mut dense_sched = Vec::new();
+        for it in 0..2_000u64 {
+            for s in dense.sample_iteration(it) {
+                dense_sched.push((it, s));
+            }
+        }
+        let mut sparse_sched = Vec::new();
+        let mut it = 0u64;
+        while it < 2_000 {
+            match sparse.next_event_hint(it) {
+                Some(next) if next < 2_000 => {
+                    for s in sparse.sample_iteration(next) {
+                        sparse_sched.push((next, s));
+                    }
+                    it = next + 1;
+                }
+                _ => break,
+            }
+        }
+        assert_eq!(dense_sched, sparse_sched);
+    }
+
+    #[test]
+    fn correlated_fails_whole_region_blocks() {
+        let stages = 10usize;
+        let net = Network::blocked(stages);
+        let mut c =
+            CorrelatedChurn::new(0.05, (1..stages).collect(), &net.placement, 3);
+        let mut saw_group = false;
+        for it in 0..2_000u64 {
+            let f = c.sample_iteration(it);
+            if f.len() >= 2 {
+                // all from one region, contiguous under blocked placement
+                let r = net.placement[f[0]];
+                assert!(f.iter().all(|&s| net.placement[s] == r), "{f:?} spans regions");
+                saw_group = true;
+            }
+        }
+        assert!(saw_group, "correlated process never co-failed a region");
+    }
+
+    #[test]
+    fn zero_rate_processes_never_fire() {
+        let net = Network::blocked(6);
+        for kind in ChurnProcessKind::ALL {
+            let mut p = make_process(kind, 0.0, vec![1, 2, 3], &net.placement, 9);
+            for it in 0..500 {
+                assert!(p.sample_iteration(it).is_empty(), "{} fired at rate 0", p.label());
+            }
+        }
+    }
+
+    #[test]
+    fn stream_hints_never_point_before_from() {
+        let net = Network::blocked(8);
+        for kind in ChurnProcessKind::ALL {
+            let mut p = make_process(kind, 0.2, (1..8).collect(), &net.placement, 13);
+            for from in [0u64, 5, 17, 100, 1000] {
+                if let Some(h) = p.next_event_hint(from) {
+                    assert!(h >= from, "{}: hint {h} < from {from}", p.label());
+                }
+            }
+        }
+    }
+}

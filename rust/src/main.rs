@@ -9,6 +9,9 @@
 //!                    [--plane-mode shared|per-stage]
 //!                    [--link-path auto|direct|staged]
 //!                    [--overlap on|off]
+//!                    [--churn-process bernoulli|poisson|bursty|correlated]
+//!                    [--churn-trace record:PATH|replay:PATH]
+//!                    [--allow-adjacent true|false]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -150,6 +153,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(l) = args.parse_opt::<checkfree::config::LinkPath>("link-path")? {
         cfg.link_path = l;
+    }
+    if let Some(c) = args.parse_opt::<checkfree::failures::ChurnProcessKind>("churn-process")? {
+        cfg.churn_process = c;
+    }
+    if let Some(t) = args.parse_opt::<checkfree::config::TraceMode>("churn-trace")? {
+        cfg.churn_trace = Some(t);
+    }
+    if let Some(a) = args.parse_opt::<bool>("allow-adjacent")? {
+        cfg.allow_adjacent = a;
     }
     if let Some(o) = args.parse_opt::<checkfree::config::Overlap>("overlap")? {
         cfg.overlap = o;

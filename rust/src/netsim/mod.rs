@@ -32,7 +32,13 @@ pub const REGIONS: [Region; 5] = [
 
 impl Region {
     pub fn index(&self) -> usize {
-        REGIONS.iter().position(|r| r == self).unwrap()
+        match self {
+            Region::UsCentral => 0,
+            Region::UsEast => 1,
+            Region::EuropeWest => 2,
+            Region::AsiaEast => 3,
+            Region::AustraliaSoutheast => 4,
+        }
     }
 
     pub fn label(&self) -> &'static str {
@@ -43,6 +49,15 @@ impl Region {
             Region::AsiaEast => "asia-east1",
             Region::AustraliaSoutheast => "australia-southeast1",
         }
+    }
+
+    /// Inverse of [`Region::label`] (churn traces store region labels).
+    pub fn from_label(label: &str) -> Result<Region> {
+        REGIONS
+            .iter()
+            .copied()
+            .find(|r| r.label() == label)
+            .ok_or_else(|| anyhow!("unknown region label '{label}'"))
     }
 }
 
@@ -91,6 +106,19 @@ impl Network {
     /// All stages in one region (ablation: fast homogeneous cluster).
     pub fn single_region(stages: usize, region: Region) -> Self {
         Self { placement: vec![region; stages] }
+    }
+
+    /// Contiguous blocks: stage `i` lands in region `⌊i·5/stages⌋`, so
+    /// neighbouring stages usually share a region. This is the
+    /// placement under which region-correlated churn co-fails adjacent
+    /// stages — the regime the paper's no-two-adjacent assumption
+    /// excludes and the `correlated` [`crate::failures::ChurnProcess`]
+    /// deliberately probes.
+    pub fn blocked(stages: usize) -> Self {
+        let n = REGIONS.len();
+        Self {
+            placement: (0..stages).map(|i| REGIONS[(i * n / stages.max(1)).min(n - 1)]).collect(),
+        }
     }
 
     pub fn stages(&self) -> usize {
@@ -211,5 +239,95 @@ mod tests {
         let net = Network::round_robin(3);
         assert!(net.region_of(3).is_err());
         assert!(net.transfer_seconds(1, 0, 9).is_err());
+    }
+
+    #[test]
+    fn region_index_matches_table_position() {
+        for (i, r) in REGIONS.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+    }
+
+    #[test]
+    fn region_label_round_trip() {
+        for r in REGIONS {
+            assert_eq!(Region::from_label(r.label()).unwrap(), r);
+        }
+        assert!(Region::from_label("mars-north1").is_err());
+    }
+
+    #[test]
+    fn self_transfer_is_latency_floor_only_plus_bandwidth() {
+        // "zero self-distance": intra-region latency is the sub-ms floor,
+        // and a zero-byte transfer costs exactly that floor.
+        for r in REGIONS {
+            let net = Network::single_region(2, r);
+            let t = net.transfer_seconds(0, 0, 1).unwrap();
+            assert!(t < 1e-3, "{}: zero-byte self transfer {t}s", r.label());
+        }
+    }
+
+    #[test]
+    fn blocked_placement_is_contiguous_and_covers_stages() {
+        for stages in [1usize, 4, 5, 7, 16, 1024] {
+            let net = Network::blocked(stages);
+            assert_eq!(net.stages(), stages);
+            // contiguity: region index never decreases along the pipeline
+            for w in net.placement.windows(2) {
+                assert!(w[1].index() >= w[0].index(), "{stages} stages: {w:?}");
+            }
+        }
+        // large pipelines use all five regions in contiguous runs
+        let net = Network::blocked(1024);
+        for r in REGIONS {
+            assert!(net.placement.contains(&r));
+        }
+        // neighbours share a region somewhere (the correlated-churn premise)
+        assert!(net.placement.windows(2).any(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn property_transfer_monotone_in_bytes_any_pair() {
+        crate::util::propcheck::forall(
+            "netsim-byte-monotone",
+            60,
+            29,
+            |r, _| {
+                (
+                    REGIONS[r.below(5)],
+                    REGIONS[r.below(5)],
+                    r.next_u64() % (1 << 30),
+                    r.next_u64() % (1 << 30),
+                )
+            },
+            |&(a, b, x, y)| {
+                let net = Network::round_robin(5);
+                let (lo, hi) = (x.min(y), x.max(y));
+                net.transfer_seconds_between(lo, a, b) <= net.transfer_seconds_between(hi, a, b)
+            },
+        );
+    }
+
+    #[test]
+    fn property_placement_round_trip_via_labels() {
+        // node → region placement survives a label round-trip — the
+        // exact path churn-trace records take.
+        crate::util::propcheck::forall(
+            "netsim-placement-label-round-trip",
+            40,
+            31,
+            |r, size| 1 + r.below(4 * size.max(1)),
+            |&stages| {
+                for net in [Network::round_robin(stages), Network::blocked(stages)] {
+                    for (i, r) in net.placement.iter().enumerate() {
+                        let back = Region::from_label(r.label()).unwrap();
+                        if back != net.region_of(i).unwrap() {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
     }
 }

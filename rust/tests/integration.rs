@@ -3,10 +3,11 @@
 //! exercised end-to-end. These are the Rust-side counterpart of the
 //! paper's evaluation protocol, shrunk to the `tiny` preset.
 
-use checkfree::config::{FailureSpec, LinkPath, Overlap, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{FailureSpec, LinkPath, Overlap, PlaneMode, Strategy, TraceMode, TrainConfig};
 use checkfree::coordinator::Trainer;
 use checkfree::data::Domain;
 use checkfree::experiments;
+use checkfree::failures::ChurnProcessKind;
 use checkfree::metrics::EventKind;
 
 fn cfg(strategy: Strategy, iterations: u64, rate: f64, seed: u64) -> TrainConfig {
@@ -253,6 +254,82 @@ fn lr_boost_compounds_across_repeated_failures() {
         "two recoveries → lr ×1.21, got ×{}",
         boosted / base_lr
     );
+}
+
+#[test]
+fn churn_trace_record_then_replay_is_bitwise_identical() {
+    // The scenario-factory determinism contract, end to end THROUGH
+    // recovery: record a churny CheckFree run's tape, then replay the
+    // tape on a fresh trainer — the failure schedule, recovery events,
+    // and loss curve must match bit for bit.
+    let dir = std::env::temp_dir().join(format!("cfree-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tape = dir.join("churn.jsonl");
+    let tape_s = tape.to_str().unwrap().to_string();
+
+    let pattern_of = |t: &Trainer| -> Vec<(u64, usize)> {
+        t.record
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::StageFailure)
+            .map(|e| (e.iteration, e.stage.unwrap()))
+            .collect()
+    };
+    let recoveries_of = |t: &Trainer| -> Vec<u64> {
+        t.record
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Recovery)
+            .map(|e| e.iteration)
+            .collect()
+    };
+
+    let mut rec_cfg = cfg(Strategy::CheckFree, 16, 0.06, 911);
+    rec_cfg.churn_process = ChurnProcessKind::Bursty;
+    rec_cfg.churn_trace = Some(TraceMode::Record(tape_s.clone()));
+    let mut recorded = Trainer::new(rec_cfg).unwrap();
+    recorded.force_failure(6, 1); // guarantee at least one recovery on the tape
+    recorded.run().unwrap();
+    let rec_pattern = pattern_of(&recorded);
+    assert!(!rec_pattern.is_empty(), "recording run produced no failures");
+    assert!(!recoveries_of(&recorded).is_empty(), "no recovery on the tape");
+
+    let mut rep_cfg = cfg(Strategy::CheckFree, 16, 0.0, 911);
+    rep_cfg.churn_trace = Some(TraceMode::Replay(tape_s));
+    let mut replayed = Trainer::new(rep_cfg).unwrap();
+    replayed.run().unwrap();
+
+    assert_eq!(pattern_of(&replayed), rec_pattern, "failure schedule diverged");
+    assert_eq!(recoveries_of(&replayed), recoveries_of(&recorded), "recovery sequence diverged");
+    let a: Vec<u32> = recorded.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+    let b: Vec<u32> = replayed.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+    assert_eq!(a, b, "loss curve diverged under trace replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn churn_processes_give_identical_patterns_across_strategies() {
+    // §5.1's strategy-independence, extended to every arrival process:
+    // for a fixed seed the schedule is a pure function of the process,
+    // whatever recovery strategy consumes it.
+    for churn in [ChurnProcessKind::Poisson, ChurnProcessKind::Bursty] {
+        let mut patterns = Vec::new();
+        for strategy in [Strategy::CheckFree, Strategy::CheckFreePlus] {
+            let mut c = cfg(strategy, 12, 0.08, 77);
+            c.churn_process = churn;
+            let mut t = Trainer::new(c).unwrap();
+            t.run().unwrap();
+            let pattern: Vec<(u64, usize)> = t
+                .record
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::StageFailure)
+                .map(|e| (e.iteration, e.stage.unwrap()))
+                .collect();
+            patterns.push(pattern);
+        }
+        assert_eq!(patterns[0], patterns[1], "{} diverged across strategies", churn.label());
+    }
 }
 
 #[test]

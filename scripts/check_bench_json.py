@@ -27,7 +27,13 @@ be executed. Checked invariants:
   not below overlap off fails outright (both-zero stages are skipped:
   they moved no cross-plane bytes);
 * ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
-  sidecar, when present) analogously for its latency table.
+  sidecar, when present) analogously for its latency table;
+* ``BENCH_coverage.json`` (the scenario-factory coverage matrix): a
+  measured run must contain exactly |scales| x |strategies| x
+  |churn_processes| cells, each with every documented field, a max
+  scale >= 1024 (the thousand-stage scale-out is the artifact's whole
+  point), per-cell sanity (``sampled_iterations <= iterations``,
+  ``recoveries <= failures``), and all ``gate_*`` booleans true.
 
 Exit status: 0 = all files valid, 1 = any violation (listed on stderr).
 
@@ -92,6 +98,26 @@ LATENCY_FIELDS = (
     "ckpt_upload_s",
 )
 
+COVERAGE_CELL_FIELDS = (
+    "strategy",
+    "churn_process",
+    "stages",
+    "allow_adjacent",
+    "rate_per_stage",
+    "iterations",
+    "failures",
+    "recoveries",
+    "rollback_iterations",
+    "recovery_seconds",
+    "checkpoint_stall_seconds",
+    "sim_hours",
+    "sampled_iterations",
+    "wall_ms",
+)
+
+# The scale-out floor a measured coverage matrix must reach.
+COVERAGE_MIN_TOP_SCALE = 1024
+
 
 class Checker:
     def __init__(self, path: Path) -> None:
@@ -141,6 +167,8 @@ class Checker:
             self.check_hot_path(doc, status, schema or 0)
         elif bench == "recovery":
             self.check_recovery(doc, status)
+        elif bench == "coverage":
+            self.check_coverage(doc, status)
         elif bench is not None:
             self.error(f"unknown bench {bench!r}")
 
@@ -273,6 +301,72 @@ class Checker:
             for field in LATENCY_FIELDS:
                 self.require(entry, field, (str, int, float), where)
 
+    def check_coverage(self, doc: dict, status) -> None:
+        scales = self.require(doc, "scales", list)
+        strategies = self.require(doc, "strategies", list)
+        processes = self.require(doc, "churn_processes", list)
+        cells = self.require(doc, "cells", list)
+        if status != "measured":
+            return
+
+        for key, values in (("scales", scales), ("strategies", strategies),
+                            ("churn_processes", processes)):
+            if isinstance(values, list) and not values:
+                self.error(f"measured run with empty '{key}' — the matrix "
+                           "has no extent along that axis")
+        if not isinstance(cells, list):
+            return
+        if not cells:
+            self.error("measured run with empty 'cells' — the coverage "
+                       "matrix is the whole artifact")
+            return
+
+        if all(isinstance(v, list) for v in (scales, strategies, processes)):
+            expected = len(scales) * len(strategies) * len(processes)
+            if expected and len(cells) != expected:
+                self.error(
+                    f"cells has {len(cells)} entries but the declared axes "
+                    f"span {len(scales)}x{len(strategies)}x{len(processes)} "
+                    f"= {expected} — a measured matrix must be complete, "
+                    "no silently dropped cells")
+
+        if isinstance(scales, list):
+            numeric = [s for s in scales if isinstance(s, (int, float))]
+            top = max(numeric) if numeric else 0
+            if top < COVERAGE_MIN_TOP_SCALE:
+                self.error(
+                    f"largest scale ({top}) is below the "
+                    f"{COVERAGE_MIN_TOP_SCALE}-stage coverage floor — the "
+                    "thousand-stage scale-out is the point of this artifact "
+                    "(see docs/BENCHMARKS.md)")
+
+        for i, cell in enumerate(cells):
+            where = f"cells[{i}]"
+            if not isinstance(cell, dict):
+                self.error(f"{where} is not an object")
+                continue
+            for field in COVERAGE_CELL_FIELDS:
+                self.require(cell, field, (str, int, float, bool), where)
+            sampled = cell.get("sampled_iterations")
+            iters = cell.get("iterations")
+            if (isinstance(sampled, (int, float)) and isinstance(iters, (int, float))
+                    and sampled > iters):
+                self.error(f"{where}: sampled_iterations ({sampled}) exceeds "
+                           f"iterations ({iters}) — the event-driven walk "
+                           "cannot consult the injector more often than once "
+                           "per iteration")
+            rec = cell.get("recoveries")
+            fails = cell.get("failures")
+            if (isinstance(rec, (int, float)) and isinstance(fails, (int, float))
+                    and rec > fails):
+                self.error(f"{where}: recoveries ({rec}) exceeds failures "
+                           f"({fails}) — every recovery is triggered by a "
+                           "failed iteration")
+
+        gates = self.require(doc, "gates", dict)
+        if isinstance(gates, dict):
+            self.check_gates_true(gates, "gates")
+
 
 def selftest() -> int:
     """Run the checker against the committed fixtures: the good one must
@@ -297,6 +391,24 @@ def selftest() -> int:
         print("selftest FAIL: bad-wait fixture was not rejected for the "
               "overlap wait gate; errors were:", file=sys.stderr)
         for err in bad.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    cov_good = Checker(fixtures / "coverage_schema1_good.json")
+    cov_good.check()
+    if cov_good.errors:
+        ok = False
+        print("selftest FAIL: good coverage fixture rejected:",
+              file=sys.stderr)
+        for err in cov_good.errors:
+            print(f"  {err}", file=sys.stderr)
+
+    cov_bad = Checker(fixtures / "coverage_schema1_bad_scale.json")
+    cov_bad.check()
+    if not any("coverage floor" in err for err in cov_bad.errors):
+        ok = False
+        print("selftest FAIL: bad-scale coverage fixture was not rejected "
+              "for the thousand-stage floor; errors were:", file=sys.stderr)
+        for err in cov_bad.errors or ["<none>"]:
             print(f"  {err}", file=sys.stderr)
 
     print("selftest ok" if ok else "selftest FAILED",

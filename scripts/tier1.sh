@@ -5,6 +5,7 @@
 #
 # Usage: scripts/tier1.sh [--ci] [--no-smoke] [--docs] [--clippy]
 #                         [--bench-smoke] [--recovery-smoke]
+#                         [--coverage-smoke]
 #   --ci           CI mode: `set -x` tracing, plus one machine-readable
 #                  `tier1-gate <name>=pass|fail` line per gate (and a
 #                  markdown row in the GitHub step summary when
@@ -21,6 +22,11 @@
 #   --recovery-smoke  run ONLY the recovery-latency bench at toy budget;
 #                  writes the gitignored BENCH_recovery.smoke.json (the
 #                  CI recovery-smoke lane uploads it as an artifact)
+#   --coverage-smoke  run ONLY the coverage-matrix bench at smoke
+#                  budget (300 iterations/cell, same 36-cell shape up
+#                  to 1024 stages); writes the gitignored
+#                  BENCH_coverage.smoke.json (the nightly
+#                  coverage-matrix CI lane runs the full version)
 #
 # Plane-mode matrix: the test suite honours CHECKFREE_PLANE_MODE
 # (shared|per-stage) — TrainConfig::default() reads it — which is how
@@ -39,6 +45,7 @@ for arg in "$@"; do
     --clippy) only=clippy ;;
     --bench-smoke) only=bench-smoke ;;
     --recovery-smoke) only=recovery-smoke ;;
+    --coverage-smoke) only=coverage-smoke ;;
     --no-smoke) no_smoke=1 ;;
     *)
         echo "unknown flag '$arg' (see scripts/tier1.sh header)" >&2
@@ -145,6 +152,13 @@ recovery_smoke() {
     echo "'cargo bench --bench recovery_latency' to refresh the committed BENCH_recovery.json."
 }
 
+coverage_smoke() {
+    echo "== smoke coverage-matrix bench (strategy x churn process x scale, 300 iters/cell) =="
+    cargo bench --bench coverage_matrix -- --smoke || return 1
+    echo "Smoke results in BENCH_coverage.smoke.json (gitignored); run the full"
+    echo "'cargo bench --bench coverage_matrix' to refresh the committed BENCH_coverage.json."
+}
+
 cd "$repo_root/rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -174,6 +188,11 @@ bench-smoke)
 recovery-smoke)
     gate recovery-smoke recovery_smoke
     echo "recovery smoke OK"
+    exit 0
+    ;;
+coverage-smoke)
+    gate coverage-smoke coverage_smoke
+    echo "coverage smoke OK"
     exit 0
     ;;
 esac
