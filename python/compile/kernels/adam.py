@@ -1,0 +1,140 @@
+"""Fused Adam update + gradient accumulation as Pallas kernels (Layer 1).
+
+Both kernels are memory-bound elementwise VPU work, so the grid simply
+tiles the *flattened* element axis — parameter tensors arrive in whatever
+shape the manifest records ((D,), (D,D), (F,D), …) and are viewed as flat
+rows for the kernel, exactly like the optimizer's flat host buffers on the
+Rust side.
+
+``adam_update`` fuses the whole optimizer step for one tensor into a
+single pass: mean-scale the accumulated gradient, update both moments,
+bias-correct, and write the new parameter — four reads, four writes, no
+intermediate HBM traffic. Bias corrections (and the mean scale ``1/m``)
+are **host-computed** and passed in as a tiny ``(4,)`` scalar pack: the
+host uses ``powi``, and reproducing that on-device (``jnp.power``) would
+not be bitwise-faithful. The kernel itself is pure f32 add/mul/div/sqrt
+in exactly the host optimizer's evaluation order (see ``ref.py``).
+
+``grad_accumulate`` is the device-resident replacement for
+``GradBuffer::accumulate``: one elementwise add per microbatch, run on
+the owning stage's plane so per-microbatch gradients never cross the
+host boundary.
+
+Same conventions as ``attention.py``/``rmsnorm.py``: ``interpret=True``
+so the lowered HLO runs on the CPU PJRT client. No ``jax.custom_vjp``
+wrapper — nothing differentiates through an optimizer step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    ADAM_BETA1,
+    ADAM_BETA2,
+    ADAM_EPS,
+    ADAM_ONE_MINUS_BETA1,
+    ADAM_ONE_MINUS_BETA2,
+)
+
+DEFAULT_BLOCK = 4096
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, sc_ref, po_ref, mo_ref, vo_ref, gm_ref):
+    # sc = [inv, lr, bc1, bc2] — see `ref.adam_scalars`.
+    inv = sc_ref[0]
+    lr = sc_ref[1]
+    bc1 = sc_ref[2]
+    bc2 = sc_ref[3]
+    gm = g_ref[...] * inv
+    m = ADAM_BETA1 * m_ref[...] + ADAM_ONE_MINUS_BETA1 * gm
+    v = ADAM_BETA2 * v_ref[...] + (ADAM_ONE_MINUS_BETA2 * gm) * gm
+    po_ref[...] = p_ref[...] - lr * (m / bc1) / (jnp.sqrt(v / bc2) + ADAM_EPS)
+    mo_ref[...] = m
+    vo_ref[...] = v
+    gm_ref[...] = gm
+
+
+def _accum_kernel(a_ref, g_ref, o_ref):
+    o_ref[...] = a_ref[...] + g_ref[...]
+
+
+def _flat_padded(x: jax.Array, block: int) -> tuple[jax.Array, int, int]:
+    """Flatten to 1-D and zero-pad up to a block multiple (tail tile)."""
+    n = x.size
+    flat = x.reshape(n)
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n, pad
+
+
+def adam_update_pallas(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    scalars: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused Adam step on one tensor → ``(p', m', v', gm)``.
+
+    ``p``/``m``/``v``/``g`` share one shape; ``scalars`` is the ``(4,)``
+    pack ``[inv, lr, bc1, bc2]``. The zero-padded tail is harmless: all
+    four padded inputs are 0, so the padded outputs are finite garbage
+    that is sliced away before reshaping back.
+    """
+    shape = p.shape
+    block = min(block, max(p.size, 1))
+    pf, n, _ = _flat_padded(p, block)
+    mf, _, _ = _flat_padded(m, block)
+    vf, _, _ = _flat_padded(v, block)
+    gf, _, _ = _flat_padded(g, block)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    grid = (pl.cdiv(pf.shape[0], block),)
+    outs = pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[bspec, bspec, bspec, bspec, pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=(bspec, bspec, bspec, bspec),
+        out_shape=tuple(
+            jax.ShapeDtypeStruct(pf.shape, jnp.float32) for _ in range(4)
+        ),
+        interpret=interpret,
+    )(pf, mf, vf, gf, scalars)
+    return tuple(o[:n].reshape(shape) for o in outs)
+
+
+def grad_accumulate_pallas(
+    acc: jax.Array,
+    g: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Elementwise ``acc + g`` for one tensor, shape preserved."""
+    shape = acc.shape
+    block = min(block, max(acc.size, 1))
+    af, n, _ = _flat_padded(acc, block)
+    gf, _, _ = _flat_padded(g, block)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    grid = (pl.cdiv(af.shape[0], block),)
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct(af.shape, jnp.float32),
+        interpret=interpret,
+    )(af, gf)
+    return out[:n].reshape(shape)
+
+
+# Aliases used by the AOT entry points (mirrors `flash_attention`/`rmsnorm`
+# being the model-facing names).
+adam_update = adam_update_pallas
+grad_accumulate = grad_accumulate_pallas

@@ -11,6 +11,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Adam hyperparameters (paper Appendix A.2), pre-rounded to f32 so the
+# `1 - beta` style constants match the Rust host optimizer bit-for-bit:
+# f32(1.0) - f32(0.9) = 0x3DCCCCD0, which is NOT f32(0.1) = 0x3DCCCCCD.
+ADAM_BETA1 = np.float32(0.9)
+ADAM_BETA2 = np.float32(0.999)
+ADAM_EPS = np.float32(1e-8)
+ADAM_ONE_MINUS_BETA1 = np.float32(1.0) - ADAM_BETA1
+ADAM_ONE_MINUS_BETA2 = np.float32(1.0) - ADAM_BETA2
 
 
 def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
@@ -44,3 +54,47 @@ def ref_rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def adam_scalars(t: int, lr: float, microbatches: int) -> jax.Array:
+    """The per-step scalar pack ``[inv, lr, bc1, bc2]`` the host uploads.
+
+    ``inv`` is the mean-gradient scale ``1/microbatches``; ``bc1``/``bc2``
+    are the step-``t`` bias corrections. All four are host-computed (the
+    Rust side uses ``powi``) so the kernel sees them as data, keeping the
+    on-device math free of any transcendental that could diverge from the
+    host reference.
+    """
+    assert t >= 1, "bias correction is defined for steps t >= 1"
+    bc1 = np.float32(1.0) - ADAM_BETA1**t
+    bc2 = np.float32(1.0) - ADAM_BETA2**t
+    return jnp.asarray(
+        [np.float32(1.0) / np.float32(microbatches), np.float32(lr), bc1, bc2],
+        jnp.float32,
+    )
+
+
+def ref_adam_step(
+    p: jax.Array, m: jax.Array, v: jax.Array, g: jax.Array, scalars: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused-Adam oracle: one update on one tensor.
+
+    Mirrors the Rust host optimizer (``rust/src/model/adam.rs``) operation
+    for operation, including evaluation order — ``v' = b2*v + ((1-b2)*gm)*gm``
+    and ``p' = p - (lr*(m'/bc1)) / (sqrt(v'/bc2) + eps)`` — so the Pallas
+    kernel that matches this oracle also matches the host path.
+
+    Returns ``(p', m', v', gm)`` where ``gm = g * inv`` is the mean gradient
+    (kept as an output so the caller can lazily derive ``omega = ||gm||^2``).
+    """
+    inv, lr, bc1, bc2 = scalars[0], scalars[1], scalars[2], scalars[3]
+    gm = g * inv
+    m2 = ADAM_BETA1 * m + ADAM_ONE_MINUS_BETA1 * gm
+    v2 = ADAM_BETA2 * v + (ADAM_ONE_MINUS_BETA2 * gm) * gm
+    p2 = p - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+    return p2, m2, v2, gm
+
+
+def ref_grad_accumulate(acc: jax.Array, g: jax.Array) -> jax.Array:
+    """Gradient accumulation oracle: one elementwise add, same shape."""
+    return acc + g

@@ -39,6 +39,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from .kernels.adam import adam_update, grad_accumulate
 from .kernels.attention import flash_attention
 from .kernels.rmsnorm import rmsnorm
 
@@ -296,10 +297,18 @@ def head_loss(
 # AOT entry points: flattened positional signatures
 # ---------------------------------------------------------------------------
 def make_entry_points(cfg: ModelConfig):
-    """Build the six flattened functions the AOT pipeline lowers.
+    """Build the eight flattened functions the AOT pipeline lowers.
 
     Returns ``{name: (fn, example_args)}``; shapes use ``cfg.microbatch`` ×
-    ``cfg.context``.
+    ``cfg.context``. Besides the six stage-compute entries there are two
+    optimizer entries operating on one body stage's flat parameter list
+    (``P = 9 * blocks_per_stage`` tensors):
+
+    * ``body_grad_accum(acc_0,…,acc_{P-1}, g_0,…,g_{P-1}) -> (sum…)`` —
+      per-microbatch gradient accumulation on the owning stage's plane.
+    * ``body_adam(p…, m…, v…, g…, scalars) -> (p'…, m'…, v'…, gm…)`` —
+      the fused Adam step; ``scalars = [inv, lr, bc1, bc2]`` is the (4,)
+      host-computed pack (see :func:`compile.kernels.ref.adam_scalars`).
     """
     b, s = cfg.microbatch, cfg.context
     f32, i32 = jnp.float32, jnp.int32
@@ -309,6 +318,7 @@ def make_entry_points(cfg: ModelConfig):
     embed_spec = spec((cfg.vocab, cfg.dim), f32)
     deembed_spec = spec((cfg.dim, cfg.vocab), f32)
     norm_spec = spec((cfg.dim,), f32)
+    scalars_spec = spec((4,), f32)
     stage_specs = [spec(shape, f32) for _, shape in cfg.stage_param_shapes()]
 
     def embed_fwd_fn(embed, ids):
@@ -340,6 +350,23 @@ def make_entry_points(cfg: ModelConfig):
         gd, gn, gh = grads
         return (loss, gh, gd, gn)
 
+    def body_grad_accum_fn(*args):
+        n = len(args) // 2
+        acc, g = args[:n], args[n:]
+        return tuple(grad_accumulate(a, b) for a, b in zip(acc, g))
+
+    def body_adam_fn(*args):
+        n = (len(args) - 1) // 4
+        p, m, v = args[:n], args[n : 2 * n], args[2 * n : 3 * n]
+        g, scalars = args[3 * n : 4 * n], args[-1]
+        outs = [
+            adam_update(pi, mi, vi, gi, scalars)
+            for pi, mi, vi, gi in zip(p, m, v, g)
+        ]
+        # group outputs like the inputs: all p', then m', v', gm — the Rust
+        # side donates p/m/v/g positionally into these four groups.
+        return tuple(o[j] for j in range(4) for o in outs)
+
     return {
         "embed_fwd": (embed_fwd_fn, (embed_spec, ids_spec)),
         "embed_bwd": (embed_bwd_fn, (embed_spec, ids_spec, h_spec)),
@@ -347,4 +374,9 @@ def make_entry_points(cfg: ModelConfig):
         "body_bwd": (body_bwd_fn, (*stage_specs, h_spec, h_spec)),
         "head_fwd": (head_fwd_fn, (deembed_spec, norm_spec, h_spec, ids_spec)),
         "head_bwd": (head_bwd_fn, (deembed_spec, norm_spec, h_spec, ids_spec)),
+        "body_grad_accum": (body_grad_accum_fn, (*stage_specs, *stage_specs)),
+        "body_adam": (
+            body_adam_fn,
+            (*stage_specs, *stage_specs, *stage_specs, *stage_specs, scalars_spec),
+        ),
     }

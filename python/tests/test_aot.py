@@ -16,6 +16,7 @@ import pytest
 from jax._src.lib import xla_client as xc
 
 from compile.aot import lower_config, to_hlo_text
+from compile.kernels.ref import adam_scalars
 from compile.model import PRESETS, init_embed_params, init_stage_params, make_entry_points
 
 CFG = PRESETS["tiny"]
@@ -31,7 +32,10 @@ def artifacts(tmp_path_factory):
 class TestManifest:
     def test_artifact_inventory(self, artifacts):
         cfg_dir, manifest = artifacts
-        expected = {"embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd", "head_bwd"}
+        expected = {
+            "embed_fwd", "embed_bwd", "body_fwd", "body_bwd", "head_fwd",
+            "head_bwd", "body_grad_accum", "body_adam",
+        }
         assert set(manifest["artifacts"]) == expected
         for art in manifest["artifacts"].values():
             assert (cfg_dir / art["file"]).stat().st_size > 0
@@ -134,6 +138,30 @@ class TestHloExecution:
         want = eps["head_bwd"][0](D, nw, h, ids)
         for g, w in zip(got, want):
             np.testing.assert_allclose(g, np.asarray(w), atol=1e-4, rtol=1e-4)
+
+    def test_hlo_matches_eager_optimizer(self, artifacts, inputs):
+        """The device-resident optimizer entries (grad accumulate + fused
+        Adam) execute from HLO text exactly like their eager forms."""
+        cfg_dir, _ = artifacts
+        _, _, sp, _ = inputs
+        eps = make_entry_points(CFG)
+
+        g = [0.5 * x for x in sp]
+        accum_args = (*sp, *g)
+        got = self._run_hlo(cfg_dir, "body_grad_accum", accum_args)
+        want = eps["body_grad_accum"][0](*accum_args)
+        assert len(got) == len(want)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, np.asarray(b), atol=1e-5, rtol=1e-5)
+
+        zeros = [jnp.zeros_like(x) for x in sp]
+        sc = adam_scalars(t=1, lr=1e-3, microbatches=CFG.microbatch)
+        adam_args = (*sp, *zeros, *zeros, *g, sc)
+        got = self._run_hlo(cfg_dir, "body_adam", adam_args)
+        want = eps["body_adam"][0](*adam_args)
+        assert len(got) == len(want)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, np.asarray(b), atol=1e-5, rtol=1e-5)
 
     def test_hlo_text_has_no_mosaic_custom_calls(self, artifacts):
         """interpret=True must have lowered pallas to plain HLO."""

@@ -12,12 +12,19 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from compile.kernels.adam import adam_update_pallas, grad_accumulate_pallas
 from compile.kernels.attention import (
     flash_attention,
     flash_attention_pallas,
     vmem_bytes_estimate,
 )
-from compile.kernels.ref import ref_attention, ref_rmsnorm
+from compile.kernels.ref import (
+    adam_scalars,
+    ref_adam_step,
+    ref_attention,
+    ref_grad_accumulate,
+    ref_rmsnorm,
+)
 from compile.kernels.rmsnorm import rmsnorm, rmsnorm_pallas
 
 ATOL = 2e-5
@@ -170,6 +177,143 @@ class TestRmsNorm:
         w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
         np.testing.assert_allclose(
             rmsnorm_pallas(x, w), ref_rmsnorm(x, w), atol=5e-5, rtol=5e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused Adam + grad accumulate (device-resident optimizer kernels)
+# ---------------------------------------------------------------------------
+def _pmvg(key, shape):
+    kp, km, kv2, kg = jax.random.split(key, 4)
+    p = jax.random.normal(kp, shape)
+    m = jax.random.normal(km, shape) * 0.1
+    # second moment must be non-negative (it is an EMA of squares)
+    v = jax.random.normal(kv2, shape) ** 2
+    g = jax.random.normal(kg, shape)
+    return p, m, v, g
+
+
+class TestFusedAdam:
+    @pytest.mark.parametrize("shape", [(7,), (64,), (64, 64), (64, 176), (3, 5, 7)])
+    def test_matches_ref(self, shape):
+        p, m, v, g = _pmvg(jax.random.PRNGKey(0), shape)
+        sc = adam_scalars(t=3, lr=1e-3, microbatches=4)
+        got = adam_update_pallas(p, m, v, g, sc)
+        want = ref_adam_step(p, m, v, g, sc)
+        for a, b in zip(got, want):
+            assert a.shape == shape
+            np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+    def test_bias_correction_t1_first_step_moves_by_lr(self):
+        """At t=1 with zero moments, |Δp| ≈ lr regardless of gradient scale
+        — the classic bias-correction identity the host optimizer also
+        pins (`adam.rs::first_step_moves_by_lr`)."""
+        shape = (32,)
+        p = jnp.zeros(shape)
+        m = jnp.zeros(shape)
+        v = jnp.zeros(shape)
+        g = jnp.full(shape, 123.0)
+        sc = adam_scalars(t=1, lr=0.01, microbatches=1)
+        p2, m2, v2, gm = adam_update_pallas(p, m, v, g, sc)
+        np.testing.assert_allclose(p2, -0.01 * jnp.ones(shape), atol=1e-6)
+        want = ref_adam_step(p, m, v, g, sc)
+        for a, b in zip((p2, m2, v2, gm), want):
+            np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+    def test_bias_correction_large_t(self):
+        """At large t the corrections are ~1; the kernel must still match
+        the oracle exactly through the host-supplied scalar pack."""
+        p, m, v, g = _pmvg(jax.random.PRNGKey(1), (128,))
+        for t in (1000, 100_000):
+            sc = adam_scalars(t=t, lr=3e-4, microbatches=8)
+            got = adam_update_pallas(p, m, v, g, sc)
+            want = ref_adam_step(p, m, v, g, sc)
+            for a, b in zip(got, want):
+                np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+    def test_mean_scale_folded_in(self):
+        """gm output must be g/microbatches, and feeding a pre-scaled
+        gradient with inv=1 must give the same update."""
+        p, m, v, g = _pmvg(jax.random.PRNGKey(2), (64,))
+        sc4 = adam_scalars(t=5, lr=1e-3, microbatches=4)
+        got4 = adam_update_pallas(p, m, v, g, sc4)
+        np.testing.assert_allclose(got4[3], g / 4.0, atol=ATOL, rtol=RTOL)
+        sc1 = adam_scalars(t=5, lr=1e-3, microbatches=1)
+        got1 = adam_update_pallas(p, m, v, g / 4.0, sc1)
+        for a, b in zip(got4, got1):
+            np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+    def test_block_tiling_and_padding_path(self):
+        """Element counts not divisible by the block exercise pad/unpad."""
+        p, m, v, g = _pmvg(jax.random.PRNGKey(3), (130, 16))
+        sc = adam_scalars(t=2, lr=1e-3, microbatches=2)
+        base = adam_update_pallas(p, m, v, g, sc)
+        for block in (64, 100, 2048):
+            got = adam_update_pallas(p, m, v, g, sc, block=block)
+            for a, b in zip(got, base):
+                np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 500),
+        t=st.integers(1, 10_000),
+        mb=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, t, mb, seed):
+        p, m, v, g = _pmvg(jax.random.PRNGKey(seed), (n,))
+        sc = adam_scalars(t=t, lr=1e-3, microbatches=mb)
+        got = adam_update_pallas(p, m, v, g, sc, block=64)
+        want = ref_adam_step(p, m, v, g, sc)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+class TestGradAccumulate:
+    @pytest.mark.parametrize("shape", [(5,), (64,), (64, 176), (2, 3, 4)])
+    def test_matches_ref(self, shape):
+        acc = jax.random.normal(jax.random.PRNGKey(0), shape)
+        g = jax.random.normal(jax.random.PRNGKey(1), shape)
+        np.testing.assert_allclose(
+            grad_accumulate_pallas(acc, g),
+            ref_grad_accumulate(acc, g),
+            atol=ATOL,
+            rtol=RTOL,
+        )
+
+    def test_repeated_accumulation_matches_sum(self):
+        """m microbatches accumulated one by one == left-to-right sum —
+        the same order the Rust ordered sink enforces."""
+        gs = [
+            jax.random.normal(jax.random.PRNGKey(i), (40, 16)) for i in range(4)
+        ]
+        acc = gs[0]
+        want = gs[0]
+        for g in gs[1:]:
+            acc = grad_accumulate_pallas(acc, g)
+            want = ref_grad_accumulate(want, g)
+        np.testing.assert_allclose(acc, want, atol=ATOL, rtol=RTOL)
+
+    def test_padding_path(self):
+        acc = jax.random.normal(jax.random.PRNGKey(2), (130,))
+        g = jax.random.normal(jax.random.PRNGKey(3), (130,))
+        np.testing.assert_allclose(
+            grad_accumulate_pallas(acc, g, block=64),
+            ref_grad_accumulate(acc, g),
+            atol=ATOL,
+            rtol=RTOL,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 400), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, n, seed):
+        acc = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        g = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+        np.testing.assert_allclose(
+            grad_accumulate_pallas(acc, g, block=64),
+            ref_grad_accumulate(acc, g),
+            atol=5e-5,
+            rtol=5e-5,
         )
 
 

@@ -35,15 +35,24 @@
 //! `link_wait_ns_overlap_off` arrays and the
 //! `gate_overlap_wait_below_off` gate — with prefetch on, every stage
 //! that waits on links at all must wait strictly less than it does
-//! with prefetch off. Results are written to `BENCH_hot_path.json` at
-//! the repo root so future PRs can diff the perf trajectory.
+//! with prefetch off. Schema 5 adds the `optimizer_path` section and
+//! the `param_pulls` transfer column: a 1F1B iteration is timed with
+//! the host Adam (every body gradient pulled, stepped on the host)
+//! and with the fused on-plane Adam (`body_grad_accum` +
+//! `body_adam`), and the device gate pins the ledger contract — the
+//! device path's steady-state host syncs are exactly `m·4` (the
+//! `m·L·P` gradient-pull term is gone), with zero `param_pulls`,
+//! strictly below the host path's count. All previously committed
+//! sections stay pinned to the host optimizer so the trajectory
+//! remains comparable. Results are written to `BENCH_hot_path.json`
+//! at the repo root so future PRs can diff the perf trajectory.
 //!
 //! Pass `--smoke` for a quick tiny-model-only run (used by
 //! `scripts/tier1.sh` as the train_iteration timing check); smoke
 //! results go to the gitignored `BENCH_hot_path.smoke.json` so they
 //! never clobber the committed full-run trajectory.
 
-use checkfree::config::{ExecMode, LinkPath, Overlap, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{ExecMode, LinkPath, OptimizerPath, Overlap, PlaneMode, Strategy, TrainConfig};
 use checkfree::coordinator::PipelineEngine;
 use checkfree::model::GradBuffer;
 use checkfree::recovery::checkfree::weighted_average;
@@ -69,20 +78,24 @@ fn main() {
     let mut watermarks: Vec<(String, Json)> = Vec::new();
     let mut residency: Vec<(String, Json)> = Vec::new();
     let mut plane_overheads: Vec<(String, Json)> = Vec::new();
+    let mut opt_paths: Vec<(String, Json)> = Vec::new();
 
     'models: for &model in models {
         let mut mode_means: Vec<(ExecMode, f64)> = Vec::new();
         for mode in [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
-            // Plane mode pinned: the committed speedup gates are defined
-            // over the shared client regardless of the ambient
-            // CHECKFREE_PLANE_MODE (the CI matrix lever); the per-stage
-            // layout is measured separately below.
+            // Plane mode and optimizer path pinned: the committed
+            // speedup gates are defined over the shared client and host
+            // Adam regardless of the ambient CHECKFREE_PLANE_MODE /
+            // CHECKFREE_OPTIMIZER_PATH (the CI matrix levers); the
+            // per-stage layout and the fused device optimizer are
+            // measured separately below.
             let cfg = TrainConfig {
                 model: model.into(),
                 strategy: Strategy::CheckFree,
                 microbatches_per_iter: MICROBATCHES,
                 exec_mode: mode,
                 plane_mode: PlaneMode::Shared,
+                optimizer_path: OptimizerPath::Host,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -176,6 +189,7 @@ fn main() {
                 microbatches_per_iter: WATERMARK_MB,
                 exec_mode: mode,
                 plane_mode: PlaneMode::Shared, // gate defined over the shared client
+                optimizer_path: OptimizerPath::Host,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -222,7 +236,8 @@ fn main() {
         // committed gate); and donations matching the schedule.
         let transfers_of = |mode: ExecMode,
                             host_staging: bool,
-                            plane_mode: PlaneMode|
+                            plane_mode: PlaneMode,
+                            optimizer_path: OptimizerPath|
          -> Option<(checkfree::metrics::TransferSnapshot, u64)> {
             let cfg = TrainConfig {
                 model: model.into(),
@@ -232,6 +247,7 @@ fn main() {
                 host_staging,
                 plane_mode,
                 link_path: LinkPath::Auto,
+                optimizer_path,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -267,13 +283,15 @@ fn main() {
                 ("link_overlapped", Json::num(d.link_overlapped as f64)),
                 ("link_blocking", Json::num(d.link_blocking as f64)),
                 ("link_wait_ns", Json::num(d.link_wait_ns as f64)),
+                ("param_pulls", Json::num(d.param_pulls as f64)),
             ])
         };
-        let seq = transfers_of(ExecMode::Sequential, false, PlaneMode::Shared);
-        let fd = transfers_of(ExecMode::Pipelined, false, PlaneMode::Shared);
-        let ob = transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::Shared);
-        let ob_host = transfers_of(ExecMode::Pipelined1F1B, true, PlaneMode::Shared);
-        let ob_ps = transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::PerStage);
+        let host_opt = OptimizerPath::Host;
+        let seq = transfers_of(ExecMode::Sequential, false, PlaneMode::Shared, host_opt);
+        let fd = transfers_of(ExecMode::Pipelined, false, PlaneMode::Shared, host_opt);
+        let ob = transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::Shared, host_opt);
+        let ob_host = transfers_of(ExecMode::Pipelined1F1B, true, PlaneMode::Shared, host_opt);
+        let ob_ps = transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::PerStage, host_opt);
         if let (Some(seq), Some(fd), Some(ob), Some(ob_host), Some(ob_ps)) =
             (seq, fd, ob, ob_host, ob_ps)
         {
@@ -338,6 +356,83 @@ fn main() {
             ));
         }
 
+        // Optimizer path: the schema-5 tentpole section. Times a 1F1B
+        // iteration with the host Adam (every body gradient pulled and
+        // stepped on the host) against the fused on-plane Adam
+        // (`body_grad_accum` accumulates per-microbatch grads on the
+        // owning stage's plane, `body_adam` steps there; host copies
+        // materialize lazily at recovery/checkpoint boundaries). The
+        // gate pins the ledger contract, not relative timing: device
+        // steady-state host syncs are exactly m·4 — the m·L·P
+        // gradient-pull term is deleted — with zero param pulls,
+        // strictly below the host path's count. The host timing reuses
+        // the 1F1B mean measured above (same model, shared-pinned,
+        // host Adam).
+        let dev_timed = {
+            let cfg = TrainConfig {
+                model: model.into(),
+                strategy: Strategy::CheckFree,
+                microbatches_per_iter: MICROBATCHES,
+                exec_mode: ExecMode::Pipelined1F1B,
+                plane_mode: PlaneMode::Shared,
+                optimizer_path: OptimizerPath::Device,
+                ..TrainConfig::default()
+            };
+            match PipelineEngine::from_config(&cfg) {
+                Ok(mut e) => {
+                    let stats = bench_with(
+                        &format!("train_iteration ({model}, 1f1b, device optimizer)"),
+                        Duration::from_secs(if smoke { 1 } else { 3 }),
+                        5,
+                        200,
+                        || {
+                            e.train_iteration().unwrap();
+                        },
+                    );
+                    println!("{}", stats.report());
+                    results.push(stats.to_json());
+                    Some(stats.mean.as_secs_f64())
+                }
+                Err(err) => {
+                    eprintln!("optimizer-path run skipped ({model}, device): {err:#}");
+                    None
+                }
+            }
+        };
+        let host_t =
+            transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::Shared, OptimizerPath::Host);
+        let dev_t =
+            transfers_of(ExecMode::Pipelined1F1B, false, PlaneMode::Shared, OptimizerPath::Device);
+        if let (Some(host_s), Some(dev_s), Some((host_t, _)), Some((dev_t, _))) =
+            (mean_of(ExecMode::Pipelined1F1B), dev_timed, host_t, dev_t)
+        {
+            let boundary_budget = MICROBATCHES as u64 * 4;
+            let gate = dev_t.host_syncs == boundary_budget
+                && dev_t.host_syncs < host_t.host_syncs
+                && dev_t.param_pulls == 0;
+            println!(
+                "  {model}: optimizer path @ {MICROBATCHES} mb — host {} syncs/iter, \
+                 device {} (budget m·4 = {boundary_budget}, param pulls {}); \
+                 device over host wall-clock = {:.2}×  (gate m·4 ∧ below host ∧ \
+                 zero pulls: {gate})\n",
+                host_t.host_syncs,
+                dev_t.host_syncs,
+                dev_t.param_pulls,
+                dev_s / host_s,
+            );
+            opt_paths.push((
+                model.to_string(),
+                Json::obj(vec![
+                    ("host", transfers_json(&host_t)),
+                    ("device", transfers_json(&dev_t)),
+                    ("host_mean_s", Json::num(host_s)),
+                    ("device_mean_s", Json::num(dev_s)),
+                    ("device_over_host", Json::num(dev_s / host_s)),
+                    ("gate_device_syncs_m4_below_host", Json::Bool(gate)),
+                ]),
+            ));
+        }
+
         // Plane-mode wall-clock: what the per-stage link copies cost per
         // iteration under EACH link path — the direct plugin transfer
         // (the default fast path) and the staged device→host→device
@@ -355,6 +450,7 @@ fn main() {
                 exec_mode: ExecMode::Pipelined1F1B,
                 plane_mode: PlaneMode::PerStage,
                 link_path: link,
+                optimizer_path: OptimizerPath::Host,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -403,6 +499,7 @@ fn main() {
                 plane_mode: PlaneMode::PerStage,
                 link_path: LinkPath::Auto,
                 overlap,
+                optimizer_path: OptimizerPath::Host,
                 ..TrainConfig::default()
             };
             let mut e = match PipelineEngine::from_config(&cfg) {
@@ -500,7 +597,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("hot_path")),
-        ("schema", Json::num(4.0)),
+        ("schema", Json::num(5.0)),
         ("status", Json::str("measured")),
         ("generated_by", Json::str("cargo bench --bench hot_path [-- --smoke]")),
         ("smoke", Json::Bool(smoke)),
@@ -543,6 +640,14 @@ fn main() {
             "plane_mode",
             Json::obj(
                 plane_overheads.iter().map(|(m, j)| (m.as_str(), j.clone())).collect(),
+            ),
+        ),
+        (
+            "optimizer_path",
+            Json::obj(
+                std::iter::once(("microbatches", Json::num(MICROBATCHES as f64)))
+                    .chain(opt_paths.iter().map(|(m, j)| (m.as_str(), j.clone())))
+                    .collect(),
             ),
         ),
         ("results", Json::Arr(results)),

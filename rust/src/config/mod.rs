@@ -343,6 +343,82 @@ impl FromStr for Overlap {
     }
 }
 
+/// Where the gradient accumulation + Adam step run (orthogonal to
+/// [`ExecMode`]/[`PlaneMode`]; meaningful only on device-staged
+/// pipelined paths — the sequential / host-staging reference always
+/// optimizes on the host).
+///
+/// The host path pulls every per-microbatch body gradient to the host
+/// (`GradBuffer::accumulate`) and steps Adam in `util/par.rs` — the
+/// `m·L·P` host-sync term that dominates the steady-state budget at
+/// scale. The device path keeps body gradients on the owning stage's
+/// plane, accumulates them there (`body_grad_accum`), runs the fused
+/// `body_adam` kernel on-plane, and *lazily materializes* the host copy
+/// of params + optimizer state only at recovery / checkpoint / trace
+/// boundaries (metered by the ledger's `param_pulls` column), dropping
+/// steady-state host syncs to `m·4`. Bitwise-identical results either
+/// way — the kernel mirrors the host math op for op, and the host path
+/// is retained as the A/B reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerPath {
+    /// Resolve to `Device` when the run is device-staged **and** the
+    /// manifest ships the optimizer artifacts (`body_adam`,
+    /// `body_grad_accum`); degrade loudly to `Host` otherwise. The
+    /// default.
+    Auto,
+    /// Require the on-plane optimizer; engine construction **fails** if
+    /// the manifest lacks the optimizer artifacts (CI uses this to
+    /// prove the fast path engages rather than silently degrading).
+    /// On a host-staged or sequential run it degrades loudly to `Host`
+    /// — those paths *are* the host-optimizer reference — which lets
+    /// the CI matrix export CHECKFREE_OPTIMIZER_PATH=device globally.
+    Device,
+    /// Pull gradients to the host and step Adam in `util/par.rs` — the
+    /// pre-device-optimizer behaviour, kept as the bitwise A/B
+    /// reference.
+    Host,
+}
+
+impl OptimizerPath {
+    pub const ALL: [OptimizerPath; 3] =
+        [OptimizerPath::Auto, OptimizerPath::Device, OptimizerPath::Host];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptimizerPath::Auto => "auto",
+            OptimizerPath::Device => "device",
+            OptimizerPath::Host => "host",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_OPTIMIZER_PATH` if set (the
+    /// CI lever for the host↔device A/B legs), else
+    /// [`OptimizerPath::Auto`]. Unparsable values fall back to `Auto` —
+    /// loudly, like [`PlaneMode::from_env`].
+    pub fn from_env() -> OptimizerPath {
+        match std::env::var("CHECKFREE_OPTIMIZER_PATH") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_OPTIMIZER_PATH: {e}; using 'auto'");
+                OptimizerPath::Auto
+            }),
+            Err(_) => OptimizerPath::Auto,
+        }
+    }
+}
+
+impl FromStr for OptimizerPath {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(OptimizerPath::Auto),
+            "device" => Ok(OptimizerPath::Device),
+            "host" => Ok(OptimizerPath::Host),
+            other => Err(anyhow!("unknown optimizer path '{other}' (auto|device|host)")),
+        }
+    }
+}
+
 /// Reinitialization rule for a lost intermediate stage (paper Fig 2
 /// ablation: random / copy / weighted averaging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -506,6 +582,9 @@ pub struct TrainConfig {
     /// Whether cross-plane link copies are prefetched on the sending
     /// side (see [`Overlap`]). Defaults to [`Overlap::from_env`].
     pub overlap: Overlap,
+    /// Where gradient accumulation + the Adam step run (see
+    /// [`OptimizerPath`]). Defaults to [`OptimizerPath::from_env`].
+    pub optimizer_path: OptimizerPath,
     /// Which churn arrival process drives failure injection (see
     /// `failures::process`). Bernoulli is the paper's flat model and
     /// the default; ignored when replaying a churn trace.
@@ -539,6 +618,7 @@ impl Default for TrainConfig {
             plane_mode: PlaneMode::from_env(),
             link_path: LinkPath::from_env(),
             overlap: Overlap::from_env(),
+            optimizer_path: OptimizerPath::from_env(),
             churn_process: crate::failures::ChurnProcessKind::Bernoulli,
             churn_trace: None,
             allow_adjacent: false,
@@ -581,6 +661,7 @@ impl TrainConfig {
             ("plane_mode", Json::str(self.plane_mode.label())),
             ("link_path", Json::str(self.link_path.label())),
             ("overlap", Json::str(self.overlap.label())),
+            ("optimizer_path", Json::str(self.optimizer_path.label())),
             ("churn_process", Json::str(self.churn_process.label())),
             (
                 "churn_trace",
@@ -679,6 +760,10 @@ impl TrainConfig {
             overlap: match v.opt("overlap") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.overlap,
+            },
+            optimizer_path: match v.opt("optimizer_path") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.optimizer_path,
             },
             churn_process: match v.opt("churn_process") {
                 Some(x) => x.as_str()?.parse()?,
@@ -961,6 +1046,59 @@ mod tests {
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
         assert_eq!(back.overlap, Overlap::from_env());
+    }
+
+    #[test]
+    fn optimizer_path_parse_all_labels() {
+        for p in OptimizerPath::ALL {
+            assert_eq!(p.label().parse::<OptimizerPath>().unwrap(), p);
+        }
+        assert!("bogus".parse::<OptimizerPath>().is_err());
+    }
+
+    #[test]
+    fn optimizer_path_roundtrips_and_defaults_from_env() {
+        assert_eq!(TrainConfig::default().optimizer_path, OptimizerPath::from_env());
+        if std::env::var("CHECKFREE_OPTIMIZER_PATH").is_err() {
+            assert_eq!(OptimizerPath::from_env(), OptimizerPath::Auto);
+        }
+        for path in OptimizerPath::ALL {
+            let cfg = TrainConfig { optimizer_path: path, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.optimizer_path, path);
+        }
+        // absent key → env default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.optimizer_path, OptimizerPath::from_env());
+    }
+
+    #[test]
+    fn device_optimizer_validates_on_every_staging_combo() {
+        // The optimizer-path knob is resolved at engine build, not here:
+        // explicit `device` on a host-staged or sequential run degrades
+        // to the host path with a warning (exactly like `auto`), so the
+        // CI matrix can set CHECKFREE_OPTIMIZER_PATH=device globally
+        // without blowing up the host-staged test legs.
+        for path in OptimizerPath::ALL {
+            for (host_staging, exec_mode) in [
+                (false, ExecMode::Pipelined1F1B),
+                (true, ExecMode::Pipelined1F1B),
+                (false, ExecMode::Sequential),
+            ] {
+                let cfg = TrainConfig {
+                    optimizer_path: path,
+                    host_staging,
+                    exec_mode,
+                    ..TrainConfig::default()
+                };
+                assert!(cfg.validate().is_ok(), "{path:?}/{exec_mode:?}");
+            }
+        }
     }
 
     #[test]

@@ -56,6 +56,29 @@
 //! direct/staged — is billed to the engine's
 //! [`crate::metrics::TransferLedger`].
 //!
+//! ## Device-resident optimizer
+//!
+//! On the device plane the remaining `m·(4 + L·P)` host syncs were
+//! dominated by the `m·L·P` per-microbatch body parameter gradients —
+//! pulled to host only so `util/par.rs` could step Adam there. With
+//! `--optimizer-path device` (the default via `auto` whenever the
+//! manifest ships the optimizer artifacts) that term is gone: each body
+//! stage's gradients accumulate on its own plane
+//! ([`executor::DeviceGradSink`] donating through `body_grad_accum`),
+//! the fused `body_adam` kernel steps params + both Adam moments
+//! on-plane with bias correction folded in, and the host copy of the
+//! stage (params, m, v, ω) becomes **lazily materialized** — pulled
+//! back only at the boundaries where host math genuinely reads it
+//! (recovery, checkpoint snapshot, explicit
+//! [`PipelineEngine::materialize_host_state`]), each pulled tensor
+//! billed as an ordinary host sync *plus* the ledger's `param_pulls`
+//! tag. Steady-state host syncs drop to `m·4` (loss + the head's
+//! stage-0 gradient pieces + ∂L/∂embed per microbatch — stage 0 keeps
+//! the host optimizer: its gradients join on the host from two
+//! executables). The device step is bitwise-identical to the host path
+//! — the kernel mirrors `model::adam` op for op — and `--optimizer-path
+//! host` retains the old path as the A/B reference.
+//!
 //! All modes read parameters through the versioned
 //! [`crate::runtime::LiteralCache`] (marshalled/uploaded once per
 //! parameter rewrite, not per call) and all produce
@@ -71,15 +94,18 @@
 //! stage state between iterations.
 
 use std::cell::RefCell;
+use std::sync::Mutex;
 
-use crate::config::{ExecMode, LinkPath, Overlap, PlaneMode, Staging, TrainConfig};
+use crate::config::{ExecMode, LinkPath, OptimizerPath, Overlap, PlaneMode, Staging, TrainConfig};
 use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
 use crate::metrics::{ActivationWatermark, TransferLedger};
-use crate::model::{GradBuffer, Stage};
+use crate::model::{grad_sq_norm, GradBuffer, Stage};
 use crate::rng::Rng;
-use crate::runtime::{DeviceBuffer, DevicePlane, HostTensor, LiteralCache, PlaneSet, Runtime};
+use crate::runtime::{
+    DeviceBuffer, DevicePlane, ExecArg, HostTensor, LiteralCache, PlaneSet, Runtime,
+};
 use crate::{anyhow, Context, Result};
 
 /// Result of one training iteration.
@@ -88,11 +114,42 @@ pub struct IterStats {
     pub iteration: u64,
     /// Mean microbatch loss.
     pub loss: f32,
-    /// ω = ‖∇W‖² per stage after this iteration (index 0 = embed).
+    /// ω = ‖∇W‖² per stage after this iteration (index 0 = embed). On
+    /// the device optimizer path body-stage entries refresh only at
+    /// materialization boundaries (the gradient never visits the host
+    /// between them) — recovery always materializes first, so the
+    /// values it reads are current.
     pub omegas: Vec<f64>,
     /// Peak simultaneously-stashed slot activations this iteration
     /// (0 in sequential mode, which frees per microbatch).
     pub peak_resident_activations: usize,
+}
+
+/// Device-resident optimizer state for one body stage
+/// (`--optimizer-path device`): parameters and both Adam moments live
+/// on the stage's owning plane and are stepped there by the fused
+/// `body_adam` artifact. The host [`Stage`] copy is *lazily
+/// materialized*: `host_stale` flips on every on-plane step and clears
+/// when [`PipelineEngine::materialize_host_state`] pulls the state
+/// back; `host_version` records the `params_version` this state was
+/// seeded from (or last materialized to), so any host-side rewrite —
+/// recovery, rollback, wipe all bump the version — orphans the device
+/// state and the next iteration reseeds from host.
+struct DeviceOptStage {
+    params: Vec<DeviceBuffer>,
+    m: Vec<DeviceBuffer>,
+    v: Vec<DeviceBuffer>,
+    /// Adam step count of the device state (host `Adam::step_count`
+    /// at seed time + one per on-plane step).
+    t: u64,
+    /// The `Stage::params_version` the device state agrees with.
+    host_version: u64,
+    /// True when the device state has stepped past the host copy.
+    host_stale: bool,
+    /// The mean-scaled accumulated gradient (`gm`) of the most recent
+    /// on-plane step, kept so ω = ‖gm‖² can be computed at
+    /// materialization without an extra kernel.
+    last_gm: Option<Vec<DeviceBuffer>>,
 }
 
 pub struct PipelineEngine {
@@ -130,6 +187,13 @@ pub struct PipelineEngine {
     /// [`Self::transfer_ledger`]); diff snapshots for per-iteration
     /// numbers.
     ledger: TransferLedger,
+    /// Where gradient accumulation + Adam run — **resolved** (never
+    /// `Auto`; see [`Self::optimizer_path`]).
+    optimizer_path: OptimizerPath,
+    /// Per-stage device optimizer state, index = stage; `[0]` is always
+    /// `None` (the embed stage keeps the host optimizer), body entries
+    /// are `None` until the first device-path iteration seeds them.
+    device_opt: Vec<Option<DeviceOptStage>>,
 }
 
 impl PipelineEngine {
@@ -160,6 +224,7 @@ impl PipelineEngine {
                 cfg.link_path.label()
             ));
         }
+        let optimizer_path = Self::resolve_optimizer_path(&runtime, cfg)?;
         let mc = runtime.manifest.config.clone();
         let lr = cfg.lr.unwrap_or(mc.learning_rate);
         let mut rng = Rng::new(cfg.seed);
@@ -179,6 +244,7 @@ impl PipelineEngine {
             mc.vocab,
         );
         let ledger = TransferLedger::new(stages.len());
+        let device_opt = stages.iter().map(|_| None).collect();
         Ok(Self {
             runtime,
             stages,
@@ -196,7 +262,63 @@ impl PipelineEngine {
             worker_pool: None,
             activations: ActivationWatermark::new(),
             ledger,
+            optimizer_path,
+            device_opt,
         })
+    }
+
+    /// Resolve the configured [`OptimizerPath`] against what this run
+    /// can actually do. `Auto` picks the device path whenever the run
+    /// is device-staged and the manifest ships the optimizer artifacts;
+    /// explicit `Device` additionally *requires* the artifacts (a
+    /// missing kernel is an environment bug, not a mode to degrade
+    /// around) but still degrades — loudly — on host-staged/sequential
+    /// runs, which are the host-optimizer reference by definition.
+    fn resolve_optimizer_path(runtime: &Runtime, cfg: &TrainConfig) -> Result<OptimizerPath> {
+        let has_artifacts = runtime.manifest.has_artifact("body_adam")
+            && runtime.manifest.has_artifact("body_grad_accum");
+        Ok(match cfg.optimizer_path {
+            OptimizerPath::Host => OptimizerPath::Host,
+            OptimizerPath::Device => {
+                if !has_artifacts {
+                    return Err(anyhow!(
+                        "--optimizer-path device needs the 'body_adam' + 'body_grad_accum' \
+                         artifacts; regenerate with `python -m compile.aot` (or use 'auto' \
+                         to degrade to the host path)"
+                    ));
+                }
+                if cfg.staging() == Staging::Host {
+                    eprintln!(
+                        "warning: --optimizer-path device on a host-staged/sequential run: \
+                         degrading to the host optimizer (that path IS the host reference)"
+                    );
+                    OptimizerPath::Host
+                } else {
+                    OptimizerPath::Device
+                }
+            }
+            OptimizerPath::Auto => {
+                if cfg.staging() == Staging::Device && has_artifacts {
+                    OptimizerPath::Device
+                } else {
+                    if cfg.staging() == Staging::Device {
+                        eprintln!(
+                            "warning: optimizer-path auto: manifest lacks \
+                             body_adam/body_grad_accum, falling back to the host optimizer \
+                             (regenerate artifacts with `python -m compile.aot`)"
+                        );
+                    }
+                    OptimizerPath::Host
+                }
+            }
+        })
+    }
+
+    /// The **resolved** optimizer path this engine runs (`Auto` never
+    /// escapes construction): [`OptimizerPath::Device`] iff body-stage
+    /// gradient accumulation and the Adam step execute on-plane.
+    pub fn optimizer_path(&self) -> OptimizerPath {
+        self.optimizer_path
     }
 
     pub fn body_stages(&self) -> usize {
@@ -391,8 +513,17 @@ impl PipelineEngine {
             ExecMode::Pipelined1F1B => Some(PipelineSchedule::OneFOneB),
         };
         let staging = self.staging;
+        // The device optimizer engages only where it can: a pipelined,
+        // device-staged iteration (mirrors the match arm below).
+        let device_path = self.optimizer_path == OptimizerPath::Device
+            && staging == Staging::Device
+            && sched.is_some()
+            && self.stages.len() >= 2;
         let losses: Vec<f32> = match sched {
             Some(kind) if self.stages.len() >= 2 => {
+                if device_path {
+                    self.seed_device_opt()?;
+                }
                 let planes = self.runtime.plane_set(&self.ledger);
                 match staging {
                     Staging::Device => self.refresh_cache_device(&planes)?,
@@ -405,7 +536,23 @@ impl PipelineEngine {
                 }
                 let pool = self.worker_pool.as_mut().expect("pool just ensured");
                 let cache = self.lit_cache.borrow();
-                executor::run_iteration(
+                let ctx = if device_path {
+                    let l = self.stages.len() - 1;
+                    let mut params: Vec<&[DeviceBuffer]> = Vec::with_capacity(l);
+                    let mut sinks = Vec::with_capacity(l);
+                    for s in 1..=l {
+                        let opt = self.device_opt[s].as_ref().expect("seeded above");
+                        params.push(opt.params.as_slice());
+                        let exe = self
+                            .runtime
+                            .executable_on(planes.plane(s).idx(), "body_grad_accum")?;
+                        sinks.push(Mutex::new(executor::DeviceGradSink::new(exe, s)));
+                    }
+                    Some(executor::DeviceOptIter { params, sinks })
+                } else {
+                    None
+                };
+                let losses = executor::run_iteration(
                     pool,
                     &self.runtime,
                     &planes,
@@ -418,7 +565,32 @@ impl PipelineEngine {
                     self.overlap,
                     &self.activations,
                     &mut self.grad_bufs,
-                )?
+                    ctx.as_ref(),
+                )?;
+                if let Some(ctx) = ctx {
+                    // The fused on-plane Adam step: donate each stage's
+                    // (params, m, v, accumulated grads) into `body_adam`.
+                    let executor::DeviceOptIter { params, sinks } = ctx;
+                    drop(params); // release the &device_opt borrows
+                    let accs: Vec<Vec<DeviceBuffer>> = sinks
+                        .into_iter()
+                        .map(|sink| {
+                            sink.into_inner()
+                                .expect("device grad sink lock poisoned")
+                                .take()
+                                .expect("run_iteration verified sink completeness")
+                        })
+                        .collect();
+                    Self::device_adam_steps(
+                        &planes,
+                        &self.runtime,
+                        &self.stages,
+                        self.microbatches,
+                        &mut self.device_opt,
+                        accs,
+                    )?;
+                }
+                losses
             }
             _ => {
                 self.refresh_cache()?;
@@ -446,7 +618,18 @@ impl PipelineEngine {
         for &l in &losses {
             loss_sum += l as f64;
         }
-        for (stage, gb) in self.stages.iter_mut().zip(&mut self.grad_bufs) {
+        for (i, (stage, gb)) in self.stages.iter_mut().zip(&mut self.grad_bufs).enumerate() {
+            if device_path && i > 0 {
+                // Body gradients never touched the host and the on-plane
+                // Adam step already ran; the host copy (params, m, v, ω)
+                // stays stale until the next materialization boundary.
+                debug_assert_eq!(
+                    gb.microbatches(),
+                    0,
+                    "device optimizer path leaked body grads to the host"
+                );
+                continue;
+            }
             debug_assert_eq!(gb.microbatches() as usize, self.microbatches);
             stage.apply_grads(gb);
         }
@@ -457,6 +640,166 @@ impl PipelineEngine {
             omegas: self.stages.iter().map(|s| s.omega).collect(),
             peak_resident_activations: self.activations.peak(),
         })
+    }
+
+    /// Bring every body stage's device optimizer state into agreement
+    /// with the host (the `params_version` protocol): seed params + m +
+    /// v onto the stage's owning plane when the state is missing or a
+    /// host-side rewrite (recovery, rollback, wipe) orphaned it. A
+    /// stage whose device state merely *stepped ahead* of the host
+    /// (`host_stale`, matching version) is left alone — that is the
+    /// steady-state fast path, zero uploads.
+    fn seed_device_opt(&mut self) -> Result<()> {
+        let planes = self.runtime.plane_set(&self.ledger);
+        for s in 1..self.stages.len() {
+            let stage = &self.stages[s];
+            let version = stage.params_version();
+            if matches!(&self.device_opt[s], Some(o) if o.host_version == version) {
+                continue;
+            }
+            let plane = planes.plane(s);
+            let params: Vec<DeviceBuffer> =
+                stage.params.iter().map(|t| plane.upload(s, t)).collect::<Result<_>>()?;
+            let (m, v) = stage.adam.moments();
+            let upload_moment = |flat: &[Vec<f32>]| -> Result<Vec<DeviceBuffer>> {
+                stage
+                    .params
+                    .iter()
+                    .zip(flat)
+                    .map(|(p, b)| plane.upload(s, &HostTensor::from_f32(p.shape().to_vec(), b)))
+                    .collect()
+            };
+            self.device_opt[s] = Some(DeviceOptStage {
+                params,
+                m: upload_moment(m)?,
+                v: upload_moment(v)?,
+                t: stage.adam.step_count(),
+                host_version: version,
+                host_stale: false,
+                last_gm: None,
+            });
+        }
+        Ok(())
+    }
+
+    /// One fused on-plane Adam step per body stage: donate the stage's
+    /// (params, m, v) and its accumulated gradients into `body_adam`
+    /// with the scalar pack `[1/m, lr, bias_corr1, bias_corr2]`; the
+    /// four output groups (params', m', v', mean grad) alias the donated
+    /// inputs, so the step allocates nothing net on the plane. Mirrors
+    /// [`crate::model::Adam::update`] bit for bit (same constants, same
+    /// op order — see `python/compile/kernels/adam.py`).
+    fn device_adam_steps(
+        planes: &PlaneSet,
+        runtime: &Runtime,
+        stages: &[Stage],
+        microbatches: usize,
+        device_opt: &mut [Option<DeviceOptStage>],
+        accs: Vec<Vec<DeviceBuffer>>,
+    ) -> Result<()> {
+        let inv = 1.0f32 / microbatches as f32;
+        for (i, acc) in accs.into_iter().enumerate() {
+            let s = i + 1;
+            let plane = planes.plane(s);
+            let exe = runtime.executable_on(plane.idx(), "body_adam")?;
+            let opt = device_opt[s].as_mut().expect("seeded by train_iteration");
+            let t = opt.t + 1;
+            let (bc1, bc2) = stages[s].adam.bias_corrections(t);
+            let scalars =
+                plane.upload(s, &HostTensor::from_f32(vec![4], &[inv, stages[s].lr, bc1, bc2]))?;
+            let p = opt.params.len();
+            let mut args: Vec<ExecArg> = Vec::with_capacity(4 * p + 1);
+            args.extend(std::mem::take(&mut opt.params).into_iter().map(ExecArg::Donate));
+            args.extend(std::mem::take(&mut opt.m).into_iter().map(ExecArg::Donate));
+            args.extend(std::mem::take(&mut opt.v).into_iter().map(ExecArg::Donate));
+            args.extend(acc.into_iter().map(ExecArg::Donate));
+            args.push(ExecArg::Keep(&scalars));
+            let mut outs = exe.execute_buffers_donating(plane, s, args)?;
+            if outs.len() != 4 * p {
+                return Err(anyhow!(
+                    "body_adam returned {} outputs for stage {s}, wanted {}",
+                    outs.len(),
+                    4 * p
+                ));
+            }
+            let gm = outs.split_off(3 * p);
+            let v = outs.split_off(2 * p);
+            let m = outs.split_off(p);
+            opt.params = outs;
+            opt.m = m;
+            opt.v = v;
+            opt.t = t;
+            opt.host_stale = true;
+            opt.last_gm = Some(gm);
+        }
+        Ok(())
+    }
+
+    /// Pull every device-stepped body stage's state back to the host —
+    /// the **materialization boundary** of the device optimizer path.
+    /// Params land in `Stage::params` (one version bump per stage, so
+    /// every literal mirror invalidates), moments + step count land in
+    /// `Stage::adam`, and ω is recomputed from the pulled mean gradient
+    /// — so host-side recovery math (CheckFree weighted averaging,
+    /// checkpoint snapshots, redundant copies) reads exactly what the
+    /// plane holds. Each pulled tensor bills an ordinary host sync
+    /// *plus* the ledger's `param_pulls` tag. No-op for fresh stages
+    /// and on the host path: callers guard *boundaries*, not paths.
+    pub fn materialize_host_state(&mut self) -> Result<()> {
+        let planes = self.runtime.plane_set(&self.ledger);
+        for s in 1..self.stages.len() {
+            match &self.device_opt[s] {
+                Some(o) if o.host_stale => {}
+                _ => continue,
+            }
+            if self.device_opt[s].as_ref().expect("matched above").host_version
+                != self.stages[s].params_version()
+            {
+                // The host was rewritten underneath a stale device state
+                // (a recovery that skipped this boundary): the host
+                // wins — drop the orphaned state, the next device-path
+                // iteration reseeds from host.
+                self.device_opt[s] = None;
+                continue;
+            }
+            let opt = self.device_opt[s].as_mut().expect("matched above");
+            let plane = planes.plane(s);
+            let ledger = &self.ledger;
+            let stage = &mut self.stages[s];
+            stage.with_params_mut(|params| -> Result<()> {
+                for (dst, src) in params.iter_mut().zip(&opt.params) {
+                    src.read_into(plane, s, dst)?;
+                    ledger.record_param_pull(s);
+                }
+                Ok(())
+            })?;
+            let pull_flat = |bufs: &[DeviceBuffer]| -> Result<Vec<Vec<f32>>> {
+                bufs.iter()
+                    .map(|b| {
+                        let t = b.to_host(plane, s)?;
+                        ledger.record_param_pull(s);
+                        Ok(t.as_f32().to_vec())
+                    })
+                    .collect()
+            };
+            let m = pull_flat(&opt.m)?;
+            let v = pull_flat(&opt.v)?;
+            stage.adam.set_state(&m, &v, opt.t);
+            if let Some(gm) = opt.last_gm.take() {
+                let flats: Vec<HostTensor> = gm
+                    .iter()
+                    .map(|b| {
+                        let t = b.to_host(plane, s)?;
+                        ledger.record_param_pull(s);
+                        Ok(t)
+                    })
+                    .collect::<Result<_>>()?;
+                stage.omega = grad_sq_norm(flats.iter().map(|t| t.as_f32()));
+            }
+            opt.host_version = stage.params_version();
+            opt.host_stale = false;
+        }
+        Ok(())
     }
 
     /// Peak number of simultaneously-stashed slot activations during the
@@ -498,9 +841,20 @@ impl PipelineEngine {
             let plane = planes.plane(s);
             let h_in = h.copy_to_plane(plane, s)?;
             let body_fwd = self.runtime.executable_on(plane.idx(), "body_fwd")?;
+            // A device-stepped stage serves its *device* params (the
+            // host copy and its litcache mirrors are stale until the
+            // next materialization — validation must not force a pull);
+            // everything else reads the litcache mirror.
+            let stage_params: &[DeviceBuffer] = match &self.device_opt[s] {
+                Some(o)
+                    if o.host_stale && o.host_version == self.stages[s].params_version() =>
+                {
+                    &o.params
+                }
+                _ => cache.stage_buffers_on(s, plane.idx()),
+            };
             h = {
-                let mut args: Vec<&DeviceBuffer> =
-                    cache.stage_buffers_on(s, plane.idx()).iter().collect();
+                let mut args: Vec<&DeviceBuffer> = stage_params.iter().collect();
                 args.push(&h_in);
                 body_fwd
                     .execute_buffers(plane, s, &args)?
@@ -651,6 +1005,29 @@ mod tests {
         PipelineEngine::from_config(&cfg).unwrap()
     }
 
+    fn engine_with_optimizer(
+        strategy: Strategy,
+        seed: u64,
+        microbatches: usize,
+        exec_mode: ExecMode,
+        plane_mode: PlaneMode,
+        optimizer_path: OptimizerPath,
+    ) -> PipelineEngine {
+        // Explicit path (not from_env) so host/device-specific
+        // assertions cannot be flipped by a CI matrix leg.
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy,
+            microbatches_per_iter: microbatches,
+            seed,
+            exec_mode,
+            plane_mode,
+            optimizer_path,
+            ..TrainConfig::default()
+        };
+        PipelineEngine::from_config(&cfg).unwrap()
+    }
+
     fn engine_with_staging(
         strategy: Strategy,
         seed: u64,
@@ -707,10 +1084,46 @@ mod tests {
 
     #[test]
     fn omegas_populated_for_all_stages() {
-        let mut e = engine(Strategy::None, 3);
+        // Host path: every stage's ω lands in the IterStats directly.
+        let mut e = engine_with_optimizer(
+            Strategy::None,
+            3,
+            2,
+            ExecMode::Pipelined,
+            PlaneMode::from_env(),
+            OptimizerPath::Host,
+        );
         let stats = e.train_iteration().unwrap();
         assert_eq!(stats.omegas.len(), e.stages.len());
         assert!(stats.omegas.iter().all(|&o| o > 0.0), "{:?}", stats.omegas);
+
+        // Device path: body ω defers to the materialization boundary
+        // (the gradient never visits the host in between) — and then
+        // matches the host path bit for bit.
+        let mut d = engine_with_optimizer(
+            Strategy::None,
+            3,
+            2,
+            ExecMode::Pipelined,
+            PlaneMode::from_env(),
+            OptimizerPath::Device,
+        );
+        let stats = d.train_iteration().unwrap();
+        assert!(stats.omegas[0] > 0.0, "stage 0 keeps the host optimizer");
+        assert!(
+            stats.omegas[1..].iter().all(|&o| o == 0.0),
+            "body ω must stay deferred until materialization: {:?}",
+            stats.omegas
+        );
+        d.materialize_host_state().unwrap();
+        for (h, dv) in e.stages.iter().zip(&d.stages) {
+            assert_eq!(
+                h.omega.to_bits(),
+                dv.omega.to_bits(),
+                "stage {} ω diverged after materialization",
+                h.index
+            );
+        }
     }
 
     #[test]
@@ -722,6 +1135,10 @@ mod tests {
             let sb = b.train_iteration().unwrap();
             assert_eq!(sa.loss, sb.loss);
         }
+        // Materialize first so the compare is meaningful on the device
+        // optimizer path too (stale host copies are trivially equal).
+        a.materialize_host_state().unwrap();
+        b.materialize_host_state().unwrap();
         assert_eq!(a.stages[1].params, b.stages[1].params);
     }
 
@@ -745,15 +1162,27 @@ mod tests {
                         a.loss,
                         b.loss
                     );
-                    assert_eq!(
-                        a.omegas, b.omegas,
-                        "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
-                    );
+                    // On the device optimizer path body ω is deferred to
+                    // materialization; per-iteration compare only holds
+                    // when both engines step on the host.
+                    if pipe.optimizer_path() == OptimizerPath::Host {
+                        assert_eq!(
+                            a.omegas, b.omegas,
+                            "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
+                        );
+                    }
                 }
+                pipe.materialize_host_state().unwrap();
                 for (s, p) in seq.stages.iter().zip(&pipe.stages) {
                     assert_eq!(
                         s.params, p.params,
                         "stage {} weights diverged ({strategy:?}, {mode:?})",
+                        s.index
+                    );
+                    assert_eq!(
+                        s.omega.to_bits(),
+                        p.omega.to_bits(),
+                        "stage {} ω diverged ({strategy:?}, {mode:?})",
                         s.index
                     );
                 }
@@ -818,77 +1247,110 @@ mod tests {
 
     #[test]
     fn device_plane_syncs_only_at_loss_and_grad_boundaries() {
-        // The device-residency acceptance gate, pinned exactly: one
-        // steady-state pipelined iteration syncs to host only
+        // The device-residency acceptance gate, pinned exactly, for
+        // BOTH optimizer paths. One steady-state pipelined iteration
+        // syncs to host only
         //   per microbatch: the loss scalar (1) + the head's stage-0
-        //   gradient pieces gd/gnw (2) + ∂L/∂embed (1) + each slot's P
-        //   parameter gradients (L·P)
-        // — no per-stage-boundary activation syncs at all, in EITHER
-        // plane mode: per-stage link copies are their own column and
-        // must not disturb the boundary contract. Uploads are the
-        // per-version param refresh (apply_grads bumped every stage last
-        // iteration) plus the ids uploads — per-stage mode additionally
-        // mirrors stage 0 onto the head's plane and uploads ids for both
-        // consumer planes.
+        //   gradient pieces gd/gnw (2) + ∂L/∂embed (1)
+        //   [host optimizer path only:] + each slot's P parameter
+        //   gradients (L·P)
+        // — the device optimizer (the tentpole) deletes the m·L·P term
+        // entirely: body gradients accumulate on-plane and the fused
+        // Adam step runs there, with ZERO param pulls at steady state.
+        // Uploads are the per-version param refresh (host path: every
+        // stage; device path: only the host-stepped stage 0) plus ids
+        // plus the device path's L per-iteration scalar packs; the
+        // device path's donation column additionally carries the
+        // accumulator chain ((m−1)·P per stage) and the fused step's
+        // aliased state (4·P per stage).
         let m = 4u64;
         for plane_mode in PlaneMode::ALL {
             for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
-                let mut e =
-                    engine_with_planes(Strategy::None, 41, m as usize, mode, false, plane_mode);
-                e.train_iteration().unwrap(); // warm: first param upload
-                let before = e.transfer_ledger().snapshot();
-                e.train_iteration().unwrap();
-                let delta = e.transfer_ledger().snapshot().since(&before);
+                for path in [OptimizerPath::Host, OptimizerPath::Device] {
+                    let mut e = engine_with_optimizer(
+                        Strategy::None,
+                        41,
+                        m as usize,
+                        mode,
+                        plane_mode,
+                        path,
+                    );
+                    assert_eq!(e.optimizer_path(), path);
+                    e.train_iteration().unwrap(); // warm: first upload + opt seed
+                    let before = e.transfer_ledger().snapshot();
+                    e.train_iteration().unwrap();
+                    let delta = e.transfer_ledger().snapshot().since(&before);
 
-                assert_eq!(
-                    delta.forced_tuple_roundtrips, 0,
-                    "{mode:?}/{plane_mode:?}: PJRT binding returned tupled outputs — device \
-                     plane degraded (see runtime module docs; --host-staging is the escape \
-                     hatch)"
-                );
-                let l = e.body_stages() as u64;
-                let p = e.stages[1].params.len() as u64;
-                assert_eq!(
-                    delta.host_syncs,
-                    m * (4 + l * p),
-                    "{mode:?}/{plane_mode:?}: host syncs off the loss/grad boundary count"
-                );
-                let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
-                let (want_uploads, want_links) = match plane_mode {
-                    PlaneMode::Shared => (param_tensors + m, 0),
-                    PlaneMode::PerStage => {
-                        let s0 = e.stages[0].params.len() as u64; // head-plane mirror
-                        let links = e.stages.len() as u64 - 1; // inter-stage links
-                        (param_tensors + s0 + 2 * m, 2 * links * m)
+                    assert_eq!(
+                        delta.forced_tuple_roundtrips, 0,
+                        "{mode:?}/{plane_mode:?}/{path:?}: PJRT binding returned tupled \
+                         outputs — device plane degraded (see runtime module docs; \
+                         --host-staging is the escape hatch)"
+                    );
+                    let l = e.body_stages() as u64;
+                    let p = e.stages[1].params.len() as u64;
+                    let want_syncs = match path {
+                        OptimizerPath::Host => m * (4 + l * p),
+                        OptimizerPath::Device => m * 4,
+                        OptimizerPath::Auto => unreachable!("resolved at engine build"),
+                    };
+                    assert_eq!(
+                        delta.host_syncs, want_syncs,
+                        "{mode:?}/{plane_mode:?}/{path:?}: host syncs off the boundary count"
+                    );
+                    assert_eq!(
+                        delta.param_pulls, 0,
+                        "{mode:?}/{plane_mode:?}/{path:?}: steady state never pulls params"
+                    );
+                    let s0 = e.stages[0].params.len() as u64;
+                    let param_tensors: u64 =
+                        e.stages.iter().map(|s| s.params.len() as u64).sum();
+                    let (stale_tensors, scalar_packs) = match path {
+                        OptimizerPath::Host => (param_tensors, 0),
+                        OptimizerPath::Device => (s0, l),
+                        OptimizerPath::Auto => unreachable!(),
+                    };
+                    let (want_uploads, want_links) = match plane_mode {
+                        PlaneMode::Shared => (stale_tensors + scalar_packs + m, 0),
+                        PlaneMode::PerStage => {
+                            let links = e.stages.len() as u64 - 1; // inter-stage links
+                            // + stage 0's head-plane mirror, + ids for
+                            // both consumer planes
+                            (stale_tensors + s0 + scalar_packs + 2 * m, 2 * links * m)
+                        }
+                    };
+                    assert_eq!(
+                        delta.uploads, want_uploads,
+                        "{mode:?}/{plane_mode:?}/{path:?}: uploads must be \
+                         params-per-version + ids (+ device scalar packs)"
+                    );
+                    assert_eq!(
+                        delta.link_copies, want_links,
+                        "{mode:?}/{plane_mode:?}/{path:?}: one link copy per inter-stage \
+                         link per direction per microbatch"
+                    );
+                    assert_eq!(
+                        delta.link_direct + delta.link_staged,
+                        delta.link_copies,
+                        "{mode:?}/{plane_mode:?}/{path:?}: every link copy is classified"
+                    );
+                    if plane_mode == PlaneMode::PerStage {
+                        assert!(delta.link_bytes > 0, "link copies must carry bytes");
                     }
-                };
-                assert_eq!(
-                    delta.uploads, want_uploads,
-                    "{mode:?}/{plane_mode:?}: uploads must be params-per-version + ids"
-                );
-                assert_eq!(
-                    delta.link_copies, want_links,
-                    "{mode:?}/{plane_mode:?}: one link copy per inter-stage link per \
-                     direction per microbatch"
-                );
-                assert_eq!(
-                    delta.link_direct + delta.link_staged,
-                    delta.link_copies,
-                    "{mode:?}/{plane_mode:?}: every link copy is classified by path"
-                );
-                if plane_mode == PlaneMode::PerStage {
-                    assert!(delta.link_bytes > 0, "link copies must carry bytes");
+                    // Donation boundary: every backward donates its dead
+                    // stash (body slots) or incoming activation (head) —
+                    // m·(L+1) per iteration; the device path adds the
+                    // grad-accum chain and the fused Adam step.
+                    let want_donated = match path {
+                        OptimizerPath::Host => m * (l + 1),
+                        OptimizerPath::Device => m * (l + 1) + l * ((m - 1) * p + 4 * p),
+                        OptimizerPath::Auto => unreachable!(),
+                    };
+                    assert_eq!(
+                        delta.donated_buffers, want_donated,
+                        "{mode:?}/{plane_mode:?}/{path:?}: donation count off"
+                    );
                 }
-                // Donation boundary: every backward donates its dead
-                // stash (body slots) or incoming activation (head) —
-                // m·(L+1) aliased donations per iteration, identically
-                // in both plane modes; host-staged/sequential paths
-                // donate nothing (asserted below).
-                assert_eq!(
-                    delta.donated_buffers,
-                    m * (l + 1),
-                    "{mode:?}/{plane_mode:?}: one donated buffer per backward"
-                );
             }
         }
         // Host-staged and sequential paths never donate device buffers.
@@ -910,6 +1372,145 @@ mod tests {
                 "{mode:?} (host path) must not donate"
             );
         }
+    }
+
+    #[test]
+    fn device_optimizer_matches_host_optimizer_bitwise() {
+        // The tentpole correctness contract: the fused on-plane Adam
+        // (grad accumulation in `body_grad_accum`, step in `body_adam`)
+        // must reproduce the host optimizer bit for bit — losses,
+        // validation, params, ω, AND the Adam moment state — across
+        // exec modes, swap schedules, and seeds.
+        for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+            for strategy in [Strategy::None, Strategy::CheckFreePlus] {
+                for seed in [29, 131] {
+                    let mut host = engine_with_optimizer(
+                        strategy,
+                        seed,
+                        4,
+                        mode,
+                        PlaneMode::from_env(),
+                        OptimizerPath::Host,
+                    );
+                    let mut dev = engine_with_optimizer(
+                        strategy,
+                        seed,
+                        4,
+                        mode,
+                        PlaneMode::from_env(),
+                        OptimizerPath::Device,
+                    );
+                    assert_eq!(host.optimizer_path(), OptimizerPath::Host);
+                    assert_eq!(dev.optimizer_path(), OptimizerPath::Device);
+                    for it in 0..4 {
+                        let a = host.train_iteration().unwrap();
+                        let b = dev.train_iteration().unwrap();
+                        assert_eq!(
+                            a.loss.to_bits(),
+                            b.loss.to_bits(),
+                            "loss diverged at iteration {it} ({strategy:?}, {mode:?}, seed {seed})"
+                        );
+                    }
+                    // Validation mid-run exercises the stale-host eval
+                    // path (device params served straight from the
+                    // optimizer mirror).
+                    let va = host.validate().unwrap();
+                    let vb = dev.validate().unwrap();
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "validation diverged ({strategy:?}, {mode:?}, seed {seed})"
+                    );
+                    dev.materialize_host_state().unwrap();
+                    for (h, d) in host.stages.iter().zip(&dev.stages) {
+                        assert_eq!(
+                            h.params, d.params,
+                            "stage {} params diverged ({strategy:?}, {mode:?}, seed {seed})",
+                            h.index
+                        );
+                        assert_eq!(
+                            h.omega.to_bits(),
+                            d.omega.to_bits(),
+                            "stage {} ω diverged ({strategy:?}, {mode:?}, seed {seed})",
+                            h.index
+                        );
+                        assert_eq!(
+                            h.adam.step_count(),
+                            d.adam.step_count(),
+                            "stage {} step count diverged",
+                            h.index
+                        );
+                        let (hm, hv) = h.adam.moments();
+                        let (dm, dv) = d.adam.moments();
+                        assert_eq!(hm, dm, "stage {} first moment diverged", h.index);
+                        assert_eq!(hv, dv, "stage {} second moment diverged", h.index);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_path_pulls_params_only_at_boundaries() {
+        // The lazy-materialization contract: steady-state training never
+        // pulls parameters to the host; an explicit boundary pulls
+        // exactly the 4·P tensors per stale body stage (params, m, v,
+        // mean grad), each billed to BOTH the sync and param_pull
+        // columns; a second materialization is free; and the next
+        // iteration stays at the m·4 boundary budget without reseeding.
+        let m = 4u64;
+        let mut e = engine_with_optimizer(
+            Strategy::None,
+            67,
+            m as usize,
+            ExecMode::Pipelined1F1B,
+            PlaneMode::from_env(),
+            OptimizerPath::Device,
+        );
+        for _ in 0..3 {
+            e.train_iteration().unwrap();
+        }
+        assert_eq!(
+            e.transfer_ledger().snapshot().param_pulls,
+            0,
+            "steady-state training must not pull params"
+        );
+        let l = e.body_stages() as u64;
+        let p = e.stages[1].params.len() as u64;
+        let stale: Vec<_> = e.stages[1..].iter().map(|s| s.params.clone()).collect();
+
+        let before = e.transfer_ledger().snapshot();
+        e.materialize_host_state().unwrap();
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.param_pulls, l * 4 * p, "4·P pulls per stale body stage");
+        assert_eq!(
+            delta.host_syncs, delta.param_pulls,
+            "every pull is a host sync (and nothing else syncs)"
+        );
+        assert_eq!(delta.uploads, 0, "materialization never uploads");
+        for (fresh, old) in e.stages[1..].iter().zip(&stale) {
+            assert_ne!(
+                &fresh.params, old,
+                "stage {}: materialization must actually refresh the host copy",
+                fresh.index
+            );
+        }
+
+        // Idempotent: nothing stale, nothing pulled.
+        let before = e.transfer_ledger().snapshot();
+        e.materialize_host_state().unwrap();
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.param_pulls, 0, "second materialization must be free");
+        assert_eq!(delta.host_syncs, 0);
+
+        // And the boundary did not disturb the steady state: the next
+        // iteration reuses the device mirrors (no reseed) and stays at
+        // the m·4 sync budget.
+        let before = e.transfer_ledger().snapshot();
+        e.train_iteration().unwrap();
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.host_syncs, m * 4, "post-boundary iteration budget");
+        assert_eq!(delta.param_pulls, 0);
     }
 
     #[test]
@@ -990,6 +1591,11 @@ mod tests {
                 );
                 assert_eq!(a.omegas, b.omegas, "omegas diverged at iteration {it} ({mode:?})");
             }
+            // Pull device-resident state so the compare is meaningful on
+            // the device optimizer path too (stale host copies are
+            // trivially equal).
+            staged.materialize_host_state().unwrap();
+            direct.materialize_host_state().unwrap();
             for (s, d) in staged.stages.iter().zip(&direct.stages) {
                 assert_eq!(s.params, d.params, "stage {} weights diverged ({mode:?})", s.index);
             }
@@ -1034,6 +1640,8 @@ mod tests {
                         "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
                     );
                 }
+                on.materialize_host_state().unwrap();
+                off.materialize_host_state().unwrap();
                 for (s, p) in on.stages.iter().zip(&off.stages) {
                     assert_eq!(
                         s.params, p.params,
@@ -1117,6 +1725,9 @@ mod tests {
             let b = pipe.train_iteration().unwrap();
             assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at iteration {it}");
         }
+        // Sequential always host-steps; pull the pipelined engine's
+        // device-resident state before comparing.
+        pipe.materialize_host_state().unwrap();
         for (s, p) in seq.stages.iter().zip(&pipe.stages) {
             assert_eq!(s.params, p.params, "stage {} weights diverged", s.index);
         }
@@ -1125,49 +1736,74 @@ mod tests {
     #[test]
     fn device_plane_validate_syncs_once_per_batch() {
         for plane_mode in PlaneMode::ALL {
-            let mut e =
-                engine_with_planes(Strategy::None, 43, 2, ExecMode::Pipelined1F1B, false, plane_mode);
-            // Warm both the executor path and the eval path (the first
-            // device execute of head_fwd pays its one-time layout probe).
-            e.train_iteration().unwrap();
-            e.validate().unwrap();
-            e.train_iteration().unwrap();
-            let v = e.validation_batches() as u64;
-            let param_tensors: u64 = e.stages.iter().map(|s| s.params.len() as u64).sum();
-            // Per-stage: stage 0 additionally mirrors onto the head's
-            // plane, and each eval batch uploads ids to both consumer
-            // planes and hops the body chain once per link.
-            let (refresh_uploads, ids_per_batch, links_per_batch) = match plane_mode {
-                PlaneMode::Shared => (param_tensors, 1, 0),
-                PlaneMode::PerStage => (
-                    param_tensors + e.stages[0].params.len() as u64,
+            for path in [OptimizerPath::Host, OptimizerPath::Device] {
+                let mut e = engine_with_optimizer(
+                    Strategy::None,
+                    43,
                     2,
-                    e.stages.len() as u64 - 1,
-                ),
-            };
+                    ExecMode::Pipelined1F1B,
+                    plane_mode,
+                    path,
+                );
+                // Warm both the executor path and the eval path (the first
+                // device execute of head_fwd pays its one-time layout probe).
+                e.train_iteration().unwrap();
+                e.validate().unwrap();
+                e.train_iteration().unwrap();
+                let v = e.validation_batches() as u64;
+                let s0 = e.stages[0].params.len() as u64;
+                // Host path: the optimizer rewrote every stage → full
+                // cache refresh. Device path: body params live on-plane
+                // (eval serves them straight from the optimizer mirror,
+                // never pulling) → only stage 0 is stale.
+                let stale_tensors = match path {
+                    OptimizerPath::Host => {
+                        e.stages.iter().map(|s| s.params.len() as u64).sum()
+                    }
+                    OptimizerPath::Device => s0,
+                    OptimizerPath::Auto => unreachable!("resolved at engine build"),
+                };
+                // Per-stage: stage 0 additionally mirrors onto the head's
+                // plane, and each eval batch uploads ids to both consumer
+                // planes and hops the body chain once per link.
+                let (refresh_uploads, ids_per_batch, links_per_batch) = match plane_mode {
+                    PlaneMode::Shared => (stale_tensors, 1, 0),
+                    PlaneMode::PerStage => {
+                        (stale_tensors + s0, 2, e.stages.len() as u64 - 1)
+                    }
+                };
 
-            // First validate after an optimizer step: params stale → one
-            // device refresh, then exactly one loss sync per batch.
-            let before = e.transfer_ledger().snapshot();
-            e.validate().unwrap();
-            let delta = e.transfer_ledger().snapshot().since(&before);
-            assert_eq!(
-                delta.host_syncs, v,
-                "{plane_mode:?}: validation boundary: one loss sync per batch"
-            );
-            assert_eq!(delta.uploads, refresh_uploads + ids_per_batch * v);
-            assert_eq!(delta.link_copies, links_per_batch * v);
+                // First validate after an optimizer step: stale params →
+                // one device refresh, then exactly one loss sync per batch.
+                let before = e.transfer_ledger().snapshot();
+                e.validate().unwrap();
+                let delta = e.transfer_ledger().snapshot().since(&before);
+                assert_eq!(
+                    delta.host_syncs, v,
+                    "{plane_mode:?}/{path:?}: validation boundary: one loss sync per batch"
+                );
+                assert_eq!(
+                    delta.uploads,
+                    refresh_uploads + ids_per_batch * v,
+                    "{plane_mode:?}/{path:?}: refresh upload count"
+                );
+                assert_eq!(delta.link_copies, links_per_batch * v);
+                assert_eq!(
+                    delta.param_pulls, 0,
+                    "{plane_mode:?}/{path:?}: validation must never pull params to host"
+                );
 
-            // Second validate: cache-served params, ids only.
-            let before = e.transfer_ledger().snapshot();
-            e.validate().unwrap();
-            let delta = e.transfer_ledger().snapshot().since(&before);
-            assert_eq!(delta.host_syncs, v);
-            assert_eq!(
-                delta.uploads,
-                ids_per_batch * v,
-                "{plane_mode:?}: no param re-upload without a version bump"
-            );
+                // Second validate: cache-served params, ids only.
+                let before = e.transfer_ledger().snapshot();
+                e.validate().unwrap();
+                let delta = e.transfer_ledger().snapshot().since(&before);
+                assert_eq!(delta.host_syncs, v);
+                assert_eq!(
+                    delta.uploads,
+                    ids_per_batch * v,
+                    "{plane_mode:?}/{path:?}: no param re-upload without a version bump"
+                );
+            }
         }
     }
 
@@ -1198,6 +1834,8 @@ mod tests {
                         "omegas diverged at iteration {it} ({strategy:?}, {mode:?})"
                     );
                 }
+                shared.materialize_host_state().unwrap();
+                per_stage.materialize_host_state().unwrap();
                 for (s, p) in shared.stages.iter().zip(&per_stage.stages) {
                     assert_eq!(
                         s.params, p.params,
@@ -1219,13 +1857,17 @@ mod tests {
     #[test]
     fn host_staging_is_bitwise_identical_to_device_plane() {
         // Staging moves bytes, never changes them: the escape hatch must
-        // reproduce the device plane bit for bit, swaps included.
+        // reproduce the device plane bit for bit, swaps included. Under
+        // the CHECKFREE_OPTIMIZER_PATH=device CI leg this doubles as a
+        // cross-path A/B: the host-staged engine degrades to the host
+        // optimizer while the device-staged one runs the fused kernel.
         for mode in [ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
             for strategy in [Strategy::None, Strategy::CheckFreePlus] {
                 let mut dev = engine_with_staging(strategy, 47, 4, mode, false);
                 let mut host = engine_with_staging(strategy, 47, 4, mode, true);
                 assert_eq!(dev.staging(), crate::config::Staging::Device);
                 assert_eq!(host.staging(), crate::config::Staging::Host);
+                assert_eq!(host.optimizer_path(), OptimizerPath::Host);
                 for it in 0..3 {
                     let a = dev.train_iteration().unwrap();
                     let b = host.train_iteration().unwrap();
@@ -1234,10 +1876,21 @@ mod tests {
                         b.loss.to_bits(),
                         "loss diverged at iteration {it} ({strategy:?}, {mode:?})"
                     );
-                    assert_eq!(a.omegas, b.omegas);
+                    // Device-path body ω is deferred to materialization;
+                    // only compare per-iteration when paths agree.
+                    if dev.optimizer_path() == OptimizerPath::Host {
+                        assert_eq!(a.omegas, b.omegas);
+                    }
                 }
+                dev.materialize_host_state().unwrap();
                 for (s, p) in dev.stages.iter().zip(&host.stages) {
                     assert_eq!(s.params, p.params, "stage {} diverged", s.index);
+                    assert_eq!(
+                        s.omega.to_bits(),
+                        p.omega.to_bits(),
+                        "stage {} ω diverged",
+                        s.index
+                    );
                 }
             }
         }
@@ -1300,13 +1953,37 @@ mod tests {
 
     #[test]
     fn literal_cache_invalidates_after_apply_grads() {
-        let mut e = engine(Strategy::None, 23);
+        // Host path: the optimizer rewrites every stage between
+        // iterations, so every stage re-marshals.
+        let mut e = engine_with_optimizer(
+            Strategy::None,
+            23,
+            2,
+            ExecMode::Pipelined,
+            PlaneMode::from_env(),
+            OptimizerPath::Host,
+        );
         e.train_iteration().unwrap();
         let (_, m1) = e.literal_cache_stats();
         e.train_iteration().unwrap();
         let (_, m2) = e.literal_cache_stats();
-        // the optimizer rewrote every stage between iterations
         assert_eq!(m2 - m1, e.stages.len() as u64);
+
+        // Device path: body params never touch the host between
+        // iterations — only the host-stepped stage 0 re-marshals.
+        let mut d = engine_with_optimizer(
+            Strategy::None,
+            23,
+            2,
+            ExecMode::Pipelined,
+            PlaneMode::from_env(),
+            OptimizerPath::Device,
+        );
+        d.train_iteration().unwrap();
+        let (_, m1) = d.literal_cache_stats();
+        d.train_iteration().unwrap();
+        let (_, m2) = d.literal_cache_stats();
+        assert_eq!(m2 - m1, 1, "device path must re-marshal stage 0 only");
     }
 
     #[test]
@@ -1323,6 +2000,10 @@ mod tests {
         let mut swapped = engine(Strategy::CheckFreePlus, 9);
         plain.train_iteration().unwrap();
         swapped.train_iteration().unwrap();
+        // On the device optimizer path both engines' host copies are
+        // still at init (trivially equal) — materialize before comparing.
+        plain.materialize_host_state().unwrap();
+        swapped.materialize_host_state().unwrap();
         assert_ne!(plain.stages[1].params, swapped.stages[1].params);
     }
 

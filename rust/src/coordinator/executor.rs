@@ -45,7 +45,11 @@
 //! stage's `execute_buffers` call without ever visiting host memory, and
 //! the only device→host syncs of an iteration are the **loss** (head),
 //! the **parameter gradients** (each slot's backward + the embed join),
-//! i.e. the host-side optimizer/recovery boundary. Every backward pass
+//! i.e. the host-side optimizer/recovery boundary. With the device
+//! optimizer engaged ([`DeviceOptIter`]) even the body-stage parameter
+//! gradients stay resident — they accumulate on the owning stage's
+//! plane ([`DeviceGradSink`]) and only the stage-0 pieces still sync,
+//! dropping the per-iteration budget from `m·(4+L·P)` to `m·4`. Every backward pass
 //! **donates** its dead inputs (the stashed forward activation and the
 //! incoming gradient) to
 //! [`crate::runtime::Executable::execute_buffers_donating`], which
@@ -125,8 +129,8 @@ use crate::coordinator::schedule::{self, PipelineSchedule, Step};
 use crate::metrics::ActivationWatermark;
 use crate::model::GradBuffer;
 use crate::runtime::{
-    Activation, DeviceBuffer, ExecArg, Executable, HostTensor, InFlightLink, LinkSlot,
-    LiteralCache, PlaneSet, Runtime, SharedLiterals,
+    Activation, DeviceBuffer, DevicePlane, ExecArg, Executable, HostTensor, InFlightLink,
+    LinkSlot, LiteralCache, PlaneSet, Runtime, SharedLiterals,
 };
 use crate::{anyhow, Result};
 
@@ -450,6 +454,102 @@ impl<'a> OrderedSink<'a> {
     }
 }
 
+/// Device-resident gradient plane for one body stage
+/// (`--optimizer-path device`): accumulates each microbatch's parameter
+/// gradients **on the stage's own plane** through the `body_grad_accum`
+/// artifact, in strict microbatch order — f32 addition order is the
+/// determinism contract, exactly as in [`OrderedSink`], and under
+/// CheckFree+ swaps a stage's gradients arrive from two different slot
+/// workers, so the pending map is load-bearing here too.
+///
+/// The first microbatch's gradients are **adopted** as the accumulator
+/// (`acc := g`, no kernel call): bitwise-equal to the host path's
+/// `0 + g` for every value a backward can produce except the sign of
+/// `-0.0`, which the downstream Adam algebra washes out (`b·0 ± 0`
+/// renormalizes the zero sign, and ω squares it). Every later deposit
+/// donates both the old accumulator (P metered donations — it aliases
+/// the P outputs) and the incoming gradient (released early,
+/// unmetered), so the gradient plane holds exactly one accumulator per
+/// stage at steady state.
+pub struct DeviceGradSink<'a> {
+    exe: &'a Executable,
+    stage: usize,
+    acc: Option<Vec<DeviceBuffer>>,
+    next: usize,
+    pending: BTreeMap<usize, Vec<DeviceBuffer>>,
+}
+
+impl<'a> DeviceGradSink<'a> {
+    /// `exe` must be the `body_grad_accum` executable compiled on
+    /// `stage`'s plane.
+    pub fn new(exe: &'a Executable, stage: usize) -> Self {
+        Self { exe, stage, acc: None, next: 0, pending: BTreeMap::new() }
+    }
+
+    /// Deposit microbatch `mb`'s parameter gradients (device-resident,
+    /// already on the stage's plane), buffering early arrivals.
+    pub fn deposit(
+        &mut self,
+        plane: &DevicePlane,
+        mb: usize,
+        grads: Vec<DeviceBuffer>,
+    ) -> Result<()> {
+        if mb == self.next {
+            self.accumulate(plane, grads)?;
+            self.next += 1;
+            while let Some(g) = self.pending.remove(&self.next) {
+                self.accumulate(plane, g)?;
+                self.next += 1;
+            }
+        } else {
+            debug_assert!(mb > self.next, "microbatch {mb} deposited twice");
+            self.pending.insert(mb, grads);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&mut self, plane: &DevicePlane, grads: Vec<DeviceBuffer>) -> Result<()> {
+        self.acc = Some(match self.acc.take() {
+            None => grads, // adopt — see the type docs' ±0.0 argument
+            Some(acc) => {
+                let args: Vec<ExecArg> =
+                    acc.into_iter().chain(grads).map(ExecArg::Donate).collect();
+                self.exe.execute_buffers_donating(plane, self.stage, args)?
+            }
+        });
+        Ok(())
+    }
+
+    /// Microbatches accumulated so far (the completeness check).
+    pub fn deposited(&self) -> (usize, bool) {
+        (self.next, self.pending.is_empty())
+    }
+
+    /// Surrender the accumulated gradients (`None` if nothing was
+    /// deposited) — the engine donates them into the on-plane Adam step.
+    pub fn take(self) -> Option<Vec<DeviceBuffer>> {
+        self.acc
+    }
+}
+
+/// Engine-owned per-iteration context for the device optimizer path.
+/// When present, every **body** stage serves its parameters from these
+/// device-resident buffers instead of the litcache mirrors (the host
+/// copy of a device-stepped stage is lazily materialized and stale
+/// between pulls), and deposits its per-microbatch parameter gradients
+/// into the on-plane [`DeviceGradSink`] instead of syncing them to the
+/// host `GradBuffer` — which is exactly the `m·L·P` host-sync term the
+/// device optimizer deletes. Stage 0 (embed + head pieces) keeps the
+/// host path either way: its gradients join on the host and its Adam
+/// step stays in `util/par.rs`.
+pub struct DeviceOptIter<'a> {
+    /// Device-resident body-stage params, index = stage − 1, each
+    /// living on the owning stage's plane.
+    pub params: Vec<&'a [DeviceBuffer]>,
+    /// On-plane gradient sinks, index = stage − 1.
+    pub sinks: Vec<Mutex<DeviceGradSink<'a>>>,
+}
+
 // ---------------------------------------------------------------------------
 // One iteration through the pipeline
 // ---------------------------------------------------------------------------
@@ -472,6 +572,12 @@ impl<'a> OrderedSink<'a> {
 /// head runs on the calling thread). Every host↔device crossing and
 /// every cross-plane link copy is billed to `planes`' shared ledger.
 ///
+/// `device_opt` (requires [`Staging::Device`]) engages the device
+/// optimizer path: body-stage params come from its buffers and
+/// body-stage gradients accumulate on-plane — see [`DeviceOptIter`].
+/// The body entries of `grad_bufs` are then left untouched (stage 0
+/// still accumulates on host).
+///
 /// **Link quiesce:** this function does not return (or fail) until
 /// every worker job has completed — [`WorkerPool::scope`] joins them
 /// all — so no [`InFlightLink`] can still be in flight afterwards.
@@ -492,6 +598,7 @@ pub fn run_iteration(
     overlap: Overlap,
     watermark: &ActivationWatermark,
     grad_bufs: &mut [GradBuffer],
+    device_opt: Option<&DeviceOptIter>,
 ) -> Result<Vec<f32>> {
     let m = batches.len();
     let l = body_stages;
@@ -502,6 +609,11 @@ pub fn run_iteration(
         return Ok(Vec::new());
     }
     assert_eq!(grad_bufs.len(), l + 1, "one grad buffer per stage (embed + body)");
+    if let Some(ctx) = device_opt {
+        assert_eq!(staging, Staging::Device, "device optimizer needs the device plane");
+        assert_eq!(ctx.params.len(), l, "one param view per body stage");
+        assert_eq!(ctx.sinks.len(), l, "one device grad sink per body stage");
+    }
     assert!(
         pool.size() >= l + 1,
         "worker pool holds {} workers but the pipeline needs {}",
@@ -584,7 +696,7 @@ pub fn run_iteration(
         jobs.push(Box::new(move || {
             slot_worker(
                 runtime, planes, lits, staging, overlap, l, use_swaps, p - 1, m, &table, watermark,
-                fwd_rx, fwd_tx, bwd_rx, bwd_tx, sinks,
+                fwd_rx, fwd_tx, bwd_rx, bwd_tx, sinks, device_opt,
             )
         }));
     }
@@ -610,14 +722,30 @@ pub fn run_iteration(
         }
     };
 
-    // Every stage must have accumulated every microbatch exactly once.
+    // Every stage must have accumulated every microbatch exactly once —
+    // body stages on whichever plane (host sink or device sink) the
+    // optimizer path routed them to.
     for (i, sink) in sinks.iter().enumerate() {
+        if i > 0 && device_opt.is_some() {
+            continue; // body grads went to the device sinks below
+        }
         let sink = sink.lock().expect("grad sink lock");
         if sink.next != m || !sink.pending.is_empty() {
             return Err(anyhow!(
                 "stage {i} accumulated {}/{m} microbatch gradients",
                 sink.next
             ));
+        }
+    }
+    if let Some(ctx) = device_opt {
+        for (i, sink) in ctx.sinks.iter().enumerate() {
+            let (next, drained) = sink.lock().expect("device grad sink lock").deposited();
+            if next != m || !drained {
+                return Err(anyhow!(
+                    "stage {} accumulated {next}/{m} microbatch gradients on-plane",
+                    i + 1
+                ));
+            }
         }
     }
     Ok(losses)
@@ -768,11 +896,21 @@ fn slot_worker(
     bwd_rx: Receiver<BwdMsg>,
     bwd_tx: SyncSender<BwdMsg>,
     sinks: &[Mutex<OrderedSink>],
+    device_opt: Option<&DeviceOptIter>,
 ) -> Result<()> {
     // Host-staging executes host literals, which run correctly on any
     // client — use the plane-0 reference registry for those.
     let host_body_fwd = runtime.executable("body_fwd")?;
     let host_body_bwd = runtime.executable("body_bwd")?;
+    // Device-optimizer path: serve stage `s`'s params from its
+    // device-resident optimizer state (the litcache mirror tracks the
+    // lazily-materialized — possibly stale — host copy).
+    let stage_params = |s: usize, plane_idx: usize| -> &[DeviceBuffer] {
+        match device_opt {
+            Some(ctx) => ctx.params[s - 1],
+            None => lits.stage_buffers_on(s, plane_idx),
+        }
+    };
     // Device path: per-stage executable handles hoisted out of the hot
     // step loop (index = stage − 1; under swaps the slot hops stages per
     // microbatch, so it needs every body stage's pair at hand).
@@ -809,7 +947,7 @@ fn slot_worker(
                         let h_buf = h.complete(plane, s)?; // free if prefetched
                         let h_out = {
                             let mut args: Vec<&DeviceBuffer> =
-                                lits.stage_buffers_on(s, plane.idx()).iter().collect();
+                                stage_params(s, plane.idx()).iter().collect();
                             args.push(&h_buf);
                             body_fwd
                                 .execute_buffers(plane, s, &args)?
@@ -865,8 +1003,7 @@ fn slot_worker(
                         // ∂L/∂h output — the metered donation) and the
                         // incoming gradient (released early, unmetered).
                         let mut outs = {
-                            let mut args: Vec<ExecArg> = lits
-                                .stage_buffers_on(s, plane.idx())
+                            let mut args: Vec<ExecArg> = stage_params(s, plane.idx())
                                 .iter()
                                 .map(ExecArg::Keep)
                                 .collect();
@@ -879,15 +1016,26 @@ fn slot_worker(
                             return Err(anyhow!("body_bwd returned {} outputs", outs.len()));
                         }
                         // outs = [gh_out, gparams…]; gh_out stays on
-                        // device and moves downstream, the parameter
-                        // gradients sync to host for accumulation.
+                        // device and moves downstream. The parameter
+                        // gradients either sync to host for accumulation
+                        // (the m·L·P term the host optimizer pays) or —
+                        // on the device optimizer path — stay resident
+                        // and accumulate on this stage's plane.
                         let gparams = outs.split_off(1);
                         let gh_out = outs.pop().expect("len checked");
-                        scratch.resize_with(gparams.len(), HostTensor::default);
-                        for (g, out) in gparams.iter().zip(scratch.iter_mut()) {
-                            g.read_into(plane, s, out)?;
+                        match device_opt {
+                            Some(ctx) => ctx.sinks[s - 1]
+                                .lock()
+                                .expect("device grad sink lock")
+                                .deposit(plane, mb, gparams)?,
+                            None => {
+                                scratch.resize_with(gparams.len(), HostTensor::default);
+                                for (g, out) in gparams.iter().zip(scratch.iter_mut()) {
+                                    g.read_into(plane, s, out)?;
+                                }
+                                sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch);
+                            }
                         }
-                        sinks[s].lock().expect("grad sink lock").deposit(mb, &scratch);
                         Activation::Device(gh_out)
                     }
                     (Staging::Host, Stashed::Lit(h_lit)) => {

@@ -263,4 +263,51 @@ mod tests {
         assert_eq!(s.failures, 1);
         assert_eq!(s.iterations_run, 8);
     }
+
+    #[test]
+    fn recovery_parity_across_optimizer_paths() {
+        // End-to-end staleness-guard acceptance: a full run with a forced
+        // mid-run failure must be bitwise path-invariant. Each recovery
+        // strategy reads host state at a different point — CheckFree
+        // averages/copies neighbour weights + ω, CheckFree+ copies the
+        // swap partner, Checkpoint snapshots and rolls back — and every
+        // one of them would consume stale pre-training weights on the
+        // device optimizer path if the materialization guard were missing.
+        use crate::config::OptimizerPath;
+        for strategy in [Strategy::CheckFree, Strategy::CheckFreePlus, Strategy::Checkpoint] {
+            let mk = |path| {
+                let mut c = cfg(strategy, 8);
+                c.checkpoint_every = 2;
+                c.optimizer_path = path;
+                let mut t = Trainer::new(c).unwrap();
+                t.force_failure(4, 1);
+                t
+            };
+            let mut host = mk(OptimizerPath::Host);
+            let mut dev = mk(OptimizerPath::Device);
+            assert_eq!(host.engine.optimizer_path(), OptimizerPath::Host);
+            assert_eq!(dev.engine.optimizer_path(), OptimizerPath::Device);
+            let sh = host.run().unwrap();
+            let sd = dev.run().unwrap();
+            assert_eq!(sh.failures, 1, "{strategy:?}: failure not injected");
+            assert_eq!(
+                sh.final_train_loss.to_bits(),
+                sd.final_train_loss.to_bits(),
+                "{strategy:?}: train loss diverged across optimizer paths"
+            );
+            assert_eq!(
+                sh.final_val_loss.to_bits(),
+                sd.final_val_loss.to_bits(),
+                "{strategy:?}: val loss diverged across optimizer paths"
+            );
+            dev.engine.materialize_host_state().unwrap();
+            for (h, d) in host.engine.stages.iter().zip(&dev.engine.stages) {
+                assert_eq!(
+                    h.params, d.params,
+                    "{strategy:?}: stage {} weights diverged across optimizer paths",
+                    h.index
+                );
+            }
+        }
+    }
 }

@@ -9,6 +9,7 @@
 //!                    [--plane-mode shared|per-stage]
 //!                    [--link-path auto|direct|staged]
 //!                    [--overlap on|off]
+//!                    [--optimizer-path auto|device|host]
 //!                    [--churn-process bernoulli|poisson|bursty|correlated]
 //!                    [--churn-trace record:PATH|replay:PATH]
 //!                    [--allow-adjacent true|false]
@@ -165,6 +166,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(o) = args.parse_opt::<checkfree::config::Overlap>("overlap")? {
         cfg.overlap = o;
+    }
+    if let Some(p) = args.parse_opt::<checkfree::config::OptimizerPath>("optimizer-path")? {
+        cfg.optimizer_path = p;
     }
     cfg.validate()?;
 

@@ -232,6 +232,15 @@ impl Manifest {
         Ok(self.dir.join(&self.artifact(name)?.file))
     }
 
+    /// Whether an *optional* artifact is present. The six forward/backward
+    /// executables are required by [`Manifest::load`]; the optimizer pair
+    /// (`body_adam`, `body_grad_accum`) is additive so manifests produced
+    /// before the device-optimizer path stay loadable — `OptimizerPath::Auto`
+    /// probes with this before engaging the on-plane step.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
     fn validate(&self) -> Result<()> {
         if self.format_version != 1 {
             return Err(anyhow!("unsupported manifest format {}", self.format_version));
@@ -296,7 +305,30 @@ mod tests {
         let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
         assert_eq!(m.config.name, "tiny");
         assert_eq!(m.config.total_stages(), m.config.body_stages + 1);
-        assert_eq!(m.artifacts.len(), 6);
+        assert_eq!(m.artifacts.len(), 8);
+    }
+
+    #[test]
+    fn optimizer_artifacts_present_but_optional() {
+        // aot.py now ships the fused optimizer pair; the loader must treat
+        // them as optional so pre-optimizer manifests stay loadable.
+        let m = Manifest::load_config(artifacts_root(), "tiny").unwrap();
+        assert!(m.has_artifact("body_adam"));
+        assert!(m.has_artifact("body_grad_accum"));
+        assert!(!m.has_artifact("nope"));
+        let mut stripped = m.clone();
+        stripped.artifacts.remove("body_adam");
+        stripped.artifacts.remove("body_grad_accum");
+        assert!(stripped.validate().is_ok(), "optimizer artifacts must stay optional");
+        // body_adam: p,m,v,g (P each) + scalar pack; outputs p',m',v',gm.
+        let adam = m.artifact("body_adam").unwrap();
+        let p = m.param_layout.body_stage.len();
+        assert_eq!(adam.inputs.len(), 4 * p + 1);
+        assert_eq!(adam.outputs.len(), 4 * p);
+        assert_eq!(adam.inputs[4 * p].shape, vec![4]);
+        let accum = m.artifact("body_grad_accum").unwrap();
+        assert_eq!(accum.inputs.len(), 2 * p);
+        assert_eq!(accum.outputs.len(), p);
     }
 
     #[test]

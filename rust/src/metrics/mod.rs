@@ -90,6 +90,7 @@ struct StageCounters {
     link_blocking: AtomicU64,
     link_wait_ns: AtomicU64,
     donated_buffers: AtomicU64,
+    param_pulls: AtomicU64,
 }
 
 /// Cumulative device↔host transfer accounting, per pipeline stage.
@@ -179,6 +180,14 @@ pub struct TransferSnapshot {
     /// Dead input buffers donated to an execute (spec-aliased to an
     /// output and released at execute completion).
     pub donated_buffers: u64,
+    /// Tensors pulled device→host to lazily materialize a stage's
+    /// parameters / optimizer state on the device-resident optimizer
+    /// path (`--optimizer-path device`). Each pulled tensor counts once
+    /// here *in addition to* its ordinary `host_syncs`/`bytes_down`
+    /// billing, so boundary traffic (recovery, checkpoint, inspection)
+    /// is separable from the steady-state loss/grad syncs. Zero in
+    /// steady state — the engine test pins it.
+    pub param_pulls: u64,
 }
 
 impl TransferSnapshot {
@@ -202,6 +211,7 @@ impl TransferSnapshot {
             link_blocking: self.link_blocking.saturating_sub(earlier.link_blocking),
             link_wait_ns: self.link_wait_ns.saturating_sub(earlier.link_wait_ns),
             donated_buffers: self.donated_buffers.saturating_sub(earlier.donated_buffers),
+            param_pulls: self.param_pulls.saturating_sub(earlier.param_pulls),
         }
     }
 }
@@ -295,6 +305,16 @@ impl TransferLedger {
         self.slot(stage).donated_buffers.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One tensor was pulled device→host to materialize a lazily-held
+    /// host copy of `stage`'s parameters or optimizer state (the
+    /// device-resident optimizer's recovery / checkpoint / inspection
+    /// boundary). The pull's bytes also land in `host_syncs`/
+    /// `bytes_down` via the underlying `read_into`; this column only
+    /// tags them as boundary traffic.
+    pub fn record_param_pull(&self, stage: usize) {
+        self.slot(stage).param_pulls.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Counters of one stage.
     pub fn stage_snapshot(&self, stage: usize) -> TransferSnapshot {
         let s = &self.stages[stage];
@@ -312,6 +332,7 @@ impl TransferLedger {
             link_blocking: s.link_blocking.load(Ordering::Relaxed),
             link_wait_ns: s.link_wait_ns.load(Ordering::Relaxed),
             donated_buffers: s.donated_buffers.load(Ordering::Relaxed),
+            param_pulls: s.param_pulls.load(Ordering::Relaxed),
         }
     }
 
@@ -333,6 +354,7 @@ impl TransferLedger {
             total.link_blocking += s.link_blocking;
             total.link_wait_ns += s.link_wait_ns;
             total.donated_buffers += s.donated_buffers;
+            total.param_pulls += s.param_pulls;
         }
         total
     }
@@ -358,6 +380,7 @@ impl TransferLedger {
             s.link_blocking.store(0, Ordering::Relaxed);
             s.link_wait_ns.store(0, Ordering::Relaxed);
             s.donated_buffers.store(0, Ordering::Relaxed);
+            s.param_pulls.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -588,6 +611,7 @@ mod tests {
                 link_blocking: 1,
                 link_wait_ns: 700,
                 donated_buffers: 1,
+                param_pulls: 0,
             }
         );
         let total = l.snapshot();
@@ -599,6 +623,28 @@ mod tests {
         assert_eq!(total.link_bytes, 32);
         assert_eq!(total.donated_buffers, 1);
         assert_eq!(l.host_sync_count(), 2);
+    }
+
+    #[test]
+    fn param_pulls_tag_boundary_traffic_without_replacing_sync_billing() {
+        // A materialization pull is an ordinary read_into (host_syncs +
+        // bytes_down) *plus* a param_pulls tag — the column separates
+        // boundary traffic from steady-state loss/grad syncs, it never
+        // replaces the sync accounting.
+        let l = TransferLedger::new(3);
+        l.record_sync(2, 64);
+        l.record_param_pull(2);
+        l.record_sync(1, 8); // a steady-state loss sync: no pull tag
+        assert_eq!(l.stage_snapshot(2).param_pulls, 1);
+        assert_eq!(l.stage_snapshot(2).host_syncs, 1);
+        assert_eq!(l.stage_snapshot(1).param_pulls, 0);
+        let before = l.snapshot();
+        l.record_sync(2, 64);
+        l.record_param_pull(2);
+        let delta = l.snapshot().since(&before);
+        assert_eq!((delta.param_pulls, delta.host_syncs), (1, 1));
+        l.reset();
+        assert_eq!(l.snapshot().param_pulls, 0);
     }
 
     #[test]

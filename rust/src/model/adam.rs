@@ -37,6 +37,41 @@ impl Adam {
         self.step
     }
 
+    /// The moment buffers, in tensor order (device-mirror seeding for
+    /// the on-plane optimizer path reads these).
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Bias corrections `(1 - b1^t, 1 - b2^t)` for step `t`.
+    ///
+    /// This is the one piece of the update that is **not** elementwise,
+    /// and `powi` is host-only math — the fused device kernel receives
+    /// these as data (the `[inv, lr, bc1, bc2]` scalar pack) so host and
+    /// device paths share the exact same f32 correction values.
+    pub fn bias_corrections(&self, step: u64) -> (f32, f32) {
+        (1.0 - self.beta1.powi(step as i32), 1.0 - self.beta2.powi(step as i32))
+    }
+
+    /// Overwrite moments + step wholesale (host materialization of
+    /// device-resident optimizer state). Arity and per-tensor lengths
+    /// must match the shapes the optimizer was built with.
+    pub fn set_state(&mut self, m: &[Vec<f32>], v: &[Vec<f32>], step: u64) {
+        assert_eq!(m.len(), self.m.len(), "moment arity mismatch");
+        assert_eq!(v.len(), self.v.len(), "moment arity mismatch");
+        for ((dst, src), what) in self
+            .m
+            .iter_mut()
+            .zip(m)
+            .map(|p| (p, "m"))
+            .chain(self.v.iter_mut().zip(v).map(|p| (p, "v")))
+        {
+            assert_eq!(dst.len(), src.len(), "{what} tensor length mismatch");
+            dst.copy_from_slice(src);
+        }
+        self.step = step;
+    }
+
     /// Reset moments and step (a freshly recovered stage).
     pub fn reset(&mut self) {
         for b in self.m.iter_mut().chain(self.v.iter_mut()) {
@@ -58,9 +93,7 @@ impl Adam {
         self.step += 1;
         let b1 = self.beta1;
         let b2 = self.beta2;
-        // bias corrections
-        let bc1 = 1.0 - b1.powi(self.step as i32);
-        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let (bc1, bc2) = self.bias_corrections(self.step);
         let eps = self.eps;
         for ((p, g), (m, v)) in params
             .iter_mut()
@@ -170,6 +203,45 @@ mod tests {
             let want = 1.0 - 0.01 * (m / bc1) / ((v / bc2).sqrt() + eps);
             assert_eq!(p[i].to_bits(), want.to_bits(), "element {i}");
         }
+    }
+
+    #[test]
+    fn set_state_roundtrips_moments_and_step() {
+        let mut a = Adam::new(&[2, 1]);
+        let mut p0 = [1.0f32, 2.0];
+        let mut p1 = [3.0f32];
+        a.update(&mut [&mut p0, &mut p1], &[&[0.5, -0.5], &[1.0]], 0.01);
+        let (m, v) = a.moments();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut b = Adam::new(&[2, 1]);
+        b.set_state(&m, &v, a.step_count());
+        assert_eq!(b.step_count(), 1);
+        // identical state → identical next update, bitwise
+        let mut qa = [1.0f32, 2.0];
+        let mut qb = [1.0f32, 2.0];
+        let mut ra = [3.0f32];
+        let mut rb = [3.0f32];
+        a.update(&mut [&mut qa, &mut ra], &[&[0.1, 0.2], &[0.3]], 0.01);
+        b.update(&mut [&mut qb, &mut rb], &[&[0.1, 0.2], &[0.3]], 0.01);
+        assert_eq!(qa.map(f32::to_bits), qb.map(f32::to_bits));
+        assert_eq!(ra.map(f32::to_bits), rb.map(f32::to_bits));
+    }
+
+    #[test]
+    fn bias_corrections_match_update_path() {
+        let a = Adam::new(&[1]);
+        let (bc1, bc2) = a.bias_corrections(1);
+        assert_eq!(bc1.to_bits(), (1.0f32 - 0.9f32).to_bits());
+        assert_eq!(bc2.to_bits(), (1.0f32 - 0.999f32).to_bits());
+        let (bc1, _) = a.bias_corrections(3);
+        assert_eq!(bc1.to_bits(), (1.0f32 - 0.9f32.powi(3)).to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn set_state_rejects_wrong_lengths() {
+        let mut a = Adam::new(&[2]);
+        a.set_state(&[vec![0.0; 3]], &[vec![0.0; 3]], 1);
     }
 
     #[test]

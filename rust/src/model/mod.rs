@@ -96,11 +96,7 @@ impl GradBuffer {
 
     /// ‖∇W‖² over the whole stage.
     pub fn sq_norm(&self) -> f64 {
-        self.bufs
-            .iter()
-            .flat_map(|b| b.iter())
-            .map(|&x| (x as f64) * (x as f64))
-            .sum()
+        grad_sq_norm(self.bufs.iter().map(|b| b.as_slice()))
     }
 
     pub fn clear(&mut self) {
@@ -109,6 +105,15 @@ impl GradBuffer {
         }
         self.count = 0;
     }
+}
+
+/// ‖∇W‖² over a stage's gradient tensors, summed sequentially in f64 in
+/// tensor order. This exact order is a bitwise contract: the host path
+/// computes ω through [`GradBuffer::sq_norm`] and the device-resident
+/// optimizer path recomputes it from pulled mean-gradient buffers at
+/// materialization time — both must route through this one function.
+pub fn grad_sq_norm<'a>(bufs: impl Iterator<Item = &'a [f32]>) -> f64 {
+    bufs.flat_map(|b| b.iter()).map(|&x| (x as f64) * (x as f64)).sum()
 }
 
 /// One pipeline stage: parameters + Adam + CheckFree's ω scalar.

@@ -181,6 +181,11 @@ impl RecoveryStrategy for CheckFreeRecovery {
         if stage == 0 {
             return Err(anyhow!("CheckFree cannot recover the (de)embedding stage"));
         }
+        // Staleness guard: on the device optimizer path the neighbours'
+        // host weights and ω are stale between boundaries — averaging
+        // them would rebuild the stage from pre-training state. Pull
+        // first (billed as param_pulls; free on the host path).
+        engine.materialize_host_state()?;
         let (description, transfer_bytes) =
             reinit_stage(engine, stage, self.reinit, self.lr_boost, &mut self.rng)?;
         let downtime_s = net.checkfree_recovery_seconds(engine.body_stage_bytes(), stage)?;
@@ -269,6 +274,9 @@ impl RecoveryStrategy for CheckFreePlusRecovery {
                 exact: true,
             });
         }
+        // Staleness guard (see CheckFreeRecovery::on_failure): the swap
+        // partner / neighbours live on the device between boundaries.
+        engine.materialize_host_state()?;
         let stage_bytes = engine.body_stage_bytes();
         if let Some(partner) = schedule::swap_partner(stage, l) {
             // Swap-trained partner has learned this slot's behaviour:
@@ -538,6 +546,47 @@ mod tests {
         e.validate().unwrap();
         let (_, misses_after) = e.literal_cache_stats();
         assert_eq!(misses_after - misses_before, 1, "exactly S1 re-marshalled");
+    }
+
+    #[test]
+    fn recovery_materializes_device_resident_state_first() {
+        // The staleness guard, pinned at the strategy layer: with the
+        // device-resident optimizer the neighbours' host weights are
+        // stale when a failure hits; on_failure must pull them (billed
+        // as param_pulls) before rebuilding, and then reproduce the
+        // host-path recovery bit for bit. Without the guard the device
+        // leg would average/copy pre-training weights.
+        let mk = |path| {
+            let cfg = TrainConfig {
+                model: "tiny".into(),
+                strategy: Strategy::CheckFree,
+                microbatches_per_iter: 2,
+                seed: 5,
+                optimizer_path: path,
+                ..TrainConfig::default()
+            };
+            PipelineEngine::from_config(&cfg).unwrap()
+        };
+        let mut h = mk(crate::config::OptimizerPath::Host);
+        let mut d = mk(crate::config::OptimizerPath::Device);
+        assert_eq!(d.optimizer_path(), crate::config::OptimizerPath::Device);
+        for _ in 0..2 {
+            h.train_iteration().unwrap();
+            d.train_iteration().unwrap();
+        }
+        let net = Network::round_robin(h.stages.len());
+        let mut sh = CheckFreeRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        let mut sd = CheckFreeRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        sh.on_failure(&mut h, &net, 1).unwrap();
+        let pulls_before = d.transfer_ledger().snapshot().param_pulls;
+        sd.on_failure(&mut d, &net, 1).unwrap();
+        assert!(
+            d.transfer_ledger().snapshot().param_pulls > pulls_before,
+            "device-path recovery must materialize (pull) before rebuilding"
+        );
+        for (hs, ds) in h.stages.iter().zip(&d.stages) {
+            assert_eq!(hs.params, ds.params, "stage {} diverged after recovery", hs.index);
+        }
     }
 
     #[test]

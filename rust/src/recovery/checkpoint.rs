@@ -62,6 +62,11 @@ impl RecoveryStrategy for CheckpointRecovery {
         if engine.iteration % self.every != 0 {
             return Ok(None);
         }
+        // Staleness guard: on the device optimizer path the host copies
+        // of body weights and moments lag the plane; a snapshot taken
+        // from them would silently checkpoint pre-training state. Pull
+        // first (billed as param_pulls; free on the host path).
+        engine.materialize_host_state()?;
         let snaps: Vec<StageSnapshot> = engine.stages.iter().map(|s| s.snapshot()).collect();
         self.snapshot = Some((engine.iteration, snaps));
         let bytes = Self::model_bytes(engine);

@@ -184,6 +184,40 @@ fn overlapped_links_survive_churn_identically_to_blocking() {
 }
 
 #[test]
+fn device_optimizer_survives_churn_identically_to_host() {
+    // End-to-end optimizer-path parity under real failures: the same
+    // churny CheckFree+ run must produce the same loss curve bit for bit
+    // whether Adam steps on the host (pulling every gradient) or fused
+    // on-plane with lazily materialized host state. Recovery is the
+    // interesting part — both forced failures read neighbour weights,
+    // which on the device path only exist on the host because the
+    // strategy's staleness guard pulled them first.
+    use checkfree::config::OptimizerPath;
+    let mk = |path| {
+        let mut c = cfg(Strategy::CheckFreePlus, 12, 0.0, 31);
+        c.optimizer_path = path;
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(4, 1); // swap-partner copy path
+        t.force_failure(8, 2); // boundary / weighted path
+        t
+    };
+    let mut host = mk(OptimizerPath::Host);
+    let mut dev = mk(OptimizerPath::Device);
+    assert_eq!(dev.engine.optimizer_path(), OptimizerPath::Device);
+    host.run().unwrap();
+    dev.run().unwrap();
+    assert_eq!(host.record.failures(), 2);
+    assert_eq!(dev.record.failures(), 2);
+    let a: Vec<u32> = host.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+    let b: Vec<u32> = dev.record.curve.iter().map(|p| p.train_loss.to_bits()).collect();
+    assert_eq!(a, b, "optimizer paths diverged under churn");
+    dev.engine.materialize_host_state().unwrap();
+    for (h, d) in host.engine.stages.iter().zip(&dev.engine.stages) {
+        assert_eq!(h.params, d.params, "stage {} weights diverged", h.index);
+    }
+}
+
+#[test]
 fn fig2_reinit_ordering_weighted_beats_random() {
     let runs = experiments::fig2_init_strategies("tiny", 16, &[(6, 1), (11, 2)], 2).unwrap();
     let by = |label: &str| {

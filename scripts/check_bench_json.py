@@ -26,6 +26,14 @@ be executed. Checked invariants:
   less with prefetch on — a measured per-stage row where overlap on is
   not below overlap off fails outright (both-zero stages are skipped:
   they moved no cross-plane bytes);
+* at schema >= 5, transfer rows gain the ``param_pulls`` column and the
+  file must carry an ``optimizer_path`` section with per-model
+  ``host``/``device`` transfer rows and timings; a measured device row
+  must show ``param_pulls == 0`` (boundary pulls never belong to a
+  steady-state iteration), ``host_syncs == microbatches*4`` (the m·L·P
+  gradient-pull term is gone), and strictly fewer host syncs than the
+  host-optimizer row — anything else means the fused on-plane Adam
+  silently degraded and the run must not be committable as measured;
 * ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
   sidecar, when present) analogously for its latency table;
 * ``BENCH_coverage.json`` (the scenario-factory coverage matrix): a
@@ -66,6 +74,14 @@ TRANSFER_FIELDS_V4 = TRANSFER_FIELDS_V3 + (
     "link_overlapped",
     "link_blocking",
     "link_wait_ns",
+)
+TRANSFER_FIELDS_V5 = TRANSFER_FIELDS_V4 + ("param_pulls",)
+
+OPTIMIZER_PATH_FIELDS_V5 = (
+    "host_mean_s",
+    "device_mean_s",
+    "device_over_host",
+    "gate_device_syncs_m4_below_host",
 )
 
 PLANE_MODE_FIELDS_V4 = (
@@ -180,7 +196,9 @@ class Checker:
         if status != "measured":
             return
 
-        if schema >= 4:
+        if schema >= 5:
+            transfer_fields = TRANSFER_FIELDS_V5
+        elif schema >= 4:
             transfer_fields = TRANSFER_FIELDS_V4
         elif schema >= 3:
             transfer_fields = TRANSFER_FIELDS_V3
@@ -247,6 +265,60 @@ class Checker:
 
         if schema >= 4:
             self.check_plane_mode_overlap(doc)
+        if schema >= 5:
+            self.check_optimizer_path(doc)
+
+    def check_optimizer_path(self, doc: dict) -> None:
+        """Schema-5 gate 8: fused on-plane Adam vs the host optimizer."""
+        section = self.require(doc, "optimizer_path", dict)
+        if not isinstance(section, dict):
+            return
+        mb = section.get("microbatches")
+        models = {k: v for k, v in section.items() if isinstance(v, dict)}
+        if not models:
+            self.error("measured schema>=5 run with no per-model "
+                       "'optimizer_path' entries")
+        for model, entry in models.items():
+            where = f"optimizer_path.{model}"
+            host = self.require(entry, "host", dict, where)
+            device = self.require(entry, "device", dict, where)
+            for field in OPTIMIZER_PATH_FIELDS_V5:
+                self.require(entry, field, (int, float, bool), where)
+            for leg, transfers in (("host", host), ("device", device)):
+                if isinstance(transfers, dict):
+                    for field in TRANSFER_FIELDS_V5:
+                        self.require(transfers, field, (int, float),
+                                     f"{where}.{leg}")
+            if isinstance(device, dict):
+                pulls = device.get("param_pulls")
+                if isinstance(pulls, (int, float)) and pulls != 0:
+                    self.error(
+                        f"{where}.device.param_pulls is {pulls!r} — the "
+                        "device optimizer never pulls parameters at steady "
+                        "state; pulls belong to recovery/checkpoint "
+                        "boundaries only (see docs/BENCHMARKS.md gate 8)")
+                syncs = device.get("host_syncs")
+                if (isinstance(mb, (int, float))
+                        and isinstance(syncs, (int, float))
+                        and syncs != mb * 4):
+                    self.error(
+                        f"{where}.device.host_syncs ({syncs}) != "
+                        f"microbatches*4 ({mb * 4}) — the device path's "
+                        "only remaining host traffic is the per-microbatch "
+                        "loss + head gradient boundary (see "
+                        "docs/BENCHMARKS.md gate 8)")
+                if isinstance(host, dict):
+                    hsyncs = host.get("host_syncs")
+                    if (isinstance(syncs, (int, float))
+                            and isinstance(hsyncs, (int, float))
+                            and not syncs < hsyncs):
+                        self.error(
+                            f"{where}: device host_syncs ({syncs}) is not "
+                            f"strictly below the host optimizer's "
+                            f"({hsyncs}) — killing the m·L·P term is the "
+                            "point of the device path (see "
+                            "docs/BENCHMARKS.md gate 8)")
+            self.check_gates_true(entry, where)
 
     def check_plane_mode_overlap(self, doc: dict) -> None:
         """Schema-4 gate 7: per-stage link wait, prefetch on vs off."""
@@ -391,6 +463,24 @@ def selftest() -> int:
         print("selftest FAIL: bad-wait fixture was not rejected for the "
               "overlap wait gate; errors were:", file=sys.stderr)
         for err in bad.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    good5 = Checker(fixtures / "bench_schema5_good.json")
+    good5.check()
+    if good5.errors:
+        ok = False
+        print("selftest FAIL: good schema-5 fixture rejected:", file=sys.stderr)
+        for err in good5.errors:
+            print(f"  {err}", file=sys.stderr)
+
+    bad5 = Checker(fixtures / "bench_schema5_bad_pulls.json")
+    bad5.check()
+    if not any("never pulls parameters at steady state" in err
+               for err in bad5.errors):
+        ok = False
+        print("selftest FAIL: bad-pulls fixture was not rejected for the "
+              "steady-state param-pull gate; errors were:", file=sys.stderr)
+        for err in bad5.errors or ["<none>"]:
             print(f"  {err}", file=sys.stderr)
 
     cov_good = Checker(fixtures / "coverage_schema1_good.json")
