@@ -4,8 +4,15 @@
 //! placement vs checkpoint-download recovery.
 //!
 //! Emits `BENCH_recovery.json` at the repo root (simulated latencies +
-//! netsim micro-bench stats) so the perf trajectory is diffable across
-//! PRs.
+//! netsim micro-bench stats + the policy-gate tape replay) so the perf
+//! trajectory is diffable across PRs.
+//!
+//! Schema 2 adds the `policy` section: every strategy replayed over the
+//! committed `examples/traces/burst_storm.jsonl` tape via
+//! `sim::simulate_tape`, with two gates `scripts/check_bench_json.py`
+//! enforces — the adaptive policy strictly beats every static strategy
+//! on convergence wall-clock, and the tiercheck restore path moves zero
+//! storage bytes.
 //!
 //! Pass `--smoke` for the CI recovery-smoke lane: short micro-bench
 //! budgets, results written to the **gitignored**
@@ -16,9 +23,78 @@
 
 use std::time::Duration;
 
+use checkfree::config::{AdaptiveThresholds, Strategy};
+use checkfree::failures::ChurnTrace;
 use checkfree::netsim::{Network, Region};
+use checkfree::sim::{simulate_tape, SimParams};
 use checkfree::util::bench::bench_with;
 use checkfree::util::json::Json;
+
+/// Replay the committed policy-gate tape under every strategy and emit
+/// the `policy` section the external checker gates on.
+fn policy_section() -> Json {
+    let tape_path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/traces/burst_storm.jsonl");
+    let tape = ChurnTrace::read_file(tape_path).expect("committed gate tape must load");
+    let iterations = 600u64;
+    println!("\n--- policy gate: burst_storm tape replay ({iterations} iters) ---");
+    let mut walls: Vec<(Strategy, f64)> = Vec::new();
+    let mut runs: Vec<Json> = Vec::new();
+    let mut adaptive_switches: Vec<Json> = Vec::new();
+    let mut tier_restore_storage = 0u64;
+    for s in Strategy::ALL {
+        if s == Strategy::None {
+            continue; // dies on the first event; not a comparable baseline
+        }
+        let run = simulate_tape(
+            &SimParams::policy_gate(s),
+            &tape,
+            iterations,
+            AdaptiveThresholds::default(),
+        );
+        println!(
+            "{:<12} wall {:>10.1}s  rollback {:>4} it  extra {:>5.1} it  storage {:>12} B",
+            s.label(),
+            run.wall_clock_s,
+            run.rollback_iterations,
+            run.extra_convergence_iterations,
+            run.storage_bytes
+        );
+        if s == Strategy::Adaptive {
+            adaptive_switches =
+                run.switch_iterations.iter().map(|&i| Json::num(i as f64)).collect();
+        }
+        if s == Strategy::TierCheck {
+            tier_restore_storage = run.restore_storage_bytes;
+        }
+        walls.push((s, run.wall_clock_s));
+        runs.push(Json::obj(vec![
+            ("strategy", Json::str(s.label())),
+            ("wall_clock_s", Json::num(run.wall_clock_s)),
+            ("failures", Json::num(run.failures as f64)),
+            ("rollback_iterations", Json::num(run.rollback_iterations as f64)),
+            ("extra_convergence_iterations", Json::num(run.extra_convergence_iterations)),
+            ("storage_bytes", Json::num(run.storage_bytes as f64)),
+            ("tier_backup_bytes", Json::num(run.tier_backup_bytes as f64)),
+            ("restore_storage_bytes", Json::num(run.restore_storage_bytes as f64)),
+        ]));
+    }
+    let adaptive_wall =
+        walls.iter().find(|(s, _)| *s == Strategy::Adaptive).map(|(_, w)| *w).unwrap();
+    let beats_static = walls
+        .iter()
+        .filter(|(s, _)| *s != Strategy::Adaptive)
+        .all(|(_, w)| adaptive_wall < *w);
+    Json::obj(vec![
+        ("tape", Json::str("examples/traces/burst_storm.jsonl")),
+        ("iterations", Json::num(iterations as f64)),
+        ("runs", Json::Arr(runs)),
+        ("adaptive_switch_iterations", Json::Arr(adaptive_switches)),
+        ("tiercheck_restore_storage_bytes", Json::num(tier_restore_storage as f64)),
+        ("gate_adaptive_beats_static", Json::Bool(beats_static)),
+        ("gate_tiercheck_zero_storage_bytes", Json::Bool(tier_restore_storage == 0)),
+    ])
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -78,14 +154,17 @@ fn main() {
     println!("{}", stats.report());
     micro.push(stats.to_json());
 
+    let policy = policy_section();
+
     let out = Json::obj(vec![
         ("bench", Json::str("recovery")),
-        ("schema", Json::num(1.0)),
+        ("schema", Json::num(2.0)),
         ("status", Json::str("measured")),
         ("generated_by", Json::str("cargo bench --bench recovery_latency [-- --smoke]")),
         ("smoke", Json::Bool(smoke)),
         ("simulated_latencies", Json::Arr(latencies)),
         ("microbench", Json::Arr(micro)),
+        ("policy", policy),
     ]);
     // Smoke runs (short budgets) go to the gitignored sidecar so CI's
     // recovery-smoke lane never clobbers the committed trajectory.

@@ -23,15 +23,25 @@ pub enum Strategy {
     /// CheckFree+: CheckFree + out-of-order swaps + (de)embedding
     /// replication, recovering first/last stages too (paper §4.3).
     CheckFreePlus,
+    /// TierCheck: every stage streams its snapshot to the right
+    /// neighbour's host RAM on a cadence; restore is a peer-memory copy
+    /// with no storage round-trip (PAPERS.md, TierCheck).
+    TierCheck,
+    /// Adaptive: EWMA failure-rate estimator that live-switches between
+    /// CheckFree (calm) and the in-memory tier (churn spikes) with
+    /// hysteresis (PAPERS.md, Chameleon).
+    Adaptive,
 }
 
 impl Strategy {
-    pub const ALL: [Strategy; 5] = [
+    pub const ALL: [Strategy; 7] = [
         Strategy::None,
         Strategy::Checkpoint,
         Strategy::Redundant,
         Strategy::CheckFree,
         Strategy::CheckFreePlus,
+        Strategy::TierCheck,
+        Strategy::Adaptive,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -41,6 +51,8 @@ impl Strategy {
             Strategy::Redundant => "redundant-comp",
             Strategy::CheckFree => "checkfree",
             Strategy::CheckFreePlus => "checkfree+",
+            Strategy::TierCheck => "tiercheck",
+            Strategy::Adaptive => "adaptive",
         }
     }
 
@@ -60,8 +72,11 @@ impl FromStr for Strategy {
             "redundant" | "redundant-comp" => Ok(Strategy::Redundant),
             "checkfree" => Ok(Strategy::CheckFree),
             "checkfree+" | "checkfree-plus" | "checkfreeplus" => Ok(Strategy::CheckFreePlus),
+            "tiercheck" | "tier-check" | "tier" => Ok(Strategy::TierCheck),
+            "adaptive" => Ok(Strategy::Adaptive),
             other => Err(anyhow!(
-                "unknown strategy '{other}' (none|checkpoint|redundant|checkfree|checkfree+)"
+                "unknown strategy '{other}' \
+                 (none|checkpoint|redundant|checkfree|checkfree+|tiercheck|adaptive)"
             )),
         }
     }
@@ -541,6 +556,54 @@ impl FromStr for TraceMode {
     }
 }
 
+/// Hysteresis band for the adaptive policy's EWMA failure-rate
+/// estimator (CLI: `--adaptive-thresholds escalate,deescalate`).
+///
+/// The estimator tracks failures/iteration. At or above `escalate` the
+/// policy switches to the in-memory tier; at or below `deescalate` it
+/// drops back to CheckFree. The gap between the two is the hysteresis
+/// band that prevents flapping, so `escalate > deescalate` is enforced
+/// by [`TrainConfig::validate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveThresholds {
+    /// EWMA failures/iteration at which the policy escalates to the tier.
+    pub escalate: f64,
+    /// EWMA failures/iteration at which the policy returns to CheckFree.
+    pub deescalate: f64,
+}
+
+impl Default for AdaptiveThresholds {
+    fn default() -> Self {
+        // With the estimator's α = 0.1 impulse per observed failure, a
+        // single isolated failure peaks the EWMA at ~0.1 — below the
+        // escalate bar — while two failures in one iteration (a burst
+        // signature) land at ~0.2 and trip it.
+        Self { escalate: 0.15, deescalate: 0.02 }
+    }
+}
+
+impl AdaptiveThresholds {
+    pub fn label(&self) -> String {
+        format!("{},{}", self.escalate, self.deescalate)
+    }
+}
+
+impl FromStr for AdaptiveThresholds {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (esc, deesc) = s
+            .split_once(',')
+            .ok_or_else(|| anyhow!("bad thresholds '{s}' (expected escalate,deescalate)"))?;
+        let parse = |v: &str, what: &str| -> Result<f64> {
+            v.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow!("bad {what} threshold '{v}': {e}"))
+        };
+        Ok(Self { escalate: parse(esc, "escalate")?, deescalate: parse(deesc, "deescalate")? })
+    }
+}
+
 /// One training run (real compute through the PJRT executables).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -595,6 +658,17 @@ pub struct TrainConfig {
     /// Lift the paper's no-two-adjacent-failures assumption (probing
     /// mode — lets region-correlated churn co-fail neighbour stages).
     pub allow_adjacent: bool,
+    /// Hysteresis band for the adaptive policy's EWMA estimator
+    /// (`--adaptive-thresholds`; used by [`Strategy::Adaptive`] only).
+    pub adaptive_thresholds: AdaptiveThresholds,
+    /// In-memory tier backup cadence in iterations (`--tier-backup-every`;
+    /// used by [`Strategy::TierCheck`] and the adaptive policy's tier).
+    pub tier_backup_every: u64,
+    /// Let the failure injector target stage 0 (the embedding stage).
+    /// Off by default: only strategies that replicate or snapshot the
+    /// embedding can recover it (CheckFree+ §4.3, Checkpoint, TierCheck),
+    /// and [`TrainConfig::validate`] enforces that constraint.
+    pub embed_can_fail: bool,
 }
 
 impl Default for TrainConfig {
@@ -622,6 +696,9 @@ impl Default for TrainConfig {
             churn_process: crate::failures::ChurnProcessKind::Bernoulli,
             churn_trace: None,
             allow_adjacent: false,
+            adaptive_thresholds: AdaptiveThresholds::default(),
+            tier_backup_every: 5,
+            embed_can_fail: false,
         }
     }
 }
@@ -671,6 +748,9 @@ impl TrainConfig {
                     .unwrap_or(Json::Null),
             ),
             ("allow_adjacent", Json::Bool(self.allow_adjacent)),
+            ("adaptive_thresholds", Json::str(self.adaptive_thresholds.label())),
+            ("tier_backup_every", Json::num(self.tier_backup_every as f64)),
+            ("embed_can_fail", Json::Bool(self.embed_can_fail)),
         ])
     }
 
@@ -777,6 +857,18 @@ impl TrainConfig {
                 Some(x) => x.as_bool()?,
                 None => d.allow_adjacent,
             },
+            adaptive_thresholds: match v.opt("adaptive_thresholds") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.adaptive_thresholds,
+            },
+            tier_backup_every: match v.opt("tier_backup_every") {
+                Some(x) => x.as_u64()?,
+                None => d.tier_backup_every,
+            },
+            embed_can_fail: match v.opt("embed_can_fail") {
+                Some(x) => x.as_bool()?,
+                None => d.embed_can_fail,
+            },
         })
     }
 
@@ -800,6 +892,37 @@ impl TrainConfig {
         }
         if self.recovery_lr_boost < 1.0 {
             return Err(anyhow!("recovery_lr_boost must be ≥ 1.0"));
+        }
+        if matches!(self.strategy, Strategy::TierCheck | Strategy::Adaptive)
+            && self.tier_backup_every == 0
+        {
+            return Err(anyhow!("tier_backup_every must be ≥ 1 for the in-memory tier"));
+        }
+        if self.strategy == Strategy::Adaptive {
+            let t = &self.adaptive_thresholds;
+            if !(t.escalate > t.deescalate && t.deescalate >= 0.0) {
+                return Err(anyhow!(
+                    "adaptive thresholds need escalate > deescalate ≥ 0 \
+                     (got {},{}) — the gap is the hysteresis band",
+                    t.escalate,
+                    t.deescalate
+                ));
+            }
+        }
+        // Only strategies that replicate or snapshot stage 0 can bring it
+        // back; the adaptive policy spends calm spans in plain CheckFree,
+        // which cannot, so it is excluded too.
+        if self.embed_can_fail
+            && !matches!(
+                self.strategy,
+                Strategy::CheckFreePlus | Strategy::Checkpoint | Strategy::TierCheck
+            )
+        {
+            return Err(anyhow!(
+                "embed_can_fail requires a strategy that can recover stage 0 \
+                 (checkfree+|checkpoint|tiercheck), got {}",
+                self.strategy.label()
+            ));
         }
         Ok(())
     }
@@ -1126,6 +1249,82 @@ mod tests {
         use std::collections::HashSet;
         let labels: HashSet<_> = Strategy::ALL.iter().map(|s| s.label()).collect();
         assert_eq!(labels.len(), Strategy::ALL.len());
+    }
+
+    #[test]
+    fn adaptive_thresholds_parse_and_roundtrip() {
+        let t: AdaptiveThresholds = "0.3,0.05".parse().unwrap();
+        assert_eq!(t, AdaptiveThresholds { escalate: 0.3, deescalate: 0.05 });
+        assert_eq!(t.label().parse::<AdaptiveThresholds>().unwrap(), t);
+        let d = AdaptiveThresholds::default();
+        assert!(d.escalate > d.deescalate && d.deescalate > 0.0);
+        assert!("0.3".parse::<AdaptiveThresholds>().is_err());
+        assert!("a,b".parse::<AdaptiveThresholds>().is_err());
+    }
+
+    #[test]
+    fn adaptive_fields_roundtrip_and_default() {
+        let d = TrainConfig::default();
+        assert_eq!(d.adaptive_thresholds, AdaptiveThresholds::default());
+        assert_eq!(d.tier_backup_every, 5);
+        assert!(!d.embed_can_fail);
+        let cfg = TrainConfig {
+            strategy: Strategy::Adaptive,
+            adaptive_thresholds: AdaptiveThresholds { escalate: 0.4, deescalate: 0.1 },
+            tier_backup_every: 12,
+            ..TrainConfig::default()
+        };
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(&cfg.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.strategy, Strategy::Adaptive);
+        assert_eq!(back.adaptive_thresholds, cfg.adaptive_thresholds);
+        assert_eq!(back.tier_backup_every, 12);
+        // absent keys → defaults (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.adaptive_thresholds, AdaptiveThresholds::default());
+        assert_eq!(back.tier_backup_every, 5);
+        assert!(!back.embed_can_fail);
+    }
+
+    #[test]
+    fn validation_rejects_bad_adaptive_configs() {
+        for strategy in [Strategy::TierCheck, Strategy::Adaptive] {
+            let cfg = TrainConfig { strategy, tier_backup_every: 0, ..TrainConfig::default() };
+            assert!(cfg.validate().is_err(), "{strategy:?} with zero cadence");
+            let cfg = TrainConfig { strategy, ..TrainConfig::default() };
+            assert!(cfg.validate().is_ok(), "{strategy:?} defaults");
+        }
+        // inverted hysteresis band → flapping; rejected
+        let cfg = TrainConfig {
+            strategy: Strategy::Adaptive,
+            adaptive_thresholds: AdaptiveThresholds { escalate: 0.05, deescalate: 0.2 },
+            ..TrainConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn embed_can_fail_requires_stage0_coverage() {
+        // The flag replaces the old hard-wired `… && false` placeholder in
+        // the trainer: eligibility is opt-in, and only for strategies whose
+        // recovery actually covers stage 0.
+        for strategy in [Strategy::CheckFreePlus, Strategy::Checkpoint, Strategy::TierCheck] {
+            let cfg = TrainConfig {
+                strategy,
+                embed_can_fail: true,
+                microbatches_per_iter: 4,
+                ..TrainConfig::default()
+            };
+            assert!(cfg.validate().is_ok(), "{strategy:?} covers stage 0");
+        }
+        for strategy in [Strategy::CheckFree, Strategy::Redundant, Strategy::Adaptive] {
+            let cfg =
+                TrainConfig { strategy, embed_can_fail: true, ..TrainConfig::default() };
+            assert!(cfg.validate().is_err(), "{strategy:?} cannot recover stage 0");
+        }
     }
 
     #[test]

@@ -100,7 +100,7 @@ use crate::config::{ExecMode, LinkPath, OptimizerPath, Overlap, PlaneMode, Stagi
 use crate::coordinator::schedule::PipelineSchedule;
 use crate::coordinator::{executor, schedule};
 use crate::data::{BatchIter, Domain};
-use crate::metrics::{ActivationWatermark, TransferLedger};
+use crate::metrics::{ActivationWatermark, Transfer, TransferLedger};
 use crate::model::{grad_sq_norm, GradBuffer, Stage};
 use crate::rng::Rng;
 use crate::runtime::{
@@ -769,7 +769,7 @@ impl PipelineEngine {
             stage.with_params_mut(|params| -> Result<()> {
                 for (dst, src) in params.iter_mut().zip(&opt.params) {
                     src.read_into(plane, s, dst)?;
-                    ledger.record_param_pull(s);
+                    ledger.record(s, Transfer::ParamPull);
                 }
                 Ok(())
             })?;
@@ -777,7 +777,7 @@ impl PipelineEngine {
                 bufs.iter()
                     .map(|b| {
                         let t = b.to_host(plane, s)?;
-                        ledger.record_param_pull(s);
+                        ledger.record(s, Transfer::ParamPull);
                         Ok(t.as_f32().to_vec())
                     })
                     .collect()
@@ -790,7 +790,7 @@ impl PipelineEngine {
                     .iter()
                     .map(|b| {
                         let t = b.to_host(plane, s)?;
-                        ledger.record_param_pull(s);
+                        ledger.record(s, Transfer::ParamPull);
                         Ok(t)
                     })
                     .collect::<Result<_>>()?;

@@ -15,7 +15,7 @@ use crate::coordinator::PipelineEngine;
 use crate::failures::FailureInjector;
 use crate::metrics::{EventKind, RunRecord};
 use crate::netsim::Network;
-use crate::recovery::{make_strategy, RecoveryStrategy};
+use crate::recovery::PolicyEngine;
 use crate::{Context, Result};
 
 /// Baseline iteration seconds at paper scale (Table 2 checkpointing /
@@ -25,7 +25,10 @@ pub const PAPER_ITER_SECONDS: f64 = 91.3;
 pub struct Trainer {
     pub engine: PipelineEngine,
     pub injector: FailureInjector,
-    pub strategy: Box<dyn RecoveryStrategy>,
+    /// The recovery seam: the trainer talks to a [`PolicyEngine`], never
+    /// to a concrete strategy, so the active mechanism can change
+    /// mid-run (adaptive) without the loop knowing.
+    pub policy: PolicyEngine,
     pub net: Network,
     pub record: RunRecord,
     cfg: TrainConfig,
@@ -51,19 +54,22 @@ impl Trainer {
         cfg.validate()?;
         let engine = PipelineEngine::from_config(&cfg).context("building pipeline engine")?;
         let total = engine.stages.len();
-        // S0 (E/E⁻¹) can only fail when the strategy can restore it exactly.
-        let embed_can_fail = cfg.strategy == crate::config::Strategy::CheckFreePlus && false;
+        // S0 (E/E⁻¹) failures are opt-in: `cfg.embed_can_fail` is only
+        // accepted by validate() for strategies that restore stage 0
+        // exactly (checkfree+, checkpoint, tiercheck), so the injector
+        // never samples a failure the strategy cannot answer.
+        let embed_can_fail = cfg.embed_can_fail;
         let injector = FailureInjector::from_config(&cfg, total, embed_can_fail)
             .context("building failure injector")?;
-        let mut strategy = make_strategy(&cfg)?;
+        let mut policy = PolicyEngine::from_config(&cfg)?;
         let net = Network::round_robin(total);
         let record = RunRecord::new(cfg.strategy.label());
         let mut engine = engine;
-        strategy.on_start(&mut engine, &net)?;
+        policy.on_start(&mut engine, &net)?;
         Ok(Self {
             engine,
             injector,
-            strategy,
+            policy,
             net,
             record,
             cfg,
@@ -91,11 +97,16 @@ impl Trainer {
     pub fn step(&mut self) -> Result<f32> {
         let stats = self.engine.train_iteration()?;
         self.global_step += 1;
-        self.sim_time += self.iter_seconds * self.strategy.iteration_time_factor();
+        self.sim_time += self.iter_seconds * self.policy.iteration_time_factor();
 
-        if let Some(cost) = self.strategy.after_iteration(&mut self.engine, &self.net)? {
+        if let Some(cost) = self.policy.after_iteration(&mut self.engine, &self.net)? {
             self.sim_time += cost.stall_s;
-            if cost.kind == EventKind::CheckpointTaken && cost.stall_s > 0.0 {
+            // Policy switches are always recorded (a free de-escalation
+            // is still a regime change the curve reader wants to see);
+            // routine maintenance only when it actually stalled.
+            if cost.kind == EventKind::PolicySwitch
+                || (cost.kind == EventKind::CheckpointTaken && cost.stall_s > 0.0)
+            {
                 self.record.event(self.global_step, cost.kind, None, cost.stall_s);
             }
         }
@@ -103,7 +114,7 @@ impl Trainer {
         for stage in self.injector.sample(self.global_step) {
             self.record.event(self.global_step, EventKind::StageFailure, Some(stage), 0.0);
             let outcome = self
-                .strategy
+                .policy
                 .on_failure(&mut self.engine, &self.net, stage)
                 .with_context(|| format!("recovering stage {stage} at step {}", self.global_step))?;
             self.sim_time += outcome.downtime_s;
@@ -262,6 +273,97 @@ mod tests {
         let s = t.run().unwrap();
         assert_eq!(s.failures, 1);
         assert_eq!(s.iterations_run, 8);
+    }
+
+    #[test]
+    fn embed_can_fail_is_config_gated() {
+        // Default: stage 0 (E/E⁻¹) is never in the failable set.
+        let t = Trainer::new(cfg(Strategy::CheckFreePlus, 4)).unwrap();
+        assert!(!t.injector.failable().contains(&0));
+        // The named flag opts it in for strategies with exact stage-0
+        // recovery…
+        let mut c = cfg(Strategy::CheckFreePlus, 4);
+        c.embed_can_fail = true;
+        let t = Trainer::new(c).unwrap();
+        assert!(t.injector.failable().contains(&0));
+        // …and is rejected where a stage-0 failure would be fatal.
+        let mut c = cfg(Strategy::CheckFree, 4);
+        c.embed_can_fail = true;
+        assert!(Trainer::new(c).is_err());
+    }
+
+    #[test]
+    fn adaptive_escalates_and_records_the_switch() {
+        let mut c = cfg(Strategy::Adaptive, 10);
+        c.tier_backup_every = 2;
+        c.allow_adjacent = true; // tiny's two body stages are adjacent
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(3, 1);
+        t.force_failure(3, 2);
+        let s = t.run().unwrap();
+        assert_eq!(s.failures, 2);
+        let switches: Vec<_> =
+            t.record.events.iter().filter(|e| e.kind == EventKind::PolicySwitch).collect();
+        assert_eq!(switches.len(), 1, "one escalation, no flapping");
+        assert_eq!(switches[0].iteration, 4, "switch lands the iteration after the burst");
+        assert!(switches[0].cost_s > 0.0, "escalation pays the tier-seeding cut");
+        assert!(
+            t.engine.transfer_ledger().snapshot().tier_backups > 0,
+            "the neighbour tier was armed"
+        );
+        assert_eq!(s.iterations_run, 10);
+    }
+
+    #[test]
+    fn adaptive_tape_replay_is_bitwise_deterministic() {
+        // Satellite of the policy redesign: the same churn tape through
+        // AdaptivePolicy twice gives bitwise-identical loss curves,
+        // identical event logs (including the switch), and identical
+        // ledger columns.
+        use crate::config::TraceMode;
+        let dir = std::env::temp_dir().join("checkfree_adaptive_tape_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("burst.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"iteration\": 3, \"stage\": 1, \"kind\": \"spot\"}\n",
+                "{\"iteration\": 3, \"stage\": 2, \"kind\": \"spot\"}\n",
+                "{\"iteration\": 9, \"stage\": 2, \"kind\": \"spot\"}\n",
+            ),
+        )
+        .unwrap();
+        let run = || {
+            let mut c = cfg(Strategy::Adaptive, 14);
+            c.tier_backup_every = 2;
+            c.churn_trace = Some(TraceMode::Replay(path.to_str().unwrap().into()));
+            let mut t = Trainer::new(c).unwrap();
+            t.run().unwrap();
+            let curve: Vec<(u64, u32, Option<u32>)> = t
+                .record
+                .curve
+                .iter()
+                .map(|p| (p.iteration, p.train_loss.to_bits(), p.val_loss.map(|v| v.to_bits())))
+                .collect();
+            let events: Vec<(u64, &'static str, Option<usize>, u64)> = t
+                .record
+                .events
+                .iter()
+                .map(|e| (e.iteration, e.kind.label(), e.stage, e.cost_s.to_bits()))
+                .collect();
+            (curve, events, t.engine.transfer_ledger().snapshot(), t.sim_time_s().to_bits())
+        };
+        let (c1, e1, l1, s1) = run();
+        let (c2, e2, l2, s2) = run();
+        assert_eq!(c1, c2, "loss curves diverged");
+        assert_eq!(e1, e2, "event logs diverged");
+        assert_eq!(l1, l2, "ledger columns diverged");
+        assert_eq!(s1, s2, "sim clocks diverged");
+        assert!(
+            e1.iter().any(|(_, k, _, _)| *k == "policy-switch"),
+            "the tape must exercise a switch"
+        );
+        assert!(l1.tier_backups > 0, "the tape must exercise the tier");
     }
 
     #[test]

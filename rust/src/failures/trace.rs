@@ -320,4 +320,29 @@ mod tests {
         }
         assert!(multi, "spot_burst tape never bursts");
     }
+
+    #[test]
+    fn policy_gate_tape_parses_and_replays() {
+        // The committed policy-gate tape (calm → storm → calm) that the
+        // recovery_latency bench and the adaptive-vs-static acceptance
+        // gate replay. Its shape is load-bearing: isolated failures in
+        // the calm spans, same-iteration-free pairs every other
+        // iteration inside the 201–215 storm.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/traces/burst_storm.jsonl");
+        let trace = ChurnTrace::read_file(path).unwrap();
+        assert_eq!(trace.events.len(), 21, "gate tape changed shape");
+        let storm: Vec<_> =
+            trace.events.iter().filter(|e| (201..=215).contains(&e.iteration)).collect();
+        assert_eq!(storm.len(), 16, "storm must carry 8 failure pairs");
+        let mut replay = TraceReplay::new(trace.clone());
+        let mut replayed = 0usize;
+        for it in 0..=trace.events.last().unwrap().iteration {
+            let f = replay.sample_iteration(it);
+            replayed += f.len();
+            for w in f.windows(2) {
+                assert!(w[1] > w[0] + 1, "adjacent stages {w:?} at {it}");
+            }
+        }
+        assert_eq!(replayed, 21, "replay must be verbatim");
+    }
 }

@@ -13,6 +13,9 @@
 //!                    [--churn-process bernoulli|poisson|bursty|correlated]
 //!                    [--churn-trace record:PATH|replay:PATH]
 //!                    [--allow-adjacent true|false]
+//!                    [--adaptive-thresholds ESC,DEESC]
+//!                    [--tier-backup-every N]
+//!                    [--embed-can-fail true|false]
 //!                    [--target-loss L] [--config FILE.json] [--out FILE.csv]
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
@@ -169,6 +172,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.parse_opt::<checkfree::config::OptimizerPath>("optimizer-path")? {
         cfg.optimizer_path = p;
+    }
+    if let Some(t) = args.parse_opt::<checkfree::config::AdaptiveThresholds>("adaptive-thresholds")?
+    {
+        cfg.adaptive_thresholds = t;
+    }
+    if let Some(n) = args.parse_opt::<u64>("tier-backup-every")? {
+        cfg.tier_backup_every = n;
+    }
+    if let Some(e) = args.parse_opt::<bool>("embed-can-fail")? {
+        cfg.embed_can_fail = e;
     }
     cfg.validate()?;
 

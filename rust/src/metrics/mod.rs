@@ -91,6 +91,58 @@ struct StageCounters {
     link_wait_ns: AtomicU64,
     donated_buffers: AtomicU64,
     param_pulls: AtomicU64,
+    tier_backups: AtomicU64,
+    tier_backup_bytes: AtomicU64,
+}
+
+/// One device↔host / cross-plane / peer-tier transfer, as recorded by
+/// [`TransferLedger::record`]. Each variant maps onto the same ledger
+/// columns the former `record_*` methods fed — the typed enum replaces
+/// ten near-identical methods with one dispatch point, so a new traffic
+/// class (e.g. [`Transfer::TierBackup`]) is one variant + one match arm
+/// instead of another method and another doc stanza.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transfer {
+    /// A device buffer (or fetched output) of `bytes` came back to host
+    /// (`host_syncs` + `bytes_down`).
+    Sync { bytes: u64 },
+    /// `bytes` of host data moved onto the device (`uploads` + `bytes_up`).
+    Upload { bytes: u64 },
+    /// `execute_buffers` hit the legacy tupled output layout and had to
+    /// round-trip through the host (see [`TransferLedger`] docs).
+    ForcedTupleRoundtrip,
+    /// A device buffer of `bytes` hopped between stages' planes via the
+    /// plugin's **direct** cross-client transfer, billed to the
+    /// destination stage (`link_copies` + `link_bytes` + `link_direct`).
+    LinkDirect { bytes: u64 },
+    /// Like [`Transfer::LinkDirect`], but via the **staged**
+    /// device→host→device fallback hop (`link_staged`).
+    LinkStaged { bytes: u64 },
+    /// A link copy was **prefetched** on the sending side before the
+    /// receiver asked (`--overlap on`); recorded at copy time so
+    /// `link_overlapped + link_blocking == link_copies` always holds.
+    LinkOverlapped,
+    /// A link copy was performed synchronously in the consumer's call
+    /// path (overlap off, the staged fallback, or a direct
+    /// `copy_to_plane` outside the executor's prefetch dispatch).
+    LinkBlocking,
+    /// The consuming side stalled `ns` nanoseconds completing a link
+    /// (the wall-clock the overlap bench gate compares).
+    LinkWaitNs { ns: u64 },
+    /// An execute received ownership of a dead input buffer whose spec
+    /// aliases an output and released it at execute completion.
+    Donation,
+    /// One tensor was pulled device→host to materialize a lazily-held
+    /// host copy of a stage's params/optimizer state. The pull's bytes
+    /// also land in `host_syncs`/`bytes_down` via the underlying
+    /// `read_into`; this variant only tags them as boundary traffic.
+    ParamPull,
+    /// `bytes` of stage state streamed to the right neighbour's host RAM
+    /// (the in-memory checkpoint tier, `--strategy tiercheck`). Peer
+    /// backup traffic, not host I/O: counted in its own
+    /// `tier_backups`/`tier_backup_bytes` columns and never inflating
+    /// `host_syncs`/`uploads`, mirroring the link-copy contract.
+    TierBackup { bytes: u64 },
 }
 
 /// Cumulative device↔host transfer accounting, per pipeline stage.
@@ -188,6 +240,12 @@ pub struct TransferSnapshot {
     /// is separable from the steady-state loss/grad syncs. Zero in
     /// steady state — the engine test pins it.
     pub param_pulls: u64,
+    /// In-memory tier backups streamed to the right neighbour's host RAM
+    /// (`--strategy tiercheck`; one count per stage per backup wave).
+    pub tier_backups: u64,
+    /// Bytes carried by those tier backups (peer traffic — never counted
+    /// as host syncs/uploads, like link copies).
+    pub tier_backup_bytes: u64,
 }
 
 impl TransferSnapshot {
@@ -212,6 +270,8 @@ impl TransferSnapshot {
             link_wait_ns: self.link_wait_ns.saturating_sub(earlier.link_wait_ns),
             donated_buffers: self.donated_buffers.saturating_sub(earlier.donated_buffers),
             param_pulls: self.param_pulls.saturating_sub(earlier.param_pulls),
+            tier_backups: self.tier_backups.saturating_sub(earlier.tier_backups),
+            tier_backup_bytes: self.tier_backup_bytes.saturating_sub(earlier.tier_backup_bytes),
         }
     }
 }
@@ -233,86 +293,54 @@ impl TransferLedger {
         &self.stages[stage.min(self.stages.len().saturating_sub(1))]
     }
 
-    /// A device buffer (or fetched output) of `bytes` came back to host.
-    pub fn record_sync(&self, stage: usize, bytes: u64) {
+    /// Record one [`Transfer`] against `stage`. Billing conventions are
+    /// on the enum variants; column semantics (what sums to what, which
+    /// classes never inflate host traffic) are pinned by the unit tests
+    /// below and unchanged from the former per-class `record_*` methods.
+    pub fn record(&self, stage: usize, transfer: Transfer) {
         let s = self.slot(stage);
-        s.host_syncs.fetch_add(1, Ordering::Relaxed);
-        s.bytes_down.fetch_add(bytes, Ordering::Relaxed);
-    }
-
-    /// `bytes` of host data moved onto the device.
-    pub fn record_upload(&self, stage: usize, bytes: u64) {
-        let s = self.slot(stage);
-        s.uploads.fetch_add(1, Ordering::Relaxed);
-        s.bytes_up.fetch_add(bytes, Ordering::Relaxed);
-    }
-
-    /// `execute_buffers` hit the legacy tupled output layout and had to
-    /// round-trip through the host (see [`TransferLedger`] docs).
-    pub fn record_forced_tuple_roundtrip(&self, stage: usize) {
-        self.slot(stage).forced_tuple_roundtrips.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// A device buffer of `bytes` hopped from one stage's plane to
-    /// another's via the plugin's **direct** cross-client transfer
-    /// (`--plane-mode per-stage` inter-client link copy), billed to the
-    /// **destination** stage — the receiver pulls the activation onto
-    /// its own client.
-    pub fn record_link_copy_direct(&self, stage: usize, bytes: u64) {
-        let s = self.slot(stage);
-        s.link_copies.fetch_add(1, Ordering::Relaxed);
-        s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
-        s.link_direct.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Like [`Self::record_link_copy_direct`], but the hop took the
-    /// **staged** device→host→device fallback path.
-    pub fn record_link_copy_staged(&self, stage: usize, bytes: u64) {
-        let s = self.slot(stage);
-        s.link_copies.fetch_add(1, Ordering::Relaxed);
-        s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
-        s.link_staged.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// A link copy was **prefetched** on the sending side before the
-    /// receiving worker asked for it ([`crate::runtime::LinkSlot`]
-    /// issue, `--overlap on`) — billed, like every link column, to the
-    /// receiving stage. Recorded at copy time, so
-    /// `link_overlapped + link_blocking == link_copies` holds at every
-    /// instant.
-    pub fn record_link_overlapped(&self, stage: usize) {
-        self.slot(stage).link_overlapped.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// A link copy was performed **synchronously in the consumer's call
-    /// path** (overlap off, the staged fallback, or a direct
-    /// `copy_to_plane` outside the executor's prefetch dispatch).
-    pub fn record_link_blocking(&self, stage: usize) {
-        self.slot(stage).link_blocking.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// The consuming side stalled `ns` nanoseconds completing a link
-    /// (the receiving-stage wall-clock the overlap bench gate compares
-    /// across `--overlap on|off`).
-    pub fn record_link_wait_ns(&self, stage: usize, ns: u64) {
-        self.slot(stage).link_wait_ns.fetch_add(ns, Ordering::Relaxed);
-    }
-
-    /// An execute received ownership of a dead input buffer whose spec
-    /// aliases one of its outputs and released it at execute completion
-    /// (`Executable::execute_buffers_donating`).
-    pub fn record_donation(&self, stage: usize) {
-        self.slot(stage).donated_buffers.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// One tensor was pulled device→host to materialize a lazily-held
-    /// host copy of `stage`'s parameters or optimizer state (the
-    /// device-resident optimizer's recovery / checkpoint / inspection
-    /// boundary). The pull's bytes also land in `host_syncs`/
-    /// `bytes_down` via the underlying `read_into`; this column only
-    /// tags them as boundary traffic.
-    pub fn record_param_pull(&self, stage: usize) {
-        self.slot(stage).param_pulls.fetch_add(1, Ordering::Relaxed);
+        match transfer {
+            Transfer::Sync { bytes } => {
+                s.host_syncs.fetch_add(1, Ordering::Relaxed);
+                s.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+            }
+            Transfer::Upload { bytes } => {
+                s.uploads.fetch_add(1, Ordering::Relaxed);
+                s.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+            }
+            Transfer::ForcedTupleRoundtrip => {
+                s.forced_tuple_roundtrips.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::LinkDirect { bytes } => {
+                s.link_copies.fetch_add(1, Ordering::Relaxed);
+                s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+                s.link_direct.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::LinkStaged { bytes } => {
+                s.link_copies.fetch_add(1, Ordering::Relaxed);
+                s.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+                s.link_staged.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::LinkOverlapped => {
+                s.link_overlapped.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::LinkBlocking => {
+                s.link_blocking.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::LinkWaitNs { ns } => {
+                s.link_wait_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+            Transfer::Donation => {
+                s.donated_buffers.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::ParamPull => {
+                s.param_pulls.fetch_add(1, Ordering::Relaxed);
+            }
+            Transfer::TierBackup { bytes } => {
+                s.tier_backups.fetch_add(1, Ordering::Relaxed);
+                s.tier_backup_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Counters of one stage.
@@ -333,6 +361,8 @@ impl TransferLedger {
             link_wait_ns: s.link_wait_ns.load(Ordering::Relaxed),
             donated_buffers: s.donated_buffers.load(Ordering::Relaxed),
             param_pulls: s.param_pulls.load(Ordering::Relaxed),
+            tier_backups: s.tier_backups.load(Ordering::Relaxed),
+            tier_backup_bytes: s.tier_backup_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -355,6 +385,8 @@ impl TransferLedger {
             total.link_wait_ns += s.link_wait_ns;
             total.donated_buffers += s.donated_buffers;
             total.param_pulls += s.param_pulls;
+            total.tier_backups += s.tier_backups;
+            total.tier_backup_bytes += s.tier_backup_bytes;
         }
         total
     }
@@ -381,6 +413,8 @@ impl TransferLedger {
             s.link_wait_ns.store(0, Ordering::Relaxed);
             s.donated_buffers.store(0, Ordering::Relaxed);
             s.param_pulls.store(0, Ordering::Relaxed);
+            s.tier_backups.store(0, Ordering::Relaxed);
+            s.tier_backup_bytes.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -411,6 +445,9 @@ pub enum EventKind {
     Recovery,
     CheckpointTaken,
     Rollback,
+    /// The adaptive policy hot-swapped its active strategy (the EWMA
+    /// estimator crossed a hysteresis threshold).
+    PolicySwitch,
 }
 
 impl EventKind {
@@ -420,6 +457,7 @@ impl EventKind {
             EventKind::Recovery => "recovery",
             EventKind::CheckpointTaken => "checkpoint",
             EventKind::Rollback => "rollback",
+            EventKind::PolicySwitch => "policy-switch",
         }
     }
 }
@@ -586,15 +624,15 @@ mod tests {
     #[test]
     fn ledger_attributes_transfers_per_stage() {
         let l = TransferLedger::new(3);
-        l.record_upload(0, 16);
-        l.record_sync(1, 8);
-        l.record_sync(1, 8);
-        l.record_upload(2, 4);
-        l.record_forced_tuple_roundtrip(1);
-        l.record_link_copy_staged(1, 32);
-        l.record_link_blocking(1);
-        l.record_link_wait_ns(1, 700);
-        l.record_donation(1);
+        l.record(0, Transfer::Upload { bytes: 16 });
+        l.record(1, Transfer::Sync { bytes: 8 });
+        l.record(1, Transfer::Sync { bytes: 8 });
+        l.record(2, Transfer::Upload { bytes: 4 });
+        l.record(1, Transfer::ForcedTupleRoundtrip);
+        l.record(1, Transfer::LinkStaged { bytes: 32 });
+        l.record(1, Transfer::LinkBlocking);
+        l.record(1, Transfer::LinkWaitNs { ns: 700 });
+        l.record(1, Transfer::Donation);
         assert_eq!(
             l.stage_snapshot(1),
             TransferSnapshot {
@@ -612,6 +650,8 @@ mod tests {
                 link_wait_ns: 700,
                 donated_buffers: 1,
                 param_pulls: 0,
+                tier_backups: 0,
+                tier_backup_bytes: 0,
             }
         );
         let total = l.snapshot();
@@ -632,15 +672,15 @@ mod tests {
         // boundary traffic from steady-state loss/grad syncs, it never
         // replaces the sync accounting.
         let l = TransferLedger::new(3);
-        l.record_sync(2, 64);
-        l.record_param_pull(2);
-        l.record_sync(1, 8); // a steady-state loss sync: no pull tag
+        l.record(2, Transfer::Sync { bytes: 64 });
+        l.record(2, Transfer::ParamPull);
+        l.record(1, Transfer::Sync { bytes: 8 }); // a steady-state loss sync: no pull tag
         assert_eq!(l.stage_snapshot(2).param_pulls, 1);
         assert_eq!(l.stage_snapshot(2).host_syncs, 1);
         assert_eq!(l.stage_snapshot(1).param_pulls, 0);
         let before = l.snapshot();
-        l.record_sync(2, 64);
-        l.record_param_pull(2);
+        l.record(2, Transfer::Sync { bytes: 64 });
+        l.record(2, Transfer::ParamPull);
         let delta = l.snapshot().since(&before);
         assert_eq!((delta.param_pulls, delta.host_syncs), (1, 1));
         l.reset();
@@ -653,8 +693,8 @@ mod tests {
         // between devices, so it must not look like host traffic —
         // whichever path (direct or staged) moved it.
         let l = TransferLedger::new(2);
-        l.record_link_copy_direct(0, 64);
-        l.record_link_copy_staged(1, 64);
+        l.record(0, Transfer::LinkDirect { bytes: 64 });
+        l.record(1, Transfer::LinkStaged { bytes: 64 });
         let total = l.snapshot();
         assert_eq!((total.link_copies, total.link_bytes), (2, 128));
         assert_eq!((total.link_direct, total.link_staged), (1, 1));
@@ -665,9 +705,9 @@ mod tests {
     #[test]
     fn link_path_split_always_sums_to_link_copies() {
         let l = TransferLedger::new(1);
-        l.record_link_copy_direct(0, 8);
-        l.record_link_copy_direct(0, 8);
-        l.record_link_copy_staged(0, 8);
+        l.record(0, Transfer::LinkDirect { bytes: 8 });
+        l.record(0, Transfer::LinkDirect { bytes: 8 });
+        l.record(0, Transfer::LinkStaged { bytes: 8 });
         let total = l.snapshot();
         assert_eq!(total.link_copies, total.link_direct + total.link_staged);
         assert_eq!((total.link_direct, total.link_staged), (2, 1));
@@ -679,12 +719,12 @@ mod tests {
         // every copy is exactly one of overlapped|blocking, whichever
         // path moved it, so both splits sum to link_copies.
         let l = TransferLedger::new(1);
-        l.record_link_copy_direct(0, 8);
-        l.record_link_overlapped(0);
-        l.record_link_copy_direct(0, 8);
-        l.record_link_overlapped(0);
-        l.record_link_copy_staged(0, 8);
-        l.record_link_blocking(0);
+        l.record(0, Transfer::LinkDirect { bytes: 8 });
+        l.record(0, Transfer::LinkOverlapped);
+        l.record(0, Transfer::LinkDirect { bytes: 8 });
+        l.record(0, Transfer::LinkOverlapped);
+        l.record(0, Transfer::LinkStaged { bytes: 8 });
+        l.record(0, Transfer::LinkBlocking);
         let total = l.snapshot();
         assert_eq!(total.link_copies, total.link_overlapped + total.link_blocking);
         assert_eq!(total.link_copies, total.link_direct + total.link_staged);
@@ -698,9 +738,9 @@ mod tests {
         // every other link column — per-stage deltas are what the
         // schema-4 overlap bench gate compares.
         let l = TransferLedger::new(3);
-        l.record_link_wait_ns(1, 1_000);
-        l.record_link_wait_ns(1, 500);
-        l.record_link_wait_ns(2, 40);
+        l.record(1, Transfer::LinkWaitNs { ns: 1_000 });
+        l.record(1, Transfer::LinkWaitNs { ns: 500 });
+        l.record(2, Transfer::LinkWaitNs { ns: 40 });
         assert_eq!(l.stage_snapshot(0).link_wait_ns, 0);
         assert_eq!(l.stage_snapshot(1).link_wait_ns, 1_500);
         assert_eq!(l.stage_snapshot(2).link_wait_ns, 40);
@@ -710,13 +750,13 @@ mod tests {
     #[test]
     fn overlap_columns_diff_and_reset() {
         let l = TransferLedger::new(2);
-        l.record_link_copy_direct(1, 8);
-        l.record_link_overlapped(1);
-        l.record_link_wait_ns(1, 10);
+        l.record(1, Transfer::LinkDirect { bytes: 8 });
+        l.record(1, Transfer::LinkOverlapped);
+        l.record(1, Transfer::LinkWaitNs { ns: 10 });
         let before = l.snapshot();
-        l.record_link_copy_direct(1, 8);
-        l.record_link_blocking(1);
-        l.record_link_wait_ns(1, 990);
+        l.record(1, Transfer::LinkDirect { bytes: 8 });
+        l.record(1, Transfer::LinkBlocking);
+        l.record(1, Transfer::LinkWaitNs { ns: 990 });
         let delta = l.snapshot().since(&before);
         assert_eq!((delta.link_overlapped, delta.link_blocking), (0, 1));
         assert_eq!(delta.link_wait_ns, 990);
@@ -728,13 +768,13 @@ mod tests {
     #[test]
     fn ledger_snapshot_diffs_give_per_iteration_deltas() {
         let l = TransferLedger::new(2);
-        l.record_sync(0, 4);
-        l.record_link_copy_staged(0, 2);
+        l.record(0, Transfer::Sync { bytes: 4 });
+        l.record(0, Transfer::LinkStaged { bytes: 2 });
         let before = l.snapshot();
-        l.record_sync(1, 4);
-        l.record_upload(0, 8);
-        l.record_link_copy_direct(1, 16);
-        l.record_donation(1);
+        l.record(1, Transfer::Sync { bytes: 4 });
+        l.record(0, Transfer::Upload { bytes: 8 });
+        l.record(1, Transfer::LinkDirect { bytes: 16 });
+        l.record(1, Transfer::Donation);
         let delta = l.snapshot().since(&before);
         assert_eq!(delta.host_syncs, 1);
         assert_eq!(delta.uploads, 1);
@@ -749,12 +789,12 @@ mod tests {
     #[test]
     fn ledger_reset_zeroes_everything() {
         let l = TransferLedger::new(2);
-        l.record_sync(0, 4);
-        l.record_upload(1, 4);
-        l.record_forced_tuple_roundtrip(0);
-        l.record_link_copy_direct(1, 8);
-        l.record_link_copy_staged(1, 8);
-        l.record_donation(0);
+        l.record(0, Transfer::Sync { bytes: 4 });
+        l.record(1, Transfer::Upload { bytes: 4 });
+        l.record(0, Transfer::ForcedTupleRoundtrip);
+        l.record(1, Transfer::LinkDirect { bytes: 8 });
+        l.record(1, Transfer::LinkStaged { bytes: 8 });
+        l.record(0, Transfer::Donation);
         l.reset();
         assert_eq!(l.snapshot(), TransferSnapshot::default());
     }
@@ -768,8 +808,8 @@ mod tests {
                 let l = &l;
                 s.spawn(move || {
                     for _ in 0..per_thread {
-                        l.record_sync(t % 2, 4);
-                        l.record_upload(t % 2, 8);
+                        l.record(t % 2, Transfer::Sync { bytes: 4 });
+                        l.record(t % 2, Transfer::Upload { bytes: 8 });
                     }
                 });
             }
@@ -779,6 +819,95 @@ mod tests {
         assert_eq!(total.uploads, 4 * per_thread);
         assert_eq!(total.bytes_down, 4 * per_thread * 4);
         assert_eq!(total.bytes_up, 4 * per_thread * 8);
+    }
+
+    #[test]
+    fn typed_record_hits_exactly_the_old_columns() {
+        // Column-equivalence pin for the `record_*` → `record(Transfer)`
+        // collapse: each variant must touch exactly the columns its
+        // former method touched, and nothing else.
+        let cases: Vec<(Transfer, TransferSnapshot)> = vec![
+            (
+                Transfer::Sync { bytes: 8 },
+                TransferSnapshot { host_syncs: 1, bytes_down: 8, ..Default::default() },
+            ),
+            (
+                Transfer::Upload { bytes: 4 },
+                TransferSnapshot { uploads: 1, bytes_up: 4, ..Default::default() },
+            ),
+            (
+                Transfer::ForcedTupleRoundtrip,
+                TransferSnapshot { forced_tuple_roundtrips: 1, ..Default::default() },
+            ),
+            (
+                Transfer::LinkDirect { bytes: 16 },
+                TransferSnapshot {
+                    link_copies: 1,
+                    link_bytes: 16,
+                    link_direct: 1,
+                    ..Default::default()
+                },
+            ),
+            (
+                Transfer::LinkStaged { bytes: 16 },
+                TransferSnapshot {
+                    link_copies: 1,
+                    link_bytes: 16,
+                    link_staged: 1,
+                    ..Default::default()
+                },
+            ),
+            (
+                Transfer::LinkOverlapped,
+                TransferSnapshot { link_overlapped: 1, ..Default::default() },
+            ),
+            (Transfer::LinkBlocking, TransferSnapshot { link_blocking: 1, ..Default::default() }),
+            (
+                Transfer::LinkWaitNs { ns: 99 },
+                TransferSnapshot { link_wait_ns: 99, ..Default::default() },
+            ),
+            (Transfer::Donation, TransferSnapshot { donated_buffers: 1, ..Default::default() }),
+            (Transfer::ParamPull, TransferSnapshot { param_pulls: 1, ..Default::default() }),
+            (
+                Transfer::TierBackup { bytes: 32 },
+                TransferSnapshot { tier_backups: 1, tier_backup_bytes: 32, ..Default::default() },
+            ),
+        ];
+        for (transfer, want) in cases {
+            let l = TransferLedger::new(1);
+            l.record(0, transfer);
+            assert_eq!(l.snapshot(), want, "{transfer:?}");
+        }
+    }
+
+    #[test]
+    fn tier_backups_never_inflate_host_traffic() {
+        // Same contract as link copies: a peer-RAM backup is not host
+        // I/O, and it diffs/resets like every other column.
+        let l = TransferLedger::new(3);
+        l.record(1, Transfer::TierBackup { bytes: 100 });
+        l.record(2, Transfer::TierBackup { bytes: 50 });
+        let total = l.snapshot();
+        assert_eq!((total.tier_backups, total.tier_backup_bytes), (2, 150));
+        assert_eq!((total.host_syncs, total.uploads), (0, 0));
+        assert_eq!((total.bytes_down, total.bytes_up), (0, 0));
+        assert_eq!(l.stage_snapshot(1).tier_backup_bytes, 100);
+        assert_eq!(l.stage_snapshot(0).tier_backups, 0);
+        let before = l.snapshot();
+        l.record(1, Transfer::TierBackup { bytes: 7 });
+        let delta = l.snapshot().since(&before);
+        assert_eq!((delta.tier_backups, delta.tier_backup_bytes), (1, 7));
+        l.reset();
+        assert_eq!(l.snapshot(), TransferSnapshot::default());
+    }
+
+    #[test]
+    fn policy_switch_event_has_a_label() {
+        assert_eq!(EventKind::PolicySwitch.label(), "policy-switch");
+        let mut r = RunRecord::new("adaptive");
+        r.event(42, EventKind::PolicySwitch, None, 5.0);
+        assert!(r.events_csv().contains("42,policy-switch,,5.000"));
+        assert_eq!(r.failures(), 0, "a switch is not a failure");
     }
 
     fn record() -> RunRecord {

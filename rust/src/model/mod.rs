@@ -318,6 +318,14 @@ pub struct StageSnapshot {
     pub omega: f64,
 }
 
+impl StageSnapshot {
+    /// Parameter payload size, matching [`Stage::bytes`] of the source
+    /// stage (what a backup of this snapshot moves over a link).
+    pub fn bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.len() as u64).sum::<u64>() * 4
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,355 @@
+//! Adaptive recovery: live policy selection between CheckFree and the
+//! in-memory neighbour tier.
+//!
+//! The paper's strategies sit at fixed points on a cost/fidelity curve:
+//! CheckFree is free between failures but recovers approximately (each
+//! inexact rebuild costs extra convergence iterations), TierCheck pays a
+//! small synchronous cut every few iterations but restores exactly. No
+//! fixed point wins across churn regimes — calm spans want CheckFree's
+//! zero overhead, failure storms want the tier's exact restores.
+//!
+//! [`AdaptivePolicy`] estimates the live failure rate with an EWMA —
+//! decayed by `1-α` every iteration, bumped by `α` for every observed
+//! failure — and hot-swaps the active mechanism when the estimate
+//! crosses a threshold. The thresholds form a hysteresis band
+//! ([`crate::config::AdaptiveThresholds`]): with the defaults an
+//! isolated failure peaks at α = 0.1 < 0.15 and never escalates, while
+//! two failures in one iteration (≈ 0.2) trip the tier; de-escalation
+//! waits for the estimate to decay below a much lower floor so the
+//! policy does not flap between mechanisms at band edges.
+//!
+//! Switches happen **only** between iterations (in `after_iteration`),
+//! never inside the failure-handling loop — escalating mid-failure would
+//! seed the tier from a stage that just died. State crosses the swap via
+//! the [`RecoveryStrategy::snapshot_state`] / `adopt_state` lifecycle;
+//! escalation seeds a fresh consistent cut so the tier is armed from the
+//! first post-switch iteration, and the cut's cost is surfaced as an
+//! [`EventKind::PolicySwitch`] maintenance event.
+
+use crate::config::{AdaptiveThresholds, ReinitKind, TrainConfig};
+use crate::coordinator::PipelineEngine;
+use crate::metrics::EventKind;
+use crate::netsim::Network;
+use crate::recovery::{
+    CheckFreeRecovery, MaintenanceCost, RecoveryOutcome, RecoveryStrategy, StrategyState,
+    TierCheckRecovery,
+};
+use crate::Result;
+
+/// EWMA update weight: the failure-rate estimate is `rate ← (1-α)·rate`
+/// each iteration and `rate ← rate + α` per observed failure. Shared
+/// with the simulator so the bench's policy model and the live policy
+/// agree by construction.
+pub const ADAPTIVE_EWMA_ALPHA: f64 = 0.1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    /// Calm: CheckFree, zero steady-state overhead, inexact recovery.
+    Low,
+    /// Churn: the neighbour tier, periodic cut, exact recovery.
+    High,
+}
+
+pub struct AdaptivePolicy {
+    low: CheckFreeRecovery,
+    high: TierCheckRecovery,
+    active: Tier,
+    /// EWMA failure-rate estimate (failures per iteration).
+    rate: f64,
+    thresholds: AdaptiveThresholds,
+    /// Engine iteration of every executed switch, in order (observable
+    /// for determinism tests and the bench's policy section).
+    switch_iterations: Vec<u64>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(
+        reinit: ReinitKind,
+        lr_boost: f32,
+        seed: u64,
+        tier_every: u64,
+        thresholds: AdaptiveThresholds,
+    ) -> Self {
+        Self {
+            low: CheckFreeRecovery::new(reinit, lr_boost, seed),
+            high: TierCheckRecovery::new(tier_every),
+            active: Tier::Low,
+            rate: 0.0,
+            thresholds,
+            switch_iterations: Vec::new(),
+        }
+    }
+
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        Self::new(
+            cfg.reinit,
+            cfg.recovery_lr_boost,
+            cfg.seed,
+            cfg.tier_backup_every,
+            cfg.adaptive_thresholds,
+        )
+    }
+
+    /// Name of the mechanism currently answering failures.
+    pub fn active_name(&self) -> &'static str {
+        match self.active {
+            Tier::Low => self.low.name(),
+            Tier::High => self.high.name(),
+        }
+    }
+
+    pub fn observed_rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn switch_iterations(&self) -> &[u64] {
+        &self.switch_iterations
+    }
+
+    fn active_mut(&mut self) -> &mut dyn RecoveryStrategy {
+        match self.active {
+            Tier::Low => &mut self.low,
+            Tier::High => &mut self.high,
+        }
+    }
+
+    fn switch_to(
+        &mut self,
+        desired: Tier,
+        engine: &mut PipelineEngine,
+        net: &Network,
+    ) -> Result<MaintenanceCost> {
+        self.switch_iterations.push(engine.iteration);
+        let cost = match desired {
+            Tier::High => {
+                // Escalate: arm the tier now. The seeding cut is the
+                // switch's price — a synchronous neighbour push, billed
+                // like any other tier backup and stalled like one.
+                let state = self.low.snapshot_state();
+                let stall_s = TierCheckRecovery::backup_stall_seconds(engine, net)?;
+                self.high.adopt_state(engine, net, state)?;
+                let bytes = engine.stages.iter().map(|s| s.bytes()).sum();
+                MaintenanceCost { kind: EventKind::PolicySwitch, stall_s, bytes }
+            }
+            Tier::Low => {
+                // De-escalate: drop the tier so calm spans are genuinely
+                // zero-overhead again. Free — nothing moves.
+                let state = self.high.snapshot_state();
+                self.low.adopt_state(engine, net, state)?;
+                MaintenanceCost { kind: EventKind::PolicySwitch, stall_s: 0.0, bytes: 0 }
+            }
+        };
+        self.active = desired;
+        Ok(cost)
+    }
+}
+
+impl RecoveryStrategy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn on_start(&mut self, engine: &mut PipelineEngine, net: &Network) -> Result<()> {
+        self.active_mut().on_start(engine, net)
+    }
+
+    fn after_iteration(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+    ) -> Result<Option<MaintenanceCost>> {
+        self.rate *= 1.0 - ADAPTIVE_EWMA_ALPHA;
+        let desired = if self.rate >= self.thresholds.escalate {
+            Tier::High
+        } else if self.rate <= self.thresholds.deescalate {
+            Tier::Low
+        } else {
+            self.active // inside the hysteresis band: hold
+        };
+        if desired != self.active {
+            return self.switch_to(desired, engine, net).map(Some);
+        }
+        self.active_mut().after_iteration(engine, net)
+    }
+
+    fn on_failure(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome> {
+        // Impulse the estimator, then let the active mechanism recover.
+        // The switch decision is deliberately deferred to the next
+        // after_iteration: mechanisms only change between iterations.
+        self.rate += ADAPTIVE_EWMA_ALPHA;
+        self.active_mut().on_failure(engine, net, stage)
+    }
+
+    fn iteration_time_factor(&self) -> f64 {
+        match self.active {
+            Tier::Low => self.low.iteration_time_factor(),
+            Tier::High => self.high.iteration_time_factor(),
+        }
+    }
+
+    fn can_recover(&self, stage: usize, body_stages: usize) -> bool {
+        match self.active {
+            Tier::Low => self.low.can_recover(stage, body_stages),
+            Tier::High => self.high.can_recover(stage, body_stages),
+        }
+    }
+
+    fn snapshot_state(&mut self) -> StrategyState {
+        self.active_mut().snapshot_state()
+    }
+
+    fn adopt_state(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        state: StrategyState,
+    ) -> Result<()> {
+        self.active_mut().adopt_state(engine, net, state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Strategy, TrainConfig};
+
+    fn engine() -> PipelineEngine {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            strategy: Strategy::Adaptive,
+            microbatches_per_iter: 2,
+            tier_backup_every: 2,
+            seed: 11,
+            ..TrainConfig::default()
+        };
+        PipelineEngine::from_config(&cfg).unwrap()
+    }
+
+    fn policy() -> AdaptivePolicy {
+        AdaptivePolicy::new(
+            ReinitKind::WeightedAverage,
+            1.1,
+            11,
+            2,
+            AdaptiveThresholds::default(),
+        )
+    }
+
+    /// One trainer-shaped iteration: train, bookkeeping, then failures.
+    fn step(
+        p: &mut AdaptivePolicy,
+        e: &mut PipelineEngine,
+        net: &Network,
+        failures: &[usize],
+    ) -> Option<MaintenanceCost> {
+        e.train_iteration().unwrap();
+        let cost = p.after_iteration(e, net).unwrap();
+        for &stage in failures {
+            p.on_failure(e, net, stage).unwrap();
+        }
+        cost
+    }
+
+    #[test]
+    fn isolated_failures_never_escalate() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut p = policy();
+        p.on_start(&mut e, &net).unwrap();
+        step(&mut p, &mut e, &net, &[1]);
+        for _ in 0..20 {
+            step(&mut p, &mut e, &net, &[]);
+        }
+        assert_eq!(p.active_name(), "checkfree");
+        assert!(p.switch_iterations().is_empty());
+        // an isolated failure peaks at α = 0.1, under the 0.15 threshold
+        assert!(p.observed_rate() < AdaptiveThresholds::default().escalate);
+    }
+
+    #[test]
+    fn burst_escalates_and_arms_the_tier() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut p = policy();
+        p.on_start(&mut e, &net).unwrap();
+        step(&mut p, &mut e, &net, &[1, 2]); // two failures, one iteration
+        let before = e.transfer_ledger().snapshot();
+        let cost = step(&mut p, &mut e, &net, &[]).expect("switch emits a cost");
+        assert_eq!(cost.kind, EventKind::PolicySwitch);
+        assert!(cost.stall_s > 0.0, "escalation pays the seeding cut");
+        assert_eq!(cost.bytes, e.stages.iter().map(|s| s.bytes()).sum::<u64>());
+        assert_eq!(p.active_name(), "tiercheck");
+        assert_eq!(p.switch_iterations(), &[2]);
+        let delta = e.transfer_ledger().snapshot().since(&before);
+        assert_eq!(delta.tier_backups as usize, e.stages.len(), "tier seeded on switch");
+        // next failure is answered exactly by the tier
+        let out = p.on_failure(&mut e, &net, 0).unwrap();
+        assert!(out.exact);
+    }
+
+    #[test]
+    fn hysteresis_holds_then_deescalates_and_drops_the_tier() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut p = policy();
+        p.on_start(&mut e, &net).unwrap();
+        step(&mut p, &mut e, &net, &[1, 2]);
+        step(&mut p, &mut e, &net, &[]); // escalates here
+        assert_eq!(p.active_name(), "tiercheck");
+        let mut held_inside_band = 0;
+        for _ in 0..40 {
+            step(&mut p, &mut e, &net, &[]);
+            let t = AdaptiveThresholds::default();
+            if p.observed_rate() > t.deescalate && p.observed_rate() < t.escalate {
+                assert_eq!(p.active_name(), "tiercheck", "band must hold the tier");
+                held_inside_band += 1;
+            }
+        }
+        assert!(held_inside_band > 5, "the hysteresis band was exercised");
+        assert_eq!(p.active_name(), "checkfree", "calm decay de-escalates");
+        assert_eq!(p.switch_iterations().len(), 2, "exactly one up + one down switch");
+        // the tier was dropped on the way down: a failure now is inexact
+        let out = p.on_failure(&mut e, &net, 1).unwrap();
+        assert!(!out.exact);
+    }
+
+    #[test]
+    fn switch_decisions_are_deterministic() {
+        let run = || {
+            let mut e = engine();
+            let net = Network::round_robin(e.stages.len());
+            let mut p = policy();
+            p.on_start(&mut e, &net).unwrap();
+            let tape: &[&[usize]] =
+                &[&[], &[1, 2], &[], &[2], &[], &[], &[2, 1], &[], &[], &[]];
+            for failures in tape {
+                step(&mut p, &mut e, &net, failures);
+            }
+            for _ in 0..30 {
+                step(&mut p, &mut e, &net, &[]);
+            }
+            (p.switch_iterations().to_vec(), p.observed_rate().to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn factor_and_coverage_follow_the_active_tier() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut p = policy();
+        p.on_start(&mut e, &net).unwrap();
+        assert_eq!(p.iteration_time_factor(), 1.0);
+        assert!(!p.can_recover(0, e.body_stages()), "checkfree leg cannot lose the embed");
+        step(&mut p, &mut e, &net, &[1, 2]);
+        step(&mut p, &mut e, &net, &[]);
+        assert_eq!(p.active_name(), "tiercheck");
+        assert!(p.can_recover(0, e.body_stages()), "the tier covers every stage");
+        assert_eq!(p.iteration_time_factor(), 1.0);
+    }
+}

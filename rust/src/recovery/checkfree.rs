@@ -25,7 +25,7 @@ use crate::coordinator::{schedule, PipelineEngine};
 use crate::metrics::EventKind;
 use crate::model::{copy_tensors_into, init_params, two_stages_mut, StageKind};
 use crate::netsim::Network;
-use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy};
+use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy, StrategyState};
 use crate::rng::Rng;
 use crate::runtime::HostTensor;
 use crate::util::par;
@@ -309,6 +309,24 @@ impl RecoveryStrategy for CheckFreePlusRecovery {
     fn can_recover(&self, _stage: usize, body_stages: usize) -> bool {
         body_stages >= 2
     }
+
+    fn snapshot_state(&mut self) -> StrategyState {
+        StrategyState { model_snapshot: None, embed_replica: self.embed_replica.take() }
+    }
+
+    fn adopt_state(
+        &mut self,
+        _engine: &mut PipelineEngine,
+        _net: &Network,
+        state: StrategyState,
+    ) -> Result<()> {
+        // A donated replica keeps stage-0 coverage alive across the swap;
+        // the next after_iteration refreshes it anyway.
+        if state.embed_replica.is_some() {
+            self.embed_replica = state.embed_replica;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -587,6 +605,27 @@ mod tests {
         for (hs, ds) in h.stages.iter().zip(&d.stages) {
             assert_eq!(hs.params, ds.params, "stage {} diverged after recovery", hs.index);
         }
+    }
+
+    #[test]
+    fn plus_lifecycle_keeps_embed_coverage_across_a_swap() {
+        // The replica crosses snapshot_state/adopt_state, so a policy
+        // swapping CheckFree+ back in can survive a stage-0 failure
+        // before its first after_iteration refresh.
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        e.train_iteration().unwrap();
+        s.after_iteration(&mut e, &net).unwrap();
+        let want = e.stages[0].params.clone();
+        let state = s.snapshot_state();
+        assert!(state.embed_replica.is_some());
+        let mut t = CheckFreePlusRecovery::new(ReinitKind::WeightedAverage, 1.1, 0);
+        t.adopt_state(&mut e, &net, state).unwrap();
+        e.stages[0].wipe();
+        let out = t.on_failure(&mut e, &net, 0).unwrap();
+        assert!(out.exact);
+        assert_eq!(e.stages[0].params, want);
     }
 
     #[test]

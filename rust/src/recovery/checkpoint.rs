@@ -16,7 +16,7 @@ use crate::coordinator::PipelineEngine;
 use crate::metrics::EventKind;
 use crate::model::StageSnapshot;
 use crate::netsim::Network;
-use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy};
+use crate::recovery::{MaintenanceCost, RecoveryOutcome, RecoveryStrategy, StrategyState};
 use crate::{anyhow, Result};
 
 pub struct CheckpointRecovery {
@@ -109,6 +109,30 @@ impl RecoveryStrategy for CheckpointRecovery {
 
     fn can_recover(&self, _stage: usize, _body_stages: usize) -> bool {
         true
+    }
+
+    fn snapshot_state(&mut self) -> StrategyState {
+        StrategyState { model_snapshot: self.snapshot.take(), embed_replica: None }
+    }
+
+    fn adopt_state(
+        &mut self,
+        engine: &mut PipelineEngine,
+        _net: &Network,
+        state: StrategyState,
+    ) -> Result<()> {
+        match state.model_snapshot {
+            // An inherited cut (e.g. a tier backup) is as good as our
+            // own: keep it until the next cadence persists a fresh one.
+            Some(snap) => self.snapshot = Some(snap),
+            None => {
+                engine.materialize_host_state()?;
+                let snaps: Vec<StageSnapshot> =
+                    engine.stages.iter().map(|s| s.snapshot()).collect();
+                self.snapshot = Some((engine.iteration, snaps));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -204,6 +228,34 @@ mod tests {
         // a paper-scale model at every-1 cadence WOULD stall:
         let upload = net.storage_transfer_seconds(2_000_000_000);
         assert!(upload.max(0.0) > 0.0);
+    }
+
+    #[test]
+    fn lifecycle_exports_and_adopts_the_snapshot() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        let mut s = CheckpointRecovery::new(1);
+        e.train_iteration().unwrap();
+        s.after_iteration(&mut e, &net).unwrap();
+        let state = s.snapshot_state();
+        assert!(s.snapshot_iteration().is_none(), "export drains the snapshot");
+        assert_eq!(state.model_snapshot.as_ref().map(|(i, _)| *i), Some(1));
+        let mut t = CheckpointRecovery::new(50);
+        t.adopt_state(&mut e, &net, state).unwrap();
+        assert_eq!(t.snapshot_iteration(), Some(1), "adopted cut keeps its iteration");
+        e.train_iteration().unwrap();
+        let out = t.on_failure(&mut e, &net, 1).unwrap();
+        assert_eq!(out.rollback_iterations, 1);
+    }
+
+    #[test]
+    fn adopting_nothing_reseeds_from_live_state() {
+        let mut e = engine();
+        let net = Network::round_robin(e.stages.len());
+        e.train_iteration().unwrap();
+        let mut s = CheckpointRecovery::new(50);
+        s.adopt_state(&mut e, &net, StrategyState::default()).unwrap();
+        assert_eq!(s.snapshot_iteration(), Some(1));
     }
 
     #[test]

@@ -11,20 +11,36 @@
 //! | [`CheckFreePlusRecovery`] | §4.3 | + out-of-order swaps, partner copy for S1/SL, (de)embedding replication |
 //! | [`CheckpointRecovery`] | Wang et al. 2023 | periodic full snapshot to remote storage, rollback |
 //! | [`RedundantRecovery`] | Thorpe et al. 2023 (Bamboo) | shadow forward computation on the previous stage |
+//! | [`TierCheckRecovery`] | §2 + GEMINI-style tiering | peer host-RAM backup, exact restore without storage |
+//! | [`AdaptivePolicy`] | — | EWMA churn estimator hot-swapping checkfree ↔ tiercheck |
+//!
+//! Strategies are built through [`registry`] (one constructor per
+//! [`Strategy`] variant) and driven by the trainer through a
+//! [`PolicyEngine`], which owns the active strategy and is the single
+//! seam where a policy like [`AdaptivePolicy`] can swap strategies
+//! mid-run. Live swaps move transferable state across via the
+//! [`RecoveryStrategy::snapshot_state`] / [`RecoveryStrategy::adopt_state`]
+//! lifecycle pair.
 
+pub mod adaptive;
 pub mod checkfree;
 pub mod checkpoint;
 pub mod costs;
 pub mod redundant;
+pub mod tiercheck;
 
+pub use adaptive::{AdaptivePolicy, ADAPTIVE_EWMA_ALPHA};
 pub use checkfree::{CheckFreePlusRecovery, CheckFreeRecovery};
 pub use checkpoint::CheckpointRecovery;
 pub use redundant::RedundantRecovery;
+pub use tiercheck::TierCheckRecovery;
 
 use crate::config::{ReinitKind, Strategy, TrainConfig};
 use crate::coordinator::PipelineEngine;
 use crate::metrics::EventKind;
+use crate::model::StageSnapshot;
 use crate::netsim::Network;
+use crate::runtime::HostTensor;
 use crate::{anyhow, Result};
 
 /// What a recovery did, for metrics + simulated wall-clock.
@@ -48,6 +64,19 @@ pub struct MaintenanceCost {
     /// Simulated seconds of pipeline stall (0 when fully overlapped).
     pub stall_s: f64,
     pub bytes: u64,
+}
+
+/// Transferable state handed from a deactivated strategy to its
+/// successor when a policy swaps strategies mid-run.
+///
+/// Every field is optional: a strategy exports what it has and adopts
+/// what it can use. A full-model cut (checkpoint / tier backup) carries
+/// the iteration it was taken at so rollback semantics survive the
+/// handoff; the embed replica is CheckFree+'s neighbour-held copy.
+#[derive(Default)]
+pub struct StrategyState {
+    pub model_snapshot: Option<(u64, Vec<StageSnapshot>)>,
+    pub embed_replica: Option<Vec<HostTensor>>,
 }
 
 pub trait RecoveryStrategy {
@@ -82,23 +111,122 @@ pub trait RecoveryStrategy {
 
     /// Can this strategy survive a failure of `stage`?
     fn can_recover(&self, stage: usize, body_stages: usize) -> bool;
+
+    /// Export transferable state because this strategy is being
+    /// deactivated. Default: nothing to hand over.
+    fn snapshot_state(&mut self) -> StrategyState {
+        StrategyState::default()
+    }
+
+    /// Import state from the previously active strategy on activation.
+    /// Strategies that can use it do (and bill any seeding traffic they
+    /// cause); everyone else ignores it. Default: ignore.
+    fn adopt_state(
+        &mut self,
+        _engine: &mut PipelineEngine,
+        _net: &Network,
+        _state: StrategyState,
+    ) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// Build the strategy an experiment asked for.
-pub fn make_strategy(cfg: &TrainConfig) -> Result<Box<dyn RecoveryStrategy>> {
-    Ok(match cfg.strategy {
-        Strategy::None => Box::new(NoRecovery),
-        Strategy::CheckFree => {
+/// A registry entry: builds one strategy from the run config.
+pub type StrategyCtor = fn(&TrainConfig) -> Box<dyn RecoveryStrategy>;
+
+/// Strategy → constructor, one row per [`Strategy`] variant. This is
+/// the single place a new strategy is wired in; [`make_strategy`] and
+/// [`PolicyEngine::from_config`] both resolve through it.
+pub fn registry() -> [(Strategy, StrategyCtor); 7] {
+    [
+        (Strategy::None, |_| Box::new(NoRecovery)),
+        (Strategy::CheckFree, |cfg| {
             Box::new(CheckFreeRecovery::new(cfg.reinit, cfg.recovery_lr_boost, cfg.seed))
-        }
-        Strategy::CheckFreePlus => Box::new(CheckFreePlusRecovery::new(
-            ReinitKind::WeightedAverage,
-            cfg.recovery_lr_boost,
-            cfg.seed,
-        )),
-        Strategy::Checkpoint => Box::new(CheckpointRecovery::new(cfg.checkpoint_every)),
-        Strategy::Redundant => Box::new(RedundantRecovery::new()),
-    })
+        }),
+        (Strategy::CheckFreePlus, |cfg| {
+            Box::new(CheckFreePlusRecovery::new(
+                ReinitKind::WeightedAverage,
+                cfg.recovery_lr_boost,
+                cfg.seed,
+            ))
+        }),
+        (Strategy::Checkpoint, |cfg| Box::new(CheckpointRecovery::new(cfg.checkpoint_every))),
+        (Strategy::Redundant, |_| Box::new(RedundantRecovery::new())),
+        (Strategy::TierCheck, |cfg| Box::new(TierCheckRecovery::new(cfg.tier_backup_every))),
+        (Strategy::Adaptive, |cfg| Box::new(AdaptivePolicy::from_config(cfg))),
+    ]
+}
+
+/// Build the strategy an experiment asked for (registry-backed).
+pub fn make_strategy(cfg: &TrainConfig) -> Result<Box<dyn RecoveryStrategy>> {
+    registry()
+        .into_iter()
+        .find(|(s, _)| *s == cfg.strategy)
+        .map(|(_, ctor)| ctor(cfg))
+        .ok_or_else(|| anyhow!("strategy {:?} missing from recovery::registry()", cfg.strategy))
+}
+
+/// The trainer's view of recovery: owns the active strategy and
+/// forwards the [`RecoveryStrategy`] surface to it.
+///
+/// The indirection is the point of the redesign — the trainer never
+/// holds a strategy directly, so a policy strategy (adaptive) can swap
+/// the mechanism underneath it between iterations without the trainer
+/// noticing anything beyond the [`EventKind::PolicySwitch`] maintenance
+/// events it already records.
+pub struct PolicyEngine {
+    strategy: Box<dyn RecoveryStrategy>,
+}
+
+impl PolicyEngine {
+    pub fn new(strategy: Box<dyn RecoveryStrategy>) -> Self {
+        Self { strategy }
+    }
+
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        Ok(Self::new(make_strategy(cfg)?))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    pub fn strategy(&self) -> &dyn RecoveryStrategy {
+        self.strategy.as_ref()
+    }
+
+    pub fn strategy_mut(&mut self) -> &mut dyn RecoveryStrategy {
+        self.strategy.as_mut()
+    }
+
+    pub fn on_start(&mut self, engine: &mut PipelineEngine, net: &Network) -> Result<()> {
+        self.strategy.on_start(engine, net)
+    }
+
+    pub fn after_iteration(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+    ) -> Result<Option<MaintenanceCost>> {
+        self.strategy.after_iteration(engine, net)
+    }
+
+    pub fn on_failure(
+        &mut self,
+        engine: &mut PipelineEngine,
+        net: &Network,
+        stage: usize,
+    ) -> Result<RecoveryOutcome> {
+        self.strategy.on_failure(engine, net, stage)
+    }
+
+    pub fn iteration_time_factor(&self) -> f64 {
+        self.strategy.iteration_time_factor()
+    }
+
+    pub fn can_recover(&self, stage: usize, body_stages: usize) -> bool {
+        self.strategy.can_recover(stage, body_stages)
+    }
 }
 
 /// The no-failure baseline: any failure is fatal.
@@ -142,6 +270,35 @@ mod tests {
             let b = make_strategy(&cfg).unwrap();
             assert_eq!(b.name(), s.label());
         }
+    }
+
+    #[test]
+    fn registry_covers_every_strategy_exactly_once() {
+        let reg = registry();
+        for s in Strategy::ALL {
+            assert_eq!(reg.iter().filter(|(r, _)| *r == s).count(), 1, "{s:?}");
+        }
+        assert_eq!(reg.len(), Strategy::ALL.len());
+    }
+
+    #[test]
+    fn policy_engine_wraps_the_configured_strategy() {
+        for s in Strategy::ALL {
+            let cfg = TrainConfig { strategy: s, ..TrainConfig::default() };
+            let p = PolicyEngine::from_config(&cfg).unwrap();
+            assert_eq!(p.name(), s.label());
+            assert_eq!(p.iteration_time_factor(), p.strategy().iteration_time_factor());
+        }
+    }
+
+    #[test]
+    fn default_lifecycle_is_empty_and_ignored() {
+        // Strategies without transferable state export an empty
+        // StrategyState and accept any import as a no-op.
+        let mut s = NoRecovery;
+        let st = s.snapshot_state();
+        assert!(st.model_snapshot.is_none());
+        assert!(st.embed_replica.is_none());
     }
 
     #[test]

@@ -81,7 +81,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::config::{LinkPath, Overlap};
 use crate::manifest::IoSpec;
-use crate::metrics::TransferLedger;
+use crate::metrics::{Transfer, TransferLedger};
 use crate::runtime::HostTensor;
 use crate::{anyhow, Context, Result};
 
@@ -169,7 +169,7 @@ impl DeviceBuffer {
             .buf
             .to_literal_sync()
             .with_context(|| format!("syncing device buffer {:?} to host", self.spec.shape))?;
-        plane.ledger.record_sync(stage, self.bytes());
+        plane.ledger.record(stage, Transfer::Sync { bytes: self.bytes() });
         HostTensor::from_literal(&lit, &self.spec)
     }
 
@@ -181,7 +181,7 @@ impl DeviceBuffer {
             .buf
             .to_literal_sync()
             .with_context(|| format!("syncing device buffer {:?} to host", self.spec.shape))?;
-        plane.ledger.record_sync(stage, self.bytes());
+        plane.ledger.record(stage, Transfer::Sync { bytes: self.bytes() });
         out.copy_from_literal(&lit, &self.spec)
     }
 
@@ -220,8 +220,8 @@ impl DeviceBuffer {
         }
         let start = std::time::Instant::now();
         let out = self.copy_now(dst, stage)?;
-        dst.ledger.record_link_blocking(stage);
-        dst.ledger.record_link_wait_ns(stage, start.elapsed().as_nanos() as u64);
+        dst.ledger.record(stage, Transfer::LinkBlocking);
+        dst.ledger.record(stage, Transfer::LinkWaitNs { ns: start.elapsed().as_nanos() as u64 });
         Ok(out)
     }
 
@@ -239,7 +239,7 @@ impl DeviceBuffer {
             LinkPath::Direct => {
                 let buf = self.copy_direct(dst)?;
                 DIRECT_LINKS.store(DIRECT_OK, Ordering::Relaxed);
-                dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
                 Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
             }
             LinkPath::Auto => match DIRECT_LINKS.load(Ordering::Relaxed) {
@@ -250,7 +250,7 @@ impl DeviceBuffer {
                     // missing feature — surface it instead of silently
                     // degrading a mid-run measurement to staged hops.
                     let buf = self.copy_direct(dst)?;
-                    dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                    dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
                     Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
                 }
                 _ => match self.copy_direct(dst) {
@@ -263,7 +263,7 @@ impl DeviceBuffer {
                             Ordering::Relaxed,
                             Ordering::Relaxed,
                         );
-                        dst.ledger.record_link_copy_direct(stage, self.spec.bytes());
+                        dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
                         Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
                     }
                     Err(e) => {
@@ -329,7 +329,7 @@ impl DeviceBuffer {
                 self.spec.shape, self.spec.dtype, dst.idx
             )
         })?;
-        dst.ledger.record_link_copy_staged(stage, self.spec.bytes());
+        dst.ledger.record(stage, Transfer::LinkStaged { bytes: self.spec.bytes() });
         Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
     }
 }
@@ -395,7 +395,7 @@ impl<'a> DevicePlane<'a> {
                 spec.shape, spec.dtype, self.idx
             )
         })?;
-        self.ledger.record_upload(stage, spec.bytes());
+        self.ledger.record(stage, Transfer::Upload { bytes: spec.bytes() });
         Ok(DeviceBuffer { buf, spec: spec.clone(), plane: self.idx })
     }
 
@@ -560,7 +560,7 @@ impl<'p> LinkSlot<'p> {
             return Ok(InFlightLink::Deferred(d));
         }
         let buf = d.copy_now(self.dst, self.stage)?;
-        self.dst.ledger.record_link_overlapped(self.stage);
+        self.dst.ledger.record(self.stage, Transfer::LinkOverlapped);
         Ok(InFlightLink::Issued(buf))
     }
 }

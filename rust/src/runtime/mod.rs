@@ -79,7 +79,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{LinkPath, PlaneMode};
 use crate::manifest::{Artifact, IoSpec, Manifest};
-use crate::metrics::TransferLedger;
+use crate::metrics::{Transfer, TransferLedger};
 use crate::{anyhow, Context, Result};
 
 pub use buffer::{Activation, DeviceBuffer, DevicePlane, InFlightLink, LinkSlot, PlaneSet};
@@ -332,7 +332,7 @@ impl Executable {
                     (0..outs.len()).find(|&j| !claimed[j] && outs[j].spec() == buf.spec())
                 {
                     claimed[j] = true;
-                    plane.ledger.record_donation(stage);
+                    plane.ledger.record(stage, Transfer::Donation);
                 }
                 drop(buf);
             }
@@ -348,10 +348,10 @@ impl Executable {
     /// `device_residency` comparison is apples-to-apples.
     pub fn meter_host_call(&self, plane: &DevicePlane, stage: usize) {
         for spec in &self.inputs {
-            plane.ledger.record_upload(stage, spec.bytes());
+            plane.ledger.record(stage, Transfer::Upload { bytes: spec.bytes() });
         }
         for spec in &self.outputs {
-            plane.ledger.record_sync(stage, spec.bytes());
+            plane.ledger.record(stage, Transfer::Sync { bytes: spec.bytes() });
         }
     }
 
@@ -454,14 +454,14 @@ impl Executable {
             let lit = raw[0]
                 .to_literal_sync()
                 .with_context(|| format!("probing {} output layout", self.name))?;
-            plane.ledger.record_sync(stage, self.outputs[0].bytes());
+            plane.ledger.record(stage, Transfer::Sync { bytes: self.outputs[0].bytes() });
             if self.single_output_is_leaf(&lit) {
                 let b = raw.pop().expect("len checked");
                 return Ok(vec![DeviceBuffer::from_raw(b, self.outputs[0].clone(), self.plane)]);
             }
             // Legacy 1-tuple: fall through to the forced-roundtrip path
             // below with the literal we already fetched.
-            plane.ledger.record_forced_tuple_roundtrip(stage);
+            plane.ledger.record(stage, Transfer::ForcedTupleRoundtrip);
             return self.upload_decomposed_tuple(plane, stage, lit);
         }
         if raw.len() == 1 {
@@ -474,8 +474,8 @@ impl Executable {
             })?;
             plane
                 .ledger
-                .record_sync(stage, self.outputs.iter().map(|s| s.bytes()).sum());
-            plane.ledger.record_forced_tuple_roundtrip(stage);
+                .record(stage, Transfer::Sync { bytes: self.outputs.iter().map(|s| s.bytes()).sum() });
+            plane.ledger.record(stage, Transfer::ForcedTupleRoundtrip);
             return self.upload_decomposed_tuple(plane, stage, tuple);
         }
         Err(anyhow!(

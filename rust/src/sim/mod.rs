@@ -23,9 +23,10 @@
 //! the paper's measured 91.3 s; every other number is then a prediction
 //! of the mechanism model, not a fit (see EXPERIMENTS.md).
 
-use crate::config::{FailureSpec, Strategy};
-use crate::failures::{ChurnProcessKind, FailureInjector};
+use crate::config::{AdaptiveThresholds, FailureSpec, Strategy};
+use crate::failures::{ChurnProcessKind, ChurnTrace, FailureInjector};
 use crate::netsim::Network;
+use crate::recovery::ADAPTIVE_EWMA_ALPHA;
 use crate::rng::Rng;
 
 /// Per-device overhead multiplier when running its own stage plus a
@@ -53,6 +54,8 @@ pub struct SimParams {
     pub embed_bytes: u64,
     pub strategy: Strategy,
     pub checkpoint_every: u64,
+    /// Iterations between neighbour-tier backups (tiercheck / adaptive).
+    pub tier_backup_every: u64,
     pub failure: FailureSpec,
     pub seed: u64,
 }
@@ -71,6 +74,7 @@ impl SimParams {
             embed_bytes: 131_000_000, // 32000 × 1024 × 2 × 4 B × ~0.5
             strategy,
             checkpoint_every: 100,
+            tier_backup_every: 5,
             failure: FailureSpec::PerHour { rate: hourly_rate, iteration_seconds: 91.3 },
             seed: 7,
         }
@@ -91,8 +95,28 @@ impl SimParams {
             embed_bytes: 131_000_000,
             strategy,
             checkpoint_every: 100,
+            tier_backup_every: 5,
             failure: FailureSpec::PerIteration { rate },
             seed,
+        }
+    }
+
+    /// The committed policy-gate setting: the `examples/traces/
+    /// burst_storm.jsonl` tape's 16-stage pipeline at paper-medium stage
+    /// sizes. [`simulate_tape`] replays the tape against this topology.
+    pub fn policy_gate(strategy: Strategy) -> Self {
+        Self {
+            stages: 16,
+            microbatches: 8,
+            stage_fwd_s: 3.0, // unused by the tape model (fixed 91.3 s iters)
+            activation_bytes: 8_400_000,
+            stage_bytes: 333_000_000,
+            embed_bytes: 131_000_000,
+            strategy,
+            checkpoint_every: 100,
+            tier_backup_every: 5,
+            failure: FailureSpec::PerIteration { rate: 0.0 },
+            seed: 0,
         }
     }
 }
@@ -218,6 +242,7 @@ pub fn calibrate_stage_fwd(
             embed_bytes: 0,
             strategy: Strategy::CheckFree,
             checkpoint_every: 100,
+            tier_backup_every: 5,
             failure: FailureSpec::PerIteration { rate: 0.0 },
             seed: 0,
         };
@@ -228,6 +253,19 @@ pub fn calibrate_stage_fwd(
         }
     }
     0.5 * (lo + hi)
+}
+
+/// Stall of one neighbour-tier cut (mirrors `TierCheckRecovery`): every
+/// stage pushes its parameters to the right neighbour's host RAM
+/// concurrently, so the slowest adjacent link gates the cut.
+pub fn tier_backup_stall(p: &SimParams, net: &Network) -> f64 {
+    let s = p.stages;
+    (0..s)
+        .map(|i| {
+            let bytes = if i == 0 { p.embed_bytes } else { p.stage_bytes };
+            net.transfer_seconds(bytes, i, (i + 1) % s).unwrap_or(5.0)
+        })
+        .fold(0.0, f64::max)
 }
 
 /// Result of simulating a full training run to `target_iterations` of
@@ -261,6 +299,12 @@ pub fn simulate_training(p: &SimParams, converged_iterations: u64) -> SimRun {
     let mut rollbacks = 0u64;
     let mut recovery_s = 0.0f64;
     let mut ckpt_stall_s = 0.0f64;
+    // Adaptive-policy mirror (thresholds at the config defaults): EWMA
+    // failure rate, current mode, same decay/impulse as `AdaptivePolicy`.
+    let thresholds = AdaptiveThresholds::default();
+    let tier_stall = tier_backup_stall(p, &net);
+    let mut ewma = 0.0f64;
+    let mut tier_active = false;
 
     while progress < converged_iterations {
         t += iter_s;
@@ -276,6 +320,36 @@ pub fn simulate_training(p: &SimParams, converged_iterations: u64) -> SimRun {
             t += stall;
             ckpt_stall_s += stall;
             since_ckpt = 0;
+        }
+
+        if p.strategy == Strategy::TierCheck && since_ckpt >= p.tier_backup_every {
+            t += tier_stall;
+            ckpt_stall_s += tier_stall;
+            since_ckpt = 0;
+        }
+
+        if p.strategy == Strategy::Adaptive {
+            ewma *= 1.0 - ADAPTIVE_EWMA_ALPHA;
+            let want_tier = if ewma >= thresholds.escalate {
+                true
+            } else if ewma <= thresholds.deescalate {
+                false
+            } else {
+                tier_active // hysteresis band: hold
+            };
+            if want_tier != tier_active {
+                tier_active = want_tier;
+                if tier_active {
+                    // escalation seeds the neighbour tier immediately
+                    t += tier_stall;
+                    ckpt_stall_s += tier_stall;
+                    since_ckpt = 0;
+                }
+            } else if tier_active && since_ckpt >= p.tier_backup_every {
+                t += tier_stall;
+                ckpt_stall_s += tier_stall;
+                since_ckpt = 0;
+            }
         }
 
         // stage failures this iteration (any of the failable stages)
@@ -307,6 +381,36 @@ pub fn simulate_training(p: &SimParams, converged_iterations: u64) -> SimRun {
                         .unwrap_or(30.0);
                     t += down;
                     recovery_s += down;
+                }
+                Strategy::TierCheck => {
+                    // peers roll back to the last tier cut; the new node
+                    // pulls its stage straight from the right neighbour's
+                    // host RAM — no storage round-trip.
+                    rollbacks += since_ckpt;
+                    since_ckpt = 0;
+                    let down = net
+                        .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                        .unwrap_or(5.0);
+                    t += down;
+                    recovery_s += down;
+                }
+                Strategy::Adaptive => {
+                    ewma += ADAPTIVE_EWMA_ALPHA;
+                    if tier_active {
+                        rollbacks += since_ckpt;
+                        since_ckpt = 0;
+                        let down = net
+                            .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                            .unwrap_or(5.0);
+                        t += down;
+                        recovery_s += down;
+                    } else {
+                        let down = net
+                            .checkfree_recovery_seconds(p.stage_bytes, stage)
+                            .unwrap_or(30.0);
+                        t += down;
+                        recovery_s += down;
+                    }
                 }
                 Strategy::None => {
                     // training is dead; report infinite time
@@ -380,13 +484,19 @@ pub fn simulate_coverage(
     let mut injector =
         FailureInjector::with_process(churn, p.failure, p.stages, false, p.seed, allow_adjacent);
 
-    // Checkpoint accounting: the stall per checkpoint is constant, so a
-    // span of n clean iterations crosses ⌊(since+n)/every⌋ checkpoints
-    // — closed form, no per-iteration loop needed.
+    // Cadence accounting: the stall per checkpoint / tier cut is
+    // constant, so a span of n clean iterations crosses
+    // ⌊(since+n)/every⌋ cuts — closed form, no per-iteration loop needed.
     let upload = net
         .storage_transfer_seconds(p.embed_bytes + p.stage_bytes * (p.stages as u64 - 1));
     let hidden = p.checkpoint_every as f64 * iter_s;
     let ckpt_stall = (upload - hidden).max(0.0);
+    let tier_stall = tier_backup_stall(p, &net);
+    let (cadence_every, cadence_stall) = match p.strategy {
+        Strategy::Checkpoint => (p.checkpoint_every, ckpt_stall),
+        Strategy::TierCheck => (p.tier_backup_every, tier_stall),
+        _ => (0, 0.0),
+    };
 
     let mut t = 0.0f64;
     let mut progress = 0u64;
@@ -397,6 +507,12 @@ pub fn simulate_coverage(
     let mut recovery_s = 0.0f64;
     let mut ckpt_stall_s = 0.0f64;
     let mut sampled = 0u64;
+    // Adaptive mirror (see `simulate_training`): the EWMA decays every
+    // iteration, so adaptive runs step densely instead of jumping clean
+    // spans — correctness over sparsity for this one strategy.
+    let thresholds = AdaptiveThresholds::default();
+    let mut ewma = 0.0f64;
+    let mut tier_active = false;
 
     // Advance `n` clean iterations in closed form.
     let mut advance_clean = |n: u64, t: &mut f64, since: &mut u64, stall_acc: &mut f64| {
@@ -404,11 +520,11 @@ pub fn simulate_coverage(
             return;
         }
         *t += n as f64 * iter_s;
-        if p.strategy == Strategy::Checkpoint && p.checkpoint_every > 0 {
-            let crossed = (*since + n) / p.checkpoint_every;
-            *since = (*since + n) % p.checkpoint_every;
-            *t += crossed as f64 * ckpt_stall;
-            *stall_acc += crossed as f64 * ckpt_stall;
+        if cadence_every > 0 {
+            let crossed = (*since + n) / cadence_every;
+            *since = (*since + n) % cadence_every;
+            *t += crossed as f64 * cadence_stall;
+            *stall_acc += crossed as f64 * cadence_stall;
         } else {
             *since += n;
         }
@@ -417,9 +533,13 @@ pub fn simulate_coverage(
     'run: while progress < iterations {
         // Iterations are 1-based (the trainer samples at global_step ≥
         // 1); the next candidate iteration is progress+1.
-        let next = match injector.next_event_hint(progress + 1) {
-            Some(h) => h.max(progress + 1).min(iterations),
-            None => progress + 1, // dense process: step one by one
+        let next = if p.strategy == Strategy::Adaptive {
+            progress + 1 // dense: the EWMA needs every iteration
+        } else {
+            match injector.next_event_hint(progress + 1) {
+                Some(h) => h.max(progress + 1).min(iterations),
+                None => progress + 1, // dense process: step one by one
+            }
         };
         // (progress, next) is guaranteed event-free — jump it.
         advance_clean(next - progress - 1, &mut t, &mut since_ckpt, &mut ckpt_stall_s);
@@ -428,6 +548,28 @@ pub fn simulate_coverage(
         // Execute iteration `next` and consult the injector.
         advance_clean(1, &mut t, &mut since_ckpt, &mut ckpt_stall_s);
         progress = next;
+        if p.strategy == Strategy::Adaptive {
+            ewma *= 1.0 - ADAPTIVE_EWMA_ALPHA;
+            let want_tier = if ewma >= thresholds.escalate {
+                true
+            } else if ewma <= thresholds.deescalate {
+                false
+            } else {
+                tier_active
+            };
+            if want_tier != tier_active {
+                tier_active = want_tier;
+                if tier_active {
+                    t += tier_stall;
+                    ckpt_stall_s += tier_stall;
+                    since_ckpt = 0;
+                }
+            } else if tier_active && since_ckpt >= p.tier_backup_every {
+                t += tier_stall;
+                ckpt_stall_s += tier_stall;
+                since_ckpt = 0;
+            }
+        }
         sampled += 1;
         for stage in injector.sample(next) {
             failures += 1;
@@ -448,6 +590,33 @@ pub fn simulate_coverage(
                         net.checkfree_recovery_seconds(p.stage_bytes, stage).unwrap_or(30.0);
                     t += down;
                     recovery_s += down;
+                }
+                Strategy::TierCheck => {
+                    rollbacks += since_ckpt;
+                    since_ckpt = 0;
+                    let down = net
+                        .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                        .unwrap_or(5.0);
+                    t += down;
+                    recovery_s += down;
+                }
+                Strategy::Adaptive => {
+                    ewma += ADAPTIVE_EWMA_ALPHA;
+                    if tier_active {
+                        rollbacks += since_ckpt;
+                        since_ckpt = 0;
+                        let down = net
+                            .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                            .unwrap_or(5.0);
+                        t += down;
+                        recovery_s += down;
+                    } else {
+                        let down = net
+                            .checkfree_recovery_seconds(p.stage_bytes, stage)
+                            .unwrap_or(30.0);
+                        t += down;
+                        recovery_s += down;
+                    }
                 }
                 Strategy::None => {
                     t = f64::INFINITY;
@@ -470,6 +639,200 @@ pub fn simulate_coverage(
         checkpoint_stall_seconds: ckpt_stall_s,
         sim_hours: t / 3600.0,
         sampled_iterations: sampled,
+    }
+}
+
+/// Extra convergence iterations charged per *inexact* (CheckFree-style
+/// neighbour-averaged) recovery in [`simulate_tape`]'s wall-clock model.
+/// The paper's Fig 3 iteration gaps put the per-failure approximation
+/// cost between ~1 and ~2 extra iterations at medium scale; the tape
+/// comparison equalizes converged progress across strategies, so the
+/// cost must be charged in time here rather than in the iteration count.
+pub const EXTRA_ITERS_INEXACT: f64 = 1.5;
+
+/// Result of replaying a committed churn tape under one strategy:
+/// wall-clock to the same converged progress, plus the byte ledger the
+/// policy gate reads.
+#[derive(Debug, Clone)]
+pub struct TapeRun {
+    pub strategy: Strategy,
+    pub wall_clock_s: f64,
+    pub failures: u64,
+    pub rollback_iterations: u64,
+    /// Convergence iterations re-run because a recovery was inexact
+    /// (charged into `wall_clock_s` at the paper iteration time).
+    pub extra_convergence_iterations: f64,
+    /// Bytes moved through remote checkpoint storage (uploads + restores).
+    pub storage_bytes: u64,
+    /// Bytes pushed into the right-neighbour host-RAM tier.
+    pub tier_backup_bytes: u64,
+    /// Bytes a *restore* pulled through remote storage. The tiercheck
+    /// zero-storage acceptance gate asserts this is exactly 0.
+    pub restore_storage_bytes: u64,
+    /// Iterations at which the adaptive policy switched mode (empty for
+    /// static strategies).
+    pub switch_iterations: Vec<u64>,
+}
+
+/// Replay a recorded churn tape for `iterations` global steps under
+/// `p.strategy` and price the run in wall-clock seconds.
+///
+/// Unlike [`simulate_training`] (whose iteration count already embeds
+/// each strategy's convergence penalty via the paper's Fig 3 x-axis),
+/// the tape fixes ONE failure schedule for every strategy, so the
+/// comparison must charge each mechanism's full cost in time:
+///
+/// * iteration base: 91.3 s (paper Table 2), ×151.0/91.3 for redundant;
+/// * cadence stalls: checkpoint uploads (overhang only, bytes accrued)
+///   and neighbour-tier cuts (slowest adjacent link gates);
+/// * failures: checkpoint/tier redo the `since`-counter iterations at
+///   full iteration cost plus the restore transfer; CheckFree pays the
+///   max-of-both-neighbour download plus [`EXTRA_ITERS_INEXACT`]
+///   iterations of approximation cost; redundant pays 0.5 s failover;
+/// * adaptive: the EWMA mirror of `AdaptivePolicy` (decay α = 0.1 per
+///   iteration, +α impulse per failure, default hysteresis thresholds),
+///   delegating each failure to whichever mode is active.
+///
+/// Deterministic by construction: the tape is the schedule, no RNG.
+pub fn simulate_tape(
+    p: &SimParams,
+    trace: &ChurnTrace,
+    iterations: u64,
+    thresholds: AdaptiveThresholds,
+) -> TapeRun {
+    let net = Network::round_robin(p.stages);
+    let iter_s = 91.3; // paper Table 2 baseline iteration
+    let iter_factor = if p.strategy == Strategy::Redundant { 151.0 / 91.3 } else { 1.0 };
+    let model_bytes = p.embed_bytes + p.stage_bytes * (p.stages as u64 - 1);
+    let tier_stall = tier_backup_stall(p, &net);
+    let ckpt_stall = (net.storage_transfer_seconds(model_bytes)
+        - p.checkpoint_every as f64 * iter_s)
+        .max(0.0);
+
+    let mut t = 0.0f64;
+    let mut failures = 0u64;
+    let mut rollbacks = 0u64;
+    let mut extra_iters = 0.0f64;
+    let mut storage_bytes = 0u64;
+    let mut tier_bytes = 0u64;
+    let mut restore_storage = 0u64;
+    let mut switches = Vec::new();
+    let mut since = 0u64; // iterations since the last cut (ckpt or tier)
+    let mut ewma = 0.0f64;
+    let mut tier_active = false; // adaptive: current mode
+    let mut dead = false; // Strategy::None after its first failure
+    let mut cursor = 0usize; // tape events are sorted by iteration
+
+    let take_tier_cut = |t: &mut f64, since: &mut u64, tier_bytes: &mut u64| {
+        *t += tier_stall;
+        *tier_bytes += model_bytes;
+        *since = 0;
+    };
+
+    for it in 1..=iterations {
+        t += iter_s * iter_factor;
+        since += 1;
+
+        match p.strategy {
+            Strategy::Checkpoint => {
+                if since >= p.checkpoint_every {
+                    t += ckpt_stall;
+                    storage_bytes += model_bytes;
+                    since = 0;
+                }
+            }
+            Strategy::TierCheck => {
+                if since >= p.tier_backup_every {
+                    take_tier_cut(&mut t, &mut since, &mut tier_bytes);
+                }
+            }
+            Strategy::Adaptive => {
+                ewma *= 1.0 - ADAPTIVE_EWMA_ALPHA;
+                let want_tier = if ewma >= thresholds.escalate {
+                    true
+                } else if ewma <= thresholds.deescalate {
+                    false
+                } else {
+                    tier_active
+                };
+                if want_tier != tier_active {
+                    tier_active = want_tier;
+                    switches.push(it);
+                    if tier_active {
+                        take_tier_cut(&mut t, &mut since, &mut tier_bytes);
+                    }
+                } else if tier_active && since >= p.tier_backup_every {
+                    take_tier_cut(&mut t, &mut since, &mut tier_bytes);
+                }
+            }
+            _ => {}
+        }
+
+        while cursor < trace.events.len() && trace.events[cursor].iteration == it {
+            let stage = trace.events[cursor].stage % p.stages;
+            cursor += 1;
+            failures += 1;
+            if dead {
+                continue;
+            }
+            match p.strategy {
+                Strategy::None => {
+                    t = f64::INFINITY;
+                    dead = true;
+                }
+                Strategy::Redundant => t += 0.5,
+                Strategy::CheckFree | Strategy::CheckFreePlus => {
+                    t += net.checkfree_recovery_seconds(p.stage_bytes, stage).unwrap_or(30.0);
+                    t += EXTRA_ITERS_INEXACT * iter_s;
+                    extra_iters += EXTRA_ITERS_INEXACT;
+                }
+                Strategy::Checkpoint => {
+                    rollbacks += since;
+                    t += since as f64 * iter_s;
+                    t += net.storage_transfer_seconds(p.stage_bytes);
+                    storage_bytes += p.stage_bytes;
+                    restore_storage += p.stage_bytes;
+                    since = 0;
+                }
+                Strategy::TierCheck => {
+                    rollbacks += since;
+                    t += since as f64 * iter_s;
+                    t += net
+                        .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                        .unwrap_or(5.0);
+                    since = 0;
+                }
+                Strategy::Adaptive => {
+                    ewma += ADAPTIVE_EWMA_ALPHA;
+                    if tier_active {
+                        rollbacks += since;
+                        t += since as f64 * iter_s;
+                        t += net
+                            .transfer_seconds(p.stage_bytes, (stage + 1) % p.stages, stage)
+                            .unwrap_or(5.0);
+                        since = 0;
+                    } else {
+                        t += net
+                            .checkfree_recovery_seconds(p.stage_bytes, stage)
+                            .unwrap_or(30.0);
+                        t += EXTRA_ITERS_INEXACT * iter_s;
+                        extra_iters += EXTRA_ITERS_INEXACT;
+                    }
+                }
+            }
+        }
+    }
+
+    TapeRun {
+        strategy: p.strategy,
+        wall_clock_s: t,
+        failures,
+        rollback_iterations: rollbacks,
+        extra_convergence_iterations: extra_iters,
+        storage_bytes,
+        tier_backup_bytes: tier_bytes,
+        restore_storage_bytes: restore_storage,
+        switch_iterations: switches,
     }
 }
 
@@ -697,7 +1060,13 @@ mod tests {
         // The acceptance-criteria matrix shape at its largest scale:
         // 3 strategies × 4 churn processes at 1024 stages, cell by
         // cell. No O(stages²) accounting — this must run in test time.
-        for strategy in [Strategy::CheckFree, Strategy::Checkpoint, Strategy::Redundant] {
+        for strategy in [
+            Strategy::CheckFree,
+            Strategy::Checkpoint,
+            Strategy::Redundant,
+            Strategy::TierCheck,
+            Strategy::Adaptive,
+        ] {
             for churn in ChurnProcessKind::ALL {
                 let p = SimParams::coverage(1024, strategy, 0.0005, 17);
                 let allow_adjacent = churn == ChurnProcessKind::Correlated;
@@ -707,6 +1076,110 @@ mod tests {
                 assert!(run.sampled_iterations <= run.iterations);
             }
         }
+    }
+
+    fn burst_storm() -> ChurnTrace {
+        ChurnTrace::read_file(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/traces/burst_storm.jsonl"
+        ))
+        .unwrap()
+    }
+
+    /// The PR's acceptance gate, in-repo: on the committed bursty tape the
+    /// adaptive policy strictly beats EVERY static strategy on simulated
+    /// convergence wall-clock. The recovery_latency bench re-emits these
+    /// numbers into BENCH_recovery.json's `policy` section and
+    /// scripts/check_bench_json.py re-checks them from the outside.
+    #[test]
+    fn adaptive_beats_every_static_on_the_committed_tape() {
+        let tape = burst_storm();
+        assert_eq!(tape.events.len(), 21, "committed tape changed shape");
+        let run = |s: Strategy| {
+            simulate_tape(&SimParams::policy_gate(s), &tape, 600, AdaptiveThresholds::default())
+        };
+        let adaptive = run(Strategy::Adaptive);
+        assert_eq!(adaptive.failures, 21);
+        // escalates right after the 201–215 storm opens, de-escalates
+        // once the EWMA drains below the lower threshold
+        assert_eq!(adaptive.switch_iterations, vec![202, 251]);
+        assert!(adaptive.tier_backup_bytes > 0, "escalation never armed the tier");
+        assert!(adaptive.extra_convergence_iterations > 0.0, "calm mode never used");
+        for s in [
+            Strategy::CheckFree,
+            Strategy::CheckFreePlus,
+            Strategy::Checkpoint,
+            Strategy::Redundant,
+            Strategy::TierCheck,
+        ] {
+            let stat = run(s);
+            assert!(
+                adaptive.wall_clock_s < stat.wall_clock_s,
+                "adaptive {:.1}s is not below {} {:.1}s",
+                adaptive.wall_clock_s,
+                s.label(),
+                stat.wall_clock_s
+            );
+        }
+    }
+
+    #[test]
+    fn tiercheck_tape_restore_moves_zero_storage_bytes() {
+        let tape = burst_storm();
+        let tier = simulate_tape(
+            &SimParams::policy_gate(Strategy::TierCheck),
+            &tape,
+            600,
+            AdaptiveThresholds::default(),
+        );
+        assert!(tier.failures > 0 && tier.rollback_iterations > 0);
+        assert_eq!(tier.storage_bytes, 0, "tier restore must not touch storage");
+        assert_eq!(tier.restore_storage_bytes, 0);
+        assert!(tier.tier_backup_bytes > 0);
+        // checkpointing, by contrast, pays storage both ways
+        let ckpt = simulate_tape(
+            &SimParams::policy_gate(Strategy::Checkpoint),
+            &tape,
+            600,
+            AdaptiveThresholds::default(),
+        );
+        assert!(ckpt.storage_bytes > 0 && ckpt.restore_storage_bytes > 0);
+    }
+
+    #[test]
+    fn tape_replay_is_deterministic_for_every_strategy() {
+        let tape = burst_storm();
+        for s in Strategy::ALL {
+            let p = SimParams::policy_gate(s);
+            let a = simulate_tape(&p, &tape, 600, AdaptiveThresholds::default());
+            let b = simulate_tape(&p, &tape, 600, AdaptiveThresholds::default());
+            assert_eq!(a.wall_clock_s.to_bits(), b.wall_clock_s.to_bits(), "{s:?}");
+            assert_eq!(a.switch_iterations, b.switch_iterations);
+            assert_eq!(a.rollback_iterations, b.rollback_iterations);
+            assert_eq!(a.storage_bytes, b.storage_bytes);
+        }
+    }
+
+    #[test]
+    fn tiercheck_training_pays_cuts_not_storage() {
+        let p = SimParams::paper_medium(Strategy::TierCheck, 0.10);
+        let run = simulate_training(&p, 3_000);
+        assert!(run.train_hours.is_finite());
+        // tier cuts stall on every cadence, unlike the hidden checkpoint
+        // upload at paper cadence
+        assert!(run.checkpoint_stall_seconds > 0.0);
+        if run.failures > 0 {
+            // a tier rollback never loses more than one backup period
+            assert!(run.rollback_iterations < run.failures * p.tier_backup_every);
+        }
+    }
+
+    #[test]
+    fn adaptive_training_is_finite_under_heavy_churn() {
+        let p = SimParams::paper_medium(Strategy::Adaptive, 0.16);
+        let run = simulate_training(&p, 3_000);
+        assert!(run.train_hours.is_finite());
+        assert!(run.failures > 0);
     }
 
     #[test]

@@ -35,7 +35,13 @@ be executed. Checked invariants:
   host-optimizer row — anything else means the fused on-plane Adam
   silently degraded and the run must not be committable as measured;
 * ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
-  sidecar, when present) analogously for its latency table;
+  sidecar, when present) analogously for its latency table; at schema
+  >= 2 a measured recovery file must carry the ``policy`` section (the
+  burst_storm tape replay) with non-empty per-strategy runs, and the
+  checker recomputes both gates from the raw runs rather than trusting
+  the self-reported booleans: the adaptive policy's wall-clock must be
+  strictly below every static strategy's, and the tiercheck run must
+  show zero restore storage bytes;
 * ``BENCH_coverage.json`` (the scenario-factory coverage matrix): a
   measured run must contain exactly |scales| x |strategies| x
   |churn_processes| cells, each with every documented field, a max
@@ -114,6 +120,17 @@ LATENCY_FIELDS = (
     "ckpt_upload_s",
 )
 
+POLICY_RUN_FIELDS = (
+    "strategy",
+    "wall_clock_s",
+    "failures",
+    "rollback_iterations",
+    "extra_convergence_iterations",
+    "storage_bytes",
+    "tier_backup_bytes",
+    "restore_storage_bytes",
+)
+
 COVERAGE_CELL_FIELDS = (
     "strategy",
     "churn_process",
@@ -182,7 +199,7 @@ class Checker:
         if bench == "hot_path":
             self.check_hot_path(doc, status, schema or 0)
         elif bench == "recovery":
-            self.check_recovery(doc, status)
+            self.check_recovery(doc, status, schema or 0)
         elif bench == "coverage":
             self.check_coverage(doc, status)
         elif bench is not None:
@@ -357,9 +374,11 @@ class Checker:
                                 "docs/BENCHMARKS.md gate 7)")
             self.check_gates_true(entry, where)
 
-    def check_recovery(self, doc: dict, status) -> None:
+    def check_recovery(self, doc: dict, status, schema) -> None:
         latencies = self.require(doc, "simulated_latencies", list)
         self.require(doc, "microbench", list)
+        if schema >= 2:
+            self.require(doc, "policy", dict)
         if status != "measured":
             return
         if not latencies:
@@ -372,6 +391,65 @@ class Checker:
                 continue
             for field in LATENCY_FIELDS:
                 self.require(entry, field, (str, int, float), where)
+        if schema >= 2:
+            self.check_recovery_policy(doc)
+
+    def check_recovery_policy(self, doc: dict) -> None:
+        """Schema-2 policy gate: the burst_storm tape replay. Both gates
+        are recomputed from the raw per-strategy runs — a bench that
+        self-reports ``gate_*: true`` over losing numbers still fails."""
+        policy = doc.get("policy")
+        if not isinstance(policy, dict):
+            return
+        self.require(policy, "tape", str, "policy")
+        runs = self.require(policy, "runs", list, "policy")
+        self.require(policy, "adaptive_switch_iterations", list, "policy")
+        self.require(policy, "tiercheck_restore_storage_bytes", (int, float),
+                     "policy")
+        if not isinstance(runs, list):
+            return
+        if not runs:
+            self.error("measured schema>=2 recovery run with empty "
+                       "'policy.runs' — the tape replay is the gate's "
+                       "evidence")
+            return
+        walls: dict[str, float] = {}
+        for i, run in enumerate(runs):
+            where = f"policy.runs[{i}]"
+            if not isinstance(run, dict):
+                self.error(f"{where} is not an object")
+                continue
+            for field in POLICY_RUN_FIELDS:
+                self.require(run, field, (str, int, float), where)
+            name = run.get("strategy")
+            wall = run.get("wall_clock_s")
+            if isinstance(name, str) and isinstance(wall, (int, float)):
+                walls[name] = wall
+            if (run.get("strategy") == "tiercheck"
+                    and isinstance(run.get("restore_storage_bytes"),
+                                   (int, float))
+                    and run["restore_storage_bytes"] != 0):
+                self.error(
+                    f"{where}: tiercheck restore moved "
+                    f"{run['restore_storage_bytes']!r} storage bytes — the "
+                    "in-memory neighbour tier must restore with zero "
+                    "storage round-trip (see docs/BENCHMARKS.md)")
+        if "adaptive" not in walls:
+            self.error("policy.runs has no 'adaptive' entry — the policy "
+                       "gate compares adaptive against every static "
+                       "strategy")
+        else:
+            adaptive = walls["adaptive"]
+            for name, wall in sorted(walls.items()):
+                if name == "adaptive":
+                    continue
+                if not adaptive < wall:
+                    self.error(
+                        f"policy: adaptive wall_clock_s ({adaptive}) is not "
+                        f"below {name}'s ({wall}) — live policy selection "
+                        "must strictly beat every static strategy on the "
+                        "committed tape (see docs/BENCHMARKS.md)")
+        self.check_gates_true(policy, "policy")
 
     def check_coverage(self, doc: dict, status) -> None:
         scales = self.require(doc, "scales", list)
@@ -481,6 +559,32 @@ def selftest() -> int:
         print("selftest FAIL: bad-pulls fixture was not rejected for the "
               "steady-state param-pull gate; errors were:", file=sys.stderr)
         for err in bad5.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    rec_good = Checker(fixtures / "recovery_schema2_good.json")
+    rec_good.check()
+    if rec_good.errors:
+        ok = False
+        print("selftest FAIL: good recovery fixture rejected:",
+              file=sys.stderr)
+        for err in rec_good.errors:
+            print(f"  {err}", file=sys.stderr)
+
+    rec_bad = Checker(fixtures / "recovery_schema2_bad_policy.json")
+    rec_bad.check()
+    if not any("is not below" in err for err in rec_bad.errors):
+        ok = False
+        print("selftest FAIL: bad-policy recovery fixture was not rejected "
+              "for the adaptive-beats-static gate; errors were:",
+              file=sys.stderr)
+        for err in rec_bad.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+    if not any("zero storage round-trip" in err for err in rec_bad.errors):
+        ok = False
+        print("selftest FAIL: bad-policy recovery fixture was not rejected "
+              "for the tiercheck zero-storage gate; errors were:",
+              file=sys.stderr)
+        for err in rec_bad.errors or ["<none>"]:
             print(f"  {err}", file=sys.stderr)
 
     cov_good = Checker(fixtures / "coverage_schema1_good.json")
