@@ -42,21 +42,36 @@
 //! `body_adam`), and the device gate pins the ledger contract — the
 //! device path's steady-state host syncs are exactly `m·4` (the
 //! `m·L·P` gradient-pull term is gone), with zero `param_pulls`,
-//! strictly below the host path's count. All previously committed
-//! sections stay pinned to the host optimizer so the trajectory
-//! remains comparable. Results are written to `BENCH_hot_path.json`
-//! at the repo root so future PRs can diff the perf trajectory.
+//! strictly below the host path's count. Schema 6 adds the
+//! `transport` section and the `link_wire_bytes`/`link_wire_ns`
+//! transfer columns: a steady-state per-stage 1F1B iteration's ledger
+//! delta under `--link-transport in-process` vs `tcp-loopback` (gate:
+//! the tcp row bills nonzero wire bytes strictly above its payload
+//! bytes, the in-process row bills none), plus a `shaped` subsection
+//! measuring each adjacent stage hop's emulated `gcp-5region` delay
+//! against the netsim latency floor for its region pair (gate: no
+//! measured link sits below its floor — `check_bench_json.py`
+//! recomputes the floors independently). All previously committed
+//! sections stay pinned to the host optimizer and the in-process
+//! transport so the trajectory remains comparable. Results are
+//! written to `BENCH_hot_path.json` at the repo root so future PRs
+//! can diff the perf trajectory.
 //!
 //! Pass `--smoke` for a quick tiny-model-only run (used by
 //! `scripts/tier1.sh` as the train_iteration timing check); smoke
 //! results go to the gitignored `BENCH_hot_path.smoke.json` so they
 //! never clobber the committed full-run trajectory.
 
-use checkfree::config::{ExecMode, LinkPath, OptimizerPath, Overlap, PlaneMode, Strategy, TrainConfig};
+use checkfree::config::{
+    default_artifacts_root, ExecMode, LinkPath, LinkTransportKind, OptimizerPath, Overlap,
+    PlaneMode, Strategy, TrainConfig, WanProfile,
+};
 use checkfree::coordinator::PipelineEngine;
+use checkfree::metrics::TransferLedger;
 use checkfree::model::GradBuffer;
+use checkfree::netsim::Network;
 use checkfree::recovery::checkfree::weighted_average;
-use checkfree::runtime::HostTensor;
+use checkfree::runtime::{HostTensor, Runtime};
 use checkfree::util::bench::{bench_with, fmt_dur};
 use checkfree::util::json::Json;
 use std::time::Duration;
@@ -79,6 +94,7 @@ fn main() {
     let mut residency: Vec<(String, Json)> = Vec::new();
     let mut plane_overheads: Vec<(String, Json)> = Vec::new();
     let mut opt_paths: Vec<(String, Json)> = Vec::new();
+    let mut transports: Vec<(String, Json)> = Vec::new();
 
     'models: for &model in models {
         let mut mode_means: Vec<(ExecMode, f64)> = Vec::new();
@@ -284,6 +300,8 @@ fn main() {
                 ("link_blocking", Json::num(d.link_blocking as f64)),
                 ("link_wait_ns", Json::num(d.link_wait_ns as f64)),
                 ("param_pulls", Json::num(d.param_pulls as f64)),
+                ("link_wire_bytes", Json::num(d.link_wire_bytes as f64)),
+                ("link_wire_ns", Json::num(d.link_wire_ns as f64)),
             ])
         };
         let host_opt = OptimizerPath::Host;
@@ -564,6 +582,167 @@ fn main() {
             }
             plane_overheads.push((model.to_string(), Json::obj(fields)));
         }
+
+        // Wire transport: the schema-6 section. Same steady-state
+        // protocol as the residency ledger (2nd-iteration delta),
+        // per-stage 1F1B, once per link transport. The tcp-loopback
+        // row must bill the new wire columns — frames strictly larger
+        // than the payloads they carry (CFW1 header overhead) with
+        // nonzero wire time, every wire hop landing in the staged
+        // split — while the in-process row bills none; both keep the
+        // overlap invariant. `check_bench_json.py` hard-fails a
+        // measured tcp row with zero wire bytes.
+        let transport_transfers =
+            |kind: LinkTransportKind| -> Option<checkfree::metrics::TransferSnapshot> {
+                let cfg = TrainConfig {
+                    model: model.into(),
+                    strategy: Strategy::CheckFree,
+                    microbatches_per_iter: MICROBATCHES,
+                    exec_mode: ExecMode::Pipelined1F1B,
+                    plane_mode: PlaneMode::PerStage,
+                    link_path: LinkPath::Auto,
+                    link_transport: kind,
+                    optimizer_path: OptimizerPath::Host,
+                    ..TrainConfig::default()
+                };
+                let mut e = match PipelineEngine::from_config(&cfg) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        eprintln!("transport run skipped ({model}, {}): {err:#}", kind.label());
+                        return None;
+                    }
+                };
+                if let Err(err) = e.train_iteration() {
+                    eprintln!("transport warmup failed ({model}, {}): {err:#}", kind.label());
+                    return None;
+                }
+                let before = e.transfer_ledger().snapshot();
+                if let Err(err) = e.train_iteration() {
+                    eprintln!("transport run failed ({model}, {}): {err:#}", kind.label());
+                    return None;
+                }
+                Some(e.transfer_ledger().snapshot().since(&before))
+            };
+        // WAN shaping: one measured hop per adjacent stage pair under
+        // the gcp-5region profile (Shaped over the in-process
+        // transport, so the emulated delay is the only wire cost and
+        // link_wire_ns is exactly that delay). Each row carries the
+        // netsim floor — scale × one-way latency for its region pair,
+        // i.e. the zero-byte transfer time — and the gate is that no
+        // measured link undercuts its floor. `check_bench_json.py`
+        // recomputes the floors from its own copy of the latency
+        // matrix and hard-fails any row sitting below.
+        let shaped_links = |scale: f64| -> Option<Vec<(&'static str, &'static str, u64, u64)>> {
+            let rt = match Runtime::load_config_wire(
+                default_artifacts_root(),
+                model,
+                PlaneMode::PerStage,
+                LinkPath::Auto,
+                LinkTransportKind::InProcess,
+                WanProfile::Gcp5Region,
+                scale,
+            ) {
+                Ok(rt) => rt,
+                Err(err) => {
+                    eprintln!("shaped run skipped ({model}): {err:#}");
+                    return None;
+                }
+            };
+            let planes = rt.plane_count();
+            let net = Network::blocked(planes);
+            let ledger = TransferLedger::new(planes);
+            let set = rt.plane_set(&ledger);
+            let mut rows = Vec::with_capacity(planes.saturating_sub(1));
+            for src in 0..planes.saturating_sub(1) {
+                let dst = src + 1;
+                let t = HostTensor::from_f32_vec(vec![2], vec![1.0, -1.0]);
+                let d = match set.plane(src).upload(src, &t) {
+                    Ok(d) => d,
+                    Err(err) => {
+                        eprintln!("shaped upload failed ({model}, stage {src}): {err:#}");
+                        return None;
+                    }
+                };
+                let before = ledger.stage_snapshot(dst).link_wire_ns;
+                if let Err(err) = d.copy_to_plane(set.plane(dst), dst) {
+                    eprintln!("shaped hop failed ({model}, {src}→{dst}): {err:#}");
+                    return None;
+                }
+                let wire_ns = ledger.stage_snapshot(dst).link_wire_ns - before;
+                let (a, b) = match (net.region_of(src), net.region_of(dst)) {
+                    (Ok(a), Ok(b)) => (a, b),
+                    _ => return None,
+                };
+                let floor_ns = (scale * net.transfer_seconds_between(0, a, b) * 1e9) as u64;
+                rows.push((a.label(), b.label(), wire_ns, floor_ns));
+            }
+            Some(rows)
+        };
+        let inproc_t = transport_transfers(LinkTransportKind::InProcess);
+        let tcp_t = transport_transfers(LinkTransportKind::TcpLoopback);
+        // Keep the shaped rows cheap: real gcp one-way latencies are
+        // hundreds of ms, so scale the emulation down — the floor
+        // scales with it, which is exactly what the gate checks.
+        let wan_scale = 1e-3;
+        let shaped_rows = shaped_links(wan_scale);
+        if let (Some(ip), Some(tcp)) = (inproc_t, tcp_t) {
+            let gate_wire = tcp.link_wire_bytes > tcp.link_bytes
+                && tcp.link_wire_ns > 0
+                && tcp.link_staged == tcp.link_copies
+                && ip.link_wire_bytes == 0
+                && ip.link_wire_ns == 0
+                && ip.link_overlapped + ip.link_blocking == ip.link_copies
+                && tcp.link_overlapped + tcp.link_blocking == tcp.link_copies;
+            println!(
+                "  {model}: transport @ {MICROBATCHES} mb — in-process {} link copies \
+                 ({} wire bytes), tcp-loopback {} copies ({} wire bytes / {} payload \
+                 bytes, {} wire ns; gate frames > payload ∧ staged ∧ invariant: \
+                 {gate_wire})",
+                ip.link_copies,
+                ip.link_wire_bytes,
+                tcp.link_copies,
+                tcp.link_wire_bytes,
+                tcp.link_bytes,
+                tcp.link_wire_ns,
+            );
+            let mut fields = vec![
+                ("in-process", transfers_json(&ip)),
+                ("tcp-loopback", transfers_json(&tcp)),
+                ("gate_tcp_wire_billed", Json::Bool(gate_wire)),
+            ];
+            if let Some(rows) = shaped_rows {
+                let gate_floor =
+                    !rows.is_empty() && rows.iter().all(|&(_, _, mean, floor)| mean >= floor);
+                println!(
+                    "  {model}: shaped gcp-5region @ scale {wan_scale} — {} adjacent \
+                     links (gate every mean ≥ floor: {gate_floor})\n",
+                    rows.len(),
+                );
+                let links = rows
+                    .iter()
+                    .map(|&(src, dst, mean, floor)| {
+                        Json::obj(vec![
+                            ("src_region", Json::str(src)),
+                            ("dst_region", Json::str(dst)),
+                            ("mean_link_ns", Json::num(mean as f64)),
+                            ("floor_ns", Json::num(floor as f64)),
+                        ])
+                    })
+                    .collect();
+                fields.push((
+                    "shaped",
+                    Json::obj(vec![
+                        ("profile", Json::str(WanProfile::Gcp5Region.label())),
+                        ("scale", Json::num(wan_scale)),
+                        ("links", Json::Arr(links)),
+                        ("gate_shaped_above_floor", Json::Bool(gate_floor)),
+                    ]),
+                ));
+            } else {
+                println!();
+            }
+            transports.push((model.to_string(), Json::obj(fields)));
+        }
     }
 
     // Rust-side hot pieces in isolation (e2e body-stage sizes).
@@ -597,7 +776,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("hot_path")),
-        ("schema", Json::num(5.0)),
+        ("schema", Json::num(6.0)),
         ("status", Json::str("measured")),
         ("generated_by", Json::str("cargo bench --bench hot_path [-- --smoke]")),
         ("smoke", Json::Bool(smoke)),
@@ -647,6 +826,14 @@ fn main() {
             Json::obj(
                 std::iter::once(("microbatches", Json::num(MICROBATCHES as f64)))
                     .chain(opt_paths.iter().map(|(m, j)| (m.as_str(), j.clone())))
+                    .collect(),
+            ),
+        ),
+        (
+            "transport",
+            Json::obj(
+                std::iter::once(("microbatches", Json::num(MICROBATCHES as f64)))
+                    .chain(transports.iter().map(|(m, j)| (m.as_str(), j.clone())))
                     .collect(),
             ),
         ),

@@ -297,6 +297,126 @@ impl FromStr for LinkPath {
     }
 }
 
+/// Which **wire** a cross-plane link copy travels (orthogonal to
+/// [`LinkPath`], which picks how the *in-process* transport moves
+/// bytes; the wire transports always marshal through the staged
+/// device→host→device path at each end).
+///
+/// All transports are bitwise-identical — the TCP frame carries the
+/// exact little-endian byte image of the tensor, so the payload that
+/// leaves one plane is the payload that lands on the other. Only
+/// wall-clock and the ledger's `link_wire_bytes`/`link_wire_ns`
+/// columns differ (zero on the in-process transport).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTransportKind {
+    /// Today's same-process plugin transfer (direct fast path + staged
+    /// fallback, per [`LinkPath`]). The default; bills no wire columns.
+    InProcess,
+    /// Length-prefixed `CFW1` frames over per-link loopback TCP socket
+    /// pairs — the cross-process wire, runnable in one process (each
+    /// receiving plane owns an echo socket) or across OS processes
+    /// under `--role stage:N`. Every link copy is staged to a host
+    /// literal, framed, sent, and re-uploaded on the destination plane.
+    TcpLoopback,
+}
+
+impl LinkTransportKind {
+    pub const ALL: [LinkTransportKind; 2] =
+        [LinkTransportKind::InProcess, LinkTransportKind::TcpLoopback];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinkTransportKind::InProcess => "in-process",
+            LinkTransportKind::TcpLoopback => "tcp-loopback",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_LINK_TRANSPORT` if set (the
+    /// CI lever for the in-process↔tcp A/B legs), else
+    /// [`LinkTransportKind::InProcess`]. Unparsable values fall back to
+    /// `InProcess` — loudly, like [`PlaneMode::from_env`].
+    pub fn from_env() -> LinkTransportKind {
+        match std::env::var("CHECKFREE_LINK_TRANSPORT") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_LINK_TRANSPORT: {e}; using 'in-process'");
+                LinkTransportKind::InProcess
+            }),
+            Err(_) => LinkTransportKind::InProcess,
+        }
+    }
+}
+
+impl FromStr for LinkTransportKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "in-process" | "in_process" | "inprocess" | "local" => Ok(LinkTransportKind::InProcess),
+            "tcp-loopback" | "tcp_loopback" | "tcp" => Ok(LinkTransportKind::TcpLoopback),
+            other => Err(anyhow!(
+                "unknown link transport '{other}' (in-process|tcp-loopback)"
+            )),
+        }
+    }
+}
+
+/// WAN emulation profile: wraps the selected link transport in a
+/// `netsim`-driven shaper so one box can emulate the paper §5
+/// geo-distributed setting (`--wan-profile gcp-5region`).
+///
+/// Shaping delays *when* bytes arrive, never what they are — results
+/// stay bitwise-identical; only wall-clock and `link_wire_ns` grow.
+/// Stage→region placement uses `netsim::Network::blocked`, the same
+/// contiguous placement the region-correlated churn process uses, so
+/// shaping and correlated failures agree on which stages share a
+/// region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WanProfile {
+    /// No shaping — links run at loopback/plugin speed. The default.
+    Off,
+    /// The 5-region GCP latency/bandwidth matrix from `rust/src/netsim/`
+    /// (us-central1, us-east1, europe-west4, asia-east1,
+    /// australia-southeast1), scaled by [`TrainConfig::wan_scale`] so CI
+    /// runs don't sleep real WAN round-trips.
+    Gcp5Region,
+}
+
+impl WanProfile {
+    pub const ALL: [WanProfile; 2] = [WanProfile::Off, WanProfile::Gcp5Region];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WanProfile::Off => "off",
+            WanProfile::Gcp5Region => "gcp-5region",
+        }
+    }
+
+    /// The process-wide default: `CHECKFREE_WAN_PROFILE` if set, else
+    /// [`WanProfile::Off`]. Unparsable values fall back to `Off` —
+    /// loudly, like [`PlaneMode::from_env`].
+    pub fn from_env() -> WanProfile {
+        match std::env::var("CHECKFREE_WAN_PROFILE") {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("warning: ignoring CHECKFREE_WAN_PROFILE: {e}; using 'off'");
+                WanProfile::Off
+            }),
+            Err(_) => WanProfile::Off,
+        }
+    }
+}
+
+impl FromStr for WanProfile {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(WanProfile::Off),
+            "gcp-5region" | "gcp5region" | "gcp" => Ok(WanProfile::Gcp5Region),
+            other => Err(anyhow!("unknown wan profile '{other}' (off|gcp-5region)")),
+        }
+    }
+}
+
 /// Whether cross-plane link copies are **overlapped** with compute
 /// (`--plane-mode per-stage`; irrelevant under `shared` or host
 /// staging, which have no links).
@@ -642,6 +762,17 @@ pub struct TrainConfig {
     /// How cross-plane link copies move bytes under per-stage planes
     /// (see [`LinkPath`]). Defaults to [`LinkPath::from_env`].
     pub link_path: LinkPath,
+    /// Which wire cross-plane link copies travel (see
+    /// [`LinkTransportKind`]). Defaults to
+    /// [`LinkTransportKind::from_env`].
+    pub link_transport: LinkTransportKind,
+    /// WAN emulation profile wrapping the link transport (see
+    /// [`WanProfile`]). Defaults to [`WanProfile::from_env`].
+    pub wan_profile: WanProfile,
+    /// Multiplier on the netsim-derived per-link delay when a WAN
+    /// profile is active (1.0 = real matrix seconds; CI smoke runs use
+    /// small values so shaped runs finish in seconds).
+    pub wan_scale: f64,
     /// Whether cross-plane link copies are prefetched on the sending
     /// side (see [`Overlap`]). Defaults to [`Overlap::from_env`].
     pub overlap: Overlap,
@@ -691,6 +822,9 @@ impl Default for TrainConfig {
             host_staging: false,
             plane_mode: PlaneMode::from_env(),
             link_path: LinkPath::from_env(),
+            link_transport: LinkTransportKind::from_env(),
+            wan_profile: WanProfile::from_env(),
+            wan_scale: 1.0,
             overlap: Overlap::from_env(),
             optimizer_path: OptimizerPath::from_env(),
             churn_process: crate::failures::ChurnProcessKind::Bernoulli,
@@ -737,6 +871,9 @@ impl TrainConfig {
             ("host_staging", Json::Bool(self.host_staging)),
             ("plane_mode", Json::str(self.plane_mode.label())),
             ("link_path", Json::str(self.link_path.label())),
+            ("link_transport", Json::str(self.link_transport.label())),
+            ("wan_profile", Json::str(self.wan_profile.label())),
+            ("wan_scale", Json::num(self.wan_scale)),
             ("overlap", Json::str(self.overlap.label())),
             ("optimizer_path", Json::str(self.optimizer_path.label())),
             ("churn_process", Json::str(self.churn_process.label())),
@@ -837,6 +974,18 @@ impl TrainConfig {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.link_path,
             },
+            link_transport: match v.opt("link_transport") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.link_transport,
+            },
+            wan_profile: match v.opt("wan_profile") {
+                Some(x) => x.as_str()?.parse()?,
+                None => d.wan_profile,
+            },
+            wan_scale: match v.opt("wan_scale") {
+                Some(x) => x.as_f64()?,
+                None => d.wan_scale,
+            },
             overlap: match v.opt("overlap") {
                 Some(x) => x.as_str()?.parse()?,
                 None => d.overlap,
@@ -892,6 +1041,12 @@ impl TrainConfig {
         }
         if self.recovery_lr_boost < 1.0 {
             return Err(anyhow!("recovery_lr_boost must be ≥ 1.0"));
+        }
+        if !(self.wan_scale.is_finite() && self.wan_scale >= 0.0) {
+            return Err(anyhow!(
+                "wan_scale must be a finite number ≥ 0 (got {})",
+                self.wan_scale
+            ));
         }
         if matches!(self.strategy, Strategy::TierCheck | Strategy::Adaptive)
             && self.tier_backup_every == 0
@@ -1137,6 +1292,72 @@ mod tests {
             TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
                 .unwrap();
         assert_eq!(back.link_path, LinkPath::from_env());
+    }
+
+    #[test]
+    fn link_transport_parse_all_labels() {
+        for t in LinkTransportKind::ALL {
+            assert_eq!(t.label().parse::<LinkTransportKind>().unwrap(), t);
+        }
+        assert_eq!(
+            "tcp".parse::<LinkTransportKind>().unwrap(),
+            LinkTransportKind::TcpLoopback
+        );
+        assert!("bogus".parse::<LinkTransportKind>().is_err());
+    }
+
+    #[test]
+    fn link_transport_roundtrips_and_defaults_from_env() {
+        assert_eq!(TrainConfig::default().link_transport, LinkTransportKind::from_env());
+        if std::env::var("CHECKFREE_LINK_TRANSPORT").is_err() {
+            assert_eq!(LinkTransportKind::from_env(), LinkTransportKind::InProcess);
+        }
+        for transport in LinkTransportKind::ALL {
+            let cfg = TrainConfig { link_transport: transport, ..TrainConfig::default() };
+            let back = TrainConfig::from_json(
+                &crate::util::json::parse(&cfg.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.link_transport, transport);
+        }
+        // absent key → env default (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.link_transport, LinkTransportKind::from_env());
+    }
+
+    #[test]
+    fn wan_profile_parse_roundtrip_and_scale_validation() {
+        for p in WanProfile::ALL {
+            assert_eq!(p.label().parse::<WanProfile>().unwrap(), p);
+        }
+        assert_eq!("gcp".parse::<WanProfile>().unwrap(), WanProfile::Gcp5Region);
+        assert!("bogus".parse::<WanProfile>().is_err());
+        if std::env::var("CHECKFREE_WAN_PROFILE").is_err() {
+            assert_eq!(WanProfile::from_env(), WanProfile::Off);
+        }
+        let cfg = TrainConfig {
+            wan_profile: WanProfile::Gcp5Region,
+            wan_scale: 1e-6,
+            ..TrainConfig::default()
+        };
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(&cfg.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.wan_profile, WanProfile::Gcp5Region);
+        assert_eq!(back.wan_scale, 1e-6);
+        // absent keys → defaults (old config files stay loadable)
+        let back =
+            TrainConfig::from_json(&crate::util::json::parse(r#"{"model": "e2e"}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.wan_profile, WanProfile::from_env());
+        assert_eq!(back.wan_scale, 1.0);
+        // negative / non-finite scales are rejected
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let cfg = TrainConfig { wan_scale: bad, ..TrainConfig::default() };
+            assert!(cfg.validate().is_err(), "wan_scale {bad} must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Multi-process stage cluster: one OS process per plane's wire
+//! endpoint, where **killing a process IS the failure event**.
+//!
+//! Emulation model (mirrors spot-instance clusters): the coordinator
+//! keeps the PJRT planes — the compute — and spawns one `--role
+//! stage:N` child process per plane as that stage's *network node*.
+//! Every cross-plane transfer is framed (CFW1, see
+//! [`crate::runtime::transport`]) and routed through the receiving
+//! stage's process: the staged device→host→device path picks the bytes
+//! up at each end, exactly like the loopback echo threads, except the
+//! far end is a real OS process with a real PID. The
+//! [`ProcessKiller`] failure backend then closes the ROADMAP's
+//! elastic-churn follow-on: when the injector says "stage s failed",
+//! the backend SIGKILLs that PID mid-run, spawns a replacement node,
+//! re-accepts its connection on the listener kept from launch, and
+//! splices the new stream into the live
+//! [`TcpTransport`](crate::runtime::TcpTransport) — so recovery
+//! (checkfree / tiercheck / adaptive) must complete over the healed
+//! wire, not over the corpse's socket.
+//!
+//! The launcher shape is `--connect`: the coordinator binds one
+//! ephemeral listener per plane (kept open for the lifetime of the
+//! cluster, so respawns land on the same address) and each child dials
+//! in. The inverse `--listen` shape — children bind, coordinator dials
+//! — exists for manual multi-host experiments via the same `--role`
+//! CLI (see `main.rs`) and [`crate::runtime::TcpTransport::connect`].
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::failures::FailureBackend;
+use crate::runtime::TcpTransport;
+use crate::{anyhow, Context, Result};
+
+/// How long to wait for a spawned stage process to dial back before
+/// declaring the launch dead. Generous: the child only has to parse
+/// argv and connect.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One OS process per plane wire endpoint, plus the kept listeners
+/// that let replacements reconnect to the same address after a kill.
+pub struct StageCluster {
+    exe: PathBuf,
+    listeners: Vec<TcpListener>,
+    children: Vec<Child>,
+    transport: Arc<TcpTransport>,
+    kills: u64,
+}
+
+impl std::fmt::Debug for StageCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageCluster")
+            .field("exe", &self.exe)
+            .field("planes", &self.children.len())
+            .field("kills", &self.kills)
+            .finish()
+    }
+}
+
+impl StageCluster {
+    /// Launch `planes` stage processes from the binary at `exe`
+    /// (normally `std::env::current_exe()`; tests use
+    /// `env!("CARGO_BIN_EXE_checkfree")`). Binds one ephemeral
+    /// loopback listener per plane, spawns `exe --role stage:N
+    /// --connect ADDR` for each, and accepts the dial-backs in plane
+    /// order.
+    pub fn spawn(exe: impl Into<PathBuf>, planes: usize) -> Result<Self> {
+        let exe = exe.into();
+        let mut listeners = Vec::with_capacity(planes);
+        let mut children = Vec::with_capacity(planes);
+        let mut streams = Vec::with_capacity(planes);
+        for plane in 0..planes {
+            let listener = TcpListener::bind(("127.0.0.1", 0))
+                .with_context(|| format!("cluster: binding listener for stage {plane}"))?;
+            let mut child = spawn_stage(&exe, plane, &listener)?;
+            let stream = accept_dial_back(&listener, &mut child, plane)?;
+            listeners.push(listener);
+            children.push(child);
+            streams.push(stream);
+        }
+        Ok(Self {
+            exe,
+            listeners,
+            children,
+            transport: Arc::new(TcpTransport::from_streams(streams)),
+            kills: 0,
+        })
+    }
+
+    /// The live wire: hand this to
+    /// [`crate::runtime::Runtime::load_transport`] (via the engine's
+    /// `from_config_with_transport`). The cluster keeps its own handle
+    /// so [`Self::kill_and_respawn`] can splice replacement streams
+    /// into the transport the runtime is actively using.
+    pub fn transport(&self) -> Arc<TcpTransport> {
+        Arc::clone(&self.transport)
+    }
+
+    pub fn planes(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Processes killed so far (smoke tests assert the count).
+    pub fn kills(&self) -> u64 {
+        self.kills
+    }
+
+    /// PID of the stage's current process (diagnostics, tests).
+    pub fn pid(&self, plane: usize) -> Option<u32> {
+        self.children.get(plane).map(|c| c.id())
+    }
+
+    /// The failure event: SIGKILL stage `plane`'s process, reap it,
+    /// spawn a replacement node, and splice its connection into the
+    /// live transport. Synchronous — when this returns, the dead
+    /// node's socket is gone and recovery traffic flows through the
+    /// replacement.
+    pub fn kill_and_respawn(&mut self, plane: usize) -> Result<()> {
+        let child = self
+            .children
+            .get_mut(plane)
+            .ok_or_else(|| anyhow!("cluster: stage {plane} out of range ({})", self.listeners.len()))?;
+        child.kill().with_context(|| format!("cluster: killing stage {plane} process"))?;
+        child.wait().with_context(|| format!("cluster: reaping stage {plane} process"))?;
+        self.kills += 1;
+        let listener = &self.listeners[plane];
+        let mut fresh = spawn_stage(&self.exe, plane, listener)?;
+        let stream = accept_dial_back(listener, &mut fresh, plane)?;
+        self.transport.replace_stream(plane, stream)?;
+        self.children[plane] = fresh;
+        Ok(())
+    }
+}
+
+impl Drop for StageCluster {
+    fn drop(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn spawn_stage(exe: &PathBuf, plane: usize, listener: &TcpListener) -> Result<Child> {
+    let addr = listener
+        .local_addr()
+        .with_context(|| format!("cluster: listener addr for stage {plane}"))?;
+    Command::new(exe)
+        .arg("--role")
+        .arg(format!("stage:{plane}"))
+        .arg("--connect")
+        .arg(addr.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("cluster: spawning stage {plane} process from {exe:?}"))
+}
+
+/// Accept the stage process's dial-back, polling so a child that died
+/// before connecting fails the launch loudly instead of hanging the
+/// coordinator on a blocking `accept`.
+fn accept_dial_back(listener: &TcpListener, child: &mut Child, plane: usize) -> Result<TcpStream> {
+    listener.set_nonblocking(true).context("cluster: listener nonblocking")?;
+    let deadline = Instant::now() + CONNECT_DEADLINE;
+    let stream = loop {
+        match listener.accept() {
+            Ok((stream, _)) => break stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if let Some(status) = child.try_wait().context("cluster: polling stage process")? {
+                    return Err(anyhow!(
+                        "cluster: stage {plane} process exited ({status}) before connecting"
+                    ));
+                }
+                if Instant::now() >= deadline {
+                    let _ = child.kill();
+                    return Err(anyhow!(
+                        "cluster: stage {plane} process did not connect within {CONNECT_DEADLINE:?}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).with_context(|| format!("cluster: accepting stage {plane}")),
+        }
+    };
+    listener.set_nonblocking(false).context("cluster: listener blocking again")?;
+    stream.set_nonblocking(false).context("cluster: stream blocking")?;
+    stream.set_nodelay(true).context("cluster: set_nodelay")?;
+    Ok(stream)
+}
+
+/// [`FailureBackend`] over a [`StageCluster`]: the injector's sampled
+/// failure becomes a real SIGKILL, and the synchronous respawn inside
+/// [`StageCluster::kill_and_respawn`] means the recovery strategy that
+/// runs next moves its bytes through the replacement node.
+#[derive(Debug)]
+pub struct ProcessKiller {
+    cluster: Arc<Mutex<StageCluster>>,
+}
+
+impl ProcessKiller {
+    pub fn new(cluster: Arc<Mutex<StageCluster>>) -> Self {
+        Self { cluster }
+    }
+}
+
+impl FailureBackend for ProcessKiller {
+    fn label(&self) -> &'static str {
+        "process-killer"
+    }
+
+    fn enact(&mut self, stage: usize, iteration: u64) -> Result<()> {
+        let mut cluster = self.cluster.lock().unwrap_or_else(|e| e.into_inner());
+        cluster
+            .kill_and_respawn(stage)
+            .with_context(|| format!("enacting stage {stage} failure at iteration {iteration}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full cluster lifecycle tests live in tests/integration.rs (they
+    // need the built binary via CARGO_BIN_EXE); here we pin the
+    // launch-failure modes that must not hang the coordinator.
+
+    #[test]
+    fn spawn_of_a_missing_binary_fails_loudly() {
+        let err = StageCluster::spawn("/nonexistent/checkfree-not-here", 2)
+            .err()
+            .expect("spawn must fail");
+        assert!(format!("{err:#}").contains("spawning stage 0"), "{err:#}");
+    }
+
+    #[test]
+    fn child_that_exits_without_connecting_fails_the_launch() {
+        // `true` parses no argv and exits 0 immediately — the accept
+        // loop must notice the death instead of waiting out the
+        // deadline.
+        let start = Instant::now();
+        let err = StageCluster::spawn("/bin/true", 1).err().expect("launch must fail");
+        assert!(
+            format!("{err:#}").contains("before connecting"),
+            "{err:#}"
+        );
+        assert!(start.elapsed() < CONNECT_DEADLINE, "accept loop hung to the deadline");
+    }
+}

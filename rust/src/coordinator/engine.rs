@@ -104,7 +104,7 @@ use crate::metrics::{ActivationWatermark, Transfer, TransferLedger};
 use crate::model::{grad_sq_norm, GradBuffer, Stage};
 use crate::rng::Rng;
 use crate::runtime::{
-    DeviceBuffer, DevicePlane, ExecArg, HostTensor, LiteralCache, PlaneSet, Runtime,
+    DeviceBuffer, DevicePlane, ExecArg, HostTensor, LinkTransport, LiteralCache, PlaneSet, Runtime,
 };
 use crate::{anyhow, Context, Result};
 
@@ -199,11 +199,38 @@ pub struct PipelineEngine {
 impl PipelineEngine {
     pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
         cfg.validate()?;
-        let runtime = Runtime::load_config_opts(
+        let runtime = Runtime::load_config_wire(
             &cfg.artifacts_root,
             &cfg.model,
             cfg.plane_mode,
             cfg.link_path,
+            cfg.link_transport,
+            cfg.wan_profile,
+            cfg.wan_scale,
+        )
+        .with_context(|| format!("loading model config '{}'", cfg.model))?;
+        Self::new(runtime, cfg)
+    }
+
+    /// Like [`Self::from_config`], but stage-to-stage bytes move over a
+    /// caller-supplied [`LinkTransport`] — the multi-process cluster
+    /// hands in a [`crate::runtime::TcpTransport`] whose sockets lead
+    /// to real stage processes instead of loopback echo threads. The
+    /// config's `link_transport` must name the transport's kind so the
+    /// parity check in [`Self::new`] still holds.
+    pub fn from_config_with_transport(
+        cfg: &TrainConfig,
+        transport: std::sync::Arc<dyn LinkTransport>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let runtime = Runtime::load_config_transport(
+            &cfg.artifacts_root,
+            &cfg.model,
+            cfg.plane_mode,
+            cfg.link_path,
+            cfg.link_transport,
+            cfg.wan_profile,
+            transport,
         )
         .with_context(|| format!("loading model config '{}'", cfg.model))?;
         Self::new(runtime, cfg)
@@ -222,6 +249,20 @@ impl PipelineEngine {
                 "runtime was loaded with link path '{}' but the config wants '{}'",
                 runtime.link_path().label(),
                 cfg.link_path.label()
+            ));
+        }
+        if runtime.link_transport() != cfg.link_transport {
+            return Err(anyhow!(
+                "runtime was loaded with link transport '{}' but the config wants '{}'",
+                runtime.link_transport().label(),
+                cfg.link_transport.label()
+            ));
+        }
+        if runtime.wan_profile() != cfg.wan_profile {
+            return Err(anyhow!(
+                "runtime was loaded with wan profile '{}' but the config wants '{}'",
+                runtime.wan_profile().label(),
+                cfg.wan_profile.label()
             ));
         }
         let optimizer_path = Self::resolve_optimizer_path(&runtime, cfg)?;
@@ -397,6 +438,18 @@ impl PipelineEngine {
     /// How cross-plane link copies move bytes (per-stage planes).
     pub fn link_path(&self) -> LinkPath {
         self.runtime.link_path()
+    }
+
+    /// Which [`LinkTransport`] carries cross-plane bytes
+    /// (`--link-transport`: in-process direct/staged, or framed TCP).
+    pub fn link_transport(&self) -> crate::config::LinkTransportKind {
+        self.runtime.link_transport()
+    }
+
+    /// WAN emulation profile shaping every cross-plane hop
+    /// (`--wan-profile`; [`crate::config::WanProfile::Off`] = unshaped).
+    pub fn wan_profile(&self) -> crate::config::WanProfile {
+        self.runtime.wan_profile()
     }
 
     /// Whether link copies are prefetched on the sender (`--overlap`).

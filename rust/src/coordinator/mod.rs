@@ -11,12 +11,18 @@
 //! * [`engine`] — the pipeline-parallel training engine driving the PJRT
 //!   executables (embed/body/head fwd+bwd, gradient accumulation, Adam);
 //! * [`trainer`] — the leader loop tying engine + failure injector +
-//!   recovery strategy + metrics together.
+//!   recovery strategy + metrics together;
+//! * [`cluster`] — the multi-process launcher: one OS process per
+//!   plane's wire endpoint, a kept listener per stage for respawns, and
+//!   the [`cluster::ProcessKiller`] failure backend that turns sampled
+//!   failures into real SIGKILLs.
 
+pub mod cluster;
 pub mod engine;
 pub mod executor;
 pub mod schedule;
 pub mod trainer;
 
+pub use cluster::{ProcessKiller, StageCluster};
 pub use engine::{IterStats, PipelineEngine};
 pub use trainer::{RunSummary, Trainer, PAPER_ITER_SECONDS};

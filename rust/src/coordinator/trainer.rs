@@ -10,12 +10,15 @@
 //!   recovery downtime + non-overlapped checkpoint stalls. This is what
 //!   Table 2's "train time" column measures.
 
+use std::sync::Arc;
+
 use crate::config::TrainConfig;
 use crate::coordinator::PipelineEngine;
-use crate::failures::FailureInjector;
+use crate::failures::{FailureBackend, FailureInjector};
 use crate::metrics::{EventKind, RunRecord};
 use crate::netsim::Network;
 use crate::recovery::PolicyEngine;
+use crate::runtime::LinkTransport;
 use crate::{Context, Result};
 
 /// Baseline iteration seconds at paper scale (Table 2 checkpointing /
@@ -51,16 +54,37 @@ pub struct RunSummary {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
+        Self::new_with(cfg, None, None)
+    }
+
+    /// [`Self::new`] with the cluster seams exposed: an explicit
+    /// [`LinkTransport`] (the multi-process launcher's
+    /// [`crate::coordinator::StageCluster::transport`], whose sockets
+    /// lead to real stage processes) and a [`FailureBackend`] (its
+    /// `ProcessKiller`, so sampled failures SIGKILL those processes
+    /// before recovery runs). `None`/`None` is exactly `new`.
+    pub fn new_with(
+        cfg: TrainConfig,
+        transport: Option<Arc<dyn LinkTransport>>,
+        backend: Option<Box<dyn FailureBackend>>,
+    ) -> Result<Self> {
         cfg.validate()?;
-        let engine = PipelineEngine::from_config(&cfg).context("building pipeline engine")?;
+        let engine = match transport {
+            Some(t) => PipelineEngine::from_config_with_transport(&cfg, t),
+            None => PipelineEngine::from_config(&cfg),
+        }
+        .context("building pipeline engine")?;
         let total = engine.stages.len();
         // S0 (E/E⁻¹) failures are opt-in: `cfg.embed_can_fail` is only
         // accepted by validate() for strategies that restore stage 0
         // exactly (checkfree+, checkpoint, tiercheck), so the injector
         // never samples a failure the strategy cannot answer.
         let embed_can_fail = cfg.embed_can_fail;
-        let injector = FailureInjector::from_config(&cfg, total, embed_can_fail)
+        let mut injector = FailureInjector::from_config(&cfg, total, embed_can_fail)
             .context("building failure injector")?;
+        if let Some(b) = backend {
+            injector.set_backend(b);
+        }
         let mut policy = PolicyEngine::from_config(&cfg)?;
         let net = Network::round_robin(total);
         let record = RunRecord::new(cfg.strategy.label());
@@ -113,6 +137,11 @@ impl Trainer {
 
         for stage in self.injector.sample(self.global_step) {
             self.record.event(self.global_step, EventKind::StageFailure, Some(stage), 0.0);
+            // Make the failure real BEFORE recovery: with a process
+            // backend this SIGKILLs the stage's wire node and splices
+            // in its replacement, so the strategy's traffic crosses
+            // the healed wire. Without one it is a no-op.
+            self.injector.enact(stage, self.global_step)?;
             let outcome = self
                 .policy
                 .on_failure(&mut self.engine, &self.net, stage)

@@ -36,6 +36,24 @@ use crate::config::{FailureSpec, TraceMode, TrainConfig};
 use crate::netsim::{Network, Region};
 use crate::Result;
 
+/// A side-effecting failure executor. The injector *decides* which
+/// stages fail; a backend makes that decision TRUE in the world before
+/// recovery runs — the multi-process cluster's `ProcessKiller`
+/// SIGKILLs the stage's wire process and respawns a replacement, so
+/// "stage s failed" is a dead OS process, not a bookkeeping entry.
+/// With no backend installed (the default, and everything the paper
+/// simulates) failures stay purely logical.
+pub trait FailureBackend: Send + std::fmt::Debug {
+    fn label(&self) -> &'static str;
+    /// Make the failure of `stage` at `iteration` real. Runs *before*
+    /// the recovery strategy, synchronously: when it returns, the
+    /// failed node is gone and its replacement (if the backend spawns
+    /// one) is reachable — recovery traffic flows over the healed
+    /// wire. Errors abort the run: a backend that cannot enact or heal
+    /// has broken the experiment, not just one iteration.
+    fn enact(&mut self, stage: usize, iteration: u64) -> Result<()>;
+}
+
 #[derive(Debug)]
 pub struct FailureInjector {
     process: Box<dyn ChurnProcess>,
@@ -52,6 +70,9 @@ pub struct FailureInjector {
     /// correlated process.
     placement: Vec<Region>,
     recorder: Option<TraceRecorder>,
+    /// Side-effecting failure executor (multi-process cluster); `None`
+    /// keeps failures logical.
+    backend: Option<Box<dyn FailureBackend>>,
 }
 
 impl FailureInjector {
@@ -102,6 +123,7 @@ impl FailureInjector {
             verbatim: false,
             placement: net.placement,
             recorder: None,
+            backend: None,
         }
     }
 
@@ -118,6 +140,7 @@ impl FailureInjector {
             verbatim: true,
             placement: net.placement,
             recorder: None,
+            backend: None,
         }
     }
 
@@ -161,6 +184,29 @@ impl FailureInjector {
 
     pub fn failable(&self) -> &[usize] {
         &self.failable
+    }
+
+    /// Install a side-effecting backend: every sampled or forced
+    /// failure will be [`FailureBackend::enact`]ed via [`Self::enact`]
+    /// before recovery runs.
+    pub fn set_backend(&mut self, backend: Box<dyn FailureBackend>) {
+        self.backend = Some(backend);
+    }
+
+    /// Label of the installed backend, or `"logical"` when failures
+    /// are simulation-only.
+    pub fn backend_label(&self) -> &'static str {
+        self.backend.as_deref().map_or("logical", |b| b.label())
+    }
+
+    /// Enact one sampled failure through the backend (no-op without
+    /// one). [`Self::sample`] stays pure — the trainer calls this per
+    /// failed stage so enactment errors can abort the run.
+    pub fn enact(&mut self, stage: usize, iteration: u64) -> Result<()> {
+        match &mut self.backend {
+            Some(b) => b.enact(stage, iteration),
+            None => Ok(()),
+        }
     }
 
     pub fn process_label(&self) -> &'static str {

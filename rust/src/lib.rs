@@ -14,12 +14,12 @@
 //! |---|---|
 //! | [`config`] | run configuration: model presets, failure/recovery/schedule knobs |
 //! | [`manifest`] | the artifact manifest contract with the AOT pipeline |
-//! | [`runtime`] | PJRT client(s) + executable registries (HLO text → compiled; one client per stage under `--plane-mode per-stage`, the default), device-resident activation plane (`DeviceBuffer`/`Activation`/`PlaneSet`, metered cross-client link copies with a direct fast path + staged fallback, buffer donation), versioned per-plane param caches |
+//! | [`runtime`] | PJRT client(s) + executable registries (HLO text → compiled; one client per stage under `--plane-mode per-stage`, the default), device-resident activation plane (`DeviceBuffer`/`Activation`/`PlaneSet`, metered cross-client link copies with a direct fast path + staged fallback, buffer donation), pluggable link transports (`--link-transport`: in-process or CFW1-framed TCP, WAN-shaped via [`netsim`]), versioned per-plane param caches |
 //! | [`model`] | stage parameter store, deterministic init, Adam, grad norms |
 //! | [`data`] | synthetic corpus generator + tokenizer + domains (Table 3) |
-//! | [`coordinator`] | pipeline engine, microbatch schedules (incl. CheckFree+ swaps), trainer |
+//! | [`coordinator`] | pipeline engine, microbatch schedules (incl. CheckFree+ swaps), trainer, multi-process stage cluster (`--cluster`/`--role`) |
 //! | [`recovery`] | CheckFree, CheckFree+, checkpointing, redundant computation |
-//! | [`failures`] | seeded stage-failure injector (paper §3 failure pattern) |
+//! | [`failures`] | seeded stage-failure injector (paper §3 failure pattern) with pluggable enactment backends (simulated, or a real process kill) |
 //! | [`netsim`] | 5-region geo-distributed network model (paper §5 setup) |
 //! | [`sim`] | event-driven throughput simulator (Table 2 wall-clock) |
 //! | [`metrics`] | loss/throughput recorders, activation watermark, device↔host transfer ledger, CSV emitters for every figure |

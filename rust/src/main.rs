@@ -8,6 +8,9 @@
 //!                    [--host-staging true|false]
 //!                    [--plane-mode shared|per-stage]
 //!                    [--link-path auto|direct|staged]
+//!                    [--link-transport in-process|tcp-loopback]
+//!                    [--wan-profile off|gcp-5region] [--wan-scale S]
+//!                    [--cluster off|procs]
 //!                    [--overlap on|off]
 //!                    [--optimizer-path auto|device|host]
 //!                    [--churn-process bernoulli|poisson|bursty|correlated]
@@ -20,7 +23,15 @@
 //! checkfree costs    [--model M]                 # paper Table 1
 //! checkfree simulate [--rates 5,10,16]           # paper Table 2
 //! checkfree info     [--model M]                 # manifest summary
+//! checkfree --role stage:N --connect ADDR        # stage wire node
+//! checkfree --role stage:N --listen ADDR         # (inverse shape)
 //! ```
+//!
+//! `--role stage:N` turns the binary into one stage's **wire node**:
+//! it connects to (or accepts from) the coordinator and relays CFW1
+//! frames until clean EOF — this is the process the multi-process
+//! cluster (`train --cluster procs`) spawns per plane and the
+//! `ProcessKiller` failure backend SIGKILLs mid-run.
 //!
 //! Argument parsing is hand-rolled (no clap in the offline build); every
 //! flag has the form `--key value`.
@@ -90,6 +101,8 @@ fn run() -> Result<()> {
         }
     };
     match cmd {
+        // `--role stage:N` has no subcommand: the whole argv is flags.
+        "--role" => cmd_role(&Args::parse(&argv)?),
         "train" => cmd_train(&Args::parse(rest)?),
         "costs" => cmd_costs(&Args::parse(rest)?),
         "simulate" => cmd_simulate(&Args::parse(rest)?),
@@ -158,6 +171,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(l) = args.parse_opt::<checkfree::config::LinkPath>("link-path")? {
         cfg.link_path = l;
     }
+    if let Some(t) = args.parse_opt::<checkfree::config::LinkTransportKind>("link-transport")? {
+        cfg.link_transport = t;
+    }
+    if let Some(w) = args.parse_opt::<checkfree::config::WanProfile>("wan-profile")? {
+        cfg.wan_profile = w;
+    }
+    if let Some(s) = args.parse_opt::<f64>("wan-scale")? {
+        cfg.wan_scale = s;
+    }
     if let Some(c) = args.parse_opt::<checkfree::failures::ChurnProcessKind>("churn-process")? {
         cfg.churn_process = c;
     }
@@ -186,7 +208,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     println!("config: {}", cfg.to_json());
-    let mut trainer = Trainer::new(cfg)?;
+    let mut trainer = match args.get("cluster").unwrap_or("off") {
+        "off" => Trainer::new(cfg)?,
+        "procs" => launch_cluster_trainer(cfg)?,
+        other => return Err(anyhow!("invalid --cluster '{other}' (want off|procs)")),
+    };
     let summary = trainer.run()?;
     println!(
         "\nrun '{}': {} iterations, {} failures, final train loss {:.4}, \
@@ -207,6 +233,75 @@ fn cmd_train(args: &Args) -> Result<()> {
         write_csv(&events_path, &trainer.record.events_csv())?;
         println!("wrote {out} and {events_path}");
     }
+    Ok(())
+}
+
+/// `train --cluster procs`: spawn one `--role stage:N` wire-node
+/// process per plane from this very binary, route every cross-plane
+/// transfer through them, and install the [`ProcessKiller`] backend so
+/// every sampled failure SIGKILLs a real process mid-run.
+fn launch_cluster_trainer(cfg: TrainConfig) -> Result<Trainer> {
+    use checkfree::config::{LinkTransportKind, PlaneMode};
+    use checkfree::coordinator::{ProcessKiller, StageCluster};
+    use checkfree::runtime::Runtime;
+    use std::sync::{Arc, Mutex};
+
+    if cfg.plane_mode != PlaneMode::PerStage {
+        return Err(anyhow!("--cluster procs needs --plane-mode per-stage (one process per stage)"));
+    }
+    if cfg.link_transport != LinkTransportKind::TcpLoopback {
+        return Err(anyhow!(
+            "--cluster procs needs --link-transport tcp-loopback (the wire IS the cluster)"
+        ));
+    }
+    let manifest = Manifest::load_config(&cfg.artifacts_root, &cfg.model)?;
+    let planes = Runtime::plane_count_for(&manifest, cfg.plane_mode);
+    let exe = std::env::current_exe().map_err(|e| anyhow!("resolving own binary: {e}"))?;
+    let cluster = StageCluster::spawn(exe, planes)?;
+    println!(
+        "cluster: {planes} stage processes up (pids {:?})",
+        (0..planes).filter_map(|p| cluster.pid(p)).collect::<Vec<_>>()
+    );
+    let cluster = Arc::new(Mutex::new(cluster));
+    let transport = cluster.lock().unwrap_or_else(|e| e.into_inner()).transport();
+    Trainer::new_with(cfg, Some(transport), Some(Box::new(ProcessKiller::new(cluster))))
+}
+
+/// `--role stage:N`: run as one stage's wire node. Exactly one of
+/// `--connect ADDR` (dial the coordinator's kept listener — the
+/// cluster launcher's shape) or `--listen ADDR` (bind and wait for the
+/// coordinator to dial — the manual multi-host shape) must be given.
+/// Relays CFW1 frames until the peer closes cleanly.
+fn cmd_role(args: &Args) -> Result<()> {
+    use std::net::{TcpListener, TcpStream};
+
+    let role = args.get("role").ok_or_else(|| anyhow!("--role needs a value"))?;
+    let stage: usize = role
+        .strip_prefix("stage:")
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| anyhow!("invalid --role '{role}' (want stage:N)"))?;
+    let stream = match (args.get("connect"), args.get("listen")) {
+        (Some(addr), None) => TcpStream::connect(addr)
+            .map_err(|e| anyhow!("stage {stage}: connecting to coordinator at {addr}: {e}"))?,
+        (None, Some(addr)) => {
+            let listener = TcpListener::bind(addr)
+                .map_err(|e| anyhow!("stage {stage}: binding {addr}: {e}"))?;
+            let (stream, peer) = listener
+                .accept()
+                .map_err(|e| anyhow!("stage {stage}: accepting coordinator: {e}"))?;
+            eprintln!("stage {stage}: coordinator connected from {peer}");
+            stream
+        }
+        _ => {
+            return Err(anyhow!(
+                "--role needs exactly one of --connect ADDR or --listen ADDR"
+            ))
+        }
+    };
+    stream.set_nodelay(true).map_err(|e| anyhow!("stage {stage}: set_nodelay: {e}"))?;
+    eprintln!("stage {stage}: wire node up (pid {})", std::process::id());
+    let frames = checkfree::runtime::transport::echo_frames(stream)?;
+    eprintln!("stage {stage}: wire node exiting after {frames} frames");
     Ok(())
 }
 

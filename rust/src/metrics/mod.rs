@@ -89,6 +89,8 @@ struct StageCounters {
     link_overlapped: AtomicU64,
     link_blocking: AtomicU64,
     link_wait_ns: AtomicU64,
+    link_wire_bytes: AtomicU64,
+    link_wire_ns: AtomicU64,
     donated_buffers: AtomicU64,
     param_pulls: AtomicU64,
     tier_backups: AtomicU64,
@@ -129,6 +131,14 @@ pub enum Transfer {
     /// The consuming side stalled `ns` nanoseconds completing a link
     /// (the wall-clock the overlap bench gate compares).
     LinkWaitNs { ns: u64 },
+    /// `bytes` travelled a **wire** link transport (TCP frames or the
+    /// WAN-shaped wrapper, `--link-transport tcp-loopback` /
+    /// `--wan-profile`), taking `ns` nanoseconds on the wire. `bytes` is
+    /// the full frame length (header + payload), so it strictly exceeds
+    /// the tensor's `link_bytes` for the same copy; recorded *in
+    /// addition to* the copy's `LinkStaged` billing, never replacing it.
+    /// Zero on the in-process transport by construction.
+    LinkWire { bytes: u64, ns: u64 },
     /// An execute received ownership of a dead input buffer whose spec
     /// aliases an output and released it at execute completion.
     Donation,
@@ -229,6 +239,13 @@ pub struct TransferSnapshot {
     /// Nanoseconds the consuming side stalled completing link copies
     /// (full copy time for blocking hops, ≈0 for overlapped ones).
     pub link_wait_ns: u64,
+    /// Frame bytes (header + payload) carried by a wire link transport
+    /// (`--link-transport tcp-loopback`, WAN-shaped or not). Zero on the
+    /// in-process transport.
+    pub link_wire_bytes: u64,
+    /// Nanoseconds those frames spent on the wire (serialize → send →
+    /// receive → deserialize, shaping delay included).
+    pub link_wire_ns: u64,
     /// Dead input buffers donated to an execute (spec-aliased to an
     /// output and released at execute completion).
     pub donated_buffers: u64,
@@ -268,6 +285,8 @@ impl TransferSnapshot {
             link_overlapped: self.link_overlapped.saturating_sub(earlier.link_overlapped),
             link_blocking: self.link_blocking.saturating_sub(earlier.link_blocking),
             link_wait_ns: self.link_wait_ns.saturating_sub(earlier.link_wait_ns),
+            link_wire_bytes: self.link_wire_bytes.saturating_sub(earlier.link_wire_bytes),
+            link_wire_ns: self.link_wire_ns.saturating_sub(earlier.link_wire_ns),
             donated_buffers: self.donated_buffers.saturating_sub(earlier.donated_buffers),
             param_pulls: self.param_pulls.saturating_sub(earlier.param_pulls),
             tier_backups: self.tier_backups.saturating_sub(earlier.tier_backups),
@@ -330,6 +349,10 @@ impl TransferLedger {
             Transfer::LinkWaitNs { ns } => {
                 s.link_wait_ns.fetch_add(ns, Ordering::Relaxed);
             }
+            Transfer::LinkWire { bytes, ns } => {
+                s.link_wire_bytes.fetch_add(bytes, Ordering::Relaxed);
+                s.link_wire_ns.fetch_add(ns, Ordering::Relaxed);
+            }
             Transfer::Donation => {
                 s.donated_buffers.fetch_add(1, Ordering::Relaxed);
             }
@@ -359,6 +382,8 @@ impl TransferLedger {
             link_overlapped: s.link_overlapped.load(Ordering::Relaxed),
             link_blocking: s.link_blocking.load(Ordering::Relaxed),
             link_wait_ns: s.link_wait_ns.load(Ordering::Relaxed),
+            link_wire_bytes: s.link_wire_bytes.load(Ordering::Relaxed),
+            link_wire_ns: s.link_wire_ns.load(Ordering::Relaxed),
             donated_buffers: s.donated_buffers.load(Ordering::Relaxed),
             param_pulls: s.param_pulls.load(Ordering::Relaxed),
             tier_backups: s.tier_backups.load(Ordering::Relaxed),
@@ -383,6 +408,8 @@ impl TransferLedger {
             total.link_overlapped += s.link_overlapped;
             total.link_blocking += s.link_blocking;
             total.link_wait_ns += s.link_wait_ns;
+            total.link_wire_bytes += s.link_wire_bytes;
+            total.link_wire_ns += s.link_wire_ns;
             total.donated_buffers += s.donated_buffers;
             total.param_pulls += s.param_pulls;
             total.tier_backups += s.tier_backups;
@@ -411,6 +438,8 @@ impl TransferLedger {
             s.link_overlapped.store(0, Ordering::Relaxed);
             s.link_blocking.store(0, Ordering::Relaxed);
             s.link_wait_ns.store(0, Ordering::Relaxed);
+            s.link_wire_bytes.store(0, Ordering::Relaxed);
+            s.link_wire_ns.store(0, Ordering::Relaxed);
             s.donated_buffers.store(0, Ordering::Relaxed);
             s.param_pulls.store(0, Ordering::Relaxed);
             s.tier_backups.store(0, Ordering::Relaxed);
@@ -866,6 +895,10 @@ mod tests {
                 Transfer::LinkWaitNs { ns: 99 },
                 TransferSnapshot { link_wait_ns: 99, ..Default::default() },
             ),
+            (
+                Transfer::LinkWire { bytes: 128, ns: 77 },
+                TransferSnapshot { link_wire_bytes: 128, link_wire_ns: 77, ..Default::default() },
+            ),
             (Transfer::Donation, TransferSnapshot { donated_buffers: 1, ..Default::default() }),
             (Transfer::ParamPull, TransferSnapshot { param_pulls: 1, ..Default::default() }),
             (
@@ -878,6 +911,30 @@ mod tests {
             l.record(0, transfer);
             assert_eq!(l.snapshot(), want, "{transfer:?}");
         }
+    }
+
+    #[test]
+    fn wire_columns_ride_on_top_of_staged_billing() {
+        // A TCP link copy bills LinkStaged (the copy itself: it IS a
+        // device→host→device hop at each end) *plus* LinkWire for the
+        // frame traffic — the wire columns never replace or inflate the
+        // copy/host accounting, and the frame is strictly bigger than
+        // the payload (header bytes).
+        let l = TransferLedger::new(3);
+        l.record(1, Transfer::LinkStaged { bytes: 64 });
+        l.record(1, Transfer::LinkWire { bytes: 64 + 30, ns: 1_000 });
+        let s = l.stage_snapshot(1);
+        assert_eq!((s.link_copies, s.link_staged), (1, 1));
+        assert_eq!((s.link_wire_bytes, s.link_wire_ns), (94, 1_000));
+        assert!(s.link_wire_bytes > s.link_bytes);
+        assert_eq!((s.host_syncs, s.uploads), (0, 0));
+        assert_eq!(l.stage_snapshot(0).link_wire_bytes, 0);
+        let before = l.snapshot();
+        l.record(2, Transfer::LinkWire { bytes: 10, ns: 5 });
+        let delta = l.snapshot().since(&before);
+        assert_eq!((delta.link_wire_bytes, delta.link_wire_ns), (10, 5));
+        l.reset();
+        assert_eq!(l.snapshot(), TransferSnapshot::default());
     }
 
     #[test]

@@ -50,9 +50,13 @@
 //! out in `link_direct`/`link_staged` — never as `host_syncs`/`uploads`
 //! (either way it is inter-device staging, not data delivered to the
 //! host program). Keeping the hop behind this one function is the
-//! point: a real DMA/RDMA transport slots in here without touching the
-//! executor, and the per-stage bench gate (`link_staged == 0`) proves
-//! the fast path engages instead of silently degrading.
+//! point: **how** the bytes move is the plane's pluggable
+//! [`LinkTransport`] (`--link-transport`, see
+//! [`crate::runtime::transport`]) — the in-process direct/staged pair
+//! above, a real TCP wire, or a WAN-shaped wrapper — slotted in without
+//! touching the executor, and the per-stage bench gate
+//! (`link_staged == 0`) proves the in-process fast path engages instead
+//! of silently degrading.
 //!
 //! **Overlapped links.** A blocking hop puts the whole copy on the
 //! receiving stage's critical path. [`LinkSlot`] splits the hop into an
@@ -77,22 +81,12 @@
 //! the device is a cache of it. That is the same lazy-sync shape
 //! FFTrainer uses for its almost-free failover (PAPERS.md).
 
-use std::sync::atomic::{AtomicU8, Ordering};
-
 use crate::config::{LinkPath, Overlap};
 use crate::manifest::IoSpec;
 use crate::metrics::{Transfer, TransferLedger};
+use crate::runtime::transport::LinkTransport;
 use crate::runtime::HostTensor;
 use crate::{anyhow, Context, Result};
-
-/// Process-wide verdict on whether the PJRT plugin can service a
-/// **cross-client** `PjRtBuffer::copy_to_device` (the direct link
-/// path). A plugin property, so one probe settles it for the process
-/// lifetime — the same idiom as `Executable::out_layout`.
-const DIRECT_UNKNOWN: u8 = 0;
-const DIRECT_OK: u8 = 1;
-const DIRECT_UNAVAILABLE: u8 = 2;
-static DIRECT_LINKS: AtomicU8 = AtomicU8::new(DIRECT_UNKNOWN);
 
 /// A tensor resident on a PJRT device, tagged with the host-visible
 /// spec it was created under (shape/dtype validation without a device
@@ -225,83 +219,25 @@ impl DeviceBuffer {
         Ok(out)
     }
 
-    /// Perform the cross-plane hop *now*, recording the
+    /// Perform the cross-plane hop *now* through `dst`'s
+    /// [`LinkTransport`], recording the
     /// `link_copies`/`link_bytes`/`link_direct`/`link_staged` columns
-    /// but **not** the overlap classification — the caller decides
-    /// whether this copy was prefetched ([`LinkSlot::issue`] →
-    /// `link_overlapped`) or consumer-blocking ([`Self::copy_to_plane`]
-    /// → `link_blocking`). Callers must have ruled out the same-plane
-    /// case.
-    fn copy_now(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+    /// (plus wire columns on wire transports) but **not** the overlap
+    /// classification — the caller decides whether this copy was
+    /// prefetched ([`LinkSlot::issue`] → `link_overlapped`) or
+    /// consumer-blocking ([`Self::copy_to_plane`] → `link_blocking`).
+    /// Callers must have ruled out the same-plane case.
+    pub(crate) fn copy_now(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
         debug_assert_ne!(self.plane, dst.idx, "copy_now called for a same-plane buffer");
-        match dst.link {
-            LinkPath::Staged => self.copy_staged(dst, stage),
-            LinkPath::Direct => {
-                let buf = self.copy_direct(dst)?;
-                DIRECT_LINKS.store(DIRECT_OK, Ordering::Relaxed);
-                dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
-                Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
-            }
-            LinkPath::Auto => match DIRECT_LINKS.load(Ordering::Relaxed) {
-                DIRECT_UNAVAILABLE => self.copy_staged(dst, stage),
-                DIRECT_OK => {
-                    // Capability already established: a failure now is
-                    // a real runtime problem (OOM, dead device), not a
-                    // missing feature — surface it instead of silently
-                    // degrading a mid-run measurement to staged hops.
-                    let buf = self.copy_direct(dst)?;
-                    dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
-                    Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
-                }
-                _ => match self.copy_direct(dst) {
-                    // The one probe. compare_exchange so concurrent
-                    // first hops cannot overwrite each other's verdict.
-                    Ok(buf) => {
-                        let _ = DIRECT_LINKS.compare_exchange(
-                            DIRECT_UNKNOWN,
-                            DIRECT_OK,
-                            Ordering::Relaxed,
-                            Ordering::Relaxed,
-                        );
-                        dst.ledger.record(stage, Transfer::LinkDirect { bytes: self.spec.bytes() });
-                        Ok(DeviceBuffer { buf, spec: self.spec, plane: dst.idx })
-                    }
-                    Err(e) => {
-                        // Probe verdict: this plugin cannot transfer
-                        // across clients. Degrade to the staged hop for
-                        // the process lifetime — loudly, exactly once,
-                        // so a CI leg silently running staged cannot
-                        // masquerade as a direct-path measurement (the
-                        // ledger's link_staged column records it too).
-                        if DIRECT_LINKS
-                            .compare_exchange(
-                                DIRECT_UNKNOWN,
-                                DIRECT_UNAVAILABLE,
-                                Ordering::Relaxed,
-                                Ordering::Relaxed,
-                            )
-                            .is_ok()
-                        {
-                            eprintln!(
-                                "warning: direct cross-plane transfer unavailable \
-                                 ({e:#}); all link copies will take the staged \
-                                 device→host→device path"
-                            );
-                        }
-                        // Whatever the race outcome, THIS buffer still
-                        // needs to move: take the always-available hop.
-                        self.copy_staged(dst, stage)
-                    }
-                },
-            },
-        }
+        dst.transport.transfer(self, dst, stage)
     }
 
-    /// The direct path: hand the transfer to the plugin
+    /// The in-process direct path: hand the transfer to the plugin
     /// (`PjRtBuffer::copy_to_device` onto `dst`'s first device). No
     /// Rust-side literal marshal; the plugin moves the bytes
-    /// same-process.
-    fn copy_direct(&self, dst: &DevicePlane) -> Result<xla::PjRtBuffer> {
+    /// same-process. Metering is the caller's job
+    /// ([`crate::runtime::transport::InProcess`]).
+    pub(crate) fn copy_direct(&self, dst: &DevicePlane) -> Result<xla::PjRtBuffer> {
         let devices = dst.client.devices();
         let device = devices.into_iter().next().ok_or_else(|| {
             anyhow!("link copy: destination plane {} exposes no devices", dst.idx)
@@ -316,7 +252,9 @@ impl DeviceBuffer {
 
     /// The staged fallback: device→host literal→device, exactly the hop
     /// every cross-plane send paid before the direct path existed.
-    fn copy_staged(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
+    /// Records its own `link_staged` entry (the wire transport reuses
+    /// the same column semantics for its staged-at-each-end hop).
+    pub(crate) fn copy_staged(self, dst: &DevicePlane, stage: usize) -> Result<DeviceBuffer> {
         let lit = self.buf.to_literal_sync().with_context(|| {
             format!(
                 "link copy {:?} {}: staging plane {} → {} through host",
@@ -345,9 +283,13 @@ pub struct DevicePlane<'a> {
     /// Position of this plane in the runtime's client list — the value
     /// stamped into every [`DeviceBuffer`] it mints.
     idx: usize,
-    /// How link copies **arriving** at this plane move their bytes
-    /// (see [`LinkPath`]); stamped in from the runtime's configuration.
+    /// How in-process link copies **arriving** at this plane move their
+    /// bytes (see [`LinkPath`]); stamped in from the runtime's
+    /// configuration.
     link: LinkPath,
+    /// The transport that services link copies arriving at this plane
+    /// (`--link-transport`); stamped in from the runtime, which owns it.
+    transport: &'a dyn LinkTransport,
 }
 
 // SAFETY: the wrapped references are shared across the executor's worker
@@ -365,8 +307,9 @@ impl<'a> DevicePlane<'a> {
         ledger: &'a TransferLedger,
         idx: usize,
         link: LinkPath,
+        transport: &'a dyn LinkTransport,
     ) -> Self {
-        Self { client, ledger, idx, link }
+        Self { client, ledger, idx, link, transport }
     }
 
     /// This plane's index within its [`PlaneSet`] (0 = the shared plane
@@ -378,6 +321,17 @@ impl<'a> DevicePlane<'a> {
     /// The link-copy policy of hops arriving at this plane.
     pub fn link_path(&self) -> LinkPath {
         self.link
+    }
+
+    /// The transport servicing link copies arriving at this plane.
+    pub fn transport(&self) -> &dyn LinkTransport {
+        self.transport
+    }
+
+    /// The underlying PJRT client — for transports that re-materialize
+    /// a buffer on this plane (the wire's staged re-entry).
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        self.client
     }
 
     /// **Metered** host→device upload of an already-marshalled literal
@@ -521,18 +475,13 @@ impl<'p> LinkSlot<'p> {
     }
 
     /// Can a prefetched copy be serviced without serializing the sender?
-    /// Only the direct path qualifies: the staged fallback's
-    /// `to_literal_sync` would stall the sending worker for the same
-    /// wall-clock it was supposed to hide. Under `Auto` the verdict
-    /// follows the process-wide probe state — `UNKNOWN` optimistically
-    /// prefetches (the probe itself happens inside the copy, and a
-    /// probe-failure hop still lands staged exactly once, loudly).
+    /// The destination plane's transport decides: only the in-process
+    /// direct path qualifies — the staged fallback's `to_literal_sync`
+    /// and every wire hop's device→host exit would stall the sending
+    /// worker for the same wall-clock they were supposed to hide (see
+    /// [`LinkTransport::prefetchable`]).
     fn prefetchable(&self) -> bool {
-        match self.dst.link {
-            LinkPath::Direct => true,
-            LinkPath::Staged => false,
-            LinkPath::Auto => DIRECT_LINKS.load(Ordering::Relaxed) != DIRECT_UNAVAILABLE,
-        }
+        self.dst.transport.prefetchable(self.dst.link)
     }
 
     /// Issue the link for one activation on the **sending** worker.
@@ -979,6 +928,99 @@ mod tests {
             let d = link.complete(planes.plane(1), 1).unwrap();
             let s1 = ledger.stage_snapshot(1);
             assert_eq!((s1.link_copies, s1.link_wait_ns), (0, 0), "owning plane: no hop");
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        fn runtime_with_transport(kind: crate::config::LinkTransportKind) -> Runtime {
+            Runtime::load_config_wire(
+                default_artifacts_root(),
+                "tiny",
+                PlaneMode::PerStage,
+                crate::config::LinkPath::Auto,
+                kind,
+                crate::config::WanProfile::Off,
+                1.0,
+            )
+            .expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn tcp_loopback_link_copy_is_bitwise_and_bills_wire_columns() {
+            // The wire-transport unit contract: a tcp-loopback hop
+            // delivers identical bits, lands in the staged split (it IS
+            // staged at each end), and bills the new wire columns on
+            // top — frame bytes ≥ payload bytes (header overhead).
+            let rt = runtime_with_transport(crate::config::LinkTransportKind::TcpLoopback);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2, 2], &[1.0e-8, -3.5, 7.25, -0.0]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+            let d = d.copy_to_plane(planes.plane(1), 1).unwrap();
+            assert_eq!(d.plane(), 1);
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_staged, s1.link_direct), (1, 1, 0));
+            assert_eq!(s1.link_bytes, 16);
+            assert!(s1.link_wire_bytes > 16, "frame must carry header + payload");
+            assert!(s1.link_wire_ns > 0, "wire time must be billed");
+            // Wire traffic is never host-program traffic.
+            assert_eq!((s1.host_syncs, s1.uploads), (0, 0));
+            // And the invariant the overlap machinery relies on.
+            assert_eq!(s1.link_overlapped + s1.link_blocking, s1.link_copies);
+            let back = d.to_host(planes.plane(1), 1).unwrap();
+            assert_eq!(back, t, "the wire changed the bits");
+        }
+
+        #[test]
+        fn wire_transport_never_prefetches_but_keeps_the_invariant() {
+            // Overlap on + tcp transport: the hop must defer to the
+            // receiver (a wire hop starts with a device→host sync that
+            // would serialize the sender), landing as link_blocking —
+            // so link_overlapped + link_blocking == link_copies holds
+            // on the wire too.
+            let rt = runtime_with_transport(crate::config::LinkTransportKind::TcpLoopback);
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![3], &[0.5, 1.5, 2.5]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+
+            let slot = LinkSlot::new(planes.plane(1), 1, Overlap::On);
+            let link = slot.issue(Activation::Device(d)).unwrap();
+            assert!(!link.is_prefetched(), "wire destinations must defer");
+            assert_eq!(ledger.stage_snapshot(1).link_copies, 0);
+
+            let d = link.complete(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!((s1.link_copies, s1.link_blocking, s1.link_overlapped), (1, 1, 0));
+            assert!(s1.link_wait_ns > 0);
+            assert!(s1.link_wire_bytes > 0);
+            assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
+        }
+
+        #[test]
+        fn shaped_transport_delays_and_bills_wire_time() {
+            // gcp-5region shaping over the in-process transport: bits
+            // unchanged, wire ns billed (the emulated delay), zero wire
+            // bytes (no frames — the inner transport is in-process).
+            let rt = Runtime::load_config_wire(
+                default_artifacts_root(),
+                "tiny",
+                PlaneMode::PerStage,
+                crate::config::LinkPath::Auto,
+                crate::config::LinkTransportKind::InProcess,
+                crate::config::WanProfile::Gcp5Region,
+                1e-6, // keep the emulated WAN out of the test's wall-clock
+            )
+            .expect("run `make artifacts`");
+            let ledger = TransferLedger::new(3);
+            let planes = rt.plane_set(&ledger);
+            let t = HostTensor::from_f32(vec![2], &[6.5, -7.0]);
+            let d = planes.plane(0).upload(0, &t).unwrap();
+            let d = d.copy_to_plane(planes.plane(1), 1).unwrap();
+            let s1 = ledger.stage_snapshot(1);
+            assert_eq!(s1.link_copies, 1);
+            assert_eq!(s1.link_wire_bytes, 0, "shaped-over-in-process moves no frames");
+            assert!(s1.link_wire_ns > 0, "the emulated delay must be billed");
+            assert_eq!(s1.link_overlapped + s1.link_blocking, s1.link_copies);
             assert_eq!(d.to_host(planes.plane(1), 1).unwrap(), t);
         }
 

@@ -72,12 +72,14 @@
 pub mod buffer;
 pub mod litcache;
 mod tensor;
+pub mod transport;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::config::{LinkPath, PlaneMode};
+use crate::config::{LinkPath, LinkTransportKind, PlaneMode, WanProfile};
 use crate::manifest::{Artifact, IoSpec, Manifest};
 use crate::metrics::{Transfer, TransferLedger};
 use crate::{anyhow, Context, Result};
@@ -85,6 +87,7 @@ use crate::{anyhow, Context, Result};
 pub use buffer::{Activation, DeviceBuffer, DevicePlane, InFlightLink, LinkSlot, PlaneSet};
 pub use litcache::{LiteralCache, SharedLiterals};
 pub use tensor::HostTensor;
+pub use transport::{InProcess, LinkTransport, Shaped, TcpTransport};
 
 /// How this executable's plugin delivers a **single-output** result —
 /// count-ambiguous until probed once (see `Executable::out_layout`).
@@ -544,9 +547,18 @@ pub struct Runtime {
     /// Per-plane executable registry, parallel to `clients`.
     exes: Vec<BTreeMap<String, Executable>>,
     plane_mode: PlaneMode,
-    /// How cross-plane link copies move bytes (stamped into every
-    /// [`DevicePlane`] this runtime builds; see [`LinkPath`]).
+    /// How **in-process** cross-plane link copies move bytes (stamped
+    /// into every [`DevicePlane`] this runtime builds; see [`LinkPath`]).
     link_path: LinkPath,
+    /// The link transport servicing every cross-plane hop
+    /// (`--link-transport` / `--wan-profile`; see
+    /// [`transport::LinkTransport`]). Owned here, borrowed by every
+    /// [`DevicePlane`].
+    transport: Arc<dyn LinkTransport>,
+    /// Which base transport `transport` was built from — the engine's
+    /// config-parity check reads this back.
+    transport_kind: LinkTransportKind,
+    wan_profile: WanProfile,
     pub manifest: Manifest,
 }
 
@@ -575,18 +587,56 @@ impl Runtime {
         Self::load_opts(manifest, plane_mode, LinkPath::from_env())
     }
 
-    /// Load with an explicit plane layout **and** link-copy policy (the
-    /// engine passes `TrainConfig::{plane_mode, link_path}` through
-    /// here).
+    /// Load with an explicit plane layout **and** link-copy policy. The
+    /// link transport follows the `CHECKFREE_LINK_TRANSPORT` /
+    /// `CHECKFREE_WAN_PROFILE` env defaults (the CI matrix's lever for
+    /// running the whole test suite over the wire); see
+    /// [`Self::load_wire`] for the fully explicit form.
     pub fn load_opts(
         manifest: Manifest,
         plane_mode: PlaneMode,
         link_path: LinkPath,
     ) -> Result<Self> {
-        let planes = match plane_mode {
-            PlaneMode::Shared => 1,
-            PlaneMode::PerStage => manifest.config.body_stages + 1,
-        };
+        Self::load_wire(
+            manifest,
+            plane_mode,
+            link_path,
+            LinkTransportKind::from_env(),
+            WanProfile::from_env(),
+            1.0,
+        )
+    }
+
+    /// Load with every link knob explicit (the engine passes
+    /// `TrainConfig::{plane_mode, link_path, link_transport,
+    /// wan_profile, wan_scale}` through here).
+    pub fn load_wire(
+        manifest: Manifest,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+        transport_kind: LinkTransportKind,
+        wan_profile: WanProfile,
+        wan_scale: f64,
+    ) -> Result<Self> {
+        let planes = Self::plane_count_for(&manifest, plane_mode);
+        let transport = transport::build_transport(transport_kind, wan_profile, wan_scale, planes)?;
+        Self::load_transport(manifest, plane_mode, link_path, transport_kind, wan_profile, transport)
+    }
+
+    /// Load with a caller-built transport — the multi-process cluster
+    /// path, where the per-plane sockets connect to spawned `--role
+    /// stage:N` processes and must exist before the runtime does.
+    /// `transport_kind`/`wan_profile` describe what was built (the
+    /// engine's parity check reads them back).
+    pub fn load_transport(
+        manifest: Manifest,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+        transport_kind: LinkTransportKind,
+        wan_profile: WanProfile,
+        transport: Arc<dyn LinkTransport>,
+    ) -> Result<Self> {
+        let planes = Self::plane_count_for(&manifest, plane_mode);
         let mut clients = Vec::with_capacity(planes);
         let mut exes = Vec::with_capacity(planes);
         for plane in 0..planes {
@@ -604,7 +654,26 @@ impl Runtime {
             clients.push(client);
             exes.push(registry);
         }
-        Ok(Self { clients, exes, plane_mode, link_path, manifest })
+        Ok(Self {
+            clients,
+            exes,
+            plane_mode,
+            link_path,
+            transport,
+            transport_kind,
+            wan_profile,
+            manifest,
+        })
+    }
+
+    /// How many planes (PJRT clients) `plane_mode` implies for this
+    /// manifest — also how many wire endpoints / shaped placements the
+    /// transport needs.
+    pub fn plane_count_for(manifest: &Manifest, plane_mode: PlaneMode) -> usize {
+        match plane_mode {
+            PlaneMode::Shared => 1,
+            PlaneMode::PerStage => manifest.config.body_stages + 1,
+        }
     }
 
     /// Convenience: load by artifacts root + config name (shared plane).
@@ -631,6 +700,49 @@ impl Runtime {
         link_path: LinkPath,
     ) -> Result<Self> {
         Self::load_opts(Manifest::load_config(artifacts_root, config)?, plane_mode, link_path)
+    }
+
+    /// Convenience: load by artifacts root + config name with every
+    /// link knob explicit (see [`Self::load_wire`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn load_config_wire(
+        artifacts_root: impl AsRef<std::path::Path>,
+        config: &str,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+        transport_kind: LinkTransportKind,
+        wan_profile: WanProfile,
+        wan_scale: f64,
+    ) -> Result<Self> {
+        Self::load_wire(
+            Manifest::load_config(artifacts_root, config)?,
+            plane_mode,
+            link_path,
+            transport_kind,
+            wan_profile,
+            wan_scale,
+        )
+    }
+
+    /// Convenience: load by artifacts root + config name with a
+    /// caller-built transport (see [`Self::load_transport`]).
+    pub fn load_config_transport(
+        artifacts_root: impl AsRef<std::path::Path>,
+        config: &str,
+        plane_mode: PlaneMode,
+        link_path: LinkPath,
+        transport_kind: LinkTransportKind,
+        wan_profile: WanProfile,
+        transport: Arc<dyn LinkTransport>,
+    ) -> Result<Self> {
+        Self::load_transport(
+            Manifest::load_config(artifacts_root, config)?,
+            plane_mode,
+            link_path,
+            transport_kind,
+            wan_profile,
+            transport,
+        )
     }
 
     /// Does `plane` (of `planes` total) execute artifact `name`? See the
@@ -678,6 +790,23 @@ impl Runtime {
         self.link_path
     }
 
+    /// The base link-transport kind this runtime was loaded with.
+    pub fn link_transport(&self) -> LinkTransportKind {
+        self.transport_kind
+    }
+
+    /// The WAN emulation profile this runtime was loaded with.
+    pub fn wan_profile(&self) -> WanProfile {
+        self.wan_profile
+    }
+
+    /// The live transport instance (shared with every plane this
+    /// runtime builds) — the cluster holds this to splice in replacement
+    /// node connections after a process kill.
+    pub fn transport_impl(&self) -> Arc<dyn LinkTransport> {
+        Arc::clone(&self.transport)
+    }
+
     /// Number of PJRT clients (1 shared, or one per stage).
     pub fn plane_count(&self) -> usize {
         self.clients.len()
@@ -688,7 +817,7 @@ impl Runtime {
     /// is billed to `ledger`. Cheap — engine and benches build one per
     /// call site.
     pub fn device_plane<'a>(&'a self, ledger: &'a TransferLedger) -> DevicePlane<'a> {
-        DevicePlane::new(&self.clients[0], ledger, 0, self.link_path)
+        DevicePlane::new(&self.clients[0], ledger, 0, self.link_path, self.transport.as_ref())
     }
 
     /// Build the full stage→plane map (one [`DevicePlane`] per client,
@@ -699,7 +828,9 @@ impl Runtime {
             self.clients
                 .iter()
                 .enumerate()
-                .map(|(idx, c)| DevicePlane::new(c, ledger, idx, self.link_path))
+                .map(|(idx, c)| {
+                    DevicePlane::new(c, ledger, idx, self.link_path, self.transport.as_ref())
+                })
                 .collect(),
         )
     }

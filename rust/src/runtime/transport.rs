@@ -1,0 +1,1009 @@
+//! Pluggable link transports: **how** a cross-plane link copy moves its
+//! bytes, decoupled from **when** it runs and how it is billed.
+//!
+//! [`DeviceBuffer::copy_to_plane`] / [`crate::runtime::LinkSlot::issue`]
+//! remain the only call sites that move a buffer between planes; both
+//! now dispatch the hop through the plane's [`LinkTransport`] (stamped
+//! in by [`crate::runtime::Runtime`] from `--link-transport` /
+//! `CHECKFREE_LINK_TRANSPORT`):
+//!
+//! ```text
+//!   copy_to_plane / LinkSlot::issue        (when + billing class)
+//!              │
+//!              ▼
+//!   DevicePlane::transport() ── LinkTransport::transfer   (how)
+//!              │
+//!     ┌────────┼──────────────────────┐
+//!     ▼        ▼                      ▼
+//!  InProcess  Tcp                  Shaped<T>
+//!  direct /   CFW1 frames over     per-link netsim delay,
+//!  staged     a socket pair,       then inner transport
+//!  (default)  staged at each end
+//! ```
+//!
+//! * [`InProcess`] — today's direct/staged paths, bit-exact, still the
+//!   default. Owns the process-wide direct-capability probe.
+//! * [`TcpTransport`] — length-prefixed [CFW1 frames](encode_frame)
+//!   carrying `IoSpec`-typed buffers over one socket per receiving
+//!   plane, piggybacking on the staged device→host→device path at each
+//!   end: sync to host, frame over the wire, decode, re-upload on the
+//!   destination client. The payload is the exact little-endian byte
+//!   image of the tensor, so the hop is bitwise — the in-process ↔
+//!   tcp-loopback parity integration test pins that. Each hop bills
+//!   `link_staged` (it *is* a staged hop) **plus** the new
+//!   `link_wire_bytes`/`link_wire_ns` columns.
+//! * [`Shaped`] — wraps any transport and delays each hop per the
+//!   [`crate::netsim`] 5-region GCP matrix (`--wan-profile
+//!   gcp-5region`), with per-stage region placement taken from
+//!   [`Network::blocked`] — the *same* placement correlated churn uses,
+//!   so shaping and region-correlated failures agree on which stage
+//!   lives where. Delays are per-directed-link FIFO: a link's virtual
+//!   clock ([`shaped_deadline`]) never reorders two hops on the same
+//!   (src, dst) pair.
+//!
+//! **Overlap contract.** [`LinkTransport::prefetchable`] tells
+//! `LinkSlot::issue` whether a prefetched copy would actually run off
+//! the consumer's critical path. Only the in-process direct path
+//! qualifies; wire and shaped hops always defer to the receiver, where
+//! `copy_to_plane` meters them `link_blocking` + `link_wait_ns`. Either
+//! way the classification happens at copy time, so
+//! `link_overlapped + link_blocking == link_copies` holds on every
+//! transport — the PR 6 invariant the executor's bench gate checks.
+//!
+//! **Frame format (CFW1).** One frame per tensor hop:
+//!
+//! ```text
+//!   magic    b"CFW1"                      4 bytes
+//!   dtype    1 = f32, 2 = i32             1 byte
+//!   rank     number of dims (≤ 8)         1 byte
+//!   dims     rank × u64 little-endian     8·rank bytes
+//!   len      payload bytes, u64 LE        8 bytes
+//!   payload  elements × 4 bytes LE        len bytes
+//! ```
+//!
+//! `len` must equal `4·∏dims` exactly; truncated or oversized frames
+//! fail loudly ([`decode_frame`]) rather than resynchronizing — a
+//! framing bug is a correctness bug, not a retry.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{LinkPath, LinkTransportKind, WanProfile};
+use crate::metrics::Transfer;
+use crate::netsim::{Network, Region};
+use crate::runtime::buffer::{DeviceBuffer, DevicePlane};
+use crate::runtime::HostTensor;
+use crate::{anyhow, Context, Result};
+
+/// Process-wide verdict on whether the PJRT plugin can service a
+/// **cross-client** `PjRtBuffer::copy_to_device` (the in-process direct
+/// path). A plugin property, so one probe settles it for the process
+/// lifetime — the same idiom as `Executable::out_layout`.
+const DIRECT_UNKNOWN: u8 = 0;
+const DIRECT_OK: u8 = 1;
+const DIRECT_UNAVAILABLE: u8 = 2;
+static DIRECT_LINKS: AtomicU8 = AtomicU8::new(DIRECT_UNKNOWN);
+
+/// How a cross-plane link copy moves its bytes. Implementations must
+/// uphold two contracts the rest of the runtime builds on:
+///
+/// 1. **Bit-exactness** — the delivered buffer is byte-identical to the
+///    source; a transport moves bytes, never changes them.
+/// 2. **Billing** — every hop records exactly one
+///    `link_direct`/`link_staged` split entry on the destination
+///    plane's ledger (wire transports additionally record
+///    `Transfer::LinkWire`), and **never** the overlap classification —
+///    that belongs to the call site (`copy_to_plane` → `link_blocking`,
+///    `LinkSlot::issue` → `link_overlapped`), which is what keeps
+///    `link_overlapped + link_blocking == link_copies` true on every
+///    transport.
+pub trait LinkTransport: Send + Sync {
+    /// Diagnostic name ("in-process", "tcp", "shaped").
+    fn label(&self) -> &'static str;
+
+    /// Move `src` onto `dst`'s plane, billed to receiving `stage`.
+    /// Callers have ruled out the same-plane case.
+    fn transfer(&self, src: DeviceBuffer, dst: &DevicePlane<'_>, stage: usize)
+        -> Result<DeviceBuffer>;
+
+    /// Can `LinkSlot::issue` run this hop on the *sender* without
+    /// serializing it (the overlap fast path)? `link` is the
+    /// destination plane's configured [`LinkPath`].
+    fn prefetchable(&self, link: LinkPath) -> bool;
+}
+
+/// Forwarding impl so [`Shaped`] can wrap a concrete transport or a
+/// shared `Arc<dyn LinkTransport>` alike.
+impl<T: LinkTransport + ?Sized> LinkTransport for Arc<T> {
+    fn label(&self) -> &'static str {
+        (**self).label()
+    }
+
+    fn transfer(
+        &self,
+        src: DeviceBuffer,
+        dst: &DevicePlane<'_>,
+        stage: usize,
+    ) -> Result<DeviceBuffer> {
+        (**self).transfer(src, dst, stage)
+    }
+
+    fn prefetchable(&self, link: LinkPath) -> bool {
+        (**self).prefetchable(link)
+    }
+}
+
+/// Build the transport a runtime was configured for: the base transport
+/// from `--link-transport`, optionally wrapped in [`Shaped`] when
+/// `--wan-profile` is not `off`. `planes` sizes the tcp-loopback
+/// endpoint set and the shaped placement.
+pub fn build_transport(
+    kind: LinkTransportKind,
+    wan: WanProfile,
+    wan_scale: f64,
+    planes: usize,
+) -> Result<Arc<dyn LinkTransport>> {
+    let base: Arc<dyn LinkTransport> = match kind {
+        LinkTransportKind::InProcess => Arc::new(InProcess),
+        LinkTransportKind::TcpLoopback => Arc::new(TcpTransport::loopback(planes)?),
+    };
+    Ok(match wan {
+        WanProfile::Off => base,
+        WanProfile::Gcp5Region => Arc::new(Shaped::new(base, planes, wan_scale)),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// InProcess — the default: plugin-direct with probed staged fallback.
+// ---------------------------------------------------------------------------
+
+/// Today's same-process paths, unchanged in behaviour: `Direct` hands
+/// the move to the plugin's cross-client `copy_to_device`, `Staged`
+/// forces the device→host→device fallback, `Auto` probes the plugin
+/// once per process and degrades loudly. Records zero wire columns by
+/// construction — there is no wire.
+pub struct InProcess;
+
+impl LinkTransport for InProcess {
+    fn label(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn transfer(
+        &self,
+        src: DeviceBuffer,
+        dst: &DevicePlane<'_>,
+        stage: usize,
+    ) -> Result<DeviceBuffer> {
+        match dst.link_path() {
+            LinkPath::Staged => src.copy_staged(dst, stage),
+            LinkPath::Direct => {
+                let buf = src.copy_direct(dst)?;
+                DIRECT_LINKS.store(DIRECT_OK, Ordering::Relaxed);
+                dst.ledger.record(stage, Transfer::LinkDirect { bytes: src.bytes() });
+                Ok(DeviceBuffer::from_raw(buf, src.spec().clone(), dst.idx()))
+            }
+            LinkPath::Auto => match DIRECT_LINKS.load(Ordering::Relaxed) {
+                DIRECT_UNAVAILABLE => src.copy_staged(dst, stage),
+                DIRECT_OK => {
+                    // Capability already established: a failure now is
+                    // a real runtime problem (OOM, dead device), not a
+                    // missing feature — surface it instead of silently
+                    // degrading a mid-run measurement to staged hops.
+                    let buf = src.copy_direct(dst)?;
+                    dst.ledger.record(stage, Transfer::LinkDirect { bytes: src.bytes() });
+                    Ok(DeviceBuffer::from_raw(buf, src.spec().clone(), dst.idx()))
+                }
+                _ => match src.copy_direct(dst) {
+                    // The one probe. compare_exchange so concurrent
+                    // first hops cannot overwrite each other's verdict.
+                    Ok(buf) => {
+                        let _ = DIRECT_LINKS.compare_exchange(
+                            DIRECT_UNKNOWN,
+                            DIRECT_OK,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                        dst.ledger.record(stage, Transfer::LinkDirect { bytes: src.bytes() });
+                        Ok(DeviceBuffer::from_raw(buf, src.spec().clone(), dst.idx()))
+                    }
+                    Err(e) => {
+                        // Probe verdict: this plugin cannot transfer
+                        // across clients. Degrade to the staged hop for
+                        // the process lifetime — loudly, exactly once,
+                        // so a CI leg silently running staged cannot
+                        // masquerade as a direct-path measurement (the
+                        // ledger's link_staged column records it too).
+                        if DIRECT_LINKS
+                            .compare_exchange(
+                                DIRECT_UNKNOWN,
+                                DIRECT_UNAVAILABLE,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            )
+                            .is_ok()
+                        {
+                            eprintln!(
+                                "warning: direct cross-plane transfer unavailable \
+                                 ({e:#}); all link copies will take the staged \
+                                 device→host→device path"
+                            );
+                        }
+                        // Whatever the race outcome, THIS buffer still
+                        // needs to move: take the always-available hop.
+                        src.copy_staged(dst, stage)
+                    }
+                },
+            },
+        }
+    }
+
+    /// Only the direct path can run on the sender without serializing
+    /// it: the staged fallback's `to_literal_sync` would stall the
+    /// sending worker for the same wall-clock it was supposed to hide.
+    /// Under `Auto` the verdict follows the process-wide probe state —
+    /// `UNKNOWN` optimistically prefetches (the probe itself happens
+    /// inside the copy, and a probe-failure hop still lands staged
+    /// exactly once, loudly).
+    fn prefetchable(&self, link: LinkPath) -> bool {
+        match link {
+            LinkPath::Direct => true,
+            LinkPath::Staged => false,
+            LinkPath::Auto => DIRECT_LINKS.load(Ordering::Relaxed) != DIRECT_UNAVAILABLE,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CFW1 frame codec.
+// ---------------------------------------------------------------------------
+
+pub const FRAME_MAGIC: [u8; 4] = *b"CFW1";
+const DTYPE_F32: u8 = 1;
+const DTYPE_I32: u8 = 2;
+/// No registry tensor is deeper than rank 4; 8 leaves headroom while
+/// keeping a corrupt rank byte from turning into a giant dims read.
+pub const MAX_FRAME_RANK: usize = 8;
+/// Payload cap (4 GiB): a corrupt length field must not turn into an
+/// unbounded allocation on the receiving end.
+pub const MAX_FRAME_PAYLOAD: u64 = 1 << 32;
+
+/// Serialize a host tensor as one CFW1 frame (see the module docs for
+/// the layout). The payload is the exact little-endian byte image of
+/// the tensor — the bitwise contract the round-trip test pins.
+pub fn encode_frame(t: &HostTensor) -> Result<Vec<u8>> {
+    let shape = t.shape();
+    if shape.len() > MAX_FRAME_RANK {
+        return Err(anyhow!("wire frame: rank {} exceeds max {MAX_FRAME_RANK}", shape.len()));
+    }
+    let elements: usize = shape.iter().product();
+    let payload_len = elements as u64 * 4;
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(anyhow!("wire frame: payload {payload_len} B exceeds cap {MAX_FRAME_PAYLOAD}"));
+    }
+    let mut out = Vec::with_capacity(14 + shape.len() * 8 + payload_len as usize);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(match t.dtype() {
+        "f32" => DTYPE_F32,
+        "i32" => DTYPE_I32,
+        other => return Err(anyhow!("wire frame: unsupported dtype {other}")),
+    });
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&payload_len.to_le_bytes());
+    match t.dtype() {
+        "f32" => {
+            for v in t.as_f32() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        _ => {
+            for v in t.as_i32() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn read_u64_le(frame: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&frame[at..at + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Parse one complete CFW1 frame back into a host tensor. Every
+/// malformation — bad magic, unknown dtype, over-rank, a length field
+/// disagreeing with the dims, truncation, trailing bytes — is a loud
+/// error: a framing bug is a correctness bug, never a resync.
+pub fn decode_frame(frame: &[u8]) -> Result<HostTensor> {
+    if frame.len() < 6 {
+        return Err(anyhow!("wire frame: truncated ({} B, header needs 6+)", frame.len()));
+    }
+    if frame[..4] != FRAME_MAGIC {
+        return Err(anyhow!("wire frame: bad magic {:02x?} (want {FRAME_MAGIC:02x?})", &frame[..4]));
+    }
+    let dtype = frame[4];
+    let rank = frame[5] as usize;
+    if rank > MAX_FRAME_RANK {
+        return Err(anyhow!("wire frame: rank {rank} exceeds max {MAX_FRAME_RANK}"));
+    }
+    let header = 6 + rank * 8 + 8;
+    if frame.len() < header {
+        return Err(anyhow!("wire frame: truncated ({} B, header needs {header})", frame.len()));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    let mut elements: u64 = 1;
+    for i in 0..rank {
+        let d = read_u64_le(frame, 6 + i * 8);
+        elements = elements
+            .checked_mul(d)
+            .ok_or_else(|| anyhow!("wire frame: dims {dims:?}×{d} overflow"))?;
+        dims.push(d as usize);
+    }
+    let payload_len = read_u64_le(frame, 6 + rank * 8);
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(anyhow!("wire frame: payload {payload_len} B exceeds cap {MAX_FRAME_PAYLOAD}"));
+    }
+    if payload_len != elements * 4 {
+        return Err(anyhow!(
+            "wire frame: length field {payload_len} disagrees with dims {dims:?} ({} B)",
+            elements * 4
+        ));
+    }
+    let want = header as u64 + payload_len;
+    if (frame.len() as u64) < want {
+        return Err(anyhow!("wire frame: truncated ({} of {want} B)", frame.len()));
+    }
+    if frame.len() as u64 > want {
+        return Err(anyhow!("wire frame: oversized ({} trailing B)", frame.len() as u64 - want));
+    }
+    let payload = &frame[header..];
+    match dtype {
+        DTYPE_F32 => {
+            let data: Vec<f32> = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(HostTensor::from_f32_vec(dims, data))
+        }
+        DTYPE_I32 => {
+            let data: Vec<i32> = payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(HostTensor::from_i32(dims, &data))
+        }
+        other => Err(anyhow!("wire frame: unknown dtype code {other}")),
+    }
+}
+
+/// Read one complete raw frame (header + payload, verbatim bytes) off a
+/// stream. Returns `Ok(None)` on clean EOF *before the first byte* —
+/// how an echo relay detects an orderly shutdown; EOF anywhere inside a
+/// frame is a loud truncation error.
+pub fn read_frame_raw(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut magic = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut magic[got..]).context("wire frame: reading magic")? {
+            0 if got == 0 => return Ok(None),
+            0 => return Err(anyhow!("wire frame: EOF inside magic ({got} of 4 B)")),
+            n => got += n,
+        }
+    }
+    if magic != FRAME_MAGIC {
+        return Err(anyhow!("wire frame: bad magic {magic:02x?} (want {FRAME_MAGIC:02x?})"));
+    }
+    let mut head = [0u8; 2];
+    r.read_exact(&mut head).context("wire frame: EOF inside header")?;
+    let rank = head[1] as usize;
+    if rank > MAX_FRAME_RANK {
+        return Err(anyhow!("wire frame: rank {rank} exceeds max {MAX_FRAME_RANK}"));
+    }
+    let mut rest = vec![0u8; rank * 8 + 8];
+    r.read_exact(&mut rest).context("wire frame: EOF inside dims")?;
+    let payload_len = {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&rest[rank * 8..]);
+        u64::from_le_bytes(b)
+    };
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(anyhow!("wire frame: payload {payload_len} B exceeds cap {MAX_FRAME_PAYLOAD}"));
+    }
+    let mut frame = Vec::with_capacity(6 + rest.len() + payload_len as usize);
+    frame.extend_from_slice(&magic);
+    frame.extend_from_slice(&head);
+    frame.extend_from_slice(&rest);
+    let start = frame.len();
+    frame.resize(start + payload_len as usize, 0);
+    r.read_exact(&mut frame[start..]).context("wire frame: EOF inside payload")?;
+    Ok(Some(frame))
+}
+
+/// Relay frames back to their sender until clean EOF — the body of a
+/// tcp-loopback echo thread and of a `--role stage:N` stage process.
+/// Echoing whole frames (not raw bytes) means a corrupt frame kills the
+/// relay loudly instead of poisoning the stream. Returns the number of
+/// frames relayed.
+pub fn echo_frames(mut stream: TcpStream) -> Result<u64> {
+    let mut frames = 0;
+    while let Some(frame) = read_frame_raw(&mut stream)? {
+        stream.write_all(&frame).context("wire echo: writing frame back")?;
+        stream.flush().context("wire echo: flush")?;
+        frames += 1;
+    }
+    Ok(frames)
+}
+
+// ---------------------------------------------------------------------------
+// Tcp — CFW1 frames over one socket per receiving plane.
+// ---------------------------------------------------------------------------
+
+/// The wire transport: one `TcpStream` per **receiving** plane (the
+/// destination stage's node endpoint), each hop a frame write + echo
+/// read. The per-endpoint mutex serializes hops on the same link, which
+/// is what makes the wire per-link FIFO for free.
+///
+/// Two topologies share this type:
+/// * [`TcpTransport::loopback`] — single process: each endpoint is a
+///   `127.0.0.1` socket pair with an in-process echo thread on the far
+///   side. Real sockets, real frames, no second OS process — the CI
+///   matrix leg (`CHECKFREE_LINK_TRANSPORT=tcp-loopback`).
+/// * [`TcpTransport::from_streams`] — the multi-process cluster: the
+///   far side of each endpoint lives in a `--role stage:N` child
+///   process (see `coordinator::cluster`), whose death severs the link;
+///   [`TcpTransport::replace_stream`] splices in the replacement node's
+///   connection after a respawn.
+pub struct TcpTransport {
+    endpoints: Vec<Mutex<TcpStream>>,
+}
+
+impl TcpTransport {
+    /// Single-process loopback topology: for each of `planes` endpoints,
+    /// bind an ephemeral `127.0.0.1` listener, spawn an echo thread, and
+    /// connect. The echo threads exit on clean EOF when the transport
+    /// (and its streams) drop.
+    pub fn loopback(planes: usize) -> Result<Self> {
+        let mut endpoints = Vec::with_capacity(planes);
+        for plane in 0..planes {
+            let listener = TcpListener::bind(("127.0.0.1", 0))
+                .with_context(|| format!("tcp-loopback: binding endpoint for plane {plane}"))?;
+            let addr = listener
+                .local_addr()
+                .with_context(|| format!("tcp-loopback: endpoint addr for plane {plane}"))?;
+            std::thread::Builder::new()
+                .name(format!("cfw-echo-{plane}"))
+                .spawn(move || {
+                    if let Ok((stream, _)) = listener.accept() {
+                        let _ = stream.set_nodelay(true);
+                        if let Err(e) = echo_frames(stream) {
+                            eprintln!("warning: tcp-loopback echo for plane {plane} died: {e:#}");
+                        }
+                    }
+                })
+                .context("tcp-loopback: spawning echo thread")?;
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("tcp-loopback: connecting endpoint for plane {plane}"))?;
+            stream.set_nodelay(true).context("tcp-loopback: set_nodelay")?;
+            endpoints.push(Mutex::new(stream));
+        }
+        Ok(Self { endpoints })
+    }
+
+    /// Wrap already-connected per-plane streams (the multi-process
+    /// cluster's accept results, index = plane).
+    pub fn from_streams(streams: Vec<TcpStream>) -> Self {
+        Self { endpoints: streams.into_iter().map(Mutex::new).collect() }
+    }
+
+    /// Connect one endpoint per address (index = plane) — the inverse
+    /// launcher shape, where each `--role stage:N --listen` process
+    /// binds and the coordinator dials out.
+    pub fn connect(addrs: &[impl ToSocketAddrs]) -> Result<Self> {
+        let mut streams = Vec::with_capacity(addrs.len());
+        for (plane, addr) in addrs.iter().enumerate() {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("tcp: connecting endpoint for plane {plane}"))?;
+            stream.set_nodelay(true).context("tcp: set_nodelay")?;
+            streams.push(stream);
+        }
+        Ok(Self::from_streams(streams))
+    }
+
+    pub fn planes(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Splice in a replacement node's connection for `plane` — the
+    /// cluster's post-kill respawn path. The old stream (if any) is
+    /// dropped, which closes it.
+    pub fn replace_stream(&self, plane: usize, stream: TcpStream) -> Result<()> {
+        let _ = stream.set_nodelay(true);
+        let slot = self
+            .endpoints
+            .get(plane)
+            .ok_or_else(|| anyhow!("tcp: plane {plane} out of range ({})", self.endpoints.len()))?;
+        // A killed process can leave the mutex poisoned mid-frame; the
+        // whole point of replace is to recover from that.
+        *slot.lock().unwrap_or_else(|e| e.into_inner()) = stream;
+        Ok(())
+    }
+}
+
+impl LinkTransport for TcpTransport {
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn transfer(
+        &self,
+        src: DeviceBuffer,
+        dst: &DevicePlane<'_>,
+        stage: usize,
+    ) -> Result<DeviceBuffer> {
+        let spec = src.spec().clone();
+        // Staged exit on the sending node: device → host literal.
+        let lit = src.raw().to_literal_sync().with_context(|| {
+            format!(
+                "wire link {:?} {}: staging plane {} for the wire",
+                spec.shape,
+                spec.dtype,
+                src.plane()
+            )
+        })?;
+        let host = HostTensor::from_literal(&lit, &spec)?;
+        drop(src); // the source plane's copy is dead once framed
+        let frame = encode_frame(&host)?;
+        let wire_bytes = frame.len() as u64;
+
+        let t0 = Instant::now();
+        let echoed = {
+            let slot = self.endpoints.get(dst.idx()).ok_or_else(|| {
+                anyhow!("wire link: no endpoint for plane {} ({})", dst.idx(), self.endpoints.len())
+            })?;
+            let mut stream = slot.lock().unwrap_or_else(|e| e.into_inner());
+            stream.write_all(&frame).with_context(|| {
+                format!(
+                    "wire link {:?} {} → plane {}: send failed (did the stage process die?)",
+                    spec.shape,
+                    spec.dtype,
+                    dst.idx()
+                )
+            })?;
+            stream.flush().context("wire link: flush")?;
+            read_frame_raw(&mut *stream)
+                .with_context(|| {
+                    format!(
+                        "wire link {:?} {} → plane {}: receive failed (did the stage process die?)",
+                        spec.shape,
+                        spec.dtype,
+                        dst.idx()
+                    )
+                })?
+                .ok_or_else(|| {
+                    anyhow!("wire link → plane {}: connection closed mid-transfer", dst.idx())
+                })?
+        };
+        let wire_ns = t0.elapsed().as_nanos() as u64;
+
+        let back = decode_frame(&echoed)?;
+        back.check_spec(&spec)
+            .with_context(|| format!("wire link → plane {}: echoed frame spec drift", dst.idx()))?;
+        // Staged entry on the receiving node: host literal → device.
+        let buf = dst.client().buffer_from_host_literal(None, &back.to_literal()?).with_context(
+            || format!("wire link {:?} {}: re-upload onto plane {}", spec.shape, spec.dtype, dst.idx()),
+        )?;
+        dst.ledger.record(stage, Transfer::LinkStaged { bytes: spec.bytes() });
+        dst.ledger.record(stage, Transfer::LinkWire { bytes: wire_bytes, ns: wire_ns });
+        Ok(DeviceBuffer::from_raw(buf, spec, dst.idx()))
+    }
+
+    /// Never: the wire hop starts with a device→host sync that would
+    /// serialize the sending worker exactly like the staged fallback.
+    fn prefetchable(&self, _link: LinkPath) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shaped — WAN emulation: netsim delay per directed link, then inner.
+// ---------------------------------------------------------------------------
+
+/// The FIFO scheduling rule of one directed link, kept as a pure
+/// function so the propcheck test can pin it without sockets or sleeps:
+/// a hop arriving at `now_ns` on a link free at `next_free_ns` completes
+/// at `max(now, next_free) + delay`, and that completion time becomes
+/// the link's new `next_free_ns`. Deadlines on one link are therefore
+/// non-decreasing in arrival order — no reordering, ever.
+pub fn shaped_deadline(next_free_ns: u64, now_ns: u64, delay_ns: u64) -> u64 {
+    now_ns.max(next_free_ns).saturating_add(delay_ns)
+}
+
+/// WAN emulation (`--wan-profile gcp-5region`): delays every hop by
+/// `wan_scale ×` the netsim transfer time (latency floor + bytes /
+/// bandwidth) between the source and destination planes' regions, then
+/// lets the wrapped transport move the bytes. Placement is
+/// [`Network::blocked`] — contiguous region blocks, the **same**
+/// placement region-correlated churn samples from, so a shaped run and
+/// its churn process agree on which stage lives where (the satellite-5
+/// round-trip test pins this).
+///
+/// Delays are enforced per **directed link** through a virtual clock
+/// ([`shaped_deadline`]): the deadline is computed under the link's
+/// lock, the sleep happens after release, so concurrent hops on one
+/// link serialize FIFO while different links shape independently.
+pub struct Shaped<T> {
+    inner: T,
+    net: Network,
+    scale: f64,
+    planes: usize,
+    /// `planes × planes` per-directed-link virtual clocks: ns since
+    /// `epoch` at which link (src, dst) is next free.
+    clocks: Vec<Mutex<u64>>,
+    epoch: Instant,
+}
+
+impl<T: LinkTransport> Shaped<T> {
+    /// Shape `inner` for a `planes`-stage pipeline. `scale` multiplies
+    /// every netsim delay: `1.0` emulates the full WAN (hundreds of ms
+    /// per intercontinental hop), small values keep CI runs honest
+    /// about *ordering* without paying wall-clock.
+    pub fn new(inner: T, planes: usize, scale: f64) -> Self {
+        Self {
+            inner,
+            net: Network::blocked(planes),
+            scale,
+            planes,
+            clocks: (0..planes * planes).map(|_| Mutex::new(0)).collect(),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// The region `plane` is placed in (identical to what correlated
+    /// churn uses for the same stage index).
+    pub fn region_of(&self, plane: usize) -> Result<Region> {
+        self.net.region_of(plane)
+    }
+
+    /// The shaping delay a `bytes`-sized hop pays on link `src → dst`.
+    /// `bytes = 0` gives the link's pure latency floor — what the bench
+    /// schema-6 transport section reports per region pair and
+    /// `check_bench_json.py` recomputes as the hard floor.
+    pub fn delay_ns(&self, bytes: u64, src: usize, dst: usize) -> Result<u64> {
+        let a = self.net.region_of(src)?;
+        let b = self.net.region_of(dst)?;
+        Ok((self.scale * self.net.transfer_seconds_between(bytes, a, b) * 1e9) as u64)
+    }
+}
+
+impl<T: LinkTransport> LinkTransport for Shaped<T> {
+    fn label(&self) -> &'static str {
+        "shaped"
+    }
+
+    fn transfer(
+        &self,
+        src: DeviceBuffer,
+        dst: &DevicePlane<'_>,
+        stage: usize,
+    ) -> Result<DeviceBuffer> {
+        let (from, to) = (src.plane(), dst.idx());
+        let delay_ns = self.delay_ns(src.bytes(), from, to)?;
+        let deadline = {
+            let slot = self
+                .clocks
+                .get(from * self.planes + to)
+                .ok_or_else(|| anyhow!("shaped: link {from}→{to} out of range"))?;
+            let mut next_free = slot.lock().unwrap_or_else(|e| e.into_inner());
+            let d = shaped_deadline(*next_free, self.epoch.elapsed().as_nanos() as u64, delay_ns);
+            *next_free = d;
+            d
+        };
+        // Sleep *outside* the lock: later hops on this link can already
+        // claim their (later) deadlines while this one waits out its own.
+        let now = self.epoch.elapsed().as_nanos() as u64;
+        if deadline > now {
+            std::thread::sleep(Duration::from_nanos(deadline - now));
+        }
+        let out = self.inner.transfer(src, dst, stage)?;
+        // Bill the emulated wire time; bytes stay with the inner
+        // transport (a shaped in-process link has delay but no frames).
+        dst.ledger.record(stage, Transfer::LinkWire { bytes: 0, ns: delay_ns });
+        Ok(out)
+    }
+
+    /// Never: a prefetched hop would start its delay early and hide the
+    /// WAN cost the profile exists to expose.
+    fn prefetchable(&self, _link: LinkPath) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+    use crate::manifest::{IoSpec, Manifest};
+
+    /// Deterministic, NaN-free f32 bit pattern for element `i` of
+    /// tensor `salt` — exercises sign bit and mantissa bits, stays a
+    /// normal number so `HostTensor` equality is bitwise equality.
+    fn pattern_f32(salt: u32, i: u32) -> f32 {
+        let bits = (salt.wrapping_mul(0x9e3779b9) ^ i.wrapping_mul(0x85eb_ca6b)) & 0x807f_ffff;
+        f32::from_bits(bits | 0x3f00_0000)
+    }
+
+    fn tensor_for(spec: &IoSpec, salt: u32) -> HostTensor {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype.as_str() {
+            "f32" => HostTensor::from_f32_vec(
+                spec.shape.clone(),
+                (0..n).map(|i| pattern_f32(salt, i as u32)).collect(),
+            ),
+            "i32" => HostTensor::from_i32(
+                spec.shape.clone(),
+                &(0..n)
+                    .map(|i| (salt as i32).wrapping_mul(31).wrapping_add(i as i32 * -7))
+                    .collect::<Vec<_>>(),
+            ),
+            other => panic!("registry grew a dtype the wire test doesn't cover: {other}"),
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bitwise_for_every_registry_spec() {
+        // Satellite contract: serialize→deserialize is bitwise for
+        // every IoSpec dtype/shape the artifact registry contains.
+        let manifest = Manifest::load_config(default_artifacts_root(), "tiny")
+            .expect("run `make artifacts`");
+        let mut specs: Vec<IoSpec> = Vec::new();
+        for art in manifest.artifacts.values() {
+            for spec in art.inputs.iter().chain(&art.outputs) {
+                if !specs.contains(spec) {
+                    specs.push(spec.clone());
+                }
+            }
+        }
+        assert!(specs.len() > 4, "registry unexpectedly small: {specs:?}");
+        for (salt, spec) in specs.iter().enumerate() {
+            let t = tensor_for(spec, salt as u32);
+            let frame = encode_frame(&t).unwrap();
+            let back = decode_frame(&frame).unwrap();
+            assert_eq!(back, t, "round-trip changed bits for {spec:?}");
+            assert!(back.check_spec(spec).is_ok());
+        }
+    }
+
+    #[test]
+    fn scalar_and_i32_frames_roundtrip() {
+        for t in [
+            HostTensor::scalar(-0.0),
+            HostTensor::scalar(f32::MIN_POSITIVE),
+            HostTensor::from_i32(vec![3], &[i32::MIN, 0, i32::MAX]),
+        ] {
+            let back = decode_frame(&encode_frame(&t).unwrap()).unwrap();
+            assert_eq!(back.dtype(), t.dtype());
+            assert_eq!(back.shape(), t.shape());
+            match t.dtype() {
+                "f32" => assert_eq!(
+                    back.as_f32().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.as_f32().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                ),
+                _ => assert_eq!(back.as_i32(), t.as_i32()),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_fail_loudly_at_every_length() {
+        let t = HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        let frame = encode_frame(&t).unwrap();
+        for len in 0..frame.len() {
+            let err = decode_frame(&frame[..len]).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("disagrees"),
+                "prefix {len}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_and_corrupt_frames_fail_loudly() {
+        let t = HostTensor::from_f32(vec![2], &[4.0, 5.0]);
+        let good = encode_frame(&t).unwrap();
+        assert!(decode_frame(&good).is_ok());
+
+        // Trailing garbage.
+        let mut over = good.clone();
+        over.push(0xaa);
+        assert!(format!("{:#}", decode_frame(&over).unwrap_err()).contains("oversized"));
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(format!("{:#}", decode_frame(&bad).unwrap_err()).contains("magic"));
+
+        // Unknown dtype code.
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(decode_frame(&bad).is_err());
+
+        // Over-rank.
+        let mut bad = good.clone();
+        bad[5] = MAX_FRAME_RANK as u8 + 1;
+        assert!(format!("{:#}", decode_frame(&bad).unwrap_err()).contains("rank"));
+
+        // Length field disagreeing with dims.
+        let mut bad = good;
+        let len_at = 6 + 8; // rank 1
+        bad[len_at] = bad[len_at].wrapping_add(4);
+        assert!(format!("{:#}", decode_frame(&bad).unwrap_err()).contains("disagrees"));
+    }
+
+    #[test]
+    fn frames_survive_a_real_loopback_socket_echo() {
+        // The tcp-loopback topology minus PJRT: write N frames through a
+        // socket pair with an echo thread, get the same bytes back, in
+        // order (the per-endpoint mutex is per-link FIFO).
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            echo_frames(stream).unwrap()
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let tensors = [
+            HostTensor::from_f32(vec![2, 3], &[1.5, -2.0, 0.0, 3.25, -0.5, 42.0]),
+            HostTensor::from_i32(vec![4], &[7, -1, 0, 3]),
+            HostTensor::scalar(-8.75),
+        ];
+        for t in &tensors {
+            let frame = encode_frame(t).unwrap();
+            stream.write_all(&frame).unwrap();
+            let echoed = read_frame_raw(&mut stream).unwrap().expect("echo closed early");
+            assert_eq!(echoed, frame, "wire corrupted the frame");
+            assert_eq!(&decode_frame(&echoed).unwrap(), t);
+        }
+        drop(stream); // clean EOF → echo thread exits
+        assert_eq!(echo.join().unwrap(), tensors.len() as u64);
+    }
+
+    #[test]
+    fn read_frame_raw_reports_clean_eof_and_mid_frame_eof_differently() {
+        let t = HostTensor::from_f32(vec![2], &[1.0, 2.0]);
+        let frame = encode_frame(&t).unwrap();
+
+        // Clean EOF before any byte: Ok(None).
+        let mut empty: &[u8] = &[];
+        assert!(read_frame_raw(&mut empty).unwrap().is_none());
+
+        // EOF mid-frame: loud error at every cut point.
+        for len in 1..frame.len() {
+            let mut cut: &[u8] = &frame[..len];
+            assert!(read_frame_raw(&mut cut).is_err(), "cut at {len} did not error");
+        }
+
+        // A whole frame reads back verbatim.
+        let mut whole: &[u8] = &frame;
+        assert_eq!(read_frame_raw(&mut whole).unwrap().unwrap(), frame);
+    }
+
+    #[test]
+    fn property_shaped_delay_is_per_link_fifo() {
+        // Satellite contract: Shaped never reorders two hops on the
+        // same directed link, whatever the interleaving — deadlines on
+        // one link are non-decreasing in issue order, and every hop
+        // waits at least its own delay.
+        crate::util::propcheck::forall(
+            "shaped-per-link-fifo",
+            60,
+            41,
+            |r, size| {
+                let n = 2 + r.below(4 * size.max(1));
+                (0..n)
+                    .map(|_| (r.below(3), r.next_u64() % 5_000, r.next_u64() % 2_000))
+                    .collect::<Vec<(usize, u64, u64)>>()
+            },
+            |events| {
+                let mut clocks = [0u64; 3];
+                let mut last_deadline = [0u64; 3];
+                let mut now = 0u64;
+                for &(link, delay, gap) in events {
+                    now += gap;
+                    let d = shaped_deadline(clocks[link], now, delay);
+                    if d < last_deadline[link] {
+                        return false; // reordered within a link
+                    }
+                    if d < now + delay {
+                        return false; // delay not served in full
+                    }
+                    last_deadline[link] = d;
+                    clocks[link] = d;
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn shaped_placement_matches_correlated_churn_regions() {
+        // Satellite fix contract: `--wan-profile gcp-5region` shaping
+        // and region-correlated churn must use identical region
+        // indices. Both derive from `Network::blocked(stages)`; pin the
+        // full Region ↔ placement ↔ shaping-row round trip so neither
+        // side can drift to its own placement.
+        for planes in [2usize, 4, 5, 7] {
+            let shaped = Shaped::new(InProcess, planes, 1.0);
+            let churn_net = Network::blocked(planes);
+            for p in 0..planes {
+                let r = shaped.region_of(p).unwrap();
+                assert_eq!(r, churn_net.region_of(p).unwrap(), "{planes} planes, stage {p}");
+                // Label round trip — the exact path churn tapes and the
+                // bench transport section take.
+                assert_eq!(Region::from_label(r.label()).unwrap(), r);
+            }
+            // The shaping row for a link equals netsim's matrix entry
+            // for the same pair of placement regions.
+            for src in 0..planes {
+                for dst in 0..planes {
+                    let (a, b) =
+                        (churn_net.region_of(src).unwrap(), churn_net.region_of(dst).unwrap());
+                    let want = (churn_net.transfer_seconds_between(256, a, b) * 1e9) as u64;
+                    assert_eq!(shaped.delay_ns(256, src, dst).unwrap(), want, "{src}→{dst}");
+                }
+            }
+        }
+        // Out-of-range stages fail loudly on both sides.
+        assert!(Shaped::new(InProcess, 3, 1.0).region_of(3).is_err());
+    }
+
+    #[test]
+    fn shaped_floor_scales_and_zero_bytes_is_latency_only() {
+        let s1 = Shaped::new(InProcess, 5, 1.0);
+        let s2 = Shaped::new(InProcess, 5, 1e-3);
+        // 5 planes → one region per plane; 0→4 is us-central ↔
+        // australia: 176 ms floor (±1 ns of f64 rounding).
+        let floor = s1.delay_ns(0, 0, 4).unwrap();
+        assert!(floor.abs_diff(176_000_000) <= 1, "{floor}");
+        assert!(s2.delay_ns(0, 0, 4).unwrap().abs_diff(176_000) <= 1);
+        // Bytes only ever add on top of the floor.
+        assert!(s1.delay_ns(1 << 20, 0, 4).unwrap() > floor);
+        // Intra-region hops still pay the sub-ms floor, never zero…
+        let intra = Shaped::new(InProcess, 10, 1.0).delay_ns(0, 0, 1).unwrap();
+        assert!(intra.abs_diff(500_000) <= 1, "{intra}"); // 0.5 ms
+    }
+
+    #[test]
+    fn shaped_deadline_is_monotone_and_saturating() {
+        assert_eq!(shaped_deadline(0, 100, 50), 150);
+        assert_eq!(shaped_deadline(200, 100, 50), 250, "busy link queues behind next_free");
+        assert_eq!(shaped_deadline(0, u64::MAX, 1), u64::MAX, "saturates, never wraps");
+    }
+
+    #[test]
+    fn build_transport_matches_config_knobs() {
+        use crate::config::{LinkTransportKind, WanProfile};
+        let t = build_transport(LinkTransportKind::InProcess, WanProfile::Off, 1.0, 4).unwrap();
+        assert_eq!(t.label(), "in-process");
+        let t =
+            build_transport(LinkTransportKind::InProcess, WanProfile::Gcp5Region, 1e-6, 4).unwrap();
+        assert_eq!(t.label(), "shaped");
+        let t = build_transport(LinkTransportKind::TcpLoopback, WanProfile::Off, 1.0, 4).unwrap();
+        assert_eq!(t.label(), "tcp");
+        // Wire and shaped transports never qualify for prefetch; the
+        // in-process default keeps the probe-driven verdict.
+        for link in [LinkPath::Auto, LinkPath::Direct, LinkPath::Staged] {
+            assert!(!TcpTransport::loopback(2).unwrap().prefetchable(link));
+            assert!(!Shaped::new(InProcess, 2, 1.0).prefetchable(link));
+        }
+        assert!(InProcess.prefetchable(LinkPath::Direct));
+        assert!(!InProcess.prefetchable(LinkPath::Staged));
+    }
+}

@@ -366,6 +366,220 @@ fn churn_processes_give_identical_patterns_across_strategies() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire transport: tcp-loopback ↔ in-process parity, ledger invariants,
+// and the multi-process kill lane.
+// ---------------------------------------------------------------------------
+
+use checkfree::config::{ExecMode, LinkTransportKind};
+
+fn wire_cfg(
+    strategy: Strategy,
+    exec_mode: ExecMode,
+    transport: LinkTransportKind,
+    iterations: u64,
+    seed: u64,
+) -> TrainConfig {
+    let mut c = cfg(strategy, iterations, 0.0, seed);
+    c.exec_mode = exec_mode;
+    c.plane_mode = PlaneMode::PerStage;
+    c.link_path = LinkPath::Auto;
+    c.link_transport = transport;
+    c.tier_backup_every = 2; // arms the tier for tiercheck legs
+    c
+}
+
+fn loss_bits(t: &Trainer) -> Vec<u32> {
+    t.record.curve.iter().map(|p| p.train_loss.to_bits()).collect()
+}
+
+#[test]
+fn tcp_loopback_matches_in_process_across_exec_modes_and_strategies() {
+    // THE tentpole acceptance gate: framing every cross-plane hop,
+    // pushing it through a real socket, and staging it back must be
+    // invisible to training — identical loss bits for every exec mode
+    // × {none, checkfree, tiercheck}, with recovery traffic (weighted
+    // averaging, tier restores) crossing the wire too.
+    for exec_mode in [ExecMode::Sequential, ExecMode::Pipelined, ExecMode::Pipelined1F1B] {
+        for strategy in [Strategy::None, Strategy::CheckFree, Strategy::TierCheck] {
+            let mut curves = Vec::new();
+            for transport in [LinkTransportKind::InProcess, LinkTransportKind::TcpLoopback] {
+                let mut t =
+                    Trainer::new(wire_cfg(strategy, exec_mode, transport, 6, 271)).unwrap();
+                if strategy != Strategy::None {
+                    t.force_failure(3, 1); // recovery must cross the wire
+                }
+                t.run().unwrap_or_else(|e| panic!("{strategy:?}/{exec_mode:?}: {e:#}"));
+                if strategy != Strategy::None {
+                    assert_eq!(t.record.failures(), 1);
+                }
+                curves.push(loss_bits(&t));
+            }
+            assert_eq!(
+                curves[0], curves[1],
+                "{strategy:?}/{exec_mode:?}: tcp-loopback diverged from in-process"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_loopback_matches_in_process_on_a_replayed_churn_tape() {
+    // Same tape, both transports: the full scenario factory (record →
+    // replay) composes with the wire — identical failure schedules AND
+    // identical loss bits.
+    let dir = std::env::temp_dir().join(format!("cfree-wire-tape-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tape = dir.join("churn.jsonl");
+    let tape_s = tape.to_str().unwrap().to_string();
+
+    let mut rec_cfg =
+        wire_cfg(Strategy::CheckFree, ExecMode::Pipelined1F1B, LinkTransportKind::InProcess, 10, 97);
+    rec_cfg.failure = FailureSpec::PerIteration { rate: 0.12 };
+    rec_cfg.churn_process = ChurnProcessKind::Bursty;
+    rec_cfg.churn_trace = Some(TraceMode::Record(tape_s.clone()));
+    let mut recorded = Trainer::new(rec_cfg).unwrap();
+    recorded.force_failure(4, 1);
+    recorded.run().unwrap();
+    assert!(recorded.record.failures() > 0, "tape is empty");
+
+    let mut curves = Vec::new();
+    for transport in [LinkTransportKind::InProcess, LinkTransportKind::TcpLoopback] {
+        let mut c = wire_cfg(Strategy::CheckFree, ExecMode::Pipelined1F1B, transport, 10, 97);
+        c.churn_trace = Some(TraceMode::Replay(tape_s.clone()));
+        let mut t = Trainer::new(c).unwrap();
+        t.run().unwrap();
+        assert_eq!(t.record.failures(), recorded.record.failures());
+        curves.push(loss_bits(&t));
+    }
+    assert_eq!(loss_bits(&recorded), curves[0], "replay diverged from the recording");
+    assert_eq!(curves[0], curves[1], "transports diverged on the same tape");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wire_ledger_bills_frames_and_keeps_the_overlap_invariant() {
+    // Ledger contract on every transport: the overlap split always
+    // accounts for every link copy, and the wire columns fire exactly
+    // when bytes actually cross a socket — nonzero on tcp-loopback
+    // (frame bytes strictly exceed payload bytes: CFW1 headers),
+    // identically zero in-process.
+    for (transport, overlap) in [
+        (LinkTransportKind::InProcess, Overlap::On),
+        (LinkTransportKind::TcpLoopback, Overlap::On),
+        (LinkTransportKind::TcpLoopback, Overlap::Off),
+    ] {
+        let mut c = wire_cfg(Strategy::CheckFree, ExecMode::Pipelined1F1B, transport, 4, 19);
+        c.overlap = overlap;
+        let mut t = Trainer::new(c).unwrap();
+        t.force_failure(2, 1);
+        t.run().unwrap();
+        let s = t.engine.transfer_ledger().snapshot();
+        assert!(s.link_copies > 0, "{transport:?}: no cross-plane traffic measured");
+        assert_eq!(
+            s.link_overlapped + s.link_blocking,
+            s.link_copies,
+            "{transport:?}/{overlap:?}: overlap split lost a copy"
+        );
+        match transport {
+            LinkTransportKind::InProcess => {
+                assert_eq!(s.link_wire_bytes, 0, "in-process billed wire bytes");
+                assert_eq!(s.link_wire_ns, 0, "in-process billed wire time");
+            }
+            LinkTransportKind::TcpLoopback => {
+                assert!(
+                    s.link_wire_bytes > s.link_bytes,
+                    "tcp: frames ({}) must exceed payloads ({})",
+                    s.link_wire_bytes,
+                    s.link_bytes
+                );
+                assert!(s.link_wire_ns > 0, "tcp: wire time unbilled");
+                assert_eq!(s.link_staged, s.link_copies, "tcp hops are staged at each end");
+            }
+        }
+    }
+}
+
+#[test]
+fn shaped_wan_profile_slows_the_wire_but_not_the_math() {
+    // gcp-5region shaping composes with training: same loss bits as the
+    // unshaped run (delay is not data), and the emulated per-hop delay
+    // shows up in link_wire_ns. Scale is tiny so the test stays fast.
+    let mut base = wire_cfg(Strategy::CheckFree, ExecMode::Pipelined, LinkTransportKind::InProcess, 4, 83);
+    let mut shaped_cfg = base.clone();
+    shaped_cfg.wan_profile = checkfree::config::WanProfile::Gcp5Region;
+    shaped_cfg.wan_scale = 1e-6;
+
+    let mut a = Trainer::new(std::mem::take(&mut base)).unwrap();
+    a.force_failure(2, 1);
+    a.run().unwrap();
+    let mut b = Trainer::new(shaped_cfg).unwrap();
+    b.force_failure(2, 1);
+    b.run().unwrap();
+
+    assert_eq!(loss_bits(&a), loss_bits(&b), "shaping changed the numbers");
+    let (sa, sb) =
+        (a.engine.transfer_ledger().snapshot(), b.engine.transfer_ledger().snapshot());
+    assert_eq!(sa.link_wire_ns, 0, "unshaped in-process run billed wire time");
+    assert!(sb.link_wire_ns > 0, "shaped run must bill the emulated delay");
+    assert_eq!(sb.link_wire_bytes, 0, "shaped-over-in-process moves no frames");
+}
+
+#[test]
+fn multi_process_cluster_survives_a_real_process_kill() {
+    // The elastic-churn lane: stage wire endpoints are real OS
+    // processes (spawned from the built binary), the forced failure
+    // SIGKILLs one mid-run, and recovery completes over the respawned
+    // replacement — with the loss curve bit-identical to the plain
+    // in-process run of the same config. Killing a process IS the
+    // failure event.
+    use checkfree::coordinator::{ProcessKiller, StageCluster};
+    use std::sync::{Arc, Mutex};
+
+    let mut reference =
+        Trainer::new(wire_cfg(Strategy::CheckFree, ExecMode::Pipelined1F1B, LinkTransportKind::InProcess, 6, 613))
+            .unwrap();
+    reference.force_failure(3, 1);
+    reference.run().unwrap();
+
+    let c = wire_cfg(Strategy::CheckFree, ExecMode::Pipelined1F1B, LinkTransportKind::TcpLoopback, 6, 613);
+    let planes = checkfree::manifest::Manifest::load_config(
+        checkfree::config::default_artifacts_root(),
+        &c.model,
+    )
+    .unwrap()
+    .config
+    .body_stages
+        + 1;
+    let cluster = StageCluster::spawn(env!("CARGO_BIN_EXE_checkfree"), planes).unwrap();
+    let first_pid = cluster.pid(1).unwrap();
+    let cluster = Arc::new(Mutex::new(cluster));
+    let transport = cluster.lock().unwrap().transport();
+    let mut t = Trainer::new_with(
+        c,
+        Some(transport),
+        Some(Box::new(ProcessKiller::new(Arc::clone(&cluster)))),
+    )
+    .unwrap();
+    t.force_failure(3, 1);
+    t.run().unwrap();
+
+    assert_eq!(t.record.failures(), 1);
+    {
+        let cl = cluster.lock().unwrap();
+        assert_eq!(cl.kills(), 1, "the forced failure must kill a real process");
+        assert_ne!(cl.pid(1).unwrap(), first_pid, "stage 1 must be a respawned process");
+    }
+    let s = t.engine.transfer_ledger().snapshot();
+    assert!(s.link_wire_bytes > 0, "cluster traffic must cross the wire");
+    assert_eq!(s.link_overlapped + s.link_blocking, s.link_copies);
+    assert_eq!(
+        loss_bits(&reference),
+        loss_bits(&t),
+        "multi-process run diverged from the in-process reference"
+    );
+}
+
 #[test]
 fn wall_clock_accounting_is_consistent() {
     let mut t = Trainer::new(cfg(Strategy::CheckFree, 10, 0.0, 11)).unwrap();

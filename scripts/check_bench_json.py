@@ -34,6 +34,18 @@ be executed. Checked invariants:
   gradient-pull term is gone), and strictly fewer host syncs than the
   host-optimizer row — anything else means the fused on-plane Adam
   silently degraded and the run must not be committable as measured;
+* at schema >= 6, transfer rows gain ``link_wire_bytes``/``link_wire_ns``
+  and the file must carry a ``transport`` section with per-model
+  ``in-process``/``tcp-loopback`` transfer rows: a measured tcp row with
+  zero ``link_wire_bytes`` fails outright (the wire transport silently
+  fell back to in-process links), as does a tcp row whose frames are not
+  strictly larger than their payloads (CFW1 headers) or an in-process
+  row billing any wire traffic at all; the ``shaped`` subsection's
+  per-link rows are checked against the netsim floor recomputed HERE
+  from this file's own copy of the gcp-5region latency matrix — a
+  measured link whose ``mean_link_ns`` sits below ``scale`` x the
+  one-way latency for its region pair beat physics and fails outright
+  (the recorded ``floor_ns`` is never trusted);
 * ``BENCH_recovery.json`` (and the gitignored ``BENCH_recovery.smoke``
   sidecar, when present) analogously for its latency table; at schema
   >= 2 a measured recovery file must carry the ``policy`` section (the
@@ -82,6 +94,27 @@ TRANSFER_FIELDS_V4 = TRANSFER_FIELDS_V3 + (
     "link_wait_ns",
 )
 TRANSFER_FIELDS_V5 = TRANSFER_FIELDS_V4 + ("param_pulls",)
+TRANSFER_FIELDS_V6 = TRANSFER_FIELDS_V5 + ("link_wire_bytes", "link_wire_ns")
+
+# Mirror of rust/src/netsim/mod.rs::LATENCY_MS — kept in sync by the
+# shaped-floor selftest fixtures. The checker recomputes every shaped
+# link's floor from this table instead of trusting the bench's recorded
+# ``floor_ns``, so a bench whose shaper quietly under-delays cannot
+# certify itself.
+WAN_REGIONS = (
+    "us-central1",
+    "us-east1",
+    "europe-west4",
+    "asia-east1",
+    "australia-southeast1",
+)
+WAN_LATENCY_MS = (
+    (0.5, 32.0, 103.0, 118.0, 176.0),
+    (32.0, 0.5, 93.0, 152.0, 198.0),
+    (103.0, 93.0, 0.5, 252.0, 277.0),
+    (118.0, 152.0, 252.0, 0.5, 131.0),
+    (176.0, 198.0, 277.0, 131.0, 0.5),
+)
 
 OPTIMIZER_PATH_FIELDS_V5 = (
     "host_mean_s",
@@ -210,10 +243,14 @@ class Checker:
                     "activation_watermark", "device_residency"):
             self.require(doc, key, dict)
         self.require(doc, "results", list)
+        if schema >= 6:
+            self.require(doc, "transport", dict)
         if status != "measured":
             return
 
-        if schema >= 5:
+        if schema >= 6:
+            transfer_fields = TRANSFER_FIELDS_V6
+        elif schema >= 5:
             transfer_fields = TRANSFER_FIELDS_V5
         elif schema >= 4:
             transfer_fields = TRANSFER_FIELDS_V4
@@ -284,6 +321,115 @@ class Checker:
             self.check_plane_mode_overlap(doc)
         if schema >= 5:
             self.check_optimizer_path(doc)
+        if schema >= 6:
+            self.check_transport(doc)
+
+    def check_transport(self, doc: dict) -> None:
+        """Schema-6 gate 9: wire transport billing + WAN shaping floors."""
+        section = doc.get("transport")
+        if not isinstance(section, dict):
+            return
+        models = {k: v for k, v in section.items() if isinstance(v, dict)}
+        if not models:
+            self.error("measured schema>=6 run with no per-model "
+                       "'transport' entries")
+        for model, entry in models.items():
+            where = f"transport.{model}"
+            inproc = self.require(entry, "in-process", dict, where)
+            tcp = self.require(entry, "tcp-loopback", dict, where)
+            self.require(entry, "gate_tcp_wire_billed", bool, where)
+            for leg, transfers in (("in-process", inproc),
+                                   ("tcp-loopback", tcp)):
+                if not isinstance(transfers, dict):
+                    continue
+                for field in TRANSFER_FIELDS_V6:
+                    self.require(transfers, field, (int, float),
+                                 f"{where}.{leg}")
+                parts = [transfers.get(k) for k in
+                         ("link_overlapped", "link_blocking", "link_copies")]
+                if (all(isinstance(v, (int, float)) for v in parts)
+                        and parts[0] + parts[1] != parts[2]):
+                    self.error(
+                        f"{where}.{leg}: link_overlapped ({parts[0]}) + "
+                        f"link_blocking ({parts[1]}) != link_copies "
+                        f"({parts[2]}) — the overlap split must partition "
+                        "all link copies on every transport")
+            if isinstance(tcp, dict):
+                wire = tcp.get("link_wire_bytes")
+                payload = tcp.get("link_bytes")
+                if isinstance(wire, (int, float)) and wire == 0:
+                    self.error(
+                        f"{where}.tcp-loopback.link_wire_bytes is 0 — a "
+                        "measured tcp row that moved no frames means the "
+                        "wire transport silently fell back to in-process "
+                        "links (see docs/BENCHMARKS.md gate 9)")
+                elif (isinstance(wire, (int, float))
+                        and isinstance(payload, (int, float))
+                        and not wire > payload):
+                    self.error(
+                        f"{where}.tcp-loopback: link_wire_bytes ({wire}) is "
+                        f"not above link_bytes ({payload}) — CFW1 frames "
+                        "carry a header on top of every payload")
+                wns = tcp.get("link_wire_ns")
+                if isinstance(wns, (int, float)) and wns == 0:
+                    self.error(
+                        f"{where}.tcp-loopback.link_wire_ns is 0 — frames "
+                        "cannot cross a socket in zero time")
+            if isinstance(inproc, dict):
+                billed = [inproc.get(k) for k in
+                          ("link_wire_bytes", "link_wire_ns")]
+                if any(isinstance(v, (int, float)) and v != 0
+                       for v in billed):
+                    self.error(
+                        f"{where}.in-process bills wire traffic "
+                        f"(bytes {billed[0]!r}, ns {billed[1]!r}) — "
+                        "in-process links never touch a socket")
+            shaped = entry.get("shaped")
+            if isinstance(shaped, dict):
+                self.check_shaped(shaped, f"{where}.shaped")
+            self.check_gates_true(entry, where)
+
+    def check_shaped(self, shaped: dict, where: str) -> None:
+        """Recompute each shaped link's floor from WAN_LATENCY_MS; the
+        recorded ``floor_ns`` is informative, never trusted."""
+        profile = self.require(shaped, "profile", str, where)
+        scale = self.require(shaped, "scale", (int, float), where)
+        links = self.require(shaped, "links", list, where)
+        self.require(shaped, "gate_shaped_above_floor", bool, where)
+        if profile is not None and profile != "gcp-5region":
+            self.error(f"{where}: unknown WAN profile {profile!r}")
+            return
+        if not isinstance(links, list) or not isinstance(scale, (int, float)):
+            return
+        if not links:
+            self.error(f"{where}: measured shaped section with no links — "
+                       "the floor gate has no evidence")
+        for i, link in enumerate(links):
+            lw = f"{where}.links[{i}]"
+            if not isinstance(link, dict):
+                self.error(f"{lw} is not an object")
+                continue
+            src = self.require(link, "src_region", str, lw)
+            dst = self.require(link, "dst_region", str, lw)
+            mean = self.require(link, "mean_link_ns", (int, float), lw)
+            self.require(link, "floor_ns", (int, float), lw)
+            if src not in WAN_REGIONS or dst not in WAN_REGIONS:
+                self.error(f"{lw}: unknown region pair {src!r} -> {dst!r}")
+                continue
+            if not isinstance(mean, (int, float)):
+                continue
+            floor_ns = (scale
+                        * WAN_LATENCY_MS[WAN_REGIONS.index(src)]
+                                        [WAN_REGIONS.index(dst)]
+                        * 1e6)
+            # +1 ns absorbs the bench's integer truncation of the delay.
+            if mean + 1 < floor_ns:
+                self.error(
+                    f"{lw}: mean_link_ns ({mean}) sits below the netsim "
+                    f"floor ({floor_ns:.0f} ns = scale x one-way "
+                    f"{src} -> {dst} latency) — the shaper let a transfer "
+                    "beat physics (see docs/BENCHMARKS.md gate 9)")
+        self.check_gates_true(shaped, where)
 
     def check_optimizer_path(self, doc: dict) -> None:
         """Schema-5 gate 8: fused on-plane Adam vs the host optimizer."""
@@ -559,6 +705,33 @@ def selftest() -> int:
         print("selftest FAIL: bad-pulls fixture was not rejected for the "
               "steady-state param-pull gate; errors were:", file=sys.stderr)
         for err in bad5.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    good6 = Checker(fixtures / "bench_schema6_good.json")
+    good6.check()
+    if good6.errors:
+        ok = False
+        print("selftest FAIL: good schema-6 fixture rejected:", file=sys.stderr)
+        for err in good6.errors:
+            print(f"  {err}", file=sys.stderr)
+
+    bad6 = Checker(fixtures / "bench_schema6_bad_wire.json")
+    bad6.check()
+    if not any("silently fell back" in err for err in bad6.errors):
+        ok = False
+        print("selftest FAIL: bad-wire fixture was not rejected for the "
+              "zero-wire-bytes gate; errors were:", file=sys.stderr)
+        for err in bad6.errors or ["<none>"]:
+            print(f"  {err}", file=sys.stderr)
+
+    bad6f = Checker(fixtures / "bench_schema6_bad_floor.json")
+    bad6f.check()
+    if not any("below the netsim floor" in err for err in bad6f.errors):
+        ok = False
+        print("selftest FAIL: bad-floor fixture was not rejected for the "
+              "shaped floor gate (the checker must recompute floors, not "
+              "trust floor_ns); errors were:", file=sys.stderr)
+        for err in bad6f.errors or ["<none>"]:
             print(f"  {err}", file=sys.stderr)
 
     rec_good = Checker(fixtures / "recovery_schema2_good.json")

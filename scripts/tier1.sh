@@ -5,7 +5,7 @@
 #
 # Usage: scripts/tier1.sh [--ci] [--no-smoke] [--docs] [--clippy]
 #                         [--bench-smoke] [--recovery-smoke]
-#                         [--coverage-smoke]
+#                         [--coverage-smoke] [--transport-smoke]
 #   --ci           CI mode: `set -x` tracing, plus one machine-readable
 #                  `tier1-gate <name>=pass|fail` line per gate (and a
 #                  markdown row in the GitHub step summary when
@@ -27,10 +27,20 @@
 #                  to 1024 stages); writes the gitignored
 #                  BENCH_coverage.smoke.json (the nightly
 #                  coverage-matrix CI lane runs the full version)
+#   --transport-smoke  run ONLY the wire-transport lane: the
+#                  integration suite with CHECKFREE_LINK_TRANSPORT=
+#                  tcp-loopback (every cross-plane copy framed over a
+#                  real socket), then the multi-process kill test —
+#                  stage processes spawned from the built binary, one
+#                  SIGKILLed mid-run, recovery over the healed wire,
+#                  loss bitwise-equal to the in-process reference (the
+#                  CI multi-process-smoke lane runs exactly this)
 #
 # Plane-mode matrix: the test suite honours CHECKFREE_PLANE_MODE
 # (shared|per-stage) — TrainConfig::default() reads it — which is how
-# .github/workflows/tier1.yml runs tier-1 under both PJRT plane layouts.
+# .github/workflows/tier1.yml runs tier-1 under both PJRT plane
+# layouts; CHECKFREE_LINK_TRANSPORT (in-process|tcp-loopback) does the
+# same for the wire transport.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -46,6 +56,7 @@ for arg in "$@"; do
     --bench-smoke) only=bench-smoke ;;
     --recovery-smoke) only=recovery-smoke ;;
     --coverage-smoke) only=coverage-smoke ;;
+    --transport-smoke) only=transport-smoke ;;
     --no-smoke) no_smoke=1 ;;
     *)
         echo "unknown flag '$arg' (see scripts/tier1.sh header)" >&2
@@ -159,6 +170,14 @@ coverage_smoke() {
     echo "'cargo bench --bench coverage_matrix' to refresh the committed BENCH_coverage.json."
 }
 
+transport_smoke() {
+    echo "== integration suite over the tcp-loopback transport (every cross-plane copy framed over a socket) =="
+    CHECKFREE_LINK_TRANSPORT=tcp-loopback cargo test -q --test integration || return 1
+    echo "== multi-process lane: real stage processes, SIGKILL mid-run, recovery over the healed wire =="
+    cargo test -q --test integration multi_process_cluster_survives_a_real_process_kill \
+        -- --exact --nocapture || return 1
+}
+
 cd "$repo_root/rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -193,6 +212,11 @@ recovery-smoke)
 coverage-smoke)
     gate coverage-smoke coverage_smoke
     echo "coverage smoke OK"
+    exit 0
+    ;;
+transport-smoke)
+    gate transport-smoke transport_smoke
+    echo "transport smoke OK"
     exit 0
     ;;
 esac
